@@ -1,0 +1,84 @@
+//! Distributed coded least squares — the paper's Figure-4 setting.
+//!
+//! m = 24 worker threads (the paper's Sherlock allocation), each owning
+//! the 2 data blocks of its graph edge and computing its gradient by
+//! executing the AOT `worker_grad` artifact on its own PJRT client.
+//! The leader waits for the first ceil(m(1-p)) gradients (Waitany
+//! semantics), optimally decodes, and steps.
+//!
+//! Default scale is the DESIGN.md §3 substitution (N=6000, k=2000 vs
+//! the paper's 60000 x 20000 — same code path, laptop-sized); pass
+//! --n-points/--dim to grow it (requires re-lowering artifacts).
+//!
+//! Run: `cargo run --release --example least_squares_cluster -- [--p 0.2] [--iters 30] [--backend pjrt]`
+
+use gcod::bench_util::BenchArgs;
+use gcod::codes::{GradientCode, GraphCode};
+use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::data::LstsqData;
+use gcod::decode::OptimalGraphDecoder;
+use gcod::metrics::{sci, Table};
+use gcod::prng::Rng;
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = BenchArgs::from_env();
+    let p = args.f64_or("--p", 0.2);
+    let iters = args.usize_or("--iters", 30);
+    let n_points = args.usize_or("--n-points", 6000);
+    let k = args.usize_or("--dim", 2000);
+    let backend = args.str_or("--backend", "pjrt");
+
+    let mut rng = Rng::new(11);
+    let code = GraphCode::random_regular(16, 3, &mut rng); // m = 24
+    println!("generating N={n_points}, k={k} least-squares data (+ exact theta*)...");
+    let data = LstsqData::generate(n_points, k, 16, 1.0, &mut rng);
+
+    let backend = match backend.as_str() {
+        "native" => ComputeBackend::Native,
+        _ => ComputeBackend::Pjrt {
+            artifacts_dir: std::env::var("GCOD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+            artifact: format!("worker_grad_fig4_2x{}x{}", data.b, k),
+        },
+    };
+    let cfg = ClusterConfig {
+        wait_fraction: 1.0 - p,
+        backend,
+        injection: StragglerInjection::Stagnant {
+            p,
+            churn: 0.1,
+            delay: Duration::from_millis(250),
+            seed: 3,
+        },
+        step_size: 2e-5,
+        iters,
+        max_duration: None,
+    };
+    println!("spawning {} workers...", code.n_machines());
+    let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg)?;
+    cluster.wait_ready(Duration::from_secs(300))?;
+    println!("cluster ready; running {iters} iterations at p={p}");
+
+    let dec = OptimalGraphDecoder::new(&code.graph);
+    let report = cluster.run(&cfg, &dec, &vec![0.0; k], |t| data.dist_to_opt(t))?;
+    cluster.shutdown();
+
+    let mut table = Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
+    for s in report.iters.iter().step_by((iters / 10).max(1)) {
+        table.row(vec![
+            s.iter.to_string(),
+            format!("{:.1}", s.wall.as_secs_f64() * 1e3),
+            s.stragglers.to_string(),
+            sci(s.decode_error_sq),
+            sci(s.progress),
+        ]);
+    }
+    table.print();
+    println!(
+        "total {:.2}s, mean iter {:.1}ms, final |theta-theta*|^2 = {}",
+        report.total.as_secs_f64(),
+        report.total.as_secs_f64() * 1e3 / report.iters.len().max(1) as f64,
+        sci(report.final_progress)
+    );
+    Ok(())
+}

@@ -1,0 +1,172 @@
+"""AOT compile path: lower every L2 function to HLO *text* artifacts.
+
+Runs once at build time (`make artifacts`); the rust runtime loads the
+emitted `artifacts/*.hlo.txt` via `HloModuleProto::from_text_file` and
+executes them on the PJRT CPU client. HLO text — NOT `.serialize()` —
+is the interchange format: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Also emits:
+  * MANIFEST.json — artifact index (shapes/dtypes) the rust runtime parses;
+  * transformer_init.bin — flat f32 initial parameters for the E2E example.
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model, transformer
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dt) -> str:
+    return {"float32": "f32", "int32": "s32", "float64": "f64", "bfloat16": "bf16"}[
+        jnp.dtype(dt).name
+    ]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def lower_and_write(fn, args, name: str, out_dir: str) -> dict:
+    """jit+lower `fn` at the arg specs, write HLO text, return manifest row."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = jax.eval_shape(fn, *args)
+    if not isinstance(outs, (tuple, list)):
+        outs = (outs,)
+    row = {
+        "name": name,
+        "file": fname,
+        "inputs": [{"shape": list(a.shape), "dtype": _dtype_tag(a.dtype)} for a in args],
+        "outputs": [{"shape": list(o.shape), "dtype": _dtype_tag(o.dtype)} for o in outs],
+    }
+    print(f"  wrote {fname}: {len(text)} chars, "
+          f"{len(row['inputs'])} in / {len(row['outputs'])} out")
+    return row
+
+
+# (n, b, k) shapes for the least-squares pipeline. See DESIGN.md §4.
+#   quickstart: tiny; fig4: scaled cluster regime (m=24, d=3, n=16);
+#   fig5: full simulated regime (m=6552, d=6, n=2184, LPS(5,13)).
+LSTSQ_SHAPES = [
+    ("qs", 16, 8, 32),
+    ("fig4", 16, 375, 2000),
+    ("fig5", 2184, 3, 200),
+]
+# Per-worker shapes: a graph-scheme machine holds exactly 2 blocks.
+WORKER_SHAPES = [("qs", 2, 8, 32), ("fig4", 2, 375, 2000), ("fig5", 2, 3, 200)]
+
+
+def export_lstsq(out_dir: str) -> list:
+    rows = []
+    for tag, n, b, k in LSTSQ_SHAPES:
+        rows.append(lower_and_write(
+            model.batched_block_grad,
+            (_spec((k,)), _spec((n, b, k)), _spec((n, b))),
+            f"block_grad_{tag}_{n}x{b}x{k}", out_dir))
+        rows.append(lower_and_write(
+            model.decode_combine, (_spec((n, k)), _spec((n,))),
+            f"decode_combine_{tag}_{n}x{k}", out_dir))
+        rows.append(lower_and_write(
+            model.lstsq_loss,
+            (_spec((k,)), _spec((n, b, k)), _spec((n, b))),
+            f"lstsq_loss_{tag}_{n}x{b}x{k}", out_dir))
+    for tag, n, b, k in WORKER_SHAPES:
+        rows.append(lower_and_write(
+            model.worker_block_grad,
+            (_spec((k,)), _spec((n, b, k)), _spec((n, b))),
+            f"worker_grad_{tag}_{n}x{b}x{k}", out_dir))
+    return rows
+
+
+def export_transformer(out_dir: str, cfg: transformer.GptConfig,
+                       n_blocks: int, batch: int) -> tuple:
+    p = transformer.n_params(cfg)
+    loss_scale = 1.0 / (n_blocks * batch * cfg.seq_len)
+    tok = _spec((batch, cfg.seq_len + 1), jnp.int32)
+    tok_all = _spec((n_blocks, batch, cfg.seq_len + 1), jnp.int32)
+    flat = _spec((p,))
+    rows = [
+        lower_and_write(transformer.block_grad_fn(cfg, loss_scale),
+                        (flat, tok), "tfm_block_grad", out_dir),
+        lower_and_write(transformer.block_grad_all_fn(cfg, loss_scale),
+                        (flat, tok_all), "tfm_block_grad_all", out_dir),
+        lower_and_write(transformer.eval_loss_fn(cfg),
+                        (flat, tok), "tfm_eval_loss", out_dir),
+    ]
+    init = transformer.init_params(cfg, seed=0)
+    init.tofile(os.path.join(out_dir, "transformer_init.bin"))
+    print(f"  wrote transformer_init.bin: {p} params")
+    meta = {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_head": cfg.n_head,
+        "n_layer": cfg.n_layer, "seq_len": cfg.seq_len, "n_params": p,
+        "n_blocks": n_blocks, "batch": batch, "loss_scale": loss_scale,
+        "init_file": "transformer_init.bin",
+    }
+    return rows, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", choices=["lstsq", "transformer", "all"], default="all")
+    ap.add_argument("--tfm-blocks", type=int, default=16)
+    ap.add_argument("--tfm-batch", type=int, default=8)
+    ap.add_argument("--tfm-d-model", type=int, default=128)
+    ap.add_argument("--tfm-layers", type=int, default=2)
+    ap.add_argument("--tfm-seq", type=int, default=64)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    rows, tfm_meta = [], None
+    if args.only in ("lstsq", "all"):
+        print("exporting least-squares pipeline artifacts:")
+        rows += export_lstsq(args.out_dir)
+    if args.only in ("transformer", "all"):
+        print("exporting transformer artifacts:")
+        cfg = transformer.GptConfig(
+            d_model=args.tfm_d_model, n_layer=args.tfm_layers, seq_len=args.tfm_seq)
+        trows, tfm_meta = export_transformer(
+            args.out_dir, cfg, args.tfm_blocks, args.tfm_batch)
+        rows += trows
+
+    manifest_path = os.path.join(args.out_dir, "MANIFEST.json")
+    # merge with any existing manifest so --only partial runs don't drop rows
+    existing = {}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            old = json.load(f)
+        existing = {r["name"]: r for r in old.get("artifacts", [])}
+        if tfm_meta is None:
+            tfm_meta = old.get("transformer")
+    for r in rows:
+        existing[r["name"]] = r
+    manifest = {"artifacts": sorted(existing.values(), key=lambda r: r["name"]),
+                "transformer": tfm_meta}
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {manifest_path} ({len(existing)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Pallas kernels for coded least-squares block gradients.
+
+The workers' compute hot-spot in gradient coding (Glasgow & Wootters
+2021, Section I): for each data block i, the contribution to a worker's
+message is the block gradient
+
+    G[i] = X[i]^T (X[i] @ theta - y[i])          X[i]: (b,k), y[i]: (b,)
+
+We stage this as two Pallas kernels so each is a clean MXU-shaped
+matmul (see DESIGN.md §Hardware-Adaptation):
+
+  1. residual kernel   — grid over blocks:      r[i] = X[i] @ theta - y[i]
+  2. gradient kernel   — grid (blocks, k-tiles): G[i, jT] = X[i][:, jT]^T r[i]
+
+VMEM accounting per program (f32 words): kernel 1 holds b*k + k + b;
+kernel 2 holds b*TK + b + TK. With the default feature tile TK=512 and
+the repo's block sizes (b <= 512) both stay well under a 16 MiB VMEM
+budget; TK is the knob to shrink if b grows.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Feature-dimension tile for the gradient kernel.
+TILE_K = 512
+# Block-dimension tile: how many data blocks one grid step processes.
+# §Perf note (EXPERIMENTS.md §Perf L1): a grid of n single-block
+# programs costs one lowered-loop iteration of overhead per block —
+# measured 3.6s/dispatch at n=2184. Tiling blocks per program:
+# TN=168 -> 54ms, TN=546 -> 26ms, TN=2184 (one fused program) -> 4.5ms
+# on the CPU PJRT client. On a real TPU pick TN so TN*b*TILE_K*4B stays
+# ~1-4 MiB for double-buffered HBM->VMEM pipelining; on CPU the fully
+# fused variant wins, so that is the default.
+TILE_N = 2184
+
+
+def _residual_kernel(theta_ref, x_ref, y_ref, r_ref):
+    """r[i] = X[i] @ theta - y[i] for a tile of TN blocks."""
+    x = x_ref[...]  # (tn, b, k)
+    r_ref[...] = (
+        jax.lax.dot_general(
+            x, theta_ref[...],
+            dimension_numbers=(((2,), (0,)), ((), ())),
+            preferred_element_type=r_ref.dtype,
+        )
+        - y_ref[...]
+    )
+
+
+def _grad_kernel(x_ref, r_ref, g_ref):
+    """G[i, tile] = X[i][:, tile]^T @ r[i] for a (block-tile, k-tile)."""
+    x = x_ref[...]  # (tn, b, tk)
+    r = r_ref[...]  # (tn, b)
+    # batched per-block X^T r: contract b, batch over the block tile
+    g_ref[...] = jax.lax.dot_general(
+        x, r,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=g_ref.dtype,
+    )
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return ((x + t - 1) // t) * t
+
+
+def _pick_tile_n(n: int, tile_n: int) -> int:
+    """Largest divisor of n that is <= tile_n (grid must divide evenly)."""
+    tn = min(tile_n, n)
+    while n % tn != 0:
+        tn -= 1
+    return tn
+
+
+def block_residual(
+    theta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray, tile_n: int = TILE_N
+) -> jnp.ndarray:
+    """Per-block residuals r (n,b) via the Pallas residual kernel."""
+    n, b, k = x.shape
+    tn = _pick_tile_n(n, tile_n)
+    return pl.pallas_call(
+        _residual_kernel,
+        grid=(n // tn,),
+        in_specs=[
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((tn, b, k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tn, b), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, b), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, b), x.dtype),
+        interpret=True,
+    )(theta, x, y)
+
+
+def block_grad(
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    y: jnp.ndarray,
+    tile_k: int = TILE_K,
+    tile_n: int = TILE_N,
+) -> jnp.ndarray:
+    """Batched block gradients G (n,k): G[i] = X[i]^T (X[i] theta - y[i]).
+
+    Args:
+      theta: (k,) current iterate.
+      x:     (n,b,k) stacked block design matrices.
+      y:     (n,b) stacked block observations.
+      tile_k: feature tile for the second kernel (padded if k % tile_k).
+      tile_n: blocks per grid step (rounded down to a divisor of n).
+    """
+    n, b, k = x.shape
+    r = block_residual(theta, x, y, tile_n)
+
+    tn = _pick_tile_n(n, tile_n)
+    tk = min(tile_k, k)
+    kp = _ceil_to(k, tk)
+    xg = jnp.pad(x, ((0, 0), (0, 0), (0, kp - k))) if kp != k else x
+    g = pl.pallas_call(
+        _grad_kernel,
+        grid=(n // tn, kp // tk),
+        in_specs=[
+            pl.BlockSpec((tn, b, tk), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((tn, b), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tn, tk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, kp), x.dtype),
+        interpret=True,
+    )(xg, r)
+    return g[:, :k] if kp != k else g

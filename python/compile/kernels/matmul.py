@@ -1,0 +1,90 @@
+"""Tiled Pallas matmul with a custom VJP.
+
+This is the generic MXU-shaped building block the L2 transformer uses
+for its dense projections. The forward pass is a (TM, TN) output-tiled
+kernel with the full K dimension staged through VMEM per tile; the
+backward pass reuses the same kernel for dA = dC @ B^T and dB = A^T @ dC
+so that gradients also flow through Pallas (jax cannot differentiate a
+raw ``pallas_call``).
+
+TPU notes (this session lowers with ``interpret=True`` so the kernel
+becomes plain HLO runnable on the CPU PJRT client — see DESIGN.md
+§Hardware-Adaptation):
+
+* default tiles are 128x128, the MXU systolic-array shape;
+* per-program VMEM footprint is TM*K + K*TN + TM*TN f32 words; the
+  default tiles keep this under ~2 MiB for K <= 2048, inside a 16 MiB
+  VMEM budget with double buffering headroom;
+* K is not tiled: for the shapes this repo lowers (K <= 4096) a full-K
+  stripe is the better schedule because it avoids a VMEM accumulator
+  revisit per K-tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default output tile: the MXU shape.
+TILE_M = 128
+TILE_N = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    """One (TM, TN) output tile: full-K stripe product."""
+    o_ref[...] = jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+def _ceil_to(x: int, t: int) -> int:
+    return ((x + t - 1) // t) * t
+
+
+def _matmul_padded(a, b, tile_m, tile_n, out_dtype):
+    """Pad operands to tile multiples, run the grid, slice the result."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"matmul inner dims mismatch: {a.shape} @ {b.shape}"
+    mp, np_ = _ceil_to(m, tile_m), _ceil_to(n, tile_n)
+    if mp != m:
+        a = jnp.pad(a, ((0, mp - m), (0, 0)))
+    if np_ != n:
+        b = jnp.pad(b, ((0, 0), (0, np_ - n)))
+    grid = (mp // tile_m, np_ // tile_n)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=True,
+    )(a, b)
+    if (mp, np_) != (m, n):
+        out = out[:m, :n]
+    return out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def matmul(a: jnp.ndarray, b: jnp.ndarray, tile_m: int = TILE_M, tile_n: int = TILE_N):
+    """Pallas tiled matmul: (M,K) @ (K,N) -> (M,N), differentiable."""
+    return _matmul_padded(a, b, tile_m, tile_n, jnp.result_type(a, b))
+
+
+def _matmul_fwd(a, b, tile_m, tile_n):
+    return matmul(a, b, tile_m, tile_n), (a, b)
+
+
+def _matmul_bwd(tile_m, tile_n, res, dc):
+    a, b = res
+    # dA = dC @ B^T ; dB = A^T @ dC — both through the same Pallas kernel.
+    da = _matmul_padded(dc, b.T, tile_m, tile_n, a.dtype)
+    db = _matmul_padded(a.T, dc, tile_m, tile_n, b.dtype)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

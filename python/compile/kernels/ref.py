@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the ground truth the pytest suite checks every kernel against
+(see python/tests/test_kernels.py). They are also what a "no-Pallas"
+build of the L2 model would use, so they must be numerically identical
+up to float reassociation.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul oracle: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(a, b)
+
+
+def block_grad_ref(theta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Batched least-squares block gradients.
+
+    For every data block i (of n):  G[i] = X[i]^T (X[i] @ theta - y[i]).
+
+    Args:
+      theta: (k,)   current iterate.
+      x:     (n,b,k) stacked block design matrices.
+      y:     (n,b)  stacked block observations.
+    Returns:
+      (n,k) per-block gradients.
+    """
+    r = jnp.einsum("nbk,k->nb", x, theta) - y
+    return jnp.einsum("nbk,nb->nk", x, r)
+
+
+def block_residual_ref(theta: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Per-block residuals r[i] = X[i] @ theta - y[i], shape (n,b)."""
+    return jnp.einsum("nbk,k->nb", x, theta) - y
+
+
+def decode_combine_ref(g: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Decoded gradient combine: u = G^T w = sum_i w[i] * G[i].
+
+    Args:
+      g: (n,k) per-block (or per-machine) gradients.
+      w: (n,)  decoding coefficients (alpha* or w*; zeros for stragglers).
+    Returns:
+      (k,) combined update direction.
+    """
+    return g.T @ w

@@ -1,0 +1,54 @@
+"""Layer-2 JAX model: the compute graphs the rust coordinator executes.
+
+Everything here is *build-time only*: `aot.py` lowers these jitted
+functions to HLO text once, and the rust runtime (rust/src/runtime/)
+loads + executes the artifacts on the PJRT CPU client. Python never
+runs on the request path.
+
+The functions call the Layer-1 Pallas kernels (kernels/*.py); their
+pure-jnp oracles live in kernels/ref.py and pytest pins them together.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.block_grad import block_grad as _block_grad_kernel
+from .kernels.decode_combine import decode_combine as _decode_combine_kernel
+
+
+def batched_block_grad(theta, x, y):
+    """All-blocks least-squares gradients, (k,),(n,b,k),(n,b) -> (n,k).
+
+    Used by the simulated GCOD engine (Algorithm 3): one PJRT dispatch
+    computes every block gradient; the rust side then samples stragglers,
+    decodes, and combines.
+    """
+    return (_block_grad_kernel(theta, x, y),)
+
+
+def worker_block_grad(theta, x, y):
+    """A single worker's view: its own blocks only (graph schemes: n=2).
+
+    Same computation as `batched_block_grad` but lowered for the
+    per-machine shapes the distributed coordinator feeds each worker.
+    Returns the per-block gradients; the worker sums them into its
+    message g_j = sum_i A_ij grad_i in rust (cheap axpy) or the leader
+    decodes per-block directly.
+    """
+    return (_block_grad_kernel(theta, x, y),)
+
+
+def decode_combine(g, w):
+    """Parameter-server combine u = G^T w, (n,k),(n,) -> (k,)."""
+    return (_decode_combine_kernel(g, w),)
+
+
+def sgd_step(theta, update, gamma):
+    """theta' = theta - gamma * update  (gamma as a scalar input)."""
+    return (theta - gamma * update,)
+
+
+def lstsq_loss(theta, x, y):
+    """Full objective |X theta - y|^2 over stacked blocks, for eval curves."""
+    r = jnp.einsum("nbk,k->nb", x, theta) - y
+    return (jnp.sum(r * r),)

@@ -1,0 +1,174 @@
+"""Layer-2: a small GPT-style decoder LM for the end-to-end example.
+
+The end-to-end driver (examples/transformer_e2e.rs) trains this model
+with coded gradient descent: data blocks are shards of token sequences,
+workers compute per-block gradients of the LM loss via the AOT-lowered
+`block_grad_fn`, and the rust leader decodes + applies SGD on a *flat*
+f32 parameter vector. Keeping params flat means the rust side never
+needs to know the pytree structure — the HLO unflattens internally from
+the static spec below.
+
+The MLP projections go through the Layer-1 Pallas matmul kernel
+(kernels/matmul.py, custom VJP) so the transformer exercises the full
+L1 -> L2 -> L3 stack; attention/layernorm stay plain jnp (they lower to
+fused HLO anyway and are not the FLOP hot-spot at these sizes).
+"""
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.matmul import matmul
+
+
+@dataclass(frozen=True)
+class GptConfig:
+    vocab: int = 256      # byte-level
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    seq_len: int = 64
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+
+def param_spec(cfg: GptConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat parameter layout."""
+    d, f = cfg.d_model, cfg.d_ff
+    spec = [("tok_emb", (cfg.vocab, d)), ("pos_emb", (cfg.seq_len, d))]
+    for l in range(cfg.n_layer):
+        p = f"l{l}."
+        spec += [
+            (p + "ln1_g", (d,)), (p + "ln1_b", (d,)),
+            (p + "qkv_w", (d, 3 * d)), (p + "qkv_b", (3 * d,)),
+            (p + "proj_w", (d, d)), (p + "proj_b", (d,)),
+            (p + "ln2_g", (d,)), (p + "ln2_b", (d,)),
+            (p + "mlp_in_w", (d, f)), (p + "mlp_in_b", (f,)),
+            (p + "mlp_out_w", (f, d)), (p + "mlp_out_b", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def n_params(cfg: GptConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in param_spec(cfg))
+
+
+def unflatten(cfg: GptConfig, flat: jnp.ndarray) -> dict:
+    """Slice the flat vector back into named tensors (static shapes)."""
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        size = int(np.prod(shape))
+        out[name] = flat[off : off + size].reshape(shape)
+        off += size
+    return out
+
+
+def init_params(cfg: GptConfig, seed: int = 0) -> np.ndarray:
+    """GPT-2-style init, returned flat (numpy, build-time only)."""
+    rng = np.random.default_rng(seed)
+    chunks = []
+    for name, shape in param_spec(cfg):
+        base = name.split(".")[-1]
+        if base.endswith("_b"):
+            w = np.zeros(shape, np.float32)
+        elif base in ("ln1_g", "ln2_g", "lnf_g"):
+            w = np.ones(shape, np.float32)
+        elif base == "proj_w" or base == "mlp_out_w":
+            # scaled residual-branch init
+            w = rng.normal(0.0, 0.02 / np.sqrt(2 * cfg.n_layer), shape).astype(np.float32)
+        else:
+            w = rng.normal(0.0, 0.02, shape).astype(np.float32)
+        chunks.append(w.reshape(-1))
+    return np.concatenate(chunks)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dense(x, w, b):
+    """(..., D) @ (D, F) + b through the Pallas matmul kernel."""
+    lead = x.shape[:-1]
+    y = matmul(x.reshape(-1, x.shape[-1]), w) + b
+    return y.reshape(*lead, w.shape[-1])
+
+
+def _attention(cfg: GptConfig, x, p, prefix):
+    b, t, d = x.shape
+    h, dh = cfg.n_head, cfg.d_model // cfg.n_head
+    qkv = _dense(x, p[prefix + "qkv_w"], p[prefix + "qkv_b"])
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = k.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = v.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(dh))
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return _dense(out, p[prefix + "proj_w"], p[prefix + "proj_b"])
+
+
+def forward(cfg: GptConfig, flat: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    """tokens (B,T) int32 -> logits (B,T,V). LM head tied to tok_emb."""
+    p = unflatten(cfg, flat)
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][:t]
+    for l in range(cfg.n_layer):
+        pre = f"l{l}."
+        x = x + _attention(cfg, _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"]), p, pre)
+        hmid = _dense(_layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"]),
+                      p[pre + "mlp_in_w"], p[pre + "mlp_in_b"])
+        x = x + _dense(jax.nn.gelu(hmid), p[pre + "mlp_out_w"], p[pre + "mlp_out_b"])
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return matmul(x.reshape(b * t, -1), p["tok_emb"].T).reshape(b, t, cfg.vocab)
+
+
+def block_loss(cfg: GptConfig, flat, tokens, loss_scale: float):
+    """f_i(theta): scaled summed next-token CE over one data block.
+
+    tokens: (B, T+1) int32 — inputs tokens[:, :-1], targets tokens[:, 1:].
+    With loss_scale = 1/(n_blocks*B*T), sum_i f_i is the global mean CE,
+    so the coded update matches uncoded full-batch GD on mean loss.
+    """
+    logits = forward(cfg, flat, tokens[:, :-1])
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll) * loss_scale
+
+
+def block_grad_fn(cfg: GptConfig, loss_scale: float):
+    """(flat (P,), tokens (B,T+1)) -> (grad (P,), loss) — the worker HLO."""
+    def fn(flat, tokens):
+        loss, grad = jax.value_and_grad(
+            lambda f: block_loss(cfg, f, tokens, loss_scale)
+        )(flat)
+        return grad, loss
+    return fn
+
+
+def block_grad_all_fn(cfg: GptConfig, loss_scale: float):
+    """(flat (P,), tokens (n,B,T+1)) -> (grads (n,P), losses (n,)).
+
+    vmapped over blocks — the simulated GCOD engine's single dispatch.
+    """
+    single = block_grad_fn(cfg, loss_scale)
+    def fn(flat, tokens_all):
+        return jax.vmap(lambda tk: single(flat, tk))(tokens_all)
+    return fn
+
+
+def eval_loss_fn(cfg: GptConfig):
+    """(flat, tokens (B,T+1)) -> mean CE, for held-out eval curves."""
+    def fn(flat, tokens):
+        return (block_loss(cfg, flat, tokens, 1.0 / (tokens.shape[0] * (tokens.shape[1] - 1))),)
+    return fn

@@ -1,0 +1,77 @@
+"""AOT path: HLO-text lowering round trip and manifest integrity.
+
+Executing the HLO from rust is covered by rust/tests/runtime_integration.rs;
+here we check the python half: lowering produces parseable HLO text with
+the right entry signature, and MANIFEST.json (if present) is consistent.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_contains_entry(tmp_path):
+    spec = jax.ShapeDtypeStruct((4, 3, 5), jnp.float32)
+    theta = jax.ShapeDtypeStruct((5,), jnp.float32)
+    y = jax.ShapeDtypeStruct((4, 3), jnp.float32)
+    row = aot.lower_and_write(
+        model.batched_block_grad, (theta, spec, y), "t_block_grad", str(tmp_path))
+    text = (tmp_path / "t_block_grad.hlo.txt").read_text()
+    assert "HloModule" in text and "ENTRY" in text
+    assert row["inputs"][0]["shape"] == [5]
+    assert row["outputs"][0]["shape"] == [4, 5]
+    # HLO text must mention the parameter shapes
+    assert "f32[4,3,5]" in text
+
+
+def test_hlo_text_has_no_serialized_proto_markers(tmp_path):
+    """Interchange must be text (xla_extension 0.5.1 rejects 64-bit-id protos)."""
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    row = aot.lower_and_write(
+        lambda a, b: (a @ b,), (spec, spec), "t_mm", str(tmp_path))
+    raw = (tmp_path / "t_mm.hlo.txt").read_bytes()
+    assert raw.isascii()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "MANIFEST.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+def test_manifest_consistent_with_files():
+    with open(os.path.join(ART, "MANIFEST.json")) as f:
+        man = json.load(f)
+    assert man["artifacts"], "manifest has no artifacts"
+    names = set()
+    for row in man["artifacts"]:
+        assert row["name"] not in names, f"duplicate {row['name']}"
+        names.add(row["name"])
+        path = os.path.join(ART, row["file"])
+        assert os.path.exists(path), f"missing {row['file']}"
+        head = open(path).read(2000)
+        assert "HloModule" in head
+        for io in row["inputs"] + row["outputs"]:
+            assert io["dtype"] in ("f32", "s32", "f64", "bf16")
+            assert all(isinstance(d, int) and d > 0 for d in io["shape"])
+    tfm = man.get("transformer")
+    if tfm:
+        init = os.path.join(ART, tfm["init_file"])
+        assert os.path.getsize(init) == 4 * tfm["n_params"]
+        assert {"tfm_block_grad", "tfm_block_grad_all", "tfm_eval_loss"} <= names
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "MANIFEST.json")),
+                    reason="artifacts not built")
+def test_manifest_worker_shapes_are_two_blocks():
+    """Graph schemes put exactly 2 blocks on each machine (Def. II.2)."""
+    with open(os.path.join(ART, "MANIFEST.json")) as f:
+        man = json.load(f)
+    workers = [r for r in man["artifacts"] if r["name"].startswith("worker_grad_")]
+    assert workers
+    for row in workers:
+        assert row["inputs"][1]["shape"][0] == 2

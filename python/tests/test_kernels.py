@@ -1,0 +1,115 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes (and dtypes for matmul); every kernel must
+match ref.py to float tolerance across the sweep, including the padded
+(non-tile-multiple) paths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.block_grad import block_grad, block_residual
+from compile.kernels.decode_combine import decode_combine
+from compile.kernels.matmul import matmul
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.normal(size=shape).astype(dtype))
+
+
+@given(
+    n=st.integers(1, 12), b=st.integers(1, 9), k=st.integers(1, 80),
+    tile_k=st.sampled_from([8, 32, 512]), seed=st.integers(0, 2**31 - 1),
+)
+@settings(**SETTINGS)
+def test_block_grad_matches_ref(n, b, k, tile_k, seed):
+    rng = np.random.default_rng(seed)
+    theta, x, y = _rand(rng, (k,)), _rand(rng, (n, b, k)), _rand(rng, (n, b))
+    got = block_grad(theta, x, y, tile_k=tile_k)
+    want = ref.block_grad_ref(theta, x, y)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(1, 12), b=st.integers(1, 9), k=st.integers(1, 80),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_block_residual_matches_ref(n, b, k, seed):
+    rng = np.random.default_rng(seed)
+    theta, x, y = _rand(rng, (k,)), _rand(rng, (n, b, k)), _rand(rng, (n, b))
+    np.testing.assert_allclose(
+        block_residual(theta, x, y), ref.block_residual_ref(theta, x, y),
+        rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(1, 40), k=st.integers(1, 90),
+       tile_k=st.sampled_from([16, 64, 512]), seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_decode_combine_matches_ref(n, k, tile_k, seed):
+    rng = np.random.default_rng(seed)
+    g, w = _rand(rng, (n, k)), _rand(rng, (n,))
+    np.testing.assert_allclose(
+        decode_combine(g, w, tile_k=tile_k), ref.decode_combine_ref(g, w),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_decode_combine_zero_weights_gives_zero():
+    g = jnp.ones((7, 13), jnp.float32)
+    u = decode_combine(g, jnp.zeros((7,), jnp.float32))
+    assert float(jnp.abs(u).max()) == 0.0
+
+
+def test_decode_combine_straggler_zeroing_matches_subset_sum():
+    """w_j = 0 for stragglers means their gradients never contribute."""
+    rng = np.random.default_rng(3)
+    g, w = _rand(rng, (10, 20)), np.ones(10, np.float32)
+    w[[2, 5, 6]] = 0.0
+    got = decode_combine(g, jnp.asarray(w))
+    want = jnp.sum(g[np.array([0, 1, 3, 4, 7, 8, 9])], axis=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@given(m=st.integers(1, 70), k=st.integers(1, 70), n=st.integers(1, 70),
+       dtype=st.sampled_from([np.float32, np.dtype("bfloat16")]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n, dtype, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32)).astype(dtype)
+    b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32)).astype(dtype)
+    got = matmul(a, b, 16, 16)
+    want = ref.matmul_ref(a, b)
+    tol = 1e-5 if dtype == np.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+@given(m=st.integers(1, 30), k=st.integers(1, 30), n=st.integers(1, 30),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_matmul_custom_vjp_matches_jax_grad(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _rand(rng, (m, k)), _rand(rng, (k, n))
+    da, db = jax.grad(lambda a, b: jnp.sum(matmul(a, b, 16, 16) ** 2), (0, 1))(a, b)
+    da_r, db_r = jax.grad(lambda a, b: jnp.sum((a @ b) ** 2), (0, 1))(a, b)
+    np.testing.assert_allclose(da, da_r, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(db, db_r, rtol=1e-4, atol=1e-4)
+
+
+def test_block_grad_is_true_lstsq_gradient():
+    """G[i] must equal the analytic gradient of 0.5|X_i theta - y_i|^2."""
+    rng = np.random.default_rng(7)
+    n, b, k = 4, 5, 11
+    theta, x, y = _rand(rng, (k,)), _rand(rng, (n, b, k)), _rand(rng, (n, b))
+    def fi(th, i):
+        r = x[i] @ th - y[i]
+        return 0.5 * jnp.sum(r * r)
+    got = block_grad(theta, x, y)
+    for i in range(n):
+        want = jax.grad(fi)(theta, i)
+        np.testing.assert_allclose(got[i], want, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,44 @@
+"""L2 model functions: shapes and agreement with oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+@given(n=st.integers(1, 10), b=st.integers(1, 6), k=st.integers(1, 50),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_batched_block_grad(n, b, k, seed):
+    rng = np.random.default_rng(seed)
+    theta = jnp.asarray(rng.normal(size=k).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, b, k)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n, b)).astype(np.float32))
+    (g,) = model.batched_block_grad(theta, x, y)
+    np.testing.assert_allclose(g, ref.block_grad_ref(theta, x, y), rtol=1e-5, atol=1e-5)
+    (g2,) = model.worker_block_grad(theta, x, y)
+    np.testing.assert_allclose(g2, g, rtol=1e-6)
+
+
+def test_decode_combine_and_sgd_step():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(8, 12)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=8).astype(np.float32))
+    (u,) = model.decode_combine(g, w)
+    np.testing.assert_allclose(u, g.T @ w, rtol=1e-5, atol=1e-5)
+    theta = jnp.asarray(rng.normal(size=12).astype(np.float32))
+    (t2,) = model.sgd_step(theta, u, jnp.float32(0.1))
+    np.testing.assert_allclose(t2, theta - 0.1 * u, rtol=1e-6)
+
+
+def test_lstsq_loss_value():
+    rng = np.random.default_rng(1)
+    n, b, k = 3, 4, 5
+    theta = jnp.asarray(rng.normal(size=k).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, b, k)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n, b)).astype(np.float32))
+    (loss,) = model.lstsq_loss(theta, x, y)
+    r = np.einsum("nbk,k->nb", x, theta) - np.asarray(y)
+    assert abs(float(loss) - float((r * r).sum())) < 1e-3

@@ -1,0 +1,109 @@
+"""L2 transformer: shapes, flat-param round trip, gradient correctness,
+and a short training sanity check (loss decreases under SGD)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import transformer as T
+
+CFG = T.GptConfig(vocab=61, d_model=32, n_head=2, n_layer=2, seq_len=12)
+
+
+def _tokens(rng, b, t1, vocab=CFG.vocab):
+    return jnp.asarray(rng.integers(0, vocab, (b, t1)), jnp.int32)
+
+
+def test_param_spec_layout_consistent():
+    p = T.n_params(CFG)
+    flat = jnp.arange(p, dtype=jnp.float32)
+    tree = T.unflatten(CFG, flat)
+    # every spec entry present, shapes correct, slices disjoint + exhaustive
+    off = 0
+    for name, shape in T.param_spec(CFG):
+        assert tree[name].shape == shape
+        size = int(np.prod(shape))
+        np.testing.assert_array_equal(
+            np.asarray(tree[name]).ravel(), np.arange(off, off + size, dtype=np.float32))
+        off += size
+    assert off == p
+
+
+def test_init_params_stats():
+    flat = T.init_params(CFG, seed=1)
+    assert flat.dtype == np.float32 and flat.shape == (T.n_params(CFG),)
+    tree = T.unflatten(CFG, jnp.asarray(flat))
+    np.testing.assert_array_equal(tree["lnf_g"], np.ones(CFG.d_model, np.float32))
+    np.testing.assert_array_equal(tree["l0.qkv_b"], np.zeros(3 * CFG.d_model, np.float32))
+    assert 0.01 < float(np.std(np.asarray(tree["tok_emb"]))) < 0.03
+
+
+def test_forward_shapes_and_finite():
+    rng = np.random.default_rng(0)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    logits = T.forward(CFG, flat, _tokens(rng, 3, CFG.seq_len))
+    assert logits.shape == (3, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_forward_is_causal():
+    """Changing a future token must not affect earlier logits."""
+    rng = np.random.default_rng(1)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    tok = _tokens(rng, 1, CFG.seq_len)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 1) % CFG.vocab)
+    l1 = T.forward(CFG, flat, tok)
+    l2 = T.forward(CFG, flat, tok2)
+    np.testing.assert_allclose(l1[:, :-1], l2[:, :-1], rtol=1e-5, atol=1e-5)
+
+
+def test_block_grad_matches_autodiff_of_loss():
+    rng = np.random.default_rng(2)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    tok = _tokens(rng, 2, CFG.seq_len + 1)
+    scale = 1.0 / (4 * 2 * CFG.seq_len)
+    g, loss = T.block_grad_fn(CFG, scale)(flat, tok)
+    want = jax.grad(lambda f: T.block_loss(CFG, f, tok, scale))(flat)
+    np.testing.assert_allclose(g, want, rtol=1e-5, atol=1e-6)
+    assert g.shape == flat.shape and float(loss) > 0
+
+
+def test_block_grad_all_matches_singles():
+    rng = np.random.default_rng(3)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    toks = jnp.stack([_tokens(rng, 2, CFG.seq_len + 1) for _ in range(3)])
+    scale = 1.0 / (3 * 2 * CFG.seq_len)
+    gall, lall = jax.jit(T.block_grad_all_fn(CFG, scale))(flat, toks)
+    single = T.block_grad_fn(CFG, scale)
+    for i in range(3):
+        gi, li = single(flat, toks[i])
+        np.testing.assert_allclose(gall[i], gi, rtol=1e-4, atol=1e-6)
+        np.testing.assert_allclose(lall[i], li, rtol=1e-5)
+
+
+def test_sum_of_block_losses_is_mean_ce():
+    """With loss_scale = 1/(n*B*T), sum_i f_i equals the global mean CE."""
+    rng = np.random.default_rng(4)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    n, b = 3, 2
+    toks = jnp.stack([_tokens(rng, b, CFG.seq_len + 1) for _ in range(n)])
+    scale = 1.0 / (n * b * CFG.seq_len)
+    total = sum(float(T.block_loss(CFG, flat, toks[i], scale)) for i in range(n))
+    (mean_ce,) = T.eval_loss_fn(CFG)(
+        flat, toks.reshape(n * b, CFG.seq_len + 1))
+    assert abs(total - float(mean_ce)) < 1e-4
+
+
+def test_short_training_decreases_loss():
+    rng = np.random.default_rng(5)
+    flat = jnp.asarray(T.init_params(CFG, 0))
+    tok = _tokens(rng, 4, CFG.seq_len + 1)
+    scale = 1.0 / (4 * CFG.seq_len)
+    step = jax.jit(T.block_grad_fn(CFG, scale))
+    losses = []
+    for _ in range(8):
+        g, loss = step(flat, tok)
+        losses.append(float(loss))
+        flat = flat - 0.5 * g
+    assert losses[-1] < losses[0] * 0.9, losses

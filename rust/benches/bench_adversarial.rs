@@ -1,0 +1,81 @@
+//! Adversarial-straggler bench (Section V: Cor. V.2/V.3, Rmk V.4).
+//!
+//! For each p: attack the graph scheme (vertex isolation), the FRC
+//! (group kill), and — on small m — every scheme with the generic
+//! greedy attack; compare against the spectral upper bound and the p/2
+//! lower bound. Also verifies the error never exceeds Cor. V.2.
+
+use gcod::bench_util::{BenchArgs, P_GRID};
+use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
+use gcod::gd::analysis::theory;
+use gcod::metrics::{sci, Table};
+use gcod::prng::Rng;
+use gcod::straggler::{frc_group_attack, graph_isolation_attack, greedy_decode_attack};
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let include_lps = !args.quick();
+
+    println!("== adversarial error |alpha*-1|^2/n vs theory ==");
+    let mut rng = Rng::new(9);
+    let graph = build(&SchemeSpec::GraphRandomRegular { n: 64, d: 4 }, &mut rng);
+    let frc = build(&SchemeSpec::Frc { n: 64, m: 128, d: 4 }, &mut rng);
+    let bibd = build(&SchemeSpec::Bibd { s: 5 }, &mut rng); // 31 pts, d=6
+    let lambda = gcod::graphs::spectral::spectral_gap(graph.graph.as_ref().unwrap(), 4000, &mut rng);
+    println!("graph rr(64,4): spectral gap lambda = {lambda:.3}");
+
+    let mut t = Table::new(&[
+        "p", "graph attack", "lower p/2", "CorV.2 bound", "frc attack", "frc theory p", "bibd greedy",
+    ]);
+    for &p in &P_GRID {
+        let gb = (p * graph.n_machines() as f64).floor() as usize;
+        let gmask = graph_isolation_attack(graph.graph.as_ref().unwrap(), gb);
+        let gdec = make_decoder(&graph, DecoderSpec::Optimal, p);
+        let gerr = gdec.decode(&gmask).error_sq() / graph.n_blocks() as f64;
+        let bound = theory::graph_adversarial_bound(p, 4.0, lambda);
+        assert!(gerr <= bound + 1e-9, "Cor V.2 violated: {gerr} > {bound}");
+
+        let fb = (p * frc.n_machines() as f64).floor() as usize;
+        let fmask = frc_group_attack(frc.frc.as_ref().unwrap(), fb);
+        let fdec = make_decoder(&frc, DecoderSpec::Optimal, p);
+        let ferr = fdec.decode(&fmask).error_sq() / frc.n_blocks() as f64;
+
+        let bb = (p * bibd.n_machines() as f64).floor() as usize;
+        let bdec = make_decoder(&bibd, DecoderSpec::Optimal, p);
+        let bmask = greedy_decode_attack(bdec.as_ref(), &bibd.a, bb);
+        let berr = bdec.decode(&bmask).error_sq() / bibd.n_blocks() as f64;
+
+        t.row(vec![
+            format!("{p:.2}"),
+            sci(gerr),
+            sci(theory::graph_adversarial_lower(p)),
+            sci(bound),
+            sci(ferr),
+            sci(p),
+            sci(berr),
+        ]);
+    }
+    t.print();
+
+    if include_lps {
+        println!("\n== LPS(5,13) full scale (Cor V.3: (1+o(1))/2 * p/(1-p)) ==");
+        let lps = build(&SchemeSpec::GraphLps { p: 5, q: 13 }, &mut rng);
+        let lam = gcod::graphs::spectral::spectral_gap(lps.graph.as_ref().unwrap(), 2000, &mut rng);
+        let mut t2 = Table::new(&["p", "attack err/n", "lower p/2", "CorV.3 ~ p/(2(1-p))", "CorV.2 bound"]);
+        for &p in &[0.1, 0.2, 0.3] {
+            let b = (p * 6552.0) as usize;
+            let mask = graph_isolation_attack(lps.graph.as_ref().unwrap(), b);
+            let dec = make_decoder(&lps, DecoderSpec::Optimal, p);
+            let err = dec.decode(&mask).error_sq() / 2184.0;
+            t2.row(vec![
+                format!("{p:.2}"),
+                sci(err),
+                sci(p / 2.0),
+                sci(p / (2.0 * (1.0 - p))),
+                sci(theory::graph_adversarial_bound(p, 6.0, lam)),
+            ]);
+        }
+        t2.print();
+    }
+    println!("\nexpected shape: graph ~ p/2 (half the FRC's p); everything under Cor V.2.");
+}

@@ -1,0 +1,138 @@
+//! Figure 3 — decoding error and covariance norm under random stragglers.
+//!
+//! (a)(b): regime 1 — m=24 machines, d=3, A_1 = random 3-regular graph
+//!         on n=16 vertices.
+//! (c)(d): regime 2 — m=6552, d=6, A_2 = LPS(5,13) on n=2184 vertices.
+//!
+//! Series per panel: graph scheme w/ optimal + fixed decoding, the
+//! expander code of [6] (optimal in regime 1, fixed in regime 2 — as
+//! the paper does, for decode cost), and the FRC theory line
+//! p^d/(1-p^d), which the FRC achieves exactly.
+//!
+//! Flags: --runs N (default 50, as the paper), --reps R (error bars,
+//! default 5; 2 under --quick), --regime 1|2|both.
+
+use gcod::bench_util::{BenchArgs, P_GRID};
+use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
+use gcod::gd::analysis::{decoding_stats, theory};
+use gcod::metrics::{sci, Stats, Table};
+use gcod::prng::Rng;
+use gcod::straggler::BernoulliStragglers;
+
+struct Arm {
+    label: &'static str,
+    scheme: SchemeSpec,
+    decoder: DecoderSpec,
+}
+
+fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize) {
+    println!("\n== Figure 3 {regime}: E|alpha_bar-1|^2/n over p ({runs} runs x {reps} reps) ==");
+    let mut err_table = Table::new(&{
+        let mut h = vec!["p"];
+        h.extend(arms.iter().map(|a| a.label));
+        h.push("frc/theory p^d/(1-p^d)");
+        h
+    });
+    let mut cov_table = Table::new(&{
+        let mut h = vec!["p"];
+        h.extend(arms.iter().map(|a| a.label));
+        h.push("frc/theory ell*opt");
+        h
+    });
+    for &p in &P_GRID {
+        let mut err_row = vec![format!("{p:.2}")];
+        let mut cov_row = vec![format!("{p:.2}")];
+        for arm in arms {
+            let mut errs = Stats::new();
+            let mut covs = Stats::new();
+            for rep in 0..reps {
+                let mut rng = Rng::new(1000 + rep as u64);
+                let scheme = build(&arm.scheme, &mut rng);
+                let dec = make_decoder(&scheme, arm.decoder, p);
+                let mut strag =
+                    BernoulliStragglers::new(p, 77 + rep as u64 * 13 + (p * 1000.0) as u64);
+                let s = decoding_stats(
+                    dec.as_ref(),
+                    &mut strag,
+                    scheme.n_machines(),
+                    scheme.n_blocks(),
+                    runs,
+                    &mut rng,
+                );
+                errs.push(s.mean_err_per_block);
+                covs.push(s.cov_norm);
+            }
+            err_row.push(format!("{}±{}", sci(errs.mean()), sci(errs.std())));
+            cov_row.push(format!("{}±{}", sci(covs.mean()), sci(covs.std())));
+        }
+        err_row.push(sci(theory::optimal_lower_bound(p, d)));
+        cov_row.push(sci(2.0 * theory::optimal_lower_bound(p, d))); // ell=2 blocks/machine at n=N... see Fig 3 text
+        err_table.row(err_row);
+        cov_table.row(cov_row);
+    }
+    println!("-- (a/c) mean decoding error --");
+    err_table.print();
+    println!("-- (b/d) covariance spectral norm --");
+    cov_table.print();
+}
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let runs = args.usize_or("--runs", 50);
+    let reps = if args.quick() { 2 } else { args.usize_or("--reps", 5) };
+    let regime = args.str_or("--regime", "both");
+
+    if regime == "1" || regime == "both" {
+        let arms = [
+            Arm {
+                label: "A1 optimal",
+                scheme: SchemeSpec::GraphRandomRegular { n: 16, d: 3 },
+                decoder: DecoderSpec::Optimal,
+            },
+            Arm {
+                label: "A1 fixed",
+                scheme: SchemeSpec::GraphRandomRegular { n: 16, d: 3 },
+                decoder: DecoderSpec::Fixed,
+            },
+            Arm {
+                label: "expander[6] optimal",
+                scheme: SchemeSpec::ExpanderAdj { n: 24, d: 3 },
+                decoder: DecoderSpec::Optimal,
+            },
+            Arm {
+                label: "frc optimal",
+                scheme: SchemeSpec::Frc { n: 16, m: 24, d: 3 },
+                decoder: DecoderSpec::Optimal,
+            },
+        ];
+        sweep("regime 1 (m=24, d=3)", &arms, 3.0, runs, reps);
+    }
+    if regime == "2" || regime == "both" {
+        let runs2 = if args.quick() { 20 } else { runs };
+        let arms = [
+            Arm {
+                label: "A2=LPS optimal",
+                scheme: SchemeSpec::GraphLps { p: 5, q: 13 },
+                decoder: DecoderSpec::Optimal,
+            },
+            Arm {
+                label: "A2=LPS fixed",
+                scheme: SchemeSpec::GraphLps { p: 5, q: 13 },
+                decoder: DecoderSpec::Fixed,
+            },
+            Arm {
+                label: "expander[6] fixed",
+                scheme: SchemeSpec::ExpanderAdj { n: 6552, d: 6 },
+                decoder: DecoderSpec::Fixed,
+            },
+            Arm {
+                label: "frc optimal",
+                scheme: SchemeSpec::Frc { n: 2184, m: 6552, d: 6 },
+                decoder: DecoderSpec::Optimal,
+            },
+        ];
+        sweep("regime 2 (m=6552, d=6, LPS(5,13))", &arms, 6.0, runs2, reps.min(3));
+    }
+    println!("\nexpected shape (paper Fig. 3): optimal tracks the p^d/(1-p^d)");
+    println!("floor at small p; fixed ~ p/(d(1-p)); expander[6] worst.");
+}

@@ -1,0 +1,123 @@
+//! Figure 4 — distributed coded GD on the worker-thread cluster.
+//!
+//! The paper: m=24 MPI ranks on Sherlock, N=60000, k=20000; waits for
+//! the first ceil(m(1-p)) gradients, decodes, steps; Fig 4(a) plots
+//! convergence at p=0.2, Fig 4(b) the error after a fixed time budget
+//! across p. Here: 24 worker *threads* (DESIGN.md §3), scaled default
+//! N=6000, k=500 (native backend) — pass --pjrt to run the AOT
+//! worker_grad artifacts at the lowered shape k=2000.
+//!
+//! Flags: --iters (default 25), --budget-ms (default 4000, Fig 4b),
+//! --runs (default 2), --pjrt, --quick.
+
+use gcod::bench_util::{BenchArgs, P_GRID};
+use gcod::codes::{GradientCode, GraphCode};
+use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::data::LstsqData;
+use gcod::decode::{Decoder, FixedDecoder, IgnoreStragglersDecoder, OptimalGraphDecoder};
+use gcod::metrics::{sci, Stats, Table};
+use gcod::prng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let iters = args.usize_or("--iters", 25);
+    let runs = if args.quick() { 1 } else { args.usize_or("--runs", 2) };
+    let budget = Duration::from_millis(args.usize_or("--budget-ms", 4000) as u64);
+    let pjrt = args.has("--pjrt");
+    let k = if pjrt { 2000 } else { args.usize_or("--dim", 500) };
+    let n_points = 6000;
+
+    let mut rng = Rng::new(3);
+    let code = GraphCode::random_regular(16, 3, &mut rng); // m=24 like the paper
+    println!("generating N={n_points}, k={k} data + exact theta* ...");
+    let data = LstsqData::generate(n_points, k, 16, 1.0, &mut rng);
+    let e0 = data.dist_to_opt(&vec![0.0; k]);
+    println!("m=24 workers, backend={}", if pjrt { "pjrt" } else { "native" });
+
+    let backend = || {
+        if pjrt {
+            ComputeBackend::Pjrt {
+                artifacts_dir: "artifacts".into(),
+                artifact: format!("worker_grad_fig4_2x{}x{}", data.b, k),
+            }
+        } else {
+            ComputeBackend::Native
+        }
+    };
+    let gamma = 2e-5 * (2000.0 / k as f64); // scale with 1/L ~ k/N
+
+    let mut run_one = |p: f64, which: &str, seed: u64, max_dur: Option<Duration>| -> (f64, Vec<f64>, f64) {
+        let cfg = ClusterConfig {
+            wait_fraction: 1.0 - p,
+            backend: backend(),
+            injection: StragglerInjection::Stagnant {
+                p,
+                churn: 0.1,
+                delay: Duration::from_millis(80),
+                seed,
+            },
+            step_size: gamma,
+            iters: if max_dur.is_some() { 100_000 } else { iters },
+            max_duration: max_dur,
+        };
+        let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+        cluster.wait_ready(Duration::from_secs(300)).unwrap();
+        let opt = OptimalGraphDecoder::new(&code.graph);
+        let fix = FixedDecoder::new(code.assignment(), p);
+        let ign = IgnoreStragglersDecoder { a: code.assignment(), weight: 1.0 / (3.0 * (1.0 - p)) };
+        let dec: &dyn Decoder = match which {
+            "optimal" => &opt,
+            "fixed" => &fix,
+            _ => &ign,
+        };
+        let report = cluster.run(&cfg, dec, &vec![0.0; k], |t| data.dist_to_opt(t)).unwrap();
+        cluster.shutdown();
+        let curve: Vec<f64> = report.iters.iter().map(|s| s.progress).collect();
+        let mean_iter_ms = report.total.as_secs_f64() * 1e3 / report.iters.len().max(1) as f64;
+        (report.final_progress, curve, mean_iter_ms)
+    };
+
+    // ---- Fig 4(a): convergence curves at p = 0.2 ----
+    println!("\n== Figure 4(a): convergence at p=0.2, |theta_0-theta*|^2 = {} ==", sci(e0));
+    let mut table = Table::new(&["iter", "optimal", "fixed", "ignore"]);
+    let mut curves = Vec::new();
+    for which in ["optimal", "fixed", "ignore"] {
+        let (_, curve, ms) = run_one(0.2, which, 42, None);
+        println!("  {which}: {:.1} ms/iter", ms);
+        curves.push(curve);
+    }
+    let len = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+    for i in (0..len).step_by((len / 10).max(1)) {
+        table.row(vec![
+            i.to_string(),
+            sci(curves[0][i]),
+            sci(curves[1][i]),
+            sci(curves[2][i]),
+        ]);
+    }
+    table.print();
+
+    // ---- Fig 4(b): error after a fixed time budget across p ----
+    println!(
+        "\n== Figure 4(b): |theta-theta*|^2 after {:?} budget ({runs} runs) ==",
+        budget
+    );
+    let ps: Vec<f64> = if args.quick() { vec![0.1, 0.2, 0.3] } else { P_GRID.to_vec() };
+    let mut t2 = Table::new(&["p", "optimal", "fixed", "ignore"]);
+    for &p in &ps {
+        let mut row = vec![format!("{p:.2}")];
+        for which in ["optimal", "fixed", "ignore"] {
+            let mut st = Stats::new();
+            for r in 0..runs {
+                let (fin, _, _) = run_one(p, which, 100 + r as u64, Some(budget));
+                st.push(fin);
+            }
+            row.push(format!("{}±{}", sci(st.mean()), sci(st.std())));
+        }
+        t2.row(row);
+    }
+    t2.print();
+    println!("\nexpected shape (paper Fig. 4): optimal reaches machine-precision-ish");
+    println!("error while fixed plateaus ~1e-2..1e-3 and ignore-stragglers higher.");
+}

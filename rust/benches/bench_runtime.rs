@@ -1,0 +1,104 @@
+//! PJRT runtime performance: artifact dispatch latency and the cost
+//! split of one coded-GD iteration on the request path (L3 overhead vs
+//! L1/L2 compute), supporting the "L3 is not the bottleneck" target in
+//! DESIGN.md §Perf.
+
+use gcod::bench_util::{bench, black_box, BenchArgs};
+use gcod::codes::GraphCode;
+use gcod::data::LstsqData;
+use gcod::decode::{Decoder, OptimalGraphDecoder};
+use gcod::metrics::Table;
+use gcod::prng::Rng;
+use gcod::runtime::{Runtime, Tensor};
+use std::time::Duration;
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let budget = Duration::from_millis(if args.quick() { 400 } else { 2000 });
+    let rt = Runtime::open_default().expect("run `make artifacts` first");
+    let mut rng = Rng::new(0);
+
+    println!("== artifact dispatch latency (host-literal path) ==");
+    let mut t = Table::new(&["artifact", "mean", "min"]);
+    // qs block grad: 16x8x32
+    {
+        let exe = rt.load("block_grad_qs_16x8x32").unwrap();
+        let theta = Tensor::f32(&[32], rng.gaussian_vec(32, 1.0).iter().map(|&v| v as f32).collect());
+        let x = Tensor::f32(&[16, 8, 32], (0..4096).map(|_| rng.gaussian() as f32).collect());
+        let y = Tensor::f32(&[16, 8], (0..128).map(|_| rng.gaussian() as f32).collect());
+        let r = bench("block_grad_qs", 3, budget, 100_000, || {
+            black_box(exe.run(&[theta.clone(), x.clone(), y.clone()]).unwrap());
+        });
+        t.row(vec!["block_grad_qs_16x8x32".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+    }
+    // fig5 block grad: 2184x3x200 — the simulated-regime hot dispatch
+    {
+        let exe = rt.load("block_grad_fig5_2184x3x200").unwrap();
+        let theta = Tensor::f32(&[200], vec![0.1; 200]);
+        let x = Tensor::f32(&[2184, 3, 200], vec![0.01; 2184 * 3 * 200]);
+        let y = Tensor::f32(&[2184, 3], vec![0.2; 2184 * 3]);
+        let xb = exe.upload(&x, &rt.client).unwrap();
+        let yb = exe.upload(&y, &rt.client).unwrap();
+        let r = bench("block_grad_fig5 (host)", 2, budget, 10_000, || {
+            black_box(exe.run(&[theta.clone(), x.clone(), y.clone()]).unwrap());
+        });
+        t.row(vec!["block_grad_fig5 host-inputs".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+        let r2 = bench("block_grad_fig5 (device)", 2, budget, 10_000, || {
+            let tb = exe.upload(&theta, &rt.client).unwrap();
+            black_box(exe.run_b(&[&tb, &xb, &yb]).unwrap());
+        });
+        t.row(vec!["block_grad_fig5 device-resident".into(), gcod::bench_util::fmt_dur(r2.mean), gcod::bench_util::fmt_dur(r2.min)]);
+    }
+    // combine
+    {
+        let exe = rt.load("decode_combine_fig5_2184x200").unwrap();
+        let g = Tensor::f32(&[2184, 200], vec![0.5; 2184 * 200]);
+        let w = Tensor::f32(&[2184], vec![1.0; 2184]);
+        let r = bench("decode_combine_fig5", 3, budget, 100_000, || {
+            black_box(exe.run(&[g.clone(), w.clone()]).unwrap());
+        });
+        t.row(vec!["decode_combine_fig5".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+    }
+    t.print();
+
+    // ---- one full coded-GD iteration: where does the time go? ----
+    println!("\n== request-path cost split (fig5 shapes, p=0.2) ==");
+    let code = GraphCode::lps(5, 13);
+    let data = LstsqData::generate(6552, 200, 2184, 1.0, &mut rng);
+    let dec = OptimalGraphDecoder::new(&code.graph);
+    let masks: Vec<Vec<bool>> = (0..16).map(|i| Rng::new(i).bernoulli_mask(6552, 0.2)).collect();
+    let mut i = 0;
+    let r_decode = bench("decode (L3)", 2, budget, 100_000, || {
+        black_box(dec.decode(&masks[i % 16]).alpha[0]);
+        i += 1;
+    });
+    let exe = rt.load("block_grad_fig5_2184x3x200").unwrap();
+    let combine = rt.load("decode_combine_fig5_2184x200").unwrap();
+    let (xb32, yb32) = data.to_f32_buffers();
+    let xbuf = exe.upload(&Tensor::f32(&[2184, 3, 200], xb32), &rt.client).unwrap();
+    let ybuf = exe.upload(&Tensor::f32(&[2184, 3], yb32), &rt.client).unwrap();
+    let theta = Tensor::f32(&[200], vec![0.0; 200]);
+    let alpha = Tensor::f32(&[2184], vec![1.0; 2184]);
+    let r_grad = bench("block grads (L1/L2)", 2, budget, 10_000, || {
+        let tb = exe.upload(&theta, &rt.client).unwrap();
+        black_box(exe.run_b(&[&tb, &xbuf, &ybuf]).unwrap());
+    });
+    let g_host = exe
+        .run(&[theta.clone(), Tensor::f32(&[2184, 3, 200], data.to_f32_buffers().0), Tensor::f32(&[2184, 3], data.to_f32_buffers().1)])
+        .unwrap()
+        .into_iter()
+        .next()
+        .unwrap();
+    let r_combine = bench("combine (L1)", 2, budget, 100_000, || {
+        black_box(combine.run(&[g_host.clone(), alpha.clone()]).unwrap());
+    });
+    let total = r_decode.mean + r_grad.mean + r_combine.mean;
+    println!(
+        "\nsplit: decode {:.1}% | grads {:.1}% | combine {:.1}%  (iter ~ {})",
+        100.0 * r_decode.mean.as_secs_f64() / total.as_secs_f64(),
+        100.0 * r_grad.mean.as_secs_f64() / total.as_secs_f64(),
+        100.0 * r_combine.mean.as_secs_f64() / total.as_secs_f64(),
+        gcod::bench_util::fmt_dur(total)
+    );
+    println!("target: L3 decode a small fraction of the gradient compute.");
+}

@@ -1,0 +1,163 @@
+//! Benchmark harness substrate (no criterion in the offline build).
+//!
+//! Each `rust/benches/bench_*.rs` target uses `harness = false` and
+//! drives this runner: warmup, timed iterations, mean/std/min reporting,
+//! plus the experiment-table helpers the paper-figure benches share.
+
+use crate::metrics::{Stats, Stopwatch};
+use std::time::Duration;
+
+/// Timing result for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean: Duration,
+    pub std: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<48} {:>12}/iter (±{}, min {}, n={})",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.std),
+            fmt_dur(self.min),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured calls, then measured calls
+/// until `budget` elapses or `max_iters` is reached (min 3 iters).
+pub fn bench<F: FnMut()>(name: &str, warmup: u64, budget: Duration, max_iters: u64, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut stats = Stats::new();
+    let total = Stopwatch::new();
+    let mut iters = 0u64;
+    while iters < 3 || (total.elapsed() < budget && iters < max_iters) {
+        let sw = Stopwatch::new();
+        f();
+        stats.push(sw.elapsed_secs());
+        iters += 1;
+    }
+    let res = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(stats.mean()),
+        std: Duration::from_secs_f64(stats.std()),
+        min: Duration::from_secs_f64(stats.min()),
+    };
+    res.report();
+    res
+}
+
+/// Convenience: quick bench with defaults (3 warmup, 2s budget).
+pub fn bench_default<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, 3, Duration::from_secs(2), 10_000, f)
+}
+
+/// Prevent the optimizer from discarding a value (stable-rust black box).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Parse simple `--flag value` args for bench binaries (they receive
+/// `--bench` from cargo, which is ignored).
+pub struct BenchArgs {
+    args: Vec<String>,
+}
+
+impl Default for BenchArgs {
+    fn default() -> Self {
+        Self::from_env()
+    }
+}
+
+impl BenchArgs {
+    pub fn from_env() -> Self {
+        Self { args: std::env::args().skip(1).filter(|a| a != "--bench").collect() }
+    }
+
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.args
+            .iter()
+            .position(|a| a == flag)
+            .and_then(|i| self.args.get(i + 1))
+            .map(|s| s.as_str())
+    }
+
+    pub fn f64_or(&self, flag: &str, default: f64) -> f64 {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, flag: &str, default: usize) -> usize {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    pub fn has(&self, flag: &str) -> bool {
+        self.args.iter().any(|a| a == flag)
+    }
+
+    /// `--quick` trims the sweep for CI-style runs.
+    pub fn quick(&self) -> bool {
+        self.has("--quick")
+    }
+}
+
+/// The straggler-fraction grid every paper figure sweeps.
+pub const P_GRID: [f64; 6] = [0.05, 0.10, 0.15, 0.20, 0.25, 0.30];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iterations() {
+        let mut count = 0u64;
+        let r = bench("noop", 1, Duration::from_millis(1), 5, || {
+            count += 1;
+        });
+        assert!(r.iters >= 3);
+        assert_eq!(count, r.iters + 1); // + warmup
+        assert!(r.min <= r.mean);
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(Duration::from_nanos(500)).ends_with("ns"));
+        assert!(fmt_dur(Duration::from_micros(50)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(50)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_args_parse() {
+        let a = BenchArgs { args: vec!["--p".into(), "0.2".into(), "--quick".into()] };
+        assert_eq!(a.f64_or("--p", 0.0), 0.2);
+        assert!(a.quick());
+        assert_eq!(a.usize_or("--runs", 50), 50);
+    }
+}

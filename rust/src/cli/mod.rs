@@ -1,0 +1,230 @@
+//! CLI argument-parsing substrate (no clap in the offline build).
+//!
+//! Subcommand-style parser for the `gcod` launcher and the examples:
+//! `gcod <command> [--flag value] [--switch] [--set key=value ...]`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Debug, Clone)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "cli error: {}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+/// Declarative flag spec.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    /// switches take no value
+    pub is_switch: bool,
+}
+
+/// One subcommand with its flags.
+#[derive(Clone, Debug)]
+pub struct CommandSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub flags: Vec<FlagSpec>,
+}
+
+/// Parsed invocation.
+#[derive(Debug, Clone)]
+pub struct Invocation {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    switches: Vec<String>,
+    /// --set key=value overrides, applied to Settings by the caller
+    pub overrides: Vec<String>,
+}
+
+impl Invocation {
+    pub fn get(&self, flag: &str) -> Option<&str> {
+        self.values.get(flag).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, flag: &str, default: &str) -> String {
+        self.get(flag).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, flag: &str, default: f64) -> f64 {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, flag: &str, default: usize) -> usize {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, flag: &str, default: u64) -> u64 {
+        self.get(flag).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn switch(&self, flag: &str) -> bool {
+        self.switches.iter().any(|s| s == flag)
+    }
+}
+
+/// Application = a set of subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<CommandSpec>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE: {} <command> [flags]\n\nCOMMANDS:\n",
+                            self.name, self.about, self.name);
+        for c in &self.commands {
+            s.push_str(&format!("  {:<18} {}\n", c.name, c.help));
+        }
+        s.push_str("\nRun '<command> --help' for flags.\n");
+        s
+    }
+
+    pub fn command_usage(&self, cmd: &CommandSpec) -> String {
+        let mut s = format!("{} {} — {}\n\nFLAGS:\n", self.name, cmd.name, cmd.help);
+        for f in &cmd.flags {
+            let d = f
+                .default
+                .map(|d| format!(" (default {d})"))
+                .unwrap_or_default();
+            let v = if f.is_switch { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{v:<10} {}{d}\n", f.name, f.help));
+        }
+        s.push_str("  --set key=value   override a config setting (repeatable)\n");
+        s
+    }
+
+    /// Parse argv (without the binary name). Returns Err with a usage
+    /// string on bad input or help requests.
+    pub fn parse(&self, argv: &[String]) -> Result<Invocation, CliError> {
+        let cmd_name = argv.first().ok_or_else(|| CliError(self.usage()))?;
+        if cmd_name == "--help" || cmd_name == "-h" || cmd_name == "help" {
+            return Err(CliError(self.usage()));
+        }
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError(format!("unknown command '{cmd_name}'\n\n{}", self.usage())))?;
+
+        let mut inv = Invocation {
+            command: cmd_name.clone(),
+            values: BTreeMap::new(),
+            switches: Vec::new(),
+            overrides: Vec::new(),
+        };
+        // defaults
+        for f in &cmd.flags {
+            if let Some(d) = f.default {
+                inv.values.insert(f.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let arg = &argv[i];
+            if arg == "--help" || arg == "-h" {
+                return Err(CliError(self.command_usage(cmd)));
+            }
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| CliError(format!("expected a --flag, got '{arg}'")))?;
+            if name == "set" {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| CliError("--set needs key=value".into()))?;
+                inv.overrides.push(v.clone());
+                i += 2;
+                continue;
+            }
+            let spec = cmd
+                .flags
+                .iter()
+                .find(|f| f.name == name)
+                .ok_or_else(|| {
+                    CliError(format!("unknown flag --{name}\n\n{}", self.command_usage(cmd)))
+                })?;
+            if spec.is_switch {
+                inv.switches.push(name.to_string());
+                i += 1;
+            } else {
+                let v = argv
+                    .get(i + 1)
+                    .ok_or_else(|| CliError(format!("--{name} needs a value")))?;
+                inv.values.insert(name.to_string(), v.clone());
+                i += 2;
+            }
+        }
+        Ok(inv)
+    }
+}
+
+/// Shorthand for building flag specs.
+pub fn flag(name: &'static str, help: &'static str, default: Option<&'static str>) -> FlagSpec {
+    FlagSpec { name, help, default, is_switch: false }
+}
+
+pub fn switch(name: &'static str, help: &'static str) -> FlagSpec {
+    FlagSpec { name, help, default: None, is_switch: true }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn app() -> App {
+        App {
+            name: "gcod",
+            about: "test",
+            commands: vec![CommandSpec {
+                name: "train",
+                help: "run training",
+                flags: vec![
+                    flag("p", "straggler rate", Some("0.1")),
+                    flag("iters", "iterations", Some("50")),
+                    switch("verbose", "log more"),
+                ],
+            }],
+        }
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_defaults() {
+        let inv = app().parse(&argv(&["train", "--p", "0.25", "--verbose"])).unwrap();
+        assert_eq!(inv.command, "train");
+        assert_eq!(inv.f64_or("p", 0.0), 0.25);
+        assert_eq!(inv.usize_or("iters", 0), 50); // default
+        assert!(inv.switch("verbose"));
+        assert!(!inv.switch("other"));
+    }
+
+    #[test]
+    fn set_overrides_collect() {
+        let inv = app()
+            .parse(&argv(&["train", "--set", "a.b=1", "--set", "c=2"]))
+            .unwrap();
+        assert_eq!(inv.overrides, vec!["a.b=1", "c=2"]);
+    }
+
+    #[test]
+    fn errors_are_usage_shaped() {
+        assert!(app().parse(&argv(&[])).is_err());
+        assert!(app().parse(&argv(&["nope"])).is_err());
+        assert!(app().parse(&argv(&["train", "--bogus", "1"])).is_err());
+        assert!(app().parse(&argv(&["train", "--p"])).is_err());
+        let help = app().parse(&argv(&["train", "--help"])).unwrap_err();
+        assert!(help.0.contains("straggler rate"));
+    }
+}

@@ -1,0 +1,147 @@
+//! Balanced-incomplete-block-design codes of Kadhe et al. [7].
+//!
+//! We implement the projective-plane family PG(2, s): for a prime s,
+//! points and lines of the projective plane of order s form a
+//! (v, k, 1)-BIBD with v = s^2 + s + 1 points, v lines, k = s + 1
+//! points per line, every point on s + 1 lines, every pair of points on
+//! exactly 1 common line. Assignment: blocks = points, machines =
+//! lines, so n = m = s^2 + s + 1 and d = ell = s + 1.
+//!
+//! Kadhe et al. prove that for BIBD assignments the optimal decoding
+//! vector has *fixed* coefficients on the non-stragglers, so the fixed
+//! decoder is exactly optimal here — a useful cross-check for our
+//! generic LSQR decoder.
+
+use super::GradientCode;
+use crate::sparse::Csc;
+
+pub struct BibdCode {
+    a: Csc,
+    s: usize,
+}
+
+/// Canonical form of a projective point/line (x:y:z) over F_s: scale so
+/// the first non-zero coordinate is 1.
+fn canon(mut v: [u64; 3], s: u64) -> [u64; 3] {
+    let first = v.iter().copied().find(|&x| x != 0).expect("zero vector");
+    let inv = mod_inv(first, s);
+    for x in v.iter_mut() {
+        *x = *x * inv % s;
+    }
+    v
+}
+
+fn mod_inv(a: u64, p: u64) -> u64 {
+    // Fermat; p prime
+    let mut r = 1u64;
+    let mut b = a % p;
+    let mut e = p - 2;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = r * b % p;
+        }
+        b = b * b % p;
+        e >>= 1;
+    }
+    r
+}
+
+fn enumerate_points(s: u64) -> Vec<[u64; 3]> {
+    let mut pts = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    for x in 0..s {
+        for y in 0..s {
+            for z in 0..s {
+                if x == 0 && y == 0 && z == 0 {
+                    continue;
+                }
+                let c = canon([x, y, z], s);
+                if seen.insert(c) {
+                    pts.push(c);
+                }
+            }
+        }
+    }
+    pts
+}
+
+impl BibdCode {
+    /// Projective plane of prime order s.
+    pub fn projective_plane(s: usize) -> Self {
+        assert!(s >= 2, "order must be >= 2");
+        let sq = s as u64;
+        let points = enumerate_points(sq);
+        let v = (s * s + s + 1) as usize;
+        assert_eq!(points.len(), v, "projective plane point count");
+        // lines are also projective triples (a:b:c); point (x:y:z) is on
+        // line (a:b:c) iff ax + by + cz = 0 (mod s)
+        let lines = points.clone();
+        let mut t = Vec::with_capacity(v * (s + 1));
+        for (j, l) in lines.iter().enumerate() {
+            for (i, p) in points.iter().enumerate() {
+                if (l[0] * p[0] + l[1] * p[1] + l[2] * p[2]) % sq == 0 {
+                    t.push((i, j, 1.0));
+                }
+            }
+        }
+        let a = Csc::from_triplets(v, v, t);
+        assert_eq!(a.nnz(), v * (s + 1), "incidence count");
+        Self { a, s }
+    }
+
+    pub fn order(&self) -> usize {
+        self.s
+    }
+}
+
+impl GradientCode for BibdCode {
+    fn name(&self) -> String {
+        format!("bibd-pg2({})", self.s)
+    }
+    fn assignment(&self) -> &Csc {
+        &self.a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fano_plane() {
+        // s=2: the Fano plane, 7 points / 7 lines / 3 points per line
+        let c = BibdCode::projective_plane(2);
+        assert_eq!(c.n_blocks(), 7);
+        assert_eq!(c.n_machines(), 7);
+        assert!((c.replication() - 3.0).abs() < 1e-12);
+        assert_eq!(c.assignment().max_col_nnz(), 3);
+    }
+
+    #[test]
+    fn pairwise_balance_lambda_one() {
+        // every pair of points shares exactly one line: rows of A have
+        // pairwise inner product exactly 1
+        let c = BibdCode::projective_plane(3); // 13 points
+        let d = c.assignment().to_dense();
+        for i in 0..13 {
+            for j in 0..13 {
+                let mut inner = 0.0;
+                for l in 0..13 {
+                    inner += d[(i, l)] * d[(j, l)];
+                }
+                if i == j {
+                    assert_eq!(inner, 4.0); // point on s+1 = 4 lines
+                } else {
+                    assert_eq!(inner, 1.0, "pair ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn order_5_shape() {
+        let c = BibdCode::projective_plane(5);
+        assert_eq!(c.n_blocks(), 31);
+        assert!((c.replication() - 6.0).abs() < 1e-12);
+    }
+}

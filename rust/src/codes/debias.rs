@@ -1,0 +1,124 @@
+//! Black-box debiasing transform (paper Proposition B.1).
+//!
+//! Given any assignment matrix A and the per-block decoding means
+//! E[alpha_i] (estimated by Monte Carlo for the scheme's decoder at a
+//! given straggler rate), produce a modified assignment A-hat that is
+//! *unbiased*: E[alpha-hat] = 1, at the cost of at most doubling the
+//! computational load. Rows with E[alpha_i] >= delta are rescaled by
+//! 1/E[alpha_i]; the matrix is then padded back to N rows by repeating
+//! its first rows (so dropped low-mean rows are covered by duplicates
+//! of healthy ones, exactly as in the proof).
+
+use crate::sparse::Csc;
+
+/// Result of debiasing: the new assignment plus, for each new row, the
+/// original block it carries (so gradients can be routed).
+pub struct Debiased {
+    pub a: Csc,
+    /// original block id served by each row of `a`
+    pub row_origin: Vec<usize>,
+    /// rows of the original matrix that were kept (E[alpha] >= delta)
+    pub kept: Vec<usize>,
+}
+
+/// Apply Proposition B.1. `expected_alpha[i]` must be the Monte-Carlo
+/// estimate of E[alpha_i]; `delta` the keep threshold (the proof uses
+/// delta = 1 - sqrt(2 eps)).
+pub fn debias(a: &Csc, expected_alpha: &[f64], delta: f64) -> Debiased {
+    let n = a.rows;
+    assert_eq!(expected_alpha.len(), n);
+    assert!(delta > 0.0 && delta <= 1.0);
+    let kept: Vec<usize> = (0..n).filter(|&i| expected_alpha[i] >= delta).collect();
+    assert!(
+        kept.len() * 2 >= n,
+        "debias: fewer than half the blocks have E[alpha] >= {delta}; \
+         the scheme is too biased to debias (Prop. B.1 requires |S| >= N/2)"
+    );
+    let s = kept.len();
+    let t = n - s;
+    // row_origin: kept rows then the first t kept rows again
+    let mut row_origin = kept.clone();
+    row_origin.extend_from_slice(&kept[..t]);
+
+    // build triplets: new row r carries old row kept-row scaled
+    let mut trip = Vec::with_capacity(a.nnz() * 2);
+    // invert: for each column, for each (row, val), look up new rows
+    let mut new_rows_of: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (new_r, &old_r) in row_origin.iter().enumerate() {
+        new_rows_of[old_r].push(new_r);
+    }
+    for j in 0..a.cols {
+        let (ri, vals) = a.col(j);
+        for (k, &old_r) in ri.iter().enumerate() {
+            let scale = 1.0 / expected_alpha[old_r];
+            for &new_r in &new_rows_of[old_r] {
+                trip.push((new_r, j, vals[k] * scale));
+            }
+        }
+    }
+    let _ = s;
+    Debiased { a: Csc::from_triplets(n, a.cols, trip), row_origin, kept }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_mean_is_noop_scaling() {
+        // A = 2x2 identity, means exactly 1 -> A-hat == A
+        let a = Csc::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        let d = debias(&a, &[1.0, 1.0], 0.5);
+        assert_eq!(d.a.to_dense(), a.to_dense());
+        assert_eq!(d.row_origin, vec![0, 1]);
+    }
+
+    #[test]
+    fn rescales_biased_rows() {
+        let a = Csc::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        // block 0 decodes to 0.8 on average -> row scaled by 1.25
+        let d = debias(&a, &[0.8, 1.0], 0.5);
+        let dd = d.a.to_dense();
+        assert!((dd[(0, 0)] - 1.25).abs() < 1e-12);
+        assert_eq!(dd[(1, 1)], 1.0);
+    }
+
+    #[test]
+    fn drops_and_duplicates_low_mean_rows() {
+        // 4 blocks; block 3 hopeless (mean 0.1) -> dropped, row for
+        // block 0 duplicated in its place
+        let a = Csc::from_triplets(
+            4,
+            4,
+            vec![(0, 0, 1.0), (1, 1, 1.0), (2, 2, 1.0), (3, 3, 1.0)],
+        );
+        let d = debias(&a, &[1.0, 1.0, 1.0, 0.1], 0.5);
+        assert_eq!(d.kept, vec![0, 1, 2]);
+        assert_eq!(d.row_origin, vec![0, 1, 2, 0]);
+        let dd = d.a.to_dense();
+        // new row 3 duplicates block 0's storage
+        assert_eq!(dd[(3, 0)], 1.0);
+        // block 3's column is now unused by any row
+        for r in 0..4 {
+            assert_eq!(dd[(r, 3)], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "too biased")]
+    fn rejects_hopeless_schemes() {
+        let a = Csc::from_triplets(2, 2, vec![(0, 0, 1.0), (1, 1, 1.0)]);
+        debias(&a, &[0.1, 0.1], 0.5);
+    }
+
+    #[test]
+    fn load_at_most_doubles() {
+        let a = Csc::from_triplets(
+            4,
+            2,
+            vec![(0, 0, 1.0), (1, 0, 1.0), (2, 1, 1.0), (3, 1, 1.0)],
+        );
+        let d = debias(&a, &[1.0, 1.0, 1.0, 0.2], 0.6);
+        assert!(d.a.max_col_nnz() <= 2 * a.max_col_nnz());
+    }
+}

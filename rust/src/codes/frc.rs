@@ -1,0 +1,157 @@
+//! Fractional repetition code of Tandon et al. [4].
+//!
+//! Machines are partitioned into m/d groups of d; data blocks are
+//! partitioned into m/d groups of n/(m/d); every machine in group g
+//! holds *all* blocks of block-group g. Under random stragglers with
+//! optimal decoding this achieves the optimal error
+//! E|alpha*-1|^2 / n = p^d / (1-p^d)-ish (exactly p^d unnormalized,
+//! [8]), but adversarially it is poor: killing whole groups zeroes a p
+//! fraction of all blocks (Table I, worst case p).
+
+use super::GradientCode;
+use crate::sparse::Csc;
+
+pub struct FrcCode {
+    a: Csc,
+    /// group id of each machine
+    pub machine_group: Vec<usize>,
+    /// block ids of each group
+    pub group_blocks: Vec<Vec<usize>>,
+    d: usize,
+}
+
+impl FrcCode {
+    /// n blocks on m machines with replication d. Requires d | m and
+    /// (m/d) | n so groups are exact (the paper's experiments use
+    /// n = m with d | m).
+    pub fn new(n: usize, m: usize, d: usize) -> Self {
+        assert!(d >= 1 && m % d == 0, "need d | m");
+        let groups = m / d;
+        assert!(n % groups == 0, "need (m/d) | n");
+        let blocks_per_group = n / groups;
+        let mut t = Vec::with_capacity(m * blocks_per_group);
+        let mut machine_group = vec![0usize; m];
+        let mut group_blocks = vec![Vec::with_capacity(blocks_per_group); groups];
+        for g in 0..groups {
+            for b in 0..blocks_per_group {
+                group_blocks[g].push(g * blocks_per_group + b);
+            }
+            for j in 0..d {
+                let machine = g * d + j;
+                machine_group[machine] = g;
+                for &blk in &group_blocks[g] {
+                    t.push((blk, machine, 1.0));
+                }
+            }
+        }
+        Self { a: Csc::from_triplets(n, m, t), machine_group, group_blocks, d }
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.group_blocks.len()
+    }
+
+    /// Closed-form optimal decoding: for each group with >= 1 surviving
+    /// machine, put total weight 1 on the survivors (alpha = 1 on its
+    /// blocks); groups with no survivor get alpha = 0. Returns (w, alpha).
+    pub fn optimal_decode(&self, straggler: &[bool]) -> (Vec<f64>, Vec<f64>) {
+        let m = self.a.cols;
+        assert_eq!(straggler.len(), m);
+        let groups = self.n_groups();
+        let mut survivors: Vec<Vec<usize>> = vec![Vec::new(); groups];
+        for j in 0..m {
+            if !straggler[j] {
+                survivors[self.machine_group[j]].push(j);
+            }
+        }
+        let mut w = vec![0.0; m];
+        let mut alpha = vec![0.0; self.a.rows];
+        for g in 0..groups {
+            if survivors[g].is_empty() {
+                continue;
+            }
+            let share = 1.0 / survivors[g].len() as f64;
+            for &j in &survivors[g] {
+                w[j] = share;
+            }
+            for &blk in &self.group_blocks[g] {
+                alpha[blk] = 1.0;
+            }
+        }
+        (w, alpha)
+    }
+}
+
+impl GradientCode for FrcCode {
+    fn name(&self) -> String {
+        format!("frc(d={})", self.d)
+    }
+    fn assignment(&self) -> &Csc {
+        &self.a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dist_to_ones_sq;
+
+    #[test]
+    fn shape_and_replication() {
+        let c = FrcCode::new(16, 24, 3); // 8 groups of 3 machines, 2 blocks each
+        assert_eq!(c.n_blocks(), 16);
+        assert_eq!(c.n_machines(), 24);
+        assert!((c.replication() - 3.0).abs() < 1e-12);
+        assert_eq!(c.n_groups(), 8);
+        // computational load: each machine holds n/groups = 2 blocks
+        assert_eq!(c.assignment().max_col_nnz(), 2);
+    }
+
+    #[test]
+    fn decode_all_alive_is_exact() {
+        let c = FrcCode::new(12, 12, 3);
+        let (w, alpha) = c.optimal_decode(&vec![false; 12]);
+        assert!(alpha.iter().all(|&a| (a - 1.0).abs() < 1e-12));
+        // w must reproduce alpha through A
+        let aw = c.assignment().mul_vec(&w);
+        assert!(dist_to_ones_sq(&aw) < 1e-20);
+    }
+
+    #[test]
+    fn decode_with_dead_group() {
+        let c = FrcCode::new(12, 12, 3); // 4 groups (machines 0-2, 3-5, ...)
+        let mut s = vec![false; 12];
+        s[3] = true;
+        s[4] = true;
+        s[5] = true; // kill group 1 entirely
+        let (w, alpha) = c.optimal_decode(&s);
+        // group 1's blocks (3,4,5) -> alpha 0, everything else 1
+        for blk in 0..12 {
+            let expect = if (3..6).contains(&blk) { 0.0 } else { 1.0 };
+            assert_eq!(alpha[blk], expect, "blk={blk}");
+        }
+        // consistency: alpha == A w
+        let aw = c.assignment().mul_vec(&w);
+        for i in 0..12 {
+            assert!((aw[i] - alpha[i]).abs() < 1e-12);
+        }
+        // error = 3 blocks lost
+        assert!((dist_to_ones_sq(&alpha) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_group_survival_still_exact() {
+        let c = FrcCode::new(12, 12, 3);
+        // one straggler per group -> still perfect recovery
+        let mut s = vec![false; 12];
+        for g in 0..4 {
+            s[g * 3] = true;
+        }
+        let (_, alpha) = c.optimal_decode(&s);
+        assert!(dist_to_ones_sq(&alpha) < 1e-20);
+    }
+}

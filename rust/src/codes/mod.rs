@@ -1,0 +1,193 @@
+//! Gradient-coding assignment schemes: the paper's graph codes plus
+//! every baseline it compares against (Table I).
+//!
+//! | scheme | source | decoding |
+//! |---|---|---|
+//! | [`GraphCode`] | this paper (Def. II.2) | linear-time optimal |
+//! | [`FrcCode`] | Tandon et al. [4] | closed-form optimal |
+//! | [`ExpanderAdjacencyCode`] | Raviv et al. [6] | fixed / LSQR optimal |
+//! | [`BibdCode`] | Kadhe et al. [7] | fixed (= optimal, their Thm) |
+//! | [`RbgcCode`] | Charles et al. [8] | LSQR optimal |
+//! | [`BrcCode`] | Wang et al. [9] | LSQR optimal |
+//! | [`PairwiseBalancedCode`] | Bitar et al. [5] | fixed |
+//! | [`UncodedCode`] | baseline | ignore stragglers |
+//!
+//! All schemes expose their n x m block-to-machine assignment matrix as
+//! a sparse [`Csc`]; scheme-specific structure (the graph, the FRC
+//! groups) is kept alongside for the specialized decoders.
+
+pub mod bibd;
+pub mod debias;
+pub mod frc;
+pub mod random_codes;
+pub mod zoo;
+
+pub use bibd::BibdCode;
+pub use debias::debias;
+pub use frc::FrcCode;
+pub use random_codes::{BrcCode, PairwiseBalancedCode, RbgcCode};
+
+use crate::graphs::Graph;
+use crate::sparse::Csc;
+
+/// Common interface every assignment scheme implements.
+pub trait GradientCode {
+    /// Human-readable scheme name (used in bench tables).
+    fn name(&self) -> String;
+    /// The n x m assignment matrix A (blocks x machines).
+    fn assignment(&self) -> &Csc;
+    /// Number of data blocks n.
+    fn n_blocks(&self) -> usize {
+        self.assignment().rows
+    }
+    /// Number of machines m.
+    fn n_machines(&self) -> usize {
+        self.assignment().cols
+    }
+    /// Replication factor d (Definition I.1, block granularity).
+    fn replication(&self) -> f64 {
+        self.assignment().replication_factor()
+    }
+}
+
+/// The paper's construction: machines are edges of a graph on the data
+/// blocks (Definition II.2). Prefer expanders — random regular graphs
+/// (regime 1) or LPS Ramanujan graphs (regime 2).
+pub struct GraphCode {
+    pub graph: Graph,
+    a: Csc,
+    label: String,
+}
+
+impl GraphCode {
+    pub fn new(label: impl Into<String>, graph: Graph) -> Self {
+        let a = graph.assignment_matrix();
+        Self { graph, a, label: label.into() }
+    }
+
+    /// The paper's regime-1 assignment A_1: random d-regular graph.
+    pub fn random_regular(n: usize, d: usize, rng: &mut crate::prng::Rng) -> Self {
+        let g = crate::graphs::random_regular_graph(n, d, rng);
+        Self::new(format!("graph-rr(n={n},d={d})"), g)
+    }
+
+    /// The paper's regime-2 assignment A_2: LPS Ramanujan graph.
+    pub fn lps(p: u64, q: u64) -> Self {
+        let g = crate::graphs::lps_graph(p, q);
+        Self::new(format!("graph-lps({p},{q})"), g)
+    }
+}
+
+impl GradientCode for GraphCode {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+    fn assignment(&self) -> &Csc {
+        &self.a
+    }
+}
+
+/// Trivial 1-replication baseline: block i lives only on machine i.
+pub struct UncodedCode {
+    a: Csc,
+}
+
+impl UncodedCode {
+    pub fn new(n: usize) -> Self {
+        let t = (0..n).map(|i| (i, i, 1.0)).collect();
+        Self { a: Csc::from_triplets(n, n, t) }
+    }
+}
+
+impl GradientCode for UncodedCode {
+    fn name(&self) -> String {
+        "uncoded".to_string()
+    }
+    fn assignment(&self) -> &Csc {
+        &self.a
+    }
+}
+
+/// Raviv et al. [6]: the assignment matrix is the *adjacency matrix* of
+/// a d-regular graph on m = n vertices — machine j holds the blocks of
+/// its d neighbors (contrast Remark II.3: blocks are vertices here too,
+/// but machines are vertices rather than edges).
+pub struct ExpanderAdjacencyCode {
+    pub graph: Graph,
+    a: Csc,
+}
+
+impl ExpanderAdjacencyCode {
+    pub fn new(graph: Graph) -> Self {
+        let n = graph.n;
+        let mut t = Vec::with_capacity(2 * graph.m());
+        for &(u, v) in &graph.edges {
+            // block u on machine v and block v on machine u
+            t.push((u, v, 1.0));
+            t.push((v, u, 1.0));
+        }
+        let a = Csc::from_triplets(n, n, t);
+        Self { graph, a }
+    }
+
+    pub fn random_regular(n: usize, d: usize, rng: &mut crate::prng::Rng) -> Self {
+        Self::new(crate::graphs::random_regular_graph(n, d, rng))
+    }
+}
+
+impl GradientCode for ExpanderAdjacencyCode {
+    fn name(&self) -> String {
+        format!(
+            "expander-adj(n={},d={})",
+            self.graph.n,
+            self.graph.is_regular().unwrap_or(0)
+        )
+    }
+    fn assignment(&self) -> &Csc {
+        &self.a
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    #[test]
+    fn graph_code_shape_matches_paper_regime1() {
+        let mut rng = Rng::new(0);
+        let c = GraphCode::random_regular(16, 3, &mut rng);
+        assert_eq!(c.n_blocks(), 16);
+        assert_eq!(c.n_machines(), 24);
+        assert!((c.replication() - 3.0).abs() < 1e-12);
+        // every machine holds exactly 2 blocks
+        assert_eq!(c.assignment().max_col_nnz(), 2);
+    }
+
+    #[test]
+    fn uncoded_is_identity() {
+        let c = UncodedCode::new(5);
+        assert_eq!(c.replication(), 1.0);
+        let d = c.assignment().to_dense();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(d[(i, j)], if i == j { 1.0 } else { 0.0 });
+            }
+        }
+    }
+
+    #[test]
+    fn expander_adjacency_regular_rows_and_cols() {
+        let mut rng = Rng::new(1);
+        let c = ExpanderAdjacencyCode::random_regular(24, 3, &mut rng);
+        assert_eq!(c.n_blocks(), 24);
+        assert_eq!(c.n_machines(), 24);
+        assert!((c.replication() - 3.0).abs() < 1e-12);
+        assert_eq!(c.assignment().max_col_nnz(), 3);
+        // machine j must NOT hold its own block (no self-loops)
+        let dense = c.assignment().to_dense();
+        for j in 0..24 {
+            assert_eq!(dense[(j, j)], 0.0);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Scheme registry: build any (code, decoder) pair from a spec string.
+//!
+//! Benches, examples and the CLI all construct experiment arms through
+//! this zoo so the paper's scheme lineup (§VIII: four coded schemes +
+//! uncoded, in two parameter regimes) is defined in exactly one place.
+
+use super::{
+    BibdCode, BrcCode, ExpanderAdjacencyCode, FrcCode, GradientCode, GraphCode,
+    PairwiseBalancedCode, RbgcCode, UncodedCode,
+};
+use crate::decode::{
+    Decoder, FixedDecoder, FrcOptimalDecoder, GenericOptimalDecoder, IgnoreStragglersDecoder,
+    OptimalGraphDecoder,
+};
+use crate::graphs::Graph;
+use crate::prng::Rng;
+use crate::sparse::Csc;
+
+/// Which assignment scheme to build.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SchemeSpec {
+    /// the paper's A_1: random d-regular graph on n vertices
+    GraphRandomRegular { n: usize, d: usize },
+    /// the paper's A_2: LPS Ramanujan graph X^{p,q}
+    GraphLps { p: u64, q: u64 },
+    /// FRC of Tandon et al. [4]
+    Frc { n: usize, m: usize, d: usize },
+    /// Raviv et al. [6] adjacency code on a random d-regular graph
+    ExpanderAdj { n: usize, d: usize },
+    /// Kadhe et al. [7] projective-plane BIBD of order s
+    Bibd { s: usize },
+    /// Charles et al. [8] regularized Bernoulli code
+    Rbgc { n: usize, m: usize, d: usize },
+    /// Wang et al. [9] batch raptor code
+    Brc { n: usize, m: usize, batch: usize },
+    /// Bitar et al. [5] pairwise balanced
+    Pairwise { n: usize, m: usize, d: usize },
+    Uncoded { n: usize },
+}
+
+impl SchemeSpec {
+    /// Parse a CLI spec like "graph-rr:16,3", "lps:5,13", "frc:16,24,3",
+    /// "expander:24,3", "bibd:3", "rbgc:16,24,3", "brc:16,24,4",
+    /// "pairwise:16,24,3", "uncoded:24".
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (kind, args) = s.split_once(':').unwrap_or((s, ""));
+        let nums: Vec<usize> = if args.is_empty() {
+            vec![]
+        } else {
+            args.split(',')
+                .map(|x| x.trim().parse::<usize>().map_err(|e| format!("bad arg '{x}': {e}")))
+                .collect::<Result<_, _>>()?
+        };
+        let need = |k: usize| -> Result<(), String> {
+            if nums.len() == k {
+                Ok(())
+            } else {
+                Err(format!("scheme '{kind}' needs {k} args, got {}", nums.len()))
+            }
+        };
+        Ok(match kind {
+            "graph-rr" => {
+                need(2)?;
+                SchemeSpec::GraphRandomRegular { n: nums[0], d: nums[1] }
+            }
+            "lps" => {
+                need(2)?;
+                SchemeSpec::GraphLps { p: nums[0] as u64, q: nums[1] as u64 }
+            }
+            "frc" => {
+                need(3)?;
+                SchemeSpec::Frc { n: nums[0], m: nums[1], d: nums[2] }
+            }
+            "expander" => {
+                need(2)?;
+                SchemeSpec::ExpanderAdj { n: nums[0], d: nums[1] }
+            }
+            "bibd" => {
+                need(1)?;
+                SchemeSpec::Bibd { s: nums[0] }
+            }
+            "rbgc" => {
+                need(3)?;
+                SchemeSpec::Rbgc { n: nums[0], m: nums[1], d: nums[2] }
+            }
+            "brc" => {
+                need(3)?;
+                SchemeSpec::Brc { n: nums[0], m: nums[1], batch: nums[2] }
+            }
+            "pairwise" => {
+                need(3)?;
+                SchemeSpec::Pairwise { n: nums[0], m: nums[1], d: nums[2] }
+            }
+            "uncoded" => {
+                need(1)?;
+                SchemeSpec::Uncoded { n: nums[0] }
+            }
+            _ => return Err(format!("unknown scheme kind '{kind}'")),
+        })
+    }
+}
+
+/// A constructed scheme with whatever structure its decoders need.
+pub struct BuiltScheme {
+    pub name: String,
+    pub a: Csc,
+    pub graph: Option<Graph>,
+    pub frc: Option<FrcCode>,
+}
+
+impl BuiltScheme {
+    pub fn n_blocks(&self) -> usize {
+        self.a.rows
+    }
+    pub fn n_machines(&self) -> usize {
+        self.a.cols
+    }
+    pub fn replication(&self) -> f64 {
+        self.a.replication_factor()
+    }
+}
+
+pub fn build(spec: &SchemeSpec, rng: &mut Rng) -> BuiltScheme {
+    match spec {
+        SchemeSpec::GraphRandomRegular { n, d } => {
+            let c = GraphCode::random_regular(*n, *d, rng);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: Some(c.graph), frc: None }
+        }
+        SchemeSpec::GraphLps { p, q } => {
+            let c = GraphCode::lps(*p, *q);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: Some(c.graph), frc: None }
+        }
+        SchemeSpec::Frc { n, m, d } => {
+            let c = FrcCode::new(*n, *m, *d);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: Some(c) }
+        }
+        SchemeSpec::ExpanderAdj { n, d } => {
+            let c = ExpanderAdjacencyCode::random_regular(*n, *d, rng);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+        SchemeSpec::Bibd { s } => {
+            let c = BibdCode::projective_plane(*s);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+        SchemeSpec::Rbgc { n, m, d } => {
+            let c = RbgcCode::new(*n, *m, *d, rng);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+        SchemeSpec::Brc { n, m, batch } => {
+            let c = BrcCode::new(*n, *m, *batch, rng);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+        SchemeSpec::Pairwise { n, m, d } => {
+            let c = PairwiseBalancedCode::new(*n, *m, *d, rng);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+        SchemeSpec::Uncoded { n } => {
+            let c = UncodedCode::new(*n);
+            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: None, frc: None }
+        }
+    }
+}
+
+/// Decoding strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DecoderSpec {
+    /// best available optimal decoder: linear-time for graph schemes,
+    /// closed form for FRC, LSQR otherwise
+    Optimal,
+    /// force the generic LSQR optimal decoder (cross-checking)
+    OptimalLsqr,
+    /// fixed unbiased coefficients 1/(d(1-p))
+    Fixed,
+    /// uncoded-style: weight 1 on every survivor
+    Ignore,
+}
+
+impl DecoderSpec {
+    pub fn parse(s: &str) -> Result<Self, String> {
+        Ok(match s {
+            "optimal" => DecoderSpec::Optimal,
+            "optimal-lsqr" => DecoderSpec::OptimalLsqr,
+            "fixed" => DecoderSpec::Fixed,
+            "ignore" => DecoderSpec::Ignore,
+            _ => return Err(format!("unknown decoder '{s}' (optimal|optimal-lsqr|fixed|ignore)")),
+        })
+    }
+}
+
+/// Build the decoder for a scheme. `p` calibrates fixed coefficients.
+pub fn make_decoder<'a>(scheme: &'a BuiltScheme, spec: DecoderSpec, p: f64) -> Box<dyn Decoder + 'a> {
+    match spec {
+        DecoderSpec::Optimal => {
+            if let Some(g) = &scheme.graph {
+                Box::new(OptimalGraphDecoder::new(g))
+            } else if let Some(frc) = &scheme.frc {
+                Box::new(FrcOptimalDecoder { code: frc })
+            } else {
+                Box::new(GenericOptimalDecoder::new(&scheme.a))
+            }
+        }
+        DecoderSpec::OptimalLsqr => Box::new(GenericOptimalDecoder::new(&scheme.a)),
+        DecoderSpec::Fixed => Box::new(FixedDecoder::new(&scheme.a, p)),
+        DecoderSpec::Ignore => Box::new(IgnoreStragglersDecoder { a: &scheme.a, weight: 1.0 }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            SchemeSpec::parse("graph-rr:16,3").unwrap(),
+            SchemeSpec::GraphRandomRegular { n: 16, d: 3 }
+        );
+        assert_eq!(SchemeSpec::parse("lps:5,13").unwrap(), SchemeSpec::GraphLps { p: 5, q: 13 });
+        assert_eq!(
+            SchemeSpec::parse("frc:16,24,3").unwrap(),
+            SchemeSpec::Frc { n: 16, m: 24, d: 3 }
+        );
+        assert!(SchemeSpec::parse("bogus:1").is_err());
+        assert!(SchemeSpec::parse("frc:1").is_err());
+    }
+
+    #[test]
+    fn build_all_kinds() {
+        let mut rng = Rng::new(0);
+        for spec in [
+            "graph-rr:12,3",
+            "frc:12,12,3",
+            "expander:12,3",
+            "bibd:2",
+            "rbgc:12,12,3",
+            "brc:12,12,4",
+            "pairwise:12,12,3",
+            "uncoded:12",
+        ] {
+            let s = SchemeSpec::parse(spec).unwrap();
+            let b = build(&s, &mut rng);
+            assert!(b.n_blocks() > 0, "{spec}");
+            assert!(b.n_machines() > 0, "{spec}");
+            // decoders at least run
+            for d in [DecoderSpec::Optimal, DecoderSpec::Fixed, DecoderSpec::Ignore] {
+                let dec = make_decoder(&b, d, 0.1);
+                let mask = vec![false; b.n_machines()];
+                let out = dec.decode(&mask);
+                assert_eq!(out.alpha.len(), b.n_blocks(), "{spec}");
+            }
+        }
+    }
+
+    #[test]
+    fn optimal_picks_specialized_decoders() {
+        let mut rng = Rng::new(1);
+        let g = build(&SchemeSpec::parse("graph-rr:12,3").unwrap(), &mut rng);
+        assert_eq!(make_decoder(&g, DecoderSpec::Optimal, 0.1).name(), "optimal-graph");
+        let f = build(&SchemeSpec::parse("frc:12,12,3").unwrap(), &mut rng);
+        assert_eq!(make_decoder(&f, DecoderSpec::Optimal, 0.1).name(), "optimal-frc");
+        let e = build(&SchemeSpec::parse("expander:12,3").unwrap(), &mut rng);
+        assert_eq!(make_decoder(&e, DecoderSpec::Optimal, 0.1).name(), "optimal-lsqr");
+    }
+}

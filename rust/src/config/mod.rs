@@ -1,0 +1,173 @@
+//! Configuration substrate: a TOML-subset file format + typed settings.
+//!
+//! Experiment configs (examples/, benches/) are flat `key = value`
+//! files with optional `[section]` headers; the CLI can override any
+//! key with `--set section.key=value`. No serde/toml crates in the
+//! offline build, so the parser lives here.
+
+pub mod json;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Flat settings map with dotted keys ("section.key").
+#[derive(Clone, Debug, Default)]
+pub struct Settings {
+    map: BTreeMap<String, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ConfigError {
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config error: {}", self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+fn err(msg: impl Into<String>) -> ConfigError {
+    ConfigError { msg: msg.into() }
+}
+
+impl Settings {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Parse TOML-subset text: comments (#), [sections], key = value.
+    /// Values: bare numbers/bools, "quoted strings", [a, b, c] arrays
+    /// (stored as comma-joined strings).
+    pub fn parse(text: &str) -> Result<Self, ConfigError> {
+        let mut s = Self::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| err(format!("line {}: expected key = value", lineno + 1)))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            s.map.insert(key, parse_value(v.trim())?);
+        }
+        Ok(s)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Apply a CLI override "key=value".
+    pub fn set_override(&mut self, kv: &str) -> Result<(), ConfigError> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| err(format!("override '{kv}' must be key=value")))?;
+        self.map.insert(k.trim().to_string(), parse_value(v.trim())?);
+        Ok(())
+    }
+
+    pub fn set(&mut self, key: &str, value: impl ToString) {
+        self.map.insert(key.to_string(), value.to_string());
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get_str(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get_str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get_str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get_str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get_str(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    /// Comma-separated f64 list (from `[a, b]` arrays or "a,b" strings).
+    pub fn f64_list(&self, key: &str) -> Option<Vec<f64>> {
+        let s = self.get_str(key)?;
+        s.split(',')
+            .map(|x| x.trim().parse::<f64>().ok())
+            .collect::<Option<Vec<_>>>()
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+}
+
+fn parse_value(v: &str) -> Result<String, ConfigError> {
+    if let Some(inner) = v.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(inner.to_string());
+    }
+    if let Some(inner) = v.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let parts: Vec<String> = inner
+            .split(',')
+            .map(|p| parse_value(p.trim()))
+            .collect::<Result<_, _>>()?;
+        return Ok(parts.join(","));
+    }
+    if v.is_empty() {
+        return Err(err("empty value"));
+    }
+    Ok(v.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let s = Settings::parse(
+            "top = 1\n[run]\np = 0.2 # straggler rate\nname = \"fig4\"\niters = 50\nflag = true\nps = [0.05, 0.1]\n",
+        )
+        .unwrap();
+        assert_eq!(s.usize_or("top", 0), 1);
+        assert_eq!(s.f64_or("run.p", 0.0), 0.2);
+        assert_eq!(s.str_or("run.name", ""), "fig4");
+        assert!(s.bool_or("run.flag", false));
+        assert_eq!(s.f64_list("run.ps").unwrap(), vec![0.05, 0.1]);
+    }
+
+    #[test]
+    fn overrides_and_defaults() {
+        let mut s = Settings::parse("[a]\nx = 1\n").unwrap();
+        s.set_override("a.x=5").unwrap();
+        assert_eq!(s.usize_or("a.x", 0), 5);
+        assert_eq!(s.usize_or("a.missing", 7), 7);
+        assert!(s.set_override("noequals").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Settings::parse("just a line\n").is_err());
+        assert!(Settings::parse("k =\n").is_err());
+    }
+}

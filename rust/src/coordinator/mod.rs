@@ -1,0 +1,459 @@
+//! Distributed coded gradient descent (the paper's Algorithm 2).
+//!
+//! Leader/worker architecture mirroring the paper's MPI cluster runs
+//! (§VIII-B "Platform and Implementation"), with threads in place of
+//! MPI ranks (DESIGN.md §3):
+//!
+//!  * the **leader** broadcasts the iterate, waits for the first
+//!    ceil(m (1-p)) worker gradients (`MPI.Request.Waitany` semantics),
+//!    marks the rest as stragglers, computes optimal (or fixed)
+//!    decoding coefficients and applies the update;
+//!  * each **worker** owns the data blocks its machine was assigned
+//!    (for graph schemes: the two endpoint blocks of its edge), computes
+//!    g_j = sum_i A_ij grad_i(theta) via its own PJRT runtime executing
+//!    the AOT `worker_grad` artifact (or a native-rust fallback), and
+//!    sends it back. Straggling is injected worker-side as a sleep.
+//!
+//! `PjRtClient` is not `Send`, so each worker thread builds its own
+//! `Runtime` — exactly the per-rank process model of the MPI original.
+
+use crate::decode::Decoder;
+use crate::runtime::{Runtime, Tensor};
+use crate::sparse::Csc;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How worker gradients are computed.
+#[derive(Clone, Debug)]
+pub enum ComputeBackend {
+    /// Execute the AOT `worker_grad_*` artifact via PJRT (the real
+    /// three-layer path). `artifact` must match (blocks, b, k).
+    Pjrt { artifacts_dir: String, artifact: String },
+    /// Pure-rust gradient (for very large m where per-thread PJRT
+    /// clients are wasteful, and for differential testing).
+    Native,
+}
+
+/// Worker-side straggler injection.
+#[derive(Clone, Debug)]
+pub enum StragglerInjection {
+    /// no injected delays: stragglers are just the slowest arrivals
+    None,
+    /// each worker sleeps `delay` before computing with prob. p per iter
+    Random { p: f64, delay: Duration, seed: u64 },
+    /// sticky stragglers (the cluster behaviour conjectured in §VIII)
+    Stagnant { p: f64, churn: f64, delay: Duration, seed: u64 },
+}
+
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// wait for ceil(m * wait_fraction) gradients, then decode
+    pub wait_fraction: f64,
+    pub backend: ComputeBackend,
+    pub injection: StragglerInjection,
+    pub step_size: f64,
+    pub iters: usize,
+    /// stop early once this wall-clock budget is exhausted (Fig. 4b
+    /// reports error after a fixed time budget)
+    pub max_duration: Option<Duration>,
+}
+
+/// Per-iteration record.
+#[derive(Clone, Debug)]
+pub struct IterStats {
+    pub iter: usize,
+    pub wall: Duration,
+    pub stragglers: usize,
+    /// which machines were cut off by the waitany threshold
+    pub straggler_mask: Vec<bool>,
+    pub decode_error_sq: f64,
+    pub progress: f64,
+}
+
+#[derive(Debug)]
+pub struct RunReport {
+    pub iters: Vec<IterStats>,
+    pub total: Duration,
+    pub final_progress: f64,
+}
+
+enum LeaderMsg {
+    Broadcast { iter: usize, theta: Arc<Vec<f32>> },
+    Shutdown,
+}
+
+struct GradMsg {
+    worker: usize,
+    iter: usize,
+    grad: Vec<f32>,
+}
+
+/// Worker-private state.
+struct WorkerData {
+    /// flattened (blocks, b, k) f32
+    x: Vec<f32>,
+    /// flattened (blocks, b) f32
+    y: Vec<f32>,
+    blocks: usize,
+    b: usize,
+    k: usize,
+}
+
+impl WorkerData {
+    /// Native gradient: g = sum over blocks of X_i^T (X_i theta - y_i).
+    fn native_grad(&self, theta: &[f32]) -> Vec<f32> {
+        let mut g = vec![0.0f32; self.k];
+        for blk in 0..self.blocks {
+            for r in 0..self.b {
+                let row = &self.x[(blk * self.b + r) * self.k..(blk * self.b + r + 1) * self.k];
+                let mut resid = -self.y[blk * self.b + r];
+                for c in 0..self.k {
+                    resid += row[c] * theta[c];
+                }
+                for c in 0..self.k {
+                    g[c] += resid * row[c];
+                }
+            }
+        }
+        g
+    }
+}
+
+fn should_straggle(injection: &StragglerInjection, worker: usize, iter: usize) -> Option<Duration> {
+    match injection {
+        StragglerInjection::None => None,
+        StragglerInjection::Random { p, delay, seed } => {
+            let mut rng = crate::prng::Rng::new(
+                seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                    ^ (iter as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+            );
+            rng.bernoulli(*p).then_some(*delay)
+        }
+        StragglerInjection::Stagnant { p, churn, delay, seed } => {
+            // sticky: status changes only on churn events; derive the
+            // status from the most recent churn epoch for this worker
+            let mut epoch = iter;
+            loop {
+                let mut rng = crate::prng::Rng::new(
+                    seed ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                        ^ (epoch as u64).wrapping_mul(0x94D0_49BB_1331_11EB),
+                );
+                if epoch == 0 || rng.bernoulli(*churn) {
+                    return rng.bernoulli(*p).then_some(*delay);
+                }
+                epoch -= 1;
+            }
+        }
+    }
+}
+
+/// The distributed cluster: leader + m worker threads.
+pub struct Cluster {
+    pub m: usize,
+    pub k: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    to_workers: Vec<mpsc::Sender<LeaderMsg>>,
+    from_workers: mpsc::Receiver<GradMsg>,
+    ready_workers: Arc<AtomicUsize>,
+}
+
+impl Cluster {
+    /// Distribute data according to the assignment matrix: machine j
+    /// receives the blocks in column j of A. All columns must hold the
+    /// same number of blocks when using the PJRT backend (the artifact
+    /// shape is static).
+    pub fn spawn(
+        a: &Csc,
+        data: &crate::data::LstsqData,
+        cfg: &ClusterConfig,
+    ) -> Result<Self> {
+        let m = a.cols;
+        let k = data.k;
+        let b = data.b;
+        let (to_leader, from_workers) = mpsc::channel::<GradMsg>();
+        let mut to_workers = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        let ready_workers = Arc::new(AtomicUsize::new(0));
+
+        for j in 0..m {
+            let (tx, rx) = mpsc::channel::<LeaderMsg>();
+            to_workers.push(tx);
+            let (blocks, _) = a.col(j);
+            let blocks = blocks.to_vec();
+            let (x, y) = data.machine_f32_buffers(&blocks);
+            let wd = WorkerData { x, y, blocks: blocks.len(), b, k };
+            let backend = cfg.backend.clone();
+            let injection = cfg.injection.clone();
+            let sender = to_leader.clone();
+            let ready = ready_workers.clone();
+            handles.push(std::thread::spawn(move || {
+                worker_main(j, wd, backend, injection, rx, sender, ready);
+            }));
+        }
+        Ok(Self { m, k, handles, to_workers, from_workers, ready_workers })
+    }
+
+    /// Block until every worker finished its (possibly PJRT-compiling)
+    /// startup, so timing starts at steady state like the paper ("we
+    /// start timing once the data has been loaded").
+    pub fn wait_ready(&self, timeout: Duration) -> Result<()> {
+        let t0 = Instant::now();
+        while self.ready_workers.load(Ordering::SeqCst) < self.m {
+            if t0.elapsed() > timeout {
+                anyhow::bail!(
+                    "only {}/{} workers ready after {timeout:?}",
+                    self.ready_workers.load(Ordering::SeqCst),
+                    self.m
+                );
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        Ok(())
+    }
+
+    /// Run coded GD: broadcast, gather the fastest, decode, update.
+    /// `progress` maps theta to the reported metric (e.g. |theta-theta*|^2).
+    pub fn run(
+        &mut self,
+        cfg: &ClusterConfig,
+        decoder: &dyn Decoder,
+        theta0: &[f64],
+        progress: impl Fn(&[f64]) -> f64,
+    ) -> Result<RunReport> {
+        let m = self.m;
+        let k = self.k;
+        let wait_for = ((m as f64) * cfg.wait_fraction).ceil() as usize;
+        let wait_for = wait_for.clamp(1, m);
+        let mut theta: Vec<f64> = theta0.to_vec();
+        let mut iters = Vec::with_capacity(cfg.iters);
+        let t_start = Instant::now();
+
+        for it in 0..cfg.iters {
+            if let Some(budget) = cfg.max_duration {
+                if t_start.elapsed() > budget {
+                    break;
+                }
+            }
+            let t_iter = Instant::now();
+            let theta32: Arc<Vec<f32>> = Arc::new(theta.iter().map(|&v| v as f32).collect());
+            for tx in &self.to_workers {
+                let _ = tx.send(LeaderMsg::Broadcast { iter: it, theta: theta32.clone() });
+            }
+            // gather the first `wait_for` gradients of THIS iteration
+            let mut grads: Vec<Option<Vec<f32>>> = vec![None; m];
+            let mut got = 0usize;
+            while got < wait_for {
+                let msg = self
+                    .from_workers
+                    .recv_timeout(Duration::from_secs(120))
+                    .context("leader timed out waiting for workers")?;
+                if msg.iter != it {
+                    continue; // stale gradient from a slow worker
+                }
+                if grads[msg.worker].is_none() {
+                    grads[msg.worker] = Some(msg.grad);
+                    got += 1;
+                }
+            }
+            let straggler_mask: Vec<bool> = grads.iter().map(|g| g.is_none()).collect();
+            let n_straggle = straggler_mask.iter().filter(|&&s| s).count();
+            let dec = decoder.decode(&straggler_mask);
+            // update: theta -= gamma * sum_j w_j g_j
+            let mut update = vec![0.0f64; k];
+            for j in 0..m {
+                if let Some(g) = &grads[j] {
+                    let wj = dec.w[j];
+                    if wj != 0.0 {
+                        for c in 0..k {
+                            update[c] += wj * g[c] as f64;
+                        }
+                    }
+                }
+            }
+            for c in 0..k {
+                theta[c] -= cfg.step_size * update[c];
+            }
+            iters.push(IterStats {
+                iter: it,
+                wall: t_iter.elapsed(),
+                stragglers: n_straggle,
+                straggler_mask,
+                decode_error_sq: dec.error_sq(),
+                progress: progress(&theta),
+            });
+        }
+        let final_progress = progress(&theta);
+        Ok(RunReport { iters, total: t_start.elapsed(), final_progress })
+    }
+
+    pub fn shutdown(mut self) {
+        for tx in &self.to_workers {
+            let _ = tx.send(LeaderMsg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_main(
+    id: usize,
+    data: WorkerData,
+    backend: ComputeBackend,
+    injection: StragglerInjection,
+    rx: mpsc::Receiver<LeaderMsg>,
+    tx: mpsc::Sender<GradMsg>,
+    ready: Arc<AtomicUsize>,
+) {
+    // per-thread PJRT runtime (PjRtClient is not Send)
+    let pjrt: Option<(Runtime, String)> = match &backend {
+        ComputeBackend::Pjrt { artifacts_dir, artifact } => {
+            let rt = Runtime::open(artifacts_dir)
+                .unwrap_or_else(|e| panic!("worker {id}: runtime open failed: {e}"));
+            // compile eagerly so startup cost is excluded from timing
+            rt.load(artifact)
+                .unwrap_or_else(|e| panic!("worker {id}: artifact load failed: {e}"));
+            Some((rt, artifact.clone()))
+        }
+        ComputeBackend::Native => None,
+    };
+    ready.fetch_add(1, Ordering::SeqCst);
+
+    loop {
+        // block for the next message, then drain to the latest
+        // broadcast (a worker that slept through iterations drops the
+        // stale ones, like a real slow rank would)
+        let mut msg = match rx.recv() {
+            Ok(m) => m,
+            Err(_) => return,
+        };
+        loop {
+            match rx.try_recv() {
+                Ok(newer) => msg = newer,
+                Err(_) => break,
+            }
+        }
+        match msg {
+            LeaderMsg::Shutdown => return,
+            LeaderMsg::Broadcast { iter, theta } => {
+                if let Some(delay) = should_straggle(&injection, id, iter) {
+                    std::thread::sleep(delay);
+                }
+                let grad = match &pjrt {
+                    Some((rt, artifact)) => {
+                        let inputs = [
+                            Tensor::f32(&[data.k], theta.as_ref().clone()),
+                            Tensor::f32(&[data.blocks, data.b, data.k], data.x.clone()),
+                            Tensor::f32(&[data.blocks, data.b], data.y.clone()),
+                        ];
+                        let out = rt
+                            .run(artifact, &inputs)
+                            .unwrap_or_else(|e| panic!("worker {id}: exec failed: {e}"));
+                        // output: per-block grads (blocks, k); machine
+                        // message is their sum g_j = sum_i A_ij grad_i
+                        let per_block = out.into_iter().next().unwrap().into_f32().unwrap();
+                        let mut g = vec![0.0f32; data.k];
+                        for blk in 0..data.blocks {
+                            for c in 0..data.k {
+                                g[c] += per_block[blk * data.k + c];
+                            }
+                        }
+                        g
+                    }
+                    None => data.native_grad(&theta),
+                };
+                let _ = tx.send(GradMsg { worker: id, iter, grad });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, GraphCode};
+    use crate::decode::OptimalGraphDecoder;
+    use crate::prng::Rng;
+
+    /// Native-backend cluster converges like batch GD when no one
+    /// straggles (PJRT-backend integration lives in rust/tests/).
+    #[test]
+    fn native_cluster_converges_without_stragglers() {
+        let mut rng = Rng::new(0);
+        let code = GraphCode::random_regular(8, 3, &mut rng); // m = 12
+        let data = crate::data::LstsqData::generate(32, 6, 8, 0.2, &mut rng);
+        let cfg = ClusterConfig {
+            wait_fraction: 1.0,
+            backend: ComputeBackend::Native,
+            injection: StragglerInjection::None,
+            step_size: 0.05,
+            iters: 60,
+            max_duration: None,
+        };
+        let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+        cluster.wait_ready(Duration::from_secs(10)).unwrap();
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let report = cluster
+            .run(&cfg, &dec, &vec![0.0; 6], |t| data.dist_to_opt(t))
+            .unwrap();
+        cluster.shutdown();
+        let e0 = data.dist_to_opt(&vec![0.0; 6]);
+        assert!(
+            report.final_progress < e0 * 1e-2,
+            "no convergence: {e0} -> {}",
+            report.final_progress
+        );
+        assert!(report.iters.iter().all(|s| s.stragglers == 0));
+        assert!(report.iters.iter().all(|s| s.decode_error_sq < 1e-18));
+    }
+
+    #[test]
+    fn native_cluster_with_waitany_stragglers() {
+        let mut rng = Rng::new(1);
+        let code = GraphCode::random_regular(8, 3, &mut rng);
+        let data = crate::data::LstsqData::generate(32, 6, 8, 0.2, &mut rng);
+        let cfg = ClusterConfig {
+            wait_fraction: 0.75, // wait for 9 of 12
+            backend: ComputeBackend::Native,
+            injection: StragglerInjection::Random {
+                p: 0.25,
+                delay: Duration::from_millis(30),
+                seed: 7,
+            },
+            step_size: 0.04,
+            iters: 40,
+            max_duration: None,
+        };
+        let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+        cluster.wait_ready(Duration::from_secs(10)).unwrap();
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let report = cluster
+            .run(&cfg, &dec, &vec![0.0; 6], |t| data.dist_to_opt(t))
+            .unwrap();
+        cluster.shutdown();
+        // exactly m - ceil(0.75 m) = 3 stragglers per iteration
+        assert!(report.iters.iter().all(|s| s.stragglers == 3), "{:?}",
+                report.iters.iter().map(|s| s.stragglers).collect::<Vec<_>>());
+        let e0 = data.dist_to_opt(&vec![0.0; 6]);
+        assert!(report.final_progress < e0 * 0.2, "{} -> {}", e0, report.final_progress);
+    }
+
+    #[test]
+    fn native_grad_matches_block_grads() {
+        let mut rng = Rng::new(2);
+        let data = crate::data::LstsqData::generate(12, 4, 6, 0.1, &mut rng);
+        let (x, y) = data.machine_f32_buffers(&[1, 4]);
+        let wd = WorkerData { x, y, blocks: 2, b: 2, k: 4 };
+        let theta: Vec<f64> = rng.gaussian_vec(4, 1.0);
+        let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+        let g = wd.native_grad(&theta32);
+        let full = data.block_grads(&theta);
+        for c in 0..4 {
+            let want = full[(1, c)] + full[(4, c)];
+            assert!((g[c] as f64 - want).abs() < 1e-3, "{} vs {}", g[c], want);
+        }
+    }
+}

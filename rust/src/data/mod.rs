@@ -1,0 +1,254 @@
+//! Synthetic workloads: the paper's least-squares problem (§VIII-B) and
+//! a token corpus for the transformer end-to-end example.
+
+use crate::linalg::{chol::lstsq_normal, dist2_sq, Mat};
+use crate::prng::Rng;
+
+/// The paper's regression data: X (N x k) with i.i.d. rows from
+/// N(0, I/k), theta ~ N(0, I), Y = X theta + Z with Z ~ sigma N(0, I).
+/// Rows are pre-split into n equal blocks of b = N/n rows, matching the
+/// blocks-as-vertices assignment.
+pub struct LstsqData {
+    pub x: Mat,
+    pub y: Vec<f64>,
+    pub n_blocks: usize,
+    /// rows per block
+    pub b: usize,
+    pub k: usize,
+    /// exact minimizer (X^T X)^{-1} X^T Y
+    pub theta_star: Vec<f64>,
+    /// the planted parameter (before noise)
+    pub theta_true: Vec<f64>,
+}
+
+impl LstsqData {
+    pub fn generate(n_points: usize, k: usize, n_blocks: usize, sigma: f64, rng: &mut Rng) -> Self {
+        assert!(n_points % n_blocks == 0, "blocks must divide N");
+        let scale = 1.0 / (k as f64).sqrt();
+        let mut x = Mat::zeros(n_points, k);
+        for v in x.data.iter_mut() {
+            *v = rng.gaussian() * scale;
+        }
+        let theta_true = rng.gaussian_vec(k, 1.0);
+        let mut y = x.mul_vec(&theta_true);
+        for v in y.iter_mut() {
+            *v += sigma * rng.gaussian();
+        }
+        let theta_star = lstsq_normal(&x, &y, 0.0).expect("X^T X should be PD for N > k");
+        Self { x, y, n_blocks, b: n_points / n_blocks, k, theta_star, theta_true }
+    }
+
+    pub fn n_points(&self) -> usize {
+        self.x.rows
+    }
+
+    /// Same data points, different blocking (e.g. the expander code of
+    /// [6] uses one block per machine while the graph scheme uses
+    /// n = 2m/d blocks). Rows are contiguous so only metadata changes.
+    pub fn reblock(&self, n_blocks: usize) -> Self {
+        assert!(self.n_points() % n_blocks == 0, "blocks must divide N");
+        Self {
+            x: self.x.clone(),
+            y: self.y.clone(),
+            n_blocks,
+            b: self.n_points() / n_blocks,
+            k: self.k,
+            theta_star: self.theta_star.clone(),
+            theta_true: self.theta_true.clone(),
+        }
+    }
+
+    /// Per-block gradients G (n x k): G[i] = X_i^T (X_i theta - y_i),
+    /// the same quantity the Pallas `block_grad` kernel computes.
+    pub fn block_grads(&self, theta: &[f64]) -> Mat {
+        let mut g = Mat::zeros(self.n_blocks, self.k);
+        for blk in 0..self.n_blocks {
+            let row0 = blk * self.b;
+            for r in 0..self.b {
+                let xr = self.x.row(row0 + r);
+                let resid = crate::linalg::dot(xr, theta) - self.y[row0 + r];
+                crate::linalg::axpy(resid, xr, g.row_mut(blk));
+            }
+        }
+        g
+    }
+
+    /// Full-batch gradient = sum of block gradients.
+    pub fn full_grad(&self, theta: &[f64]) -> Vec<f64> {
+        let g = self.block_grads(theta);
+        let mut out = vec![0.0; self.k];
+        for i in 0..self.n_blocks {
+            crate::linalg::axpy(1.0, g.row(i), &mut out);
+        }
+        out
+    }
+
+    /// |theta - theta*|^2, the convergence metric in Figures 4 and 5.
+    pub fn dist_to_opt(&self, theta: &[f64]) -> f64 {
+        dist2_sq(theta, &self.theta_star)
+    }
+
+    /// Objective |X theta - y|^2 (for loss curves).
+    pub fn loss(&self, theta: &[f64]) -> f64 {
+        let r = self.x.mul_vec(theta);
+        r.iter().zip(&self.y).map(|(a, b)| (a - b) * (a - b)).sum()
+    }
+
+    /// Block-data buffers in the layout the AOT artifacts expect:
+    /// X as (n, b, k) f32 row-major and y as (n, b) f32.
+    pub fn to_f32_buffers(&self) -> (Vec<f32>, Vec<f32>) {
+        let xb: Vec<f32> = self.x.data.iter().map(|&v| v as f32).collect();
+        let yb: Vec<f32> = self.y.iter().map(|&v| v as f32).collect();
+        (xb, yb)
+    }
+
+    /// The f32 buffers for the blocks a machine holds (graph schemes: 2).
+    pub fn machine_f32_buffers(&self, blocks: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut xb = Vec::with_capacity(blocks.len() * self.b * self.k);
+        let mut yb = Vec::with_capacity(blocks.len() * self.b);
+        for &blk in blocks {
+            let row0 = blk * self.b;
+            for r in 0..self.b {
+                xb.extend(self.x.row(row0 + r).iter().map(|&v| v as f32));
+                yb.push(self.y[row0 + r] as f32);
+            }
+        }
+        (xb, yb)
+    }
+}
+
+/// Synthetic byte-level corpus for the transformer E2E example: a
+/// pattern bank with Zipf-ish reuse plus noise, so the LM has real
+/// structure to learn (loss decreases measurably in a few hundred
+/// steps). Emits (n_blocks, batch, seq+1) i32 token blocks.
+pub struct TokenCorpus {
+    pub tokens: Vec<i32>,
+    pub vocab: usize,
+}
+
+impl TokenCorpus {
+    pub fn generate(len: usize, vocab: usize, rng: &mut Rng) -> Self {
+        assert!(vocab >= 16);
+        // pattern bank: 16 motifs of length 8-24 over a skewed alphabet
+        let motifs: Vec<Vec<i32>> = (0..16)
+            .map(|_| {
+                let l = 8 + rng.below(17);
+                (0..l)
+                    .map(|_| {
+                        // Zipf-ish: favor low token ids
+                        let r = rng.f64();
+                        ((r * r * (vocab as f64 - 1.0)) as i32).min(vocab as i32 - 1)
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut tokens = Vec::with_capacity(len);
+        while tokens.len() < len {
+            if rng.bernoulli(0.85) {
+                // Zipf over motifs: motif 0 most common
+                let idx = {
+                    let r = rng.f64();
+                    ((r * r * 16.0) as usize).min(15)
+                };
+                tokens.extend_from_slice(&motifs[idx]);
+            } else {
+                // noise run
+                for _ in 0..4 {
+                    tokens.push(rng.below(vocab) as i32);
+                }
+            }
+        }
+        tokens.truncate(len);
+        Self { tokens, vocab }
+    }
+
+    /// Slice into (n_blocks, batch, seq+1) i32 blocks, row-major.
+    pub fn blocks(&self, n_blocks: usize, batch: usize, seq_plus1: usize, rng: &mut Rng) -> Vec<i32> {
+        let per_seq = seq_plus1;
+        let total = n_blocks * batch * per_seq;
+        let mut out = Vec::with_capacity(total);
+        for _ in 0..(n_blocks * batch) {
+            let start = rng.below(self.tokens.len() - per_seq);
+            out.extend_from_slice(&self.tokens[start..start + per_seq]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> LstsqData {
+        let mut rng = Rng::new(0);
+        LstsqData::generate(40, 5, 8, 0.5, &mut rng)
+    }
+
+    #[test]
+    fn shapes_and_splits() {
+        let d = small();
+        assert_eq!(d.n_points(), 40);
+        assert_eq!(d.b, 5);
+        assert_eq!(d.block_grads(&vec![0.0; 5]).rows, 8);
+    }
+
+    #[test]
+    fn theta_star_is_stationary() {
+        let d = small();
+        let g = d.full_grad(&d.theta_star);
+        assert!(crate::linalg::norm2(&g) < 1e-8, "grad at opt = {:?}", g);
+    }
+
+    #[test]
+    fn block_grads_sum_to_full() {
+        let d = small();
+        let mut rng = Rng::new(1);
+        let theta = rng.gaussian_vec(5, 1.0);
+        let g = d.block_grads(&theta);
+        let mut sum = vec![0.0; 5];
+        for i in 0..8 {
+            crate::linalg::axpy(1.0, g.row(i), &mut sum);
+        }
+        let full = d.full_grad(&theta);
+        assert!(dist2_sq(&sum, &full) < 1e-18);
+    }
+
+    #[test]
+    fn gradient_descent_decreases_distance() {
+        let d = small();
+        let mut theta = vec![0.0; 5];
+        let e0 = d.dist_to_opt(&theta);
+        for _ in 0..200 {
+            let g = d.full_grad(&theta);
+            crate::linalg::axpy(-0.05, &g, &mut theta);
+        }
+        assert!(d.dist_to_opt(&theta) < e0 * 1e-3);
+    }
+
+    #[test]
+    fn f32_buffers_layout() {
+        let d = small();
+        let (xb, yb) = d.to_f32_buffers();
+        assert_eq!(xb.len(), 40 * 5);
+        assert_eq!(yb.len(), 40);
+        assert!((xb[0] as f64 - d.x[(0, 0)]).abs() < 1e-6);
+        let (mx, my) = d.machine_f32_buffers(&[2, 5]);
+        assert_eq!(mx.len(), 2 * 5 * 5);
+        assert_eq!(my.len(), 2 * 5);
+        assert!((mx[0] as f64 - d.x[(10, 0)]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn corpus_tokens_in_range_and_structured() {
+        let mut rng = Rng::new(2);
+        let c = TokenCorpus::generate(10_000, 256, &mut rng);
+        assert_eq!(c.tokens.len(), 10_000);
+        assert!(c.tokens.iter().all(|&t| (0..256).contains(&t)));
+        // structure: unigram distribution must be skewed (motifs reuse
+        // low ids), so low half should dominate
+        let low = c.tokens.iter().filter(|&&t| t < 128).count();
+        assert!(low > 6_000, "low={low}");
+        let blocks = c.blocks(4, 2, 65, &mut rng);
+        assert_eq!(blocks.len(), 4 * 2 * 65);
+    }
+}

@@ -1,0 +1,181 @@
+//! Decoding-error statistics (the quantities plotted in Figure 3).
+//!
+//! For a scheme + decoder + straggler model this estimates, over R
+//! Monte-Carlo draws:
+//!   * the normalized expected error  E[|alpha-bar - 1|^2] / n  where
+//!     alpha-bar = alpha * sqrt(n) / |E[alpha]|_2 (the paper normalizes
+//!     biased schemes by their mean before comparing);
+//!   * the spectral norm of the deviation second moment
+//!     |E[(alpha-bar - 1)(alpha-bar - 1)^T]|_2  via implicit power
+//!     iteration on the stored samples (never materializing n x n).
+
+use crate::decode::Decoder;
+use crate::linalg::power::{power_iteration, CovOperator};
+use crate::linalg::{axpy, norm2, scale};
+use crate::prng::Rng;
+use crate::straggler::StragglerModel;
+
+#[derive(Clone, Debug)]
+pub struct DecodingStats {
+    /// E[|alpha-bar - 1|^2] / n
+    pub mean_err_per_block: f64,
+    /// |E[(alpha-bar - 1)(alpha-bar - 1)^T]|_2
+    pub cov_norm: f64,
+    /// |E[alpha]|_2 / sqrt(n) — the normalization constant c-hat
+    pub mean_alpha_scale: f64,
+    /// raw (unnormalized) E[|alpha - 1|^2] / n
+    pub raw_err_per_block: f64,
+    pub runs: usize,
+}
+
+/// Estimate Figure-3 statistics with `runs` straggler draws.
+pub fn decoding_stats(
+    decoder: &dyn Decoder,
+    stragglers: &mut dyn StragglerModel,
+    m: usize,
+    n: usize,
+    runs: usize,
+    rng: &mut Rng,
+) -> DecodingStats {
+    assert!(runs >= 2);
+    let mut samples: Vec<Vec<f64>> = Vec::with_capacity(runs);
+    let mut mean = vec![0.0; n];
+    let mut raw_err = 0.0;
+    for _ in 0..runs {
+        let mask = stragglers.sample(m);
+        let dec = decoder.decode(&mask);
+        raw_err += crate::linalg::dist_to_ones_sq(&dec.alpha);
+        axpy(1.0, &dec.alpha, &mut mean);
+        samples.push(dec.alpha);
+    }
+    scale(1.0 / runs as f64, &mut mean);
+    // normalization alpha-bar = alpha * |1|_2 / |E[alpha]|_2
+    let mean_norm = norm2(&mean);
+    let c = mean_norm / (n as f64).sqrt();
+    let s = if c > 1e-12 { 1.0 / c } else { 0.0 };
+
+    let mut mean_err = 0.0;
+    let mut deviations: Vec<Vec<f64>> = Vec::with_capacity(runs);
+    for sample in &samples {
+        let dev: Vec<f64> = sample.iter().map(|&a| a * s - 1.0).collect();
+        mean_err += dev.iter().map(|d| d * d).sum::<f64>();
+        deviations.push(dev);
+    }
+    let op = CovOperator::from_deviations(&deviations);
+    let (cov_norm, _) = power_iteration(&op, 300, 1e-10, rng);
+    DecodingStats {
+        mean_err_per_block: mean_err / (runs as f64 * n as f64),
+        cov_norm,
+        mean_alpha_scale: c,
+        raw_err_per_block: raw_err / (runs as f64 * n as f64),
+        runs,
+    }
+}
+
+/// Theory reference lines for the figures.
+pub mod theory {
+    /// Optimal-decoding lower bound for any unbiased scheme with
+    /// replication d (Proposition A.3): p^d / (1 - p^d).
+    pub fn optimal_lower_bound(p: f64, d: f64) -> f64 {
+        let pd = p.powf(d);
+        pd / (1.0 - pd)
+    }
+
+    /// Fixed-coefficient lower bound (Proposition A.1): p / (d (1-p)).
+    pub fn fixed_lower_bound(p: f64, d: f64) -> f64 {
+        p / (d * (1.0 - p))
+    }
+
+    /// FRC covariance norm identity used in Figure 3(b)(d):
+    /// |cov|_2 = ell * E|alpha-1|^2 / N with ell = blocks per machine.
+    pub fn frc_cov_norm(p: f64, d: f64, ell: f64) -> f64 {
+        ell * optimal_lower_bound(p, d)
+    }
+
+    /// Corollary V.2 adversarial upper bound for graph schemes:
+    /// |alpha-1|^2/n <= (2d - lambda)/(2d) * p/(1-p).
+    pub fn graph_adversarial_bound(p: f64, d: f64, lambda: f64) -> f64 {
+        (2.0 * d - lambda) / (2.0 * d) * p / (1.0 - p)
+    }
+
+    /// Remark V.4 adversarial lower bound for graph schemes: p/2.
+    pub fn graph_adversarial_lower(p: f64) -> f64 {
+        p / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{FrcCode, GradientCode, GraphCode};
+    use crate::decode::{FixedDecoder, FrcOptimalDecoder, OptimalGraphDecoder};
+    use crate::straggler::BernoulliStragglers;
+
+    #[test]
+    fn frc_matches_theory() {
+        // FRC optimal decoding achieves exactly E[err]/n = p^d (the
+        // probability a block's whole group dies), matching [8]
+        let code = FrcCode::new(64, 64, 2);
+        let p = 0.3;
+        let dec = FrcOptimalDecoder { code: &code };
+        let mut strag = BernoulliStragglers::new(p, 0);
+        let mut rng = Rng::new(1);
+        let stats = decoding_stats(&dec, &mut strag, 64, 64, 3000, &mut rng);
+        // raw error ~ p^d = 0.09
+        assert!(
+            (stats.raw_err_per_block - p * p).abs() < 0.02,
+            "raw={} want~{}",
+            stats.raw_err_per_block,
+            p * p
+        );
+        // normalized error ~ p^d/(1-p^d) within Monte-Carlo noise
+        let want = theory::optimal_lower_bound(p, 2.0);
+        assert!(
+            (stats.mean_err_per_block - want).abs() < 0.03,
+            "norm={} want~{}",
+            stats.mean_err_per_block,
+            want
+        );
+    }
+
+    #[test]
+    fn optimal_graph_beats_fixed() {
+        let mut rng = Rng::new(2);
+        let code = GraphCode::random_regular(16, 3, &mut rng);
+        let p = 0.15;
+        let opt = OptimalGraphDecoder::new(&code.graph);
+        let fix = FixedDecoder::new(code.assignment(), p);
+        let m = code.n_machines();
+        let s_opt = decoding_stats(
+            &opt, &mut BernoulliStragglers::new(p, 3), m, 16, 2000, &mut rng);
+        let s_fix = decoding_stats(
+            &fix, &mut BernoulliStragglers::new(p, 3), m, 16, 2000, &mut rng);
+        assert!(
+            s_opt.mean_err_per_block < 0.5 * s_fix.mean_err_per_block,
+            "opt={} fix={}",
+            s_opt.mean_err_per_block,
+            s_fix.mean_err_per_block
+        );
+        // fixed decoder should sit near its lower bound p/(d(1-p))
+        let fix_lb = theory::fixed_lower_bound(p, 3.0);
+        assert!(s_fix.mean_err_per_block > 0.8 * fix_lb);
+    }
+
+    #[test]
+    fn unbiased_scheme_scale_near_one() {
+        let mut rng = Rng::new(4);
+        let code = GraphCode::random_regular(20, 4, &mut rng);
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let stats = decoding_stats(
+            &dec, &mut BernoulliStragglers::new(0.1, 5), code.n_machines(), 20, 1500, &mut rng);
+        assert!((stats.mean_alpha_scale - 1.0).abs() < 0.05, "c={}", stats.mean_alpha_scale);
+    }
+
+    #[test]
+    fn theory_values() {
+        assert!((theory::optimal_lower_bound(0.2, 3.0) - 0.008 / 0.992).abs() < 1e-12);
+        assert!((theory::fixed_lower_bound(0.2, 3.0) - 0.2 / 2.4).abs() < 1e-12);
+        assert!(theory::graph_adversarial_bound(0.2, 6.0, 6.0 - 2.0 * 5f64.sqrt()) > 0.0);
+        assert_eq!(theory::graph_adversarial_lower(0.3), 0.15);
+    }
+}

@@ -1,0 +1,84 @@
+//! Step-size grid search (paper Appendix G / Table IV).
+//!
+//! "To be fair to all algorithms, we use a grid search to find the best
+//! step size": cluster regime sweeps gamma = 1e-6 * 1.3^c, simulated
+//! regime sweeps gamma_t = min(0.6, 0.3 * 1.3^c / (t+1)), c in 0..=20.
+
+use super::StepSize;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GridKind {
+    /// gamma = 1e-6 * 1.3^c (distributed cluster regime, d=3)
+    Cluster,
+    /// gamma_t = min(0.6, 0.3*1.3^c/(t+1)) (simulated regime, d=6)
+    Simulated,
+}
+
+#[derive(Clone, Debug)]
+pub struct GridResult {
+    pub best_c: u32,
+    pub best_error: f64,
+    /// final error for every c tried
+    pub errors: Vec<f64>,
+}
+
+/// Sweep c over [c_lo, c_hi] and keep the best final error. `run` maps
+/// a step schedule to the run's final error (lower = better); NaN runs
+/// (diverged) are treated as +inf.
+pub fn grid_search<F>(kind: GridKind, c_lo: u32, c_hi: u32, mut run: F) -> GridResult
+where
+    F: FnMut(StepSize) -> f64,
+{
+    assert!(c_lo <= c_hi);
+    let mut errors = Vec::with_capacity((c_hi - c_lo + 1) as usize);
+    let mut best_c = c_lo;
+    let mut best_error = f64::INFINITY;
+    for c in c_lo..=c_hi {
+        let step = match kind {
+            GridKind::Cluster => StepSize::cluster_grid(c),
+            GridKind::Simulated => StepSize::simulated_grid(c),
+        };
+        let mut err = run(step);
+        if !err.is_finite() {
+            err = f64::INFINITY;
+        }
+        errors.push(err);
+        if err < best_error {
+            best_error = err;
+            best_c = c;
+        }
+    }
+    GridResult { best_c, best_error, errors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_the_valley() {
+        // error is minimized at c = 7 (cluster grid: gammas are unique)
+        let r = grid_search(GridKind::Cluster, 0, 20, |s| {
+            let gamma0 = s.at(0);
+            let target = StepSize::cluster_grid(7).at(0);
+            (gamma0 - target).abs()
+        });
+        assert_eq!(r.best_c, 7);
+        assert!(r.best_error < 1e-12);
+        assert_eq!(r.errors.len(), 21);
+    }
+
+    #[test]
+    fn divergent_runs_are_skipped() {
+        let r = grid_search(GridKind::Cluster, 0, 5, |s| {
+            if s.at(0) > 2e-6 {
+                f64::NAN
+            } else {
+                1.0 / s.at(0)
+            }
+        });
+        // c=2 -> 1.69e-6 is the largest non-NaN gamma -> smallest 1/gamma
+        assert_eq!(r.best_c, 2);
+        assert!(r.errors[3].is_infinite());
+    }
+}

@@ -1,0 +1,254 @@
+//! Coded gradient-descent engines.
+//!
+//! [`SimulatedGcod`] is Algorithm 3 / the paper's §VIII-B simulation:
+//! each iteration samples a straggler pattern, decodes coefficients,
+//! and applies theta <- theta - gamma_t * sum_i alpha_i grad_i(theta).
+//! Gradients come from a [`GradSource`] so the same engine drives the
+//! pure-rust oracle, the PJRT least-squares artifacts, and the
+//! transformer artifacts. The distributed Algorithm 2 lives in
+//! [`crate::coordinator`].
+
+pub mod analysis;
+pub mod bounds;
+pub mod grid;
+pub mod pjrt;
+
+use crate::decode::Decoder;
+use crate::linalg::Mat;
+use crate::straggler::StragglerModel;
+
+/// Per-block gradient provider.
+pub trait GradSource {
+    fn n_blocks(&self) -> usize;
+    /// parameter dimension
+    fn dim(&self) -> usize;
+    /// G (n_blocks x dim) at theta
+    fn block_grads(&mut self, theta: &[f64]) -> Mat;
+    /// progress metric: |theta - theta*|^2 for least squares, loss for
+    /// models without a closed-form optimum
+    fn progress(&mut self, theta: &[f64]) -> f64;
+}
+
+impl GradSource for &crate::data::LstsqData {
+    fn n_blocks(&self) -> usize {
+        self.n_blocks
+    }
+    fn dim(&self) -> usize {
+        self.k
+    }
+    fn block_grads(&mut self, theta: &[f64]) -> Mat {
+        crate::data::LstsqData::block_grads(self, theta)
+    }
+    fn progress(&mut self, theta: &[f64]) -> f64 {
+        self.dist_to_opt(theta)
+    }
+}
+
+/// Step-size schedules used in the paper's experiments (Appendix G).
+#[derive(Clone, Copy, Debug)]
+pub enum StepSize {
+    Const(f64),
+    /// gamma_t = min(cap, scale / (t+1)) — the simulated-regime schedule
+    LinearDecay { cap: f64, scale: f64 },
+}
+
+impl StepSize {
+    pub fn at(&self, t: usize) -> f64 {
+        match *self {
+            StepSize::Const(g) => g,
+            StepSize::LinearDecay { cap, scale } => (scale / (t as f64 + 1.0)).min(cap),
+        }
+    }
+
+    /// The paper's distributed-regime grid: gamma = 1e-6 * 1.3^c.
+    pub fn cluster_grid(c: u32) -> StepSize {
+        StepSize::Const(1e-6 * 1.3f64.powi(c as i32))
+    }
+
+    /// The paper's simulated-regime grid:
+    /// gamma_t = min(0.6, 0.3 * 1.3^c / (t+1)).
+    pub fn simulated_grid(c: u32) -> StepSize {
+        StepSize::LinearDecay { cap: 0.6, scale: 0.3 * 1.3f64.powi(c as i32) }
+    }
+}
+
+/// History of one coded-GD run.
+#[derive(Clone, Debug)]
+pub struct RunHistory {
+    /// progress metric after each iteration (index 0 = before any step)
+    pub progress: Vec<f64>,
+    /// decoding error |alpha - 1|^2 of each iteration's pattern
+    pub decode_errors: Vec<f64>,
+}
+
+impl RunHistory {
+    pub fn final_progress(&self) -> f64 {
+        *self.progress.last().expect("empty run")
+    }
+}
+
+/// Algorithm-3 simulated coded gradient descent.
+pub struct SimulatedGcod<'a> {
+    pub decoder: &'a dyn Decoder,
+    pub stragglers: &'a mut dyn StragglerModel,
+    pub step: StepSize,
+    /// optional block shuffle rho (Algorithms 2/3 draw rho uniformly):
+    /// data block i is assigned to assignment-row rho[i]
+    pub rho: Option<Vec<usize>>,
+    /// number of machines m (the straggler mask length)
+    pub m: usize,
+    /// normalize the update by 1/E-hat[alpha] to debias (used with the
+    /// fixed decoder this is a no-op since it is already unbiased)
+    pub alpha_scale: f64,
+}
+
+impl SimulatedGcod<'_> {
+    /// Run `iters` steps from `theta0`, recording progress every
+    /// iteration.
+    pub fn run<S: GradSource>(&mut self, src: &mut S, theta0: &[f64], iters: usize) -> RunHistory {
+        let n = src.n_blocks();
+        let dim = src.dim();
+        assert_eq!(theta0.len(), dim);
+        if let Some(rho) = &self.rho {
+            assert_eq!(rho.len(), n);
+        }
+        let mut theta = theta0.to_vec();
+        let mut progress = Vec::with_capacity(iters + 1);
+        let mut decode_errors = Vec::with_capacity(iters);
+        progress.push(src.progress(&theta));
+        for t in 0..iters {
+            let mask = self.stragglers.sample(self.m);
+            let dec = self.decoder.decode(&mask);
+            decode_errors.push(dec.error_sq());
+            let g = src.block_grads(&theta);
+            let gamma = self.step.at(t);
+            // theta -= gamma * sum_i alpha_{rho(i)} * G_i
+            for i in 0..n {
+                let a = match &self.rho {
+                    Some(rho) => dec.alpha[rho[i]],
+                    None => dec.alpha[i],
+                } * self.alpha_scale;
+                if a != 0.0 {
+                    crate::linalg::axpy(-gamma * a, g.row(i), &mut theta);
+                }
+            }
+            progress.push(src.progress(&theta));
+        }
+        RunHistory { progress, decode_errors }
+    }
+}
+
+/// Uncoded baseline: same machinery, but per Remark VIII.1 it runs
+/// d times as many iterations (each coded iteration computes a d-times
+/// larger gradient).
+pub fn uncoded_iters(coded_iters: usize, d: usize) -> usize {
+    coded_iters * d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, GraphCode};
+    use crate::data::LstsqData;
+    use crate::decode::{FixedDecoder, OptimalGraphDecoder};
+    use crate::prng::Rng;
+    use crate::straggler::BernoulliStragglers;
+
+    fn setup() -> (LstsqData, GraphCode) {
+        let mut rng = Rng::new(0);
+        let code = GraphCode::random_regular(16, 3, &mut rng);
+        let data = LstsqData::generate(64, 8, 16, 0.3, &mut rng);
+        (data, code)
+    }
+
+    #[test]
+    fn no_stragglers_matches_batch_gd() {
+        let (data, code) = setup();
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let mut strag = BernoulliStragglers::new(0.0, 1);
+        let mut engine = SimulatedGcod {
+            decoder: &dec,
+            stragglers: &mut strag,
+            step: StepSize::Const(0.05),
+            rho: None,
+            m: code.n_machines(),
+            alpha_scale: 1.0,
+        };
+        let mut src = &data;
+        let hist = engine.run(&mut src, &vec![0.0; 8], 30);
+        // with p=0 optimal decoding is exact, so this IS batch GD
+        let mut theta = vec![0.0; 8];
+        for _ in 0..30 {
+            let g = data.full_grad(&theta);
+            crate::linalg::axpy(-0.05, &g, &mut theta);
+        }
+        assert!((hist.final_progress() - data.dist_to_opt(&theta)).abs() < 1e-10);
+        assert!(hist.decode_errors.iter().all(|&e| e < 1e-18));
+    }
+
+    #[test]
+    fn optimal_converges_with_stragglers() {
+        let (data, code) = setup();
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let mut strag = BernoulliStragglers::new(0.2, 2);
+        let mut engine = SimulatedGcod {
+            decoder: &dec,
+            stragglers: &mut strag,
+            step: StepSize::Const(0.04),
+            rho: Some(Rng::new(3).permutation(16)),
+            m: code.n_machines(),
+            alpha_scale: 1.0,
+        };
+        let mut src = &data;
+        let e0 = data.dist_to_opt(&vec![0.0; 8]);
+        let hist = engine.run(&mut src, &vec![0.0; 8], 120);
+        assert!(
+            hist.final_progress() < e0 * 0.05,
+            "no convergence: {} -> {}",
+            e0,
+            hist.final_progress()
+        );
+    }
+
+    #[test]
+    fn optimal_beats_fixed_on_average() {
+        let (data, code) = setup();
+        let p = 0.25;
+        let opt = OptimalGraphDecoder::new(&code.graph);
+        let fixed = FixedDecoder::new(code.assignment(), p);
+        let run = |dec: &dyn crate::decode::Decoder, seed: u64| {
+            let mut strag = BernoulliStragglers::new(p, seed);
+            let mut engine = SimulatedGcod {
+                decoder: dec,
+                stragglers: &mut strag,
+                step: StepSize::Const(0.03),
+                rho: None,
+                m: code.n_machines(),
+                alpha_scale: 1.0,
+            };
+            let mut src = &data;
+            engine.run(&mut src, &vec![0.0; 8], 100).final_progress()
+        };
+        let mut opt_sum = 0.0;
+        let mut fix_sum = 0.0;
+        for s in 0..5 {
+            opt_sum += run(&opt, 100 + s);
+            fix_sum += run(&fixed, 100 + s);
+        }
+        assert!(
+            opt_sum < fix_sum,
+            "optimal {} should beat fixed {}",
+            opt_sum / 5.0,
+            fix_sum / 5.0
+        );
+    }
+
+    #[test]
+    fn step_schedules() {
+        let s = StepSize::simulated_grid(0);
+        assert!((s.at(0) - 0.3).abs() < 1e-12);
+        assert!(s.at(9) < s.at(0));
+        let c = StepSize::cluster_grid(0);
+        assert!((c.at(5) - 1e-6).abs() < 1e-18);
+    }
+}

@@ -1,0 +1,177 @@
+//! PJRT-backed coded-GD engines: the real three-layer request path.
+//!
+//! Per iteration the leader (this thread) samples stragglers, runs the
+//! linear-time decoder, executes the AOT `block_grad` artifact for all
+//! blocks in one dispatch, executes `decode_combine` with the decoded
+//! alpha, and applies the SGD step — the Pallas kernels do all FLOPs.
+
+use crate::data::LstsqData;
+use crate::decode::Decoder;
+use crate::runtime::{Runtime, Tensor};
+use crate::straggler::StragglerModel;
+use anyhow::{anyhow, Result};
+
+/// Simulated GCOD (Algorithm 3) where gradients and the combine run on
+/// the PJRT artifacts.
+pub struct PjrtGcod<'a> {
+    pub rt: &'a Runtime,
+    pub decoder: &'a dyn Decoder,
+    pub stragglers: &'a mut dyn StragglerModel,
+    pub m: usize,
+    pub step: super::StepSize,
+    /// optional block shuffle rho: data block i -> assignment row rho[i]
+    pub rho: Option<Vec<usize>>,
+}
+
+impl PjrtGcod<'_> {
+    /// Run `iters` iterations on `data`, using the artifacts matching
+    /// its (n, b, k) shape. Returns the progress history |theta-theta*|^2.
+    pub fn run(&mut self, data: &LstsqData, theta0: &[f64], iters: usize) -> Result<super::RunHistory> {
+        let (n, b, k) = (data.n_blocks, data.b, data.k);
+        let grad_name = self
+            .rt
+            .manifest
+            .find_block_grad(n, b, k)
+            .ok_or_else(|| anyhow!("no block_grad artifact for shape ({n},{b},{k}); re-run `make artifacts`"))?
+            .name
+            .clone();
+        let combine_name = self
+            .rt
+            .manifest
+            .find_decode_combine(n, k)
+            .ok_or_else(|| anyhow!("no decode_combine artifact for shape ({n},{k})"))?
+            .name
+            .clone();
+        let grad_exe = self.rt.load(&grad_name)?;
+        let combine_exe = self.rt.load(&combine_name)?;
+        let (xb, yb) = data.to_f32_buffers();
+        // upload the static data once; only theta/alpha move per iter
+        let x_buf = grad_exe.upload(&Tensor::f32(&[n, b, k], xb), &self.rt.client)?;
+        let y_buf = grad_exe.upload(&Tensor::f32(&[n, b], yb), &self.rt.client)?;
+
+        let mut theta: Vec<f64> = theta0.to_vec();
+        let mut progress = Vec::with_capacity(iters + 1);
+        let mut decode_errors = Vec::with_capacity(iters);
+        progress.push(data.dist_to_opt(&theta));
+        for t in 0..iters {
+            let mask = self.stragglers.sample(self.m);
+            let dec = self.decoder.decode(&mask);
+            decode_errors.push(dec.error_sq());
+            // alpha routed through the shuffle: block i weight alpha[rho[i]]
+            let alpha32: Vec<f32> = (0..n)
+                .map(|i| match &self.rho {
+                    Some(rho) => dec.alpha[rho[i]] as f32,
+                    None => dec.alpha[i] as f32,
+                })
+                .collect();
+            let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+            let theta_buf = grad_exe.upload(&Tensor::f32(&[k], theta32), &self.rt.client)?;
+            // L1 kernel 1+2: all block gradients in one dispatch
+            let g_out = grad_exe.run_b(&[&theta_buf, &x_buf, &y_buf])?;
+            let g = g_out.into_iter().next().unwrap();
+            // L1 combine kernel: u = G^T alpha
+            let alpha_t = Tensor::f32(&[n], alpha32);
+            let u = combine_exe
+                .run(&[g, alpha_t])?
+                .into_iter()
+                .next()
+                .unwrap()
+                .into_f32()?;
+            let gamma = self.step.at(t);
+            for c in 0..k {
+                theta[c] -= gamma * u[c] as f64;
+            }
+            progress.push(data.dist_to_opt(&theta));
+        }
+        Ok(super::RunHistory { progress, decode_errors })
+    }
+}
+
+/// Coded training of the AOT transformer (the E2E driver's engine).
+pub struct PjrtTransformerTrainer<'a> {
+    pub rt: &'a Runtime,
+    pub decoder: &'a dyn Decoder,
+    pub stragglers: &'a mut dyn StragglerModel,
+    pub m: usize,
+    pub gamma: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransformerRun {
+    /// mean per-block training loss each iteration
+    pub train_loss: Vec<f64>,
+    /// held-out eval loss every `eval_every` iterations: (iter, loss)
+    pub eval_loss: Vec<(usize, f64)>,
+    pub final_params: Vec<f32>,
+}
+
+impl PjrtTransformerTrainer<'_> {
+    /// `tokens_all`: (n_blocks, batch, seq+1) i32 blocks; `eval_tokens`:
+    /// one (batch, seq+1) held-out block.
+    pub fn run(
+        &mut self,
+        tokens_all: &[i32],
+        eval_tokens: &[i32],
+        iters: usize,
+        eval_every: usize,
+        rho: Option<&[usize]>,
+    ) -> Result<TransformerRun> {
+        let tfm = self
+            .rt
+            .manifest
+            .transformer
+            .clone()
+            .ok_or_else(|| anyhow!("manifest has no transformer metadata"))?;
+        let (nb, batch, s1) = (tfm.n_blocks, tfm.batch, tfm.seq_len + 1);
+        assert_eq!(tokens_all.len(), nb * batch * s1, "token blocks shape");
+        assert_eq!(eval_tokens.len(), batch * s1, "eval tokens shape");
+        let p_dim = tfm.n_params;
+        let grad_exe = self.rt.load("tfm_block_grad_all")?;
+        let eval_exe = self.rt.load("tfm_eval_loss")?;
+        let tokens_buf = grad_exe.upload(
+            &Tensor::i32(&[nb, batch, s1], tokens_all.to_vec()),
+            &self.rt.client,
+        )?;
+        let eval_t = Tensor::i32(&[batch, s1], eval_tokens.to_vec());
+
+        let mut params: Vec<f32> = self.rt.read_transformer_init()?;
+        let mut train_loss = Vec::with_capacity(iters);
+        let mut eval_loss = Vec::new();
+        for t in 0..iters {
+            let mask = self.stragglers.sample(self.m);
+            let dec = self.decoder.decode(&mask);
+            let params_buf =
+                grad_exe.upload(&Tensor::f32(&[p_dim], params.clone()), &self.rt.client)?;
+            let out = grad_exe.run_b(&[&params_buf, &tokens_buf])?;
+            let mut it = out.into_iter();
+            let grads = it.next().unwrap().into_f32()?; // (nb, P)
+            let losses = it.next().unwrap().into_f32()?; // (nb,)
+            // coded update: params -= gamma * sum_i alpha_i grad_i
+            for i in 0..nb {
+                let a = match rho {
+                    Some(r) => dec.alpha[r[i]],
+                    None => dec.alpha[i],
+                } as f32;
+                if a != 0.0 {
+                    let row = &grads[i * p_dim..(i + 1) * p_dim];
+                    let ga = self.gamma as f32 * a;
+                    for c in 0..p_dim {
+                        params[c] -= ga * row[c];
+                    }
+                }
+            }
+            // with loss_scale = 1/(nb*batch*seq), sum_i f_i IS the
+            // global mean next-token CE (test_sum_of_block_losses_...)
+            let mean_loss: f64 = losses.iter().map(|&l| l as f64).sum();
+            train_loss.push(mean_loss);
+            if t % eval_every == 0 || t + 1 == iters {
+                let out = eval_exe.run(&[Tensor::f32(&[p_dim], params.clone()), eval_t.clone()])?;
+                eval_loss.push((t, out[0].as_f32()?[0] as f64));
+            }
+        }
+        Ok(TransformerRun { train_loss, eval_loss, final_params: params })
+    }
+}
+
+// Integration tests for these engines live in rust/tests/ (they need
+// built artifacts on disk).

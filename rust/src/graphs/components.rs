@@ -1,0 +1,229 @@
+//! Connected-component analysis of the straggler-sparsified graph G(p).
+//!
+//! This implements the combinatorial core of Section III: given the set
+//! of surviving machines (edges), BFS splits G(p) into components and
+//! 2-colors each one. The optimal alpha* is then determined per
+//! component (observations 1–3 after Eq. 4):
+//!   * non-bipartite (odd cycle)  -> alpha*_v = 1 everywhere;
+//!   * bipartite with sides L, R (|L| >= |R|) ->
+//!       alpha*_v = 1 - (|L|-|R|)/(|L|+|R|)  for v in L,
+//!       alpha*_u = 1 + (|L|-|R|)/(|L|+|R|)  for u in R;
+//!   * isolated vertex (all incident machines straggle) -> alpha*_v = 0.
+
+use super::Graph;
+
+/// One connected component of the surviving subgraph.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub vertices: Vec<usize>,
+    /// surviving edge ids inside the component
+    pub edges: Vec<usize>,
+    /// None if the component contains an odd cycle; otherwise the two
+    /// sides (side0, side1) of the 2-coloring with side0 = color of the
+    /// BFS root.
+    pub sides: Option<(Vec<usize>, Vec<usize>)>,
+}
+
+impl Component {
+    pub fn is_bipartite(&self) -> bool {
+        self.sides.is_some()
+    }
+
+    pub fn size(&self) -> usize {
+        self.vertices.len()
+    }
+
+    /// The component's contribution to alpha* (value for each side).
+    /// Returns (value on side0, value on side1); for non-bipartite
+    /// components both are 1.
+    pub fn alpha_values(&self) -> (f64, f64) {
+        match &self.sides {
+            None => (1.0, 1.0),
+            Some((s0, s1)) => {
+                let (l, r) = (s0.len() as f64, s1.len() as f64);
+                // alpha on a side is 2*|other side| / (|L|+|R|):
+                // for the larger side this is 1 - imbalance, for the
+                // smaller side 1 + imbalance. An isolated vertex has
+                // (l, r) = (1, 0) -> alpha = 0.
+                (2.0 * r / (l + r), 2.0 * l / (l + r))
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ComponentAnalysis {
+    pub components: Vec<Component>,
+    /// component id of each vertex
+    pub comp_of: Vec<usize>,
+    /// color (0/1) of each vertex in its BFS 2-coloring attempt; for
+    /// non-bipartite components this is still the BFS coloring (used by
+    /// the w* solver to find an odd non-tree edge).
+    pub color: Vec<u8>,
+}
+
+/// BFS over surviving edges only. O(n + m_alive).
+pub fn analyze_components(g: &Graph, edge_alive: &[bool]) -> ComponentAnalysis {
+    assert_eq!(edge_alive.len(), g.m());
+    let n = g.n;
+    let mut comp_of = vec![usize::MAX; n];
+    let mut color = vec![0u8; n];
+    let mut components = Vec::new();
+    let mut queue = std::collections::VecDeque::new();
+
+    for root in 0..n {
+        if comp_of[root] != usize::MAX {
+            continue;
+        }
+        let cid = components.len();
+        comp_of[root] = cid;
+        color[root] = 0;
+        queue.push_back(root);
+        let mut vertices = vec![root];
+        let mut edges = Vec::new();
+        let mut bipartite = true;
+        while let Some(u) = queue.pop_front() {
+            for &(v, eid) in &g.adj[u] {
+                if !edge_alive[eid] {
+                    continue;
+                }
+                if comp_of[v] == usize::MAX {
+                    comp_of[v] = cid;
+                    color[v] = 1 - color[u];
+                    vertices.push(v);
+                    queue.push_back(v);
+                    edges.push(eid);
+                } else {
+                    // count each edge once (from its lower-id endpoint visit);
+                    // use the edge orientation to dedupe
+                    let (eu, _ev) = g.edges[eid];
+                    if eu == u && g.edges[eid].1 != u {
+                        edges.push(eid);
+                    } else if g.edges[eid].0 == g.edges[eid].1 {
+                        unreachable!("self-loops rejected at construction");
+                    }
+                    if color[v] == color[u] {
+                        bipartite = false;
+                    }
+                }
+            }
+        }
+        // dedupe edges (tree edges pushed once; non-tree edges may be
+        // pushed from both endpoints' scans)
+        edges.sort_unstable();
+        edges.dedup();
+        let sides = if bipartite {
+            let mut s0 = Vec::new();
+            let mut s1 = Vec::new();
+            for &v in &vertices {
+                if color[v] == 0 {
+                    s0.push(v);
+                } else {
+                    s1.push(v);
+                }
+            }
+            Some((s0, s1))
+        } else {
+            None
+        };
+        components.push(Component { vertices, edges, sides });
+    }
+    ComponentAnalysis { components, comp_of, color }
+}
+
+/// The optimal alpha* vector for a surviving-edge pattern (Section III).
+pub fn optimal_alpha(g: &Graph, edge_alive: &[bool]) -> Vec<f64> {
+    let analysis = analyze_components(g, edge_alive);
+    alpha_from_analysis(g, &analysis)
+}
+
+/// alpha* from a precomputed component analysis.
+pub fn alpha_from_analysis(g: &Graph, analysis: &ComponentAnalysis) -> Vec<f64> {
+    let mut alpha = vec![0.0; g.n];
+    for comp in &analysis.components {
+        let (a0, a1) = comp.alpha_values();
+        for &v in &comp.vertices {
+            alpha[v] = if analysis.color[v] == 0 { a0 } else { a1 };
+        }
+    }
+    alpha
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_path() -> Graph {
+        // vertices 0,1,2 triangle; 3-4 path; 5 isolated
+        Graph::new(6, vec![(0, 1), (1, 2), (0, 2), (3, 4)])
+    }
+
+    #[test]
+    fn all_alive_components() {
+        let g = triangle_plus_path();
+        let a = analyze_components(&g, &[true; 4]);
+        assert_eq!(a.components.len(), 3);
+        let tri = &a.components[a.comp_of[0]];
+        assert!(!tri.is_bipartite());
+        assert_eq!(tri.size(), 3);
+        assert_eq!(tri.edges.len(), 3);
+        let path = &a.components[a.comp_of[3]];
+        assert!(path.is_bipartite());
+        let iso = &a.components[a.comp_of[5]];
+        assert_eq!(iso.size(), 1);
+        assert_eq!(iso.alpha_values().0, 0.0);
+    }
+
+    #[test]
+    fn alpha_odd_component_is_one() {
+        let g = triangle_plus_path();
+        let alpha = optimal_alpha(&g, &[true; 4]);
+        assert_eq!(&alpha[0..3], &[1.0, 1.0, 1.0]);
+        // balanced path component: alpha = 1 on both sides
+        assert_eq!(&alpha[3..5], &[1.0, 1.0]);
+        // isolated vertex
+        assert_eq!(alpha[5], 0.0);
+    }
+
+    #[test]
+    fn alpha_unbalanced_bipartite_star() {
+        // star: center 0, leaves 1..4 — bipartite with |L|=4 (leaves) |R|=1
+        let g = Graph::new(5, vec![(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let alpha = optimal_alpha(&g, &[true; 4]);
+        // paper obs. 3: center gets 1 + 3/5 = 1.6, leaves 1 - 3/5 = 0.4
+        assert!((alpha[0] - 1.6).abs() < 1e-12, "{alpha:?}");
+        for v in 1..5 {
+            assert!((alpha[v] - 0.4).abs() < 1e-12);
+        }
+        // Eq. (4): alpha_u + alpha_v = 2 on every surviving edge
+        for &(u, v) in &g.edges {
+            assert!((alpha[u] + alpha[v] - 2.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dead_edges_split_components() {
+        let g = triangle_plus_path();
+        // kill one triangle edge -> becomes a path (bipartite, balanced-ish)
+        let alpha = optimal_alpha(&g, &[false, true, true, true]);
+        // path 1-2-0: sides {1,0} and {2} -> alpha: 2*1/3 on big side, 2*2/3=4/3 on small
+        let imb = 1.0 / 3.0;
+        assert!((alpha[1] - (1.0 - imb)).abs() < 1e-12, "{alpha:?}");
+        assert!((alpha[0] - (1.0 - imb)).abs() < 1e-12);
+        assert!((alpha[2] - (1.0 + imb)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn even_cycle_balanced() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        let alpha = optimal_alpha(&g, &[true; 4]);
+        assert!(alpha.iter().all(|&a| (a - 1.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn all_dead_gives_zero_alpha() {
+        let g = triangle_plus_path();
+        let alpha = optimal_alpha(&g, &[false; 4]);
+        assert!(alpha.iter().all(|&a| a == 0.0));
+    }
+}

@@ -1,0 +1,253 @@
+//! Lubotzky–Phillips–Sarnak Ramanujan graphs X^{p,q} [LPS 1986].
+//!
+//! The paper's regime-2 assignment A_2 is "the degree 6 LPS expander on
+//! n = 2184 vertices with 6552 edges" (Section VIII) — that is X^{5,13}:
+//! the Cayley graph of PGL_2(F_13) (|PGL_2(13)| = 13·168 = 2184) with
+//! p+1 = 6 generators, one per integer quaternion (a,b,c,d) with
+//! a^2+b^2+c^2+d^2 = p, a odd and positive. Each quaternion maps to the
+//! matrix  [[a + b·i, c + d·i], [-c + d·i, a - b·i]] mod q,  where
+//! i^2 ≡ -1 (mod q). Because (5/13) = -1 the graph is bipartite; it is
+//! 6-regular, vertex-transitive (Cayley), and Ramanujan:
+//! lambda_2 <= 2*sqrt(p).
+
+use super::Graph;
+use std::collections::HashMap;
+
+/// Modular exponentiation.
+fn pow_mod(mut b: u64, mut e: u64, q: u64) -> u64 {
+    let mut r = 1u64;
+    b %= q;
+    while e > 0 {
+        if e & 1 == 1 {
+            r = r * b % q;
+        }
+        b = b * b % q;
+        e >>= 1;
+    }
+    r
+}
+
+/// Inverse mod prime q (Fermat).
+fn inv_mod(a: u64, q: u64) -> u64 {
+    assert!(a % q != 0);
+    pow_mod(a, q - 2, q)
+}
+
+/// A square root of -1 mod q (requires q ≡ 1 mod 4).
+fn sqrt_minus_one(q: u64) -> u64 {
+    assert!(q % 4 == 1, "need q ≡ 1 (mod 4)");
+    for x in 2..q {
+        if x * x % q == q - 1 {
+            return x;
+        }
+    }
+    unreachable!("no sqrt(-1) mod {q}")
+}
+
+/// Legendre symbol (a/q) for odd prime q: 1, q-1 (=-1), or 0.
+pub fn legendre(a: u64, q: u64) -> u64 {
+    pow_mod(a % q, (q - 1) / 2, q)
+}
+
+/// 2x2 matrix over F_q in projective canonical form: scaled so the
+/// first non-zero entry (scanning a,b,c,d) is 1.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+struct PglElt {
+    a: u64,
+    b: u64,
+    c: u64,
+    d: u64,
+}
+
+fn canon(a: u64, b: u64, c: u64, d: u64, q: u64) -> PglElt {
+    let first = [a, b, c, d].into_iter().find(|&x| x % q != 0).expect("zero matrix");
+    let s = inv_mod(first, q);
+    PglElt { a: a * s % q, b: b * s % q, c: c * s % q, d: d * s % q }
+}
+
+fn mat_mul(x: PglElt, y: PglElt, q: u64) -> PglElt {
+    canon(
+        x.a * y.a % q + x.b * y.c % q,
+        x.a * y.b % q + x.b * y.d % q,
+        x.c * y.a % q + x.d * y.c % q,
+        x.c * y.b % q + x.d * y.d % q,
+        q,
+    )
+}
+
+/// All integer quaternion solutions a^2+b^2+c^2+d^2 = p with a odd > 0
+/// (for p ≡ 1 mod 4 there are exactly p+1 of them).
+fn quaternion_generators(p: i64) -> Vec<(i64, i64, i64, i64)> {
+    let mut gens = Vec::new();
+    let bound = (p as f64).sqrt() as i64 + 1;
+    for a in (1..=bound).step_by(2) {
+        for b in -bound..=bound {
+            for c in -bound..=bound {
+                for d in -bound..=bound {
+                    if a * a + b * b + c * c + d * d == p {
+                        gens.push((a, b, c, d));
+                    }
+                }
+            }
+        }
+    }
+    gens
+}
+
+fn to_fq(x: i64, q: u64) -> u64 {
+    x.rem_euclid(q as i64) as u64
+}
+
+/// Construct the LPS graph X^{p,q}. Requirements: p, q distinct primes,
+/// p ≡ q ≡ 1 (mod 4), q > 2*sqrt(p). When (p/q) = -1 the graph is the
+/// bipartite Cayley graph of PGL_2(F_q) with n = q(q^2-1) vertices;
+/// when (p/q) = 1 it is the Cayley graph of PSL_2(F_q) with
+/// n = q(q^2-1)/2 vertices. Degree is p+1 in both cases.
+pub fn lps_graph(p: u64, q: u64) -> Graph {
+    assert!(p % 4 == 1 && q % 4 == 1, "need p ≡ q ≡ 1 (mod 4)");
+    assert_ne!(p, q);
+    let i = sqrt_minus_one(q);
+    let nonresidue = legendre(p, q) == q - 1;
+
+    // generator matrices
+    let quats = quaternion_generators(p as i64);
+    assert_eq!(quats.len(), (p + 1) as usize, "expected p+1 quaternion generators");
+    let gens: Vec<PglElt> = quats
+        .iter()
+        .map(|&(a, b, c, d)| {
+            // [[a + b i, c + d i], [-c + d i, a - b i]]
+            canon(
+                (to_fq(a, q) + to_fq(b, q) * i) % q,
+                (to_fq(c, q) + to_fq(d, q) * i) % q,
+                (to_fq(-c, q) + to_fq(d, q) * i) % q,
+                (to_fq(a, q) + (q - 1) * (to_fq(b, q) * i % q)) % q,
+                q,
+            )
+        })
+        .collect();
+
+    // enumerate the vertex group: PGL_2(F_q) in full, or its index-2
+    // subgroup PSL_2 (matrices whose det is a square) when (p/q)=1.
+    let is_square: Vec<bool> = {
+        let mut sq = vec![false; q as usize];
+        for x in 1..q {
+            sq[(x * x % q) as usize] = true;
+        }
+        sq
+    };
+    let mut index: HashMap<PglElt, usize> = HashMap::new();
+    let mut elems: Vec<PglElt> = Vec::new();
+    for a in 0..q {
+        for b in 0..q {
+            for c in 0..q {
+                for d in 0..q {
+                    let det = (a * d % q + q * q - b * c % q) % q;
+                    if det == 0 {
+                        continue;
+                    }
+                    if !nonresidue {
+                        // PSL_2: determinant must be a QR (canonical-form
+                        // scaling multiplies det by a square, so this is
+                        // well defined on projective classes)
+                        if !is_square[det as usize] {
+                            continue;
+                        }
+                    }
+                    let e = canon(a, b, c, d, q);
+                    if e == (PglElt { a, b, c, d }) {
+                        // only count canonical representatives once
+                        let id = elems.len();
+                        index.insert(e, id);
+                        elems.push(e);
+                    }
+                }
+            }
+        }
+    }
+    let n = elems.len();
+    let expected = if nonresidue {
+        (q * (q * q - 1)) as usize
+    } else {
+        (q * (q * q - 1) / 2) as usize
+    };
+    assert_eq!(n, expected, "group enumeration size mismatch");
+
+    // Cayley edges x -- x*g (generator set closed under inverse, so each
+    // undirected edge is produced twice; dedupe by ordered pair)
+    let mut edges = Vec::with_capacity(n * (p as usize + 1) / 2);
+    for (xid, &x) in elems.iter().enumerate() {
+        for &g in &gens {
+            let y = mat_mul(x, g, q);
+            let yid = *index.get(&y).expect("closed under generators");
+            assert_ne!(yid, xid, "generator fixed a vertex (unexpected for LPS)");
+            if xid < yid {
+                edges.push((xid, yid));
+            }
+        }
+    }
+    let g = Graph::new(n, edges);
+    assert_eq!(g.is_regular(), Some((p + 1) as usize), "LPS graph must be (p+1)-regular");
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modular_helpers() {
+        assert_eq!(pow_mod(5, 6, 13), 12); // (5/13) = -1
+        assert_eq!(inv_mod(5, 13) * 5 % 13, 1);
+        let i = sqrt_minus_one(13);
+        assert_eq!(i * i % 13, 12);
+        assert_eq!(legendre(5, 13), 12);
+        assert_eq!(legendre(3, 13), 1);
+    }
+
+    #[test]
+    fn quaternions_for_p5() {
+        let qs = quaternion_generators(5);
+        assert_eq!(qs.len(), 6);
+        for &(a, b, c, d) in &qs {
+            assert_eq!(a * a + b * b + c * c + d * d, 5);
+            assert_eq!(a % 2, 1);
+            assert!(a > 0);
+        }
+    }
+
+    #[test]
+    fn lps_5_13_is_the_papers_graph() {
+        let g = lps_graph(5, 13);
+        // the paper: n = 2184 vertices, m = 6552 machines, d = 6
+        assert_eq!(g.n, 2184);
+        assert_eq!(g.m(), 6552);
+        assert_eq!(g.is_regular(), Some(6));
+        assert!(g.is_connected());
+        assert!(!g.has_parallel_edges());
+        // (5/13) = -1 -> bipartite Cayley graph of PGL_2(13)
+        let alive = vec![true; g.m()];
+        let a = super::super::components::analyze_components(&g, &alive);
+        assert_eq!(a.components.len(), 1);
+        assert!(a.components[0].is_bipartite());
+        let (s0, s1) = a.components[0].sides.as_ref().unwrap();
+        assert_eq!(s0.len(), 1092);
+        assert_eq!(s1.len(), 1092);
+    }
+
+    #[test]
+    fn lps_5_17_nonbipartite_psl() {
+        // (5/17): 5^8 mod 17 = 390625 mod 17 = 16^2... compute: legendre
+        if legendre(5, 17) == 1 {
+            let g = lps_graph(5, 17);
+            assert_eq!(g.n, (17 * (17 * 17 - 1) / 2) as usize); // 2448
+            assert_eq!(g.is_regular(), Some(6));
+            assert!(g.is_connected());
+            let alive = vec![true; g.m()];
+            let a = super::super::components::analyze_components(&g, &alive);
+            assert!(!a.components[0].is_bipartite());
+        } else {
+            let g = lps_graph(5, 17);
+            assert_eq!(g.n, (17 * (17 * 17 - 1)) as usize);
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Graph substrate for graph assignment schemes (paper Definition II.2).
+//!
+//! Data blocks are **vertices**, machines are **edges** (each machine
+//! holds the two blocks at its endpoints — Remark II.3: this is *not*
+//! the bipartite blocks-vs-machines graph other codes use). Everything
+//! the optimal decoder needs reduces to connected-component analysis of
+//! the straggler-sparsified graph G(p), and everything the error bounds
+//! need reduces to the spectral expansion.
+
+pub mod builders;
+pub mod components;
+pub mod lps;
+pub mod spectral;
+
+pub use builders::{complete_graph, cycle_graph, hypercube_graph, random_regular_graph};
+pub use components::{analyze_components, Component, ComponentAnalysis};
+pub use lps::lps_graph;
+
+/// Undirected (multi)graph with indexed edges.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub n: usize,
+    /// edge list; edge id = index. Self-loops are not allowed.
+    pub edges: Vec<(usize, usize)>,
+    /// adjacency: for each vertex, (neighbor, edge id)
+    pub adj: Vec<Vec<(usize, usize)>>,
+}
+
+impl Graph {
+    pub fn new(n: usize, edges: Vec<(usize, usize)>) -> Self {
+        let mut adj = vec![Vec::new(); n];
+        for (id, &(u, v)) in edges.iter().enumerate() {
+            assert!(u < n && v < n, "edge ({u},{v}) out of range");
+            assert_ne!(u, v, "self-loops not allowed (edge {id})");
+            adj[u].push((v, id));
+            adj[v].push((u, id));
+        }
+        Self { n, edges, adj }
+    }
+
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn degree(&self, v: usize) -> usize {
+        self.adj[v].len()
+    }
+
+    /// Replication factor d = 2m/n (paper Table II).
+    pub fn replication_factor(&self) -> f64 {
+        2.0 * self.m() as f64 / self.n as f64
+    }
+
+    pub fn is_regular(&self) -> Option<usize> {
+        let d = self.degree(0);
+        (0..self.n).all(|v| self.degree(v) == d).then_some(d)
+    }
+
+    /// True if some pair of vertices has more than one edge between them.
+    pub fn has_parallel_edges(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for &(u, v) in &self.edges {
+            let key = (u.min(v), u.max(v));
+            if !seen.insert(key) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Connectivity over all edges.
+    pub fn is_connected(&self) -> bool {
+        if self.n == 0 {
+            return true;
+        }
+        let alive = vec![true; self.m()];
+        let analysis = analyze_components(self, &alive);
+        analysis.components.len() == 1
+    }
+
+    /// The n x m block-to-machine assignment matrix A (Definition II.2):
+    /// A_ij = 1 iff edge j has endpoint i. Exactly two 1s per column.
+    pub fn assignment_matrix(&self) -> crate::sparse::Csc {
+        let mut t = Vec::with_capacity(2 * self.m());
+        for (j, &(u, v)) in self.edges.iter().enumerate() {
+            t.push((u, j, 1.0));
+            t.push((v, j, 1.0));
+        }
+        crate::sparse::Csc::from_triplets(self.n, self.m(), t)
+    }
+
+    /// Edge boundary size |∂(S)| — used by expander-mixing sanity tests.
+    pub fn boundary_size(&self, in_s: &[bool]) -> usize {
+        self.edges
+            .iter()
+            .filter(|&&(u, v)| in_s[u] != in_s[v])
+            .count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_construction() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert_eq!(g.m(), 4);
+        assert_eq!(g.is_regular(), Some(2));
+        assert!((g.replication_factor() - 2.0).abs() < 1e-12);
+        assert!(g.is_connected());
+        assert!(!g.has_parallel_edges());
+    }
+
+    #[test]
+    fn assignment_matrix_two_ones_per_column() {
+        let g = Graph::new(3, vec![(0, 1), (1, 2), (0, 2)]);
+        let a = g.assignment_matrix();
+        assert_eq!(a.rows, 3);
+        assert_eq!(a.cols, 3);
+        for j in 0..3 {
+            let (ri, vals) = a.col(j);
+            assert_eq!(ri.len(), 2);
+            assert!(vals.iter().all(|&v| v == 1.0));
+        }
+        // row sums = degree = 2
+        let ones = vec![1.0; 3];
+        assert_eq!(a.mul_vec(&ones), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn disconnected_detected() {
+        let g = Graph::new(4, vec![(0, 1), (2, 3)]);
+        assert!(!g.is_connected());
+    }
+
+    #[test]
+    fn boundary_size_cut() {
+        let g = Graph::new(4, vec![(0, 1), (1, 2), (2, 3), (3, 0)]);
+        assert_eq!(g.boundary_size(&[true, true, false, false]), 2);
+        assert_eq!(g.boundary_size(&[true, false, true, false]), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-loops")]
+    fn rejects_self_loop() {
+        Graph::new(2, vec![(0, 0)]);
+    }
+}

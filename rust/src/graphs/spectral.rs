@@ -1,0 +1,208 @@
+//! Spectral analysis of regular graphs.
+//!
+//! The paper's expansion parameter is the *spectral gap*
+//! lambda = d - lambda_2(A(G)) (largest minus second-largest adjacency
+//! eigenvalue). For a d-regular graph the top eigenpair is (d, 1), so
+//! lambda_2 is found by power iteration on A + dI deflated against the
+//! all-ones vector (the shift makes the spectrum non-negative so the
+//! iteration converges to the *largest signed* non-principal eigenvalue
+//! rather than the largest magnitude one, which for bipartite graphs
+//! would be -d).
+//!
+//! Corollary V.2 also needs sigma_2(A)^2 = lambda_2(A^T A) = 2d - lambda
+//! for the assignment matrix; that identity (A^T A = A(G) + dI for
+//! graph schemes) is unit-tested here.
+
+use super::Graph;
+use crate::linalg::power::SymmetricOp;
+use crate::linalg::{dot, norm2, scale};
+use crate::prng::Rng;
+
+/// Adjacency operator of a graph (symmetric).
+pub struct AdjacencyOp<'a> {
+    pub g: &'a Graph,
+}
+
+impl SymmetricOp for AdjacencyOp<'_> {
+    fn dim(&self) -> usize {
+        self.g.n
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for &(u, v) in &self.g.edges {
+            y[u] += x[v];
+            y[v] += x[u];
+        }
+    }
+}
+
+/// Second-largest (signed) adjacency eigenvalue lambda_2 of a d-regular
+/// graph, via shifted deflated power iteration.
+pub fn lambda2(g: &Graph, iters: usize, rng: &mut Rng) -> f64 {
+    let d = g.is_regular().expect("spectral gap defined for regular graphs") as f64;
+    let n = g.n;
+    let op = AdjacencyOp { g };
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    deflate_ones(&mut v);
+    let nv = norm2(&v);
+    scale(1.0 / nv.max(1e-300), &mut v);
+    let mut y = vec![0.0; n];
+    let mut mu = 0.0;
+    for _ in 0..iters {
+        op.apply(&v, &mut y);
+        // shifted operator (A + dI) x = y + d v
+        for i in 0..n {
+            y[i] += d * v[i];
+        }
+        deflate_ones(&mut y);
+        let ny = norm2(&y);
+        if ny < 1e-300 {
+            return -d; // graph-with-no-nonprincipal-mass edge case
+        }
+        mu = dot(&v, &y);
+        v.copy_from_slice(&y);
+        scale(1.0 / ny, &mut v);
+    }
+    mu - d
+}
+
+/// Largest |eigenvalue| among non-principal adjacency eigenvalues
+/// (for bipartite graphs this is d, attained by the sign vector).
+pub fn lambda_max_abs_nonprincipal(g: &Graph, iters: usize, rng: &mut Rng) -> f64 {
+    let n = g.n;
+    let op = AdjacencyOp { g };
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    deflate_ones(&mut v);
+    let nv = norm2(&v);
+    scale(1.0 / nv.max(1e-300), &mut v);
+    let mut y = vec![0.0; n];
+    let mut lam: f64 = 0.0;
+    for _ in 0..iters {
+        op.apply(&v, &mut y);
+        deflate_ones(&mut y);
+        let ny = norm2(&y);
+        if ny < 1e-300 {
+            return 0.0;
+        }
+        lam = dot(&v, &y);
+        v.copy_from_slice(&y);
+        scale(1.0 / ny, &mut v);
+    }
+    lam.abs()
+}
+
+/// The paper's spectral expansion lambda = d - lambda_2.
+pub fn spectral_gap(g: &Graph, iters: usize, rng: &mut Rng) -> f64 {
+    let d = g.is_regular().expect("regular graph required") as f64;
+    d - lambda2(g, iters, rng)
+}
+
+fn deflate_ones(v: &mut [f64]) {
+    let mean = v.iter().sum::<f64>() / v.len() as f64;
+    for x in v.iter_mut() {
+        *x -= mean;
+    }
+}
+
+/// Expander mixing lemma check (Lemma IV.6): returns the worst slack of
+/// |E(S, V\S)| >= lambda |S| (1 - |S|/n) over `trials` random cuts.
+/// Non-negative slack everywhere is evidence the estimated gap is sound.
+pub fn mixing_lemma_min_slack(g: &Graph, lambda: f64, trials: usize, rng: &mut Rng) -> f64 {
+    let n = g.n;
+    let mut worst = f64::INFINITY;
+    for _ in 0..trials {
+        let s_size = 1 + rng.below(n - 1);
+        let idx = rng.sample_indices(n, s_size);
+        let mut in_s = vec![false; n];
+        for &i in &idx {
+            in_s[i] = true;
+        }
+        let cut = g.boundary_size(&in_s) as f64;
+        let bound = lambda * s_size as f64 * (1.0 - s_size as f64 / n as f64);
+        worst = worst.min(cut - bound);
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphs::{complete_graph, cycle_graph, hypercube_graph};
+
+    #[test]
+    fn complete_graph_spectrum() {
+        // K_n: eigenvalues n-1 and -1 -> lambda_2 = -1, gap = n
+        let g = complete_graph(8);
+        let mut rng = Rng::new(0);
+        let l2 = lambda2(&g, 3000, &mut rng);
+        assert!((l2 + 1.0).abs() < 1e-6, "l2={l2}");
+        let gap = spectral_gap(&g, 3000, &mut Rng::new(1));
+        assert!((gap - 8.0).abs() < 1e-6, "gap={gap}");
+    }
+
+    #[test]
+    fn cycle_spectrum() {
+        // C_n: lambda_2 = 2 cos(2 pi / n)
+        let n = 10;
+        let g = cycle_graph(n);
+        let mut rng = Rng::new(2);
+        let l2 = lambda2(&g, 20_000, &mut rng);
+        let want = 2.0 * (2.0 * std::f64::consts::PI / n as f64).cos();
+        assert!((l2 - want).abs() < 1e-4, "l2={l2} want={want}");
+    }
+
+    #[test]
+    fn hypercube_spectrum() {
+        // Q_d: eigenvalues d-2k -> lambda_2 = d-2; bipartite so
+        // max-abs non-principal = d
+        let g = hypercube_graph(4);
+        let l2 = lambda2(&g, 20_000, &mut Rng::new(3));
+        assert!((l2 - 2.0).abs() < 1e-3, "l2={l2}");
+        let labs = lambda_max_abs_nonprincipal(&g, 20_000, &mut Rng::new(4));
+        assert!((labs - 4.0).abs() < 1e-3, "labs={labs}");
+    }
+
+    #[test]
+    fn gram_identity_for_graph_assignment() {
+        // A^T A = A(G) + d I for graph schemes (Corollary V.2 proof)
+        let g = complete_graph(5);
+        let a = g.assignment_matrix().to_dense();
+        let mut gram = crate::linalg::Mat::zeros(g.m(), g.m());
+        // gram = A^T A computed column-by-column
+        for i in 0..g.m() {
+            let mut e = vec![0.0; g.m()];
+            e[i] = 1.0;
+            let col = a.t_mul_vec(&a.mul_vec(&e));
+            for j in 0..g.m() {
+                gram[(j, i)] = col[j];
+            }
+        }
+        // diagonal should be 2 (= d per *column*: each machine holds 2 blocks)
+        for i in 0..g.m() {
+            assert_eq!(gram[(i, i)], 2.0);
+        }
+        // off-diagonal (i,j) = number of shared endpoints of edges i,j
+        for i in 0..g.m() {
+            for j in 0..g.m() {
+                if i != j {
+                    let (u1, v1) = g.edges[i];
+                    let (u2, v2) = g.edges[j];
+                    let shared = [u1 == u2, u1 == v2, v1 == u2, v1 == v2]
+                        .iter()
+                        .filter(|&&b| b)
+                        .count() as f64;
+                    assert_eq!(gram[(i, j)], shared);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mixing_lemma_holds_on_complete_graph() {
+        let g = complete_graph(12);
+        let mut rng = Rng::new(5);
+        // true gap = n = 12
+        let slack = mixing_lemma_min_slack(&g, 12.0, 200, &mut rng);
+        assert!(slack > -1e-9, "slack={slack}");
+    }
+}

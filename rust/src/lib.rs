@@ -1,0 +1,38 @@
+//! # gcod — Approximate Gradient Coding with Optimal Decoding
+//!
+//! A production-shaped reproduction of Glasgow & Wootters, *"Approximate
+//! Gradient Coding with Optimal Decoding"*, IEEE JSAIT 2021
+//! (DOI 10.1109/JSAIT.2021.3100110), as a three-layer rust + JAX/Pallas
+//! stack: Pallas kernels (L1) and JAX compute graphs (L2) are AOT-lowered
+//! to HLO text at build time; this crate (L3) is the coordinator that
+//! owns assignment construction, straggler handling, optimal decoding and
+//! the coded gradient-descent loop, executing the AOT artifacts via the
+//! PJRT CPU client. Python never runs on the request path.
+//!
+//! Top-level layout (see DESIGN.md for the full inventory):
+//! * [`graphs`] — graph assignment schemes incl. LPS Ramanujan expanders
+//! * [`codes`] — the paper's scheme + every baseline (FRC, expander, …)
+//! * [`decode`] — linear-time optimal graph decoder, LSQR generic decoder
+//! * [`straggler`] — random & adversarial straggler models
+//! * [`gd`] — coded gradient descent engines & convergence bounds
+//! * [`coordinator`] — distributed leader/worker runtime (Algorithm 2)
+//! * [`runtime`] — PJRT artifact loading & execution
+//! * substrates: [`prng`], [`linalg`], [`sparse`], [`config`], [`cli`],
+//!   [`metrics`], [`bench_util`], [`testing`], [`data`]
+
+pub mod bench_util;
+pub mod cli;
+pub mod codes;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod decode;
+pub mod gd;
+pub mod graphs;
+pub mod linalg;
+pub mod metrics;
+pub mod prng;
+pub mod runtime;
+pub mod sparse;
+pub mod straggler;
+pub mod testing;

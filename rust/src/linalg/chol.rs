@@ -1,0 +1,156 @@
+//! Cholesky factorization + solve for symmetric positive-definite systems.
+//!
+//! Used for the exact least-squares minimizer theta* = (X^T X)^{-1} X^T Y
+//! that every convergence figure measures distance to (paper §VIII-B),
+//! and as the small-n oracle the LSQR decoder is property-tested against.
+
+use super::Mat;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CholeskyError {
+    NotSquare,
+    NotPositiveDefinite { pivot: usize },
+}
+
+impl std::fmt::Display for CholeskyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CholeskyError::NotSquare => write!(f, "matrix is not square"),
+            CholeskyError::NotPositiveDefinite { pivot } => {
+                write!(f, "matrix is not positive definite (pivot {pivot})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CholeskyError {}
+
+/// Lower-triangular Cholesky factor L with A = L L^T (in-place style).
+pub fn cholesky(a: &Mat) -> Result<Mat, CholeskyError> {
+    if a.rows != a.cols {
+        return Err(CholeskyError::NotSquare);
+    }
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(CholeskyError::NotPositiveDefinite { pivot: i });
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve A x = b for SPD A via Cholesky (forward + backward substitution).
+pub fn cholesky_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>, CholeskyError> {
+    let l = cholesky(a)?;
+    let n = l.rows;
+    assert_eq!(b.len(), n);
+    // L y = b
+    let mut y = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[(i, k)] * y[k];
+        }
+        y[i] = s / l[(i, i)];
+    }
+    // L^T x = y
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    Ok(x)
+}
+
+/// Ridge-regularized normal-equation least squares:
+/// argmin_x |A x - b|^2 + reg |x|^2 via Cholesky on A^T A + reg I.
+pub fn lstsq_normal(a: &Mat, b: &[f64], reg: f64) -> Result<Vec<f64>, CholeskyError> {
+    let mut g = a.gram();
+    for i in 0..g.rows {
+        g[(i, i)] += reg;
+    }
+    let rhs = a.t_mul_vec(b);
+    cholesky_solve(&g, &rhs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{dist2_sq, Mat};
+
+    #[test]
+    fn cholesky_of_known_spd() {
+        let a = Mat::from_rows(vec![
+            vec![4.0, 12.0, -16.0],
+            vec![12.0, 37.0, -43.0],
+            vec![-16.0, -43.0, 98.0],
+        ]);
+        let l = cholesky(&a).unwrap();
+        // classic textbook factor
+        assert_eq!(l[(0, 0)], 2.0);
+        assert_eq!(l[(1, 0)], 6.0);
+        assert_eq!(l[(1, 1)], 1.0);
+        assert_eq!(l[(2, 0)], -8.0);
+        assert_eq!(l[(2, 1)], 5.0);
+        assert_eq!(l[(2, 2)], 3.0);
+    }
+
+    #[test]
+    fn solve_recovers_x() {
+        let a = Mat::from_rows(vec![
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.mul_vec(&x_true);
+        let x = cholesky_solve(&a, &b).unwrap();
+        assert!(dist2_sq(&x, &x_true) < 1e-18);
+    }
+
+    #[test]
+    fn rejects_indefinite() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]);
+        assert!(matches!(
+            cholesky(&a),
+            Err(CholeskyError::NotPositiveDefinite { .. })
+        ));
+    }
+
+    #[test]
+    fn lstsq_matches_exact_on_overdetermined() {
+        // A (4x2), b in col space + noise; compare against direct solve
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ]);
+        let b = vec![1.0, 2.9, 5.1, 7.0];
+        let x = lstsq_normal(&a, &b, 0.0).unwrap();
+        // residual must be orthogonal to the column space
+        let r: Vec<f64> = a
+            .mul_vec(&x)
+            .iter()
+            .zip(&b)
+            .map(|(ax, bb)| ax - bb)
+            .collect();
+        let atr = a.t_mul_vec(&r);
+        assert!(atr.iter().all(|v| v.abs() < 1e-10), "{atr:?}");
+    }
+}

@@ -1,0 +1,220 @@
+//! Dense linear-algebra substrate.
+//!
+//! Row-major `f64` matrices plus the vector kernels the decoding-error
+//! analysis and the GD engines need. Heavy compute on the request path
+//! goes through the PJRT artifacts (runtime/); this module exists for
+//! the coordinator-side math the paper does on the parameter server —
+//! covariance spectral norms, exact least-squares references, bounds.
+
+pub mod chol;
+pub mod power;
+
+pub use chol::{cholesky_solve, CholeskyError};
+pub use power::{power_iteration, CovOperator, SymmetricOp};
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(&row);
+        }
+        Self { rows: r, cols: c, data }
+    }
+
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// y = A x
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
+    }
+
+    /// y = A^T x
+    pub fn t_mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        let mut y = vec![0.0; self.cols];
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                axpy(xi, self.row(i), &mut y);
+            }
+        }
+        y
+    }
+
+    /// C = A^T A (Gram matrix), symmetric (cols x cols).
+    pub fn gram(&self) -> Mat {
+        let k = self.cols;
+        let mut g = Mat::zeros(k, k);
+        for i in 0..self.rows {
+            let r = self.row(i);
+            for a in 0..k {
+                let ra = r[a];
+                if ra != 0.0 {
+                    let grow = g.row_mut(a);
+                    for b in 0..k {
+                        grow[b] += ra * r[b];
+                    }
+                }
+            }
+        }
+        g
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// x *= alpha
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// 2-norm.
+#[inline]
+pub fn norm2(x: &[f64]) -> f64 {
+    dot(x, x).sqrt()
+}
+
+/// |x - y|_2^2
+#[inline]
+pub fn dist2_sq(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut s = 0.0;
+    for i in 0..x.len() {
+        let d = x[i] - y[i];
+        s += d * d;
+    }
+    s
+}
+
+/// |x - 1|_2^2 — the paper's decoding error for a coefficient vector.
+#[inline]
+pub fn dist_to_ones_sq(x: &[f64]) -> f64 {
+    x.iter().map(|&v| (v - 1.0) * (v - 1.0)).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_and_transpose() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]]);
+        assert_eq!(a.mul_vec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(a.t_mul_vec(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+        let t = a.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t[(2, 1)], 6.0);
+    }
+
+    #[test]
+    fn gram_matches_manual() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let g = a.gram();
+        assert_eq!(g[(0, 0)], 35.0);
+        assert_eq!(g[(0, 1)], 44.0);
+        assert_eq!(g[(1, 0)], 44.0);
+        assert_eq!(g[(1, 1)], 56.0);
+    }
+
+    #[test]
+    fn vector_kernels() {
+        let mut y = vec![1.0, 1.0];
+        axpy(2.0, &[3.0, 4.0], &mut y);
+        assert_eq!(y, vec![7.0, 9.0]);
+        assert!((norm2(&[3.0, 4.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(dist_to_ones_sq(&[1.0, 2.0, 0.0]), 2.0);
+        assert_eq!(dist2_sq(&[1.0, 2.0], &[0.0, 0.0]), 5.0);
+        let mut x = vec![2.0, -4.0];
+        scale(0.5, &mut x);
+        assert_eq!(x, vec![1.0, -2.0]);
+    }
+
+    #[test]
+    fn eye_is_identity_for_mul() {
+        let i = Mat::eye(4);
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(i.mul_vec(&x), x);
+    }
+}

@@ -1,0 +1,192 @@
+//! Power iteration on implicit symmetric operators.
+//!
+//! Two uses in the reproduction:
+//!  * `CovOperator` — the spectral norm of the empirical covariance
+//!    |E[(alpha - 1)(alpha - 1)^T]|_2 plotted in Figure 3(b)(d), computed
+//!    from centered samples without materializing the n x n matrix;
+//!  * graph adjacency spectra (graphs::spectral) via the same trait.
+
+use crate::linalg::{axpy, dot, norm2, scale, Mat};
+use crate::prng::Rng;
+
+/// A symmetric linear operator y = M x given implicitly.
+pub trait SymmetricOp {
+    fn dim(&self) -> usize;
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+}
+
+impl SymmetricOp for Mat {
+    fn dim(&self) -> usize {
+        assert_eq!(self.rows, self.cols);
+        self.rows
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        let r = self.mul_vec(x);
+        y.copy_from_slice(&r);
+    }
+}
+
+/// Empirical second-moment operator of centered sample vectors:
+/// C x = (1/R) sum_r a_r (a_r . x). Samples are centered by `new`.
+pub struct CovOperator {
+    /// R x n matrix of centered samples, row-major
+    samples: Mat,
+}
+
+impl CovOperator {
+    /// Build from raw samples (each of length n); subtracts the empirical
+    /// mean so `apply` is the covariance, not the second moment.
+    pub fn from_samples(raw: &[Vec<f64>]) -> Self {
+        assert!(!raw.is_empty());
+        let n = raw[0].len();
+        let r = raw.len();
+        let mut mean = vec![0.0; n];
+        for s in raw {
+            axpy(1.0, s, &mut mean);
+        }
+        scale(1.0 / r as f64, &mut mean);
+        let mut m = Mat::zeros(r, n);
+        for (i, s) in raw.iter().enumerate() {
+            for j in 0..n {
+                m[(i, j)] = s[j] - mean[j];
+            }
+        }
+        Self { samples: m }
+    }
+
+    /// Build from deviation vectors around a *fixed* center (e.g. the
+    /// all-ones vector: a_r = alpha_r - 1), no re-centering. This is the
+    /// paper's |E (alpha-1)(alpha-1)^T|_2 quantity.
+    pub fn from_deviations(devs: &[Vec<f64>]) -> Self {
+        assert!(!devs.is_empty());
+        let n = devs[0].len();
+        let mut m = Mat::zeros(devs.len(), n);
+        for (i, s) in devs.iter().enumerate() {
+            m.row_mut(i).copy_from_slice(s);
+        }
+        Self { samples: m }
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.samples.rows
+    }
+}
+
+impl SymmetricOp for CovOperator {
+    fn dim(&self) -> usize {
+        self.samples.cols
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        // y = (1/R) S^T (S x)
+        let sx = self.samples.mul_vec(x);
+        let mut out = self.samples.t_mul_vec(&sx);
+        scale(1.0 / self.samples.rows as f64, &mut out);
+        y.copy_from_slice(&out);
+    }
+}
+
+/// Largest-|eigenvalue| estimate of a symmetric operator by power
+/// iteration with random start; returns (|lambda_max|, eigvec).
+pub fn power_iteration<M: SymmetricOp>(
+    op: &M,
+    iters: usize,
+    tol: f64,
+    rng: &mut Rng,
+) -> (f64, Vec<f64>) {
+    let n = op.dim();
+    let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+    let nv = norm2(&v);
+    scale(1.0 / nv.max(1e-300), &mut v);
+    let mut y = vec![0.0; n];
+    let mut lambda = 0.0f64;
+    for _ in 0..iters {
+        op.apply(&v, &mut y);
+        let ny = norm2(&y);
+        if ny < 1e-300 {
+            return (0.0, v); // operator annihilated the start vector
+        }
+        let new_lambda = dot(&v, &y);
+        let converged = (new_lambda - lambda).abs() <= tol * new_lambda.abs().max(1e-30);
+        lambda = new_lambda;
+        v.copy_from_slice(&y);
+        scale(1.0 / ny, &mut v);
+        if converged {
+            break;
+        }
+    }
+    (lambda.abs(), v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn power_iteration_finds_top_eigenvalue() {
+        // diag(5, 2, 1) — top eigenvalue 5
+        let mut m = Mat::zeros(3, 3);
+        m[(0, 0)] = 5.0;
+        m[(1, 1)] = 2.0;
+        m[(2, 2)] = 1.0;
+        let mut rng = Rng::new(0);
+        let (l, v) = power_iteration(&m, 500, 1e-12, &mut rng);
+        assert!((l - 5.0).abs() < 1e-6, "l={l}");
+        assert!(v[0].abs() > 0.999);
+    }
+
+    #[test]
+    fn power_iteration_handles_negative_dominant() {
+        let mut m = Mat::zeros(2, 2);
+        m[(0, 0)] = -7.0;
+        m[(1, 1)] = 3.0;
+        let mut rng = Rng::new(1);
+        let (l, _) = power_iteration(&m, 500, 1e-12, &mut rng);
+        assert!((l - 7.0).abs() < 1e-6, "l={l}");
+    }
+
+    #[test]
+    fn cov_operator_matches_dense_covariance() {
+        let mut rng = Rng::new(2);
+        let n = 6;
+        let samples: Vec<Vec<f64>> = (0..40).map(|_| rng.gaussian_vec(n, 1.0)).collect();
+        let cov_op = CovOperator::from_samples(&samples);
+        // dense covariance
+        let mut mean = vec![0.0; n];
+        for s in &samples {
+            axpy(1.0, s, &mut mean);
+        }
+        scale(1.0 / samples.len() as f64, &mut mean);
+        let mut dense = Mat::zeros(n, n);
+        for s in &samples {
+            for i in 0..n {
+                for j in 0..n {
+                    dense[(i, j)] += (s[i] - mean[i]) * (s[j] - mean[j]);
+                }
+            }
+        }
+        scale(1.0 / samples.len() as f64, &mut dense.data);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64) - 2.5).collect();
+        let mut y1 = vec![0.0; n];
+        cov_op.apply(&x, &mut y1);
+        let y2 = dense.mul_vec(&x);
+        for i in 0..n {
+            assert!((y1[i] - y2[i]).abs() < 1e-10);
+        }
+        // spectral norms agree
+        let mut r1 = Rng::new(3);
+        let mut r2 = Rng::new(3);
+        let (l1, _) = power_iteration(&cov_op, 1000, 1e-12, &mut r1);
+        let (l2, _) = power_iteration(&dense, 1000, 1e-12, &mut r2);
+        assert!((l1 - l2).abs() < 1e-8 * l2.max(1.0), "{l1} vs {l2}");
+    }
+
+    #[test]
+    fn deviations_operator_no_centering() {
+        // single deviation vector d -> C = d d^T, norm |d|^2
+        let d = vec![1.0, 2.0, 2.0];
+        let op = CovOperator::from_deviations(&[d.clone()]);
+        let mut rng = Rng::new(4);
+        let (l, _) = power_iteration(&op, 500, 1e-12, &mut rng);
+        assert!((l - 9.0).abs() < 1e-9, "l={l}");
+    }
+}

@@ -1,0 +1,263 @@
+//! `gcod` — launcher for the gradient-coding reproduction.
+//!
+//! Subcommands map to the paper's experiments; the benches under
+//! rust/benches/ drive the same library APIs with full sweeps.
+
+use gcod::cli::{flag, switch, App, CommandSpec};
+use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
+use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::gd::{analysis, SimulatedGcod, StepSize};
+use gcod::metrics::{sci, Table};
+use gcod::prng::Rng;
+use gcod::straggler::BernoulliStragglers;
+use std::time::Duration;
+
+fn app() -> App {
+    App {
+        name: "gcod",
+        about: "Approximate Gradient Coding with Optimal Decoding (Glasgow & Wootters 2021)",
+        commands: vec![
+            CommandSpec {
+                name: "info",
+                help: "artifact inventory + assignment-scheme statistics",
+                flags: vec![
+                    flag("scheme", "scheme spec (e.g. graph-rr:16,3 | lps:5,13)", Some("graph-rr:16,3")),
+                    flag("seed", "rng seed", Some("0")),
+                    flag("artifacts", "artifacts dir", Some("artifacts")),
+                    switch("spectral", "estimate the spectral gap (slower)"),
+                ],
+            },
+            CommandSpec {
+                name: "decode-error",
+                help: "Monte-Carlo decoding error (Figure 3 point)",
+                flags: vec![
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
+                    flag("p", "straggler probability", Some("0.2")),
+                    flag("runs", "Monte-Carlo draws", Some("200")),
+                    flag("seed", "rng seed", Some("0")),
+                ],
+            },
+            CommandSpec {
+                name: "simulate",
+                help: "simulated coded GD on least squares (Figure 5 point)",
+                flags: vec![
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("decoder", "optimal|fixed|ignore", Some("optimal")),
+                    flag("p", "straggler probability", Some("0.2")),
+                    flag("iters", "iterations", Some("50")),
+                    flag("n-points", "data points N", Some("1024")),
+                    flag("dim", "feature dim k", Some("64")),
+                    flag("sigma", "observation noise", Some("1.0")),
+                    flag("step-c", "grid index c for the step size", Some("9")),
+                    flag("seed", "rng seed", Some("0")),
+                ],
+            },
+            CommandSpec {
+                name: "train",
+                help: "distributed coded GD with worker threads (Figure 4 point)",
+                flags: vec![
+                    flag("scheme", "graph scheme spec", Some("graph-rr:16,3")),
+                    flag("p", "injected straggler probability", Some("0.2")),
+                    flag("iters", "iterations", Some("50")),
+                    flag("n-points", "data points N", Some("6000")),
+                    flag("dim", "feature dim k", Some("2000")),
+                    flag("gamma", "step size", Some("2e-5")),
+                    flag("backend", "pjrt|native", Some("pjrt")),
+                    flag("artifacts", "artifacts dir", Some("artifacts")),
+                    flag("seed", "rng seed", Some("0")),
+                ],
+            },
+            CommandSpec {
+                name: "adversarial",
+                help: "adversarial decoding error vs theory (Cor. V.2/V.3)",
+                flags: vec![
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("p", "straggler fraction", Some("0.2")),
+                    flag("seed", "rng seed", Some("0")),
+                ],
+            },
+        ],
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let inv = match app().parse(&argv) {
+        Ok(inv) => inv,
+        Err(e) => {
+            eprintln!("{}", e.0);
+            std::process::exit(2);
+        }
+    };
+    let result = match inv.command.as_str() {
+        "info" => cmd_info(&inv),
+        "decode-error" => cmd_decode_error(&inv),
+        "simulate" => cmd_simulate(&inv),
+        "train" => cmd_train(&inv),
+        "adversarial" => cmd_adversarial(&inv),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn build_scheme(inv: &gcod::cli::Invocation) -> anyhow::Result<(zoo::BuiltScheme, Rng)> {
+    let spec = SchemeSpec::parse(&inv.str_or("scheme", "graph-rr:16,3"))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let mut rng = Rng::new(inv.u64_or("seed", 0));
+    let scheme = zoo::build(&spec, &mut rng);
+    Ok((scheme, rng))
+}
+
+fn cmd_info(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+    let (scheme, mut rng) = build_scheme(inv)?;
+    println!("scheme    : {}", scheme.name);
+    println!("blocks n  : {}", scheme.n_blocks());
+    println!("machines m: {}", scheme.n_machines());
+    println!("replication d = {:.3}", scheme.replication());
+    println!("load ell  : {} blocks/machine", scheme.a.max_col_nnz());
+    if let Some(g) = &scheme.graph {
+        println!("graph     : {} vertices, {} edges, connected={}", g.n, g.m(), g.is_connected());
+        if inv.switch("spectral") {
+            let l2 = gcod::graphs::spectral::lambda2(g, 4000, &mut rng);
+            let d = g.is_regular().unwrap_or(0) as f64;
+            println!("lambda_2  : {l2:.4}  (spectral gap lambda = {:.4}, Ramanujan bound {:.4})",
+                     d - l2, 2.0 * (d - 1.0).sqrt());
+        }
+    }
+    match gcod::runtime::Runtime::open(inv.str_or("artifacts", "artifacts")) {
+        Ok(rt) => {
+            println!("artifacts : {} loaded from manifest", rt.artifact_names().len());
+            for n in rt.artifact_names() {
+                println!("  - {n}");
+            }
+        }
+        Err(e) => println!("artifacts : unavailable ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_decode_error(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+    let (scheme, mut rng) = build_scheme(inv)?;
+    let p = inv.f64_or("p", 0.2);
+    let runs = inv.usize_or("runs", 200);
+    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(|e| anyhow::anyhow!(e))?;
+    let dec = zoo::make_decoder(&scheme, dspec, p);
+    let mut strag = BernoulliStragglers::new(p, inv.u64_or("seed", 0) ^ 0xFEED);
+    let stats = analysis::decoding_stats(
+        dec.as_ref(), &mut strag, scheme.n_machines(), scheme.n_blocks(), runs, &mut rng);
+    let d = scheme.replication();
+    println!("scheme={} decoder={} p={p} runs={runs}", scheme.name, dec.name());
+    println!("E|alpha_bar-1|^2/n = {}", sci(stats.mean_err_per_block));
+    println!("|cov|_2            = {}", sci(stats.cov_norm));
+    println!("normalization c    = {:.4}", stats.mean_alpha_scale);
+    println!("theory: optimal lower bound p^d/(1-p^d) = {}", sci(analysis::theory::optimal_lower_bound(p, d)));
+    println!("theory: fixed lower bound p/(d(1-p))    = {}", sci(analysis::theory::fixed_lower_bound(p, d)));
+    Ok(())
+}
+
+fn cmd_simulate(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+    let (scheme, mut rng) = build_scheme(inv)?;
+    let p = inv.f64_or("p", 0.2);
+    let n_points = inv.usize_or("n-points", 1024);
+    let k = inv.usize_or("dim", 64);
+    let sigma = inv.f64_or("sigma", 1.0);
+    let iters = inv.usize_or("iters", 50);
+    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(|e| anyhow::anyhow!(e))?;
+    let data = gcod::data::LstsqData::generate(n_points, k, scheme.n_blocks(), sigma, &mut rng);
+    let dec = zoo::make_decoder(&scheme, dspec, p);
+    let mut strag = BernoulliStragglers::new(p, inv.u64_or("seed", 0) ^ 0xFACE);
+    let rho = rng.permutation(scheme.n_blocks());
+    let mut engine = SimulatedGcod {
+        decoder: dec.as_ref(),
+        stragglers: &mut strag,
+        step: StepSize::simulated_grid(inv.usize_or("step-c", 9) as u32),
+        rho: Some(rho),
+        m: scheme.n_machines(),
+        alpha_scale: 1.0,
+    };
+    let mut src = &data;
+    let hist = engine.run(&mut src, &vec![0.0; k], iters);
+    let mut table = Table::new(&["iter", "|theta-theta*|^2"]);
+    for (i, e) in hist.progress.iter().enumerate().step_by((iters / 10).max(1)) {
+        table.row(vec![i.to_string(), sci(*e)]);
+    }
+    table.row(vec![iters.to_string(), sci(hist.final_progress())]);
+    table.print();
+    Ok(())
+}
+
+fn cmd_train(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+    let (scheme, mut rng) = build_scheme(inv)?;
+    let graph = scheme.graph.as_ref().ok_or_else(|| anyhow::anyhow!("train needs a graph scheme"))?;
+    let p = inv.f64_or("p", 0.2);
+    let n_points = inv.usize_or("n-points", 6000);
+    let k = inv.usize_or("dim", 2000);
+    let data = gcod::data::LstsqData::generate(n_points, k, scheme.n_blocks(), 1.0, &mut rng);
+    let backend = match inv.str_or("backend", "pjrt").as_str() {
+        "pjrt" => {
+            let art = format!("worker_grad_fig4_2x{}x{}", data.b, k);
+            ComputeBackend::Pjrt { artifacts_dir: inv.str_or("artifacts", "artifacts"), artifact: art }
+        }
+        _ => ComputeBackend::Native,
+    };
+    let cfg = ClusterConfig {
+        wait_fraction: 1.0 - p,
+        backend,
+        injection: StragglerInjection::Random {
+            p, delay: Duration::from_millis(200), seed: inv.u64_or("seed", 0) ^ 0xBEEF },
+        step_size: inv.f64_or("gamma", 2e-5),
+        iters: inv.usize_or("iters", 50),
+        max_duration: None,
+    };
+    println!("spawning {} workers ({:?})...", scheme.n_machines(), cfg.backend);
+    let mut cluster = Cluster::spawn(&scheme.a, &data, &cfg)?;
+    cluster.wait_ready(Duration::from_secs(120))?;
+    let dec = gcod::decode::OptimalGraphDecoder::new(graph);
+    let report = cluster.run(&cfg, &dec, &vec![0.0; k], |t| data.dist_to_opt(t))?;
+    cluster.shutdown();
+    let mut table = Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
+    for s in report.iters.iter().step_by((cfg.iters / 10).max(1)) {
+        table.row(vec![
+            s.iter.to_string(),
+            format!("{:.1}", s.wall.as_secs_f64() * 1e3),
+            s.stragglers.to_string(),
+            sci(s.decode_error_sq),
+            sci(s.progress),
+        ]);
+    }
+    table.print();
+    println!("total {:.2}s  final |theta-theta*|^2 = {}", report.total.as_secs_f64(), sci(report.final_progress));
+    Ok(())
+}
+
+fn cmd_adversarial(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+    let (scheme, _rng) = build_scheme(inv)?;
+    let p = inv.f64_or("p", 0.2);
+    let budget = (p * scheme.n_machines() as f64).floor() as usize;
+    let dec = zoo::make_decoder(&scheme, DecoderSpec::Optimal, p);
+    let mask = if let Some(g) = &scheme.graph {
+        gcod::straggler::graph_isolation_attack(g, budget)
+    } else if let Some(frc) = &scheme.frc {
+        gcod::straggler::frc_group_attack(frc, budget)
+    } else {
+        gcod::straggler::greedy_decode_attack(dec.as_ref(), &scheme.a, budget)
+    };
+    let err = dec.decode(&mask).error_sq() / scheme.n_blocks() as f64;
+    println!("scheme={} budget={budget} machines", scheme.name);
+    println!("adversarial |alpha*-1|^2/n = {}", sci(err));
+    println!("graph lower bound p/2       = {}", sci(analysis::theory::graph_adversarial_lower(p)));
+    if let Some(g) = &scheme.graph {
+        let mut rng2 = Rng::new(99);
+        let lambda = gcod::graphs::spectral::spectral_gap(g, 3000, &mut rng2);
+        let d = scheme.replication();
+        println!(
+            "Cor V.2 upper bound         = {}",
+            sci(analysis::theory::graph_adversarial_bound(p, d, lambda))
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,286 @@
+//! Metrics substrate: timers, running statistics, histograms, CSV sinks
+//! and paper-style table printing shared by the coordinator and benches.
+
+use std::time::{Duration, Instant};
+
+/// Wall-clock stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Streaming mean/variance/min/max (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    pub fn new() -> Self {
+        Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Sample variance (n-1 denominator).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-bucket latency histogram (log-spaced), for dispatch timings.
+#[derive(Clone, Debug)]
+pub struct LatencyHistogram {
+    /// bucket i covers [base * 2^i, base * 2^(i+1)) seconds
+    base: f64,
+    counts: Vec<u64>,
+    stats: Stats,
+}
+
+impl LatencyHistogram {
+    pub fn new(base_secs: f64, buckets: usize) -> Self {
+        Self { base: base_secs, counts: vec![0; buckets], stats: Stats::new() }
+    }
+
+    pub fn record(&mut self, secs: f64) {
+        self.stats.push(secs);
+        let idx = if secs <= self.base {
+            0
+        } else {
+            ((secs / self.base).log2().floor() as usize).min(self.counts.len() - 1)
+        };
+        self.counts[idx] += 1;
+    }
+
+    pub fn stats(&self) -> &Stats {
+        &self.stats
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total: u64 = self.counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return self.base * 2f64.powi(i as i32 + 1);
+            }
+        }
+        self.base * 2f64.powi(self.counts.len() as i32)
+    }
+}
+
+/// Simple CSV writer for experiment outputs.
+pub struct CsvWriter {
+    out: Box<dyn std::io::Write>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn to_file(path: &std::path::Path, header: &[&str]) -> std::io::Result<Self> {
+        let f = std::fs::File::create(path)?;
+        let mut w = Self { out: Box::new(std::io::BufWriter::new(f)), cols: header.len() };
+        w.write_row_str(header)?;
+        Ok(w)
+    }
+
+    pub fn write_row_str(&mut self, row: &[&str]) -> std::io::Result<()> {
+        assert_eq!(row.len(), self.cols, "csv row width mismatch");
+        writeln!(self.out, "{}", row.join(","))
+    }
+
+    pub fn write_row(&mut self, row: &[f64]) -> std::io::Result<()> {
+        let strs: Vec<String> = row.iter().map(|x| format!("{x:.6e}")).collect();
+        let refs: Vec<&str> = strs.iter().map(|s| s.as_str()).collect();
+        self.write_row_str(&refs)
+    }
+
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.out.flush()
+    }
+}
+
+/// Paper-style fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:>w$}", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = fmt_row(&self.header);
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float like the paper's tables (e.g. "3.4e-30", "2.5e-3").
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if (0.001..1000.0).contains(&x.abs()) {
+        format!("{x:.4}")
+    } else {
+        format!("{x:.1e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_welford() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            s.push(x);
+        }
+        assert!((s.mean() - 5.0).abs() < 1e-12);
+        assert!((s.var() - 32.0 / 7.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 9.0);
+        assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = LatencyHistogram::new(1e-6, 24);
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-5);
+        }
+        let q50 = h.quantile(0.5);
+        let q99 = h.quantile(0.99);
+        assert!(q50 <= q99);
+        assert!(h.stats().count() == 1000);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(&["p", "err"]);
+        t.row(vec!["0.05".into(), "3.4e-30".into()]);
+        let r = t.render();
+        assert!(r.contains("3.4e-30"));
+        assert!(r.lines().count() == 3);
+    }
+
+    #[test]
+    fn sci_formatting() {
+        assert_eq!(sci(0.0), "0");
+        assert!(sci(3.4e-30).contains("e-30"));
+        assert_eq!(sci(1.5), "1.5000");
+    }
+
+    #[test]
+    fn csv_round_trip() {
+        let dir = std::env::temp_dir().join("gcod_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("out.csv");
+        {
+            let mut w = CsvWriter::to_file(&path, &["a", "b"]).unwrap();
+            w.write_row(&[1.0, 2.0]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("a,b\n"));
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,239 @@
+//! MANIFEST.json schema: the contract between `python/compile/aot.py`
+//! and the rust runtime.
+
+use crate::config::json::Json;
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    S32,
+    F64,
+    Bf16,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "s32" => Dtype::S32,
+            "f64" => Dtype::F64,
+            "bf16" => Dtype::Bf16,
+            _ => bail!("unknown dtype tag '{s}'"),
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorMeta {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct TransformerMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq_len: usize,
+    pub n_params: usize,
+    pub n_blocks: usize,
+    pub batch: usize,
+    pub loss_scale: f64,
+    pub init_file: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactMeta>,
+    pub transformer: Option<TransformerMeta>,
+}
+
+fn tensor_meta(v: &Json) -> Result<TensorMeta> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("tensor meta missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(
+        v.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("tensor meta missing dtype"))?,
+    )?;
+    Ok(TensorMeta { shape, dtype })
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow!("manifest missing usize field '{key}'"))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("manifest missing string field '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).map_err(|e| anyhow!("{e}"))?;
+        let mut artifacts = Vec::new();
+        for row in root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?
+        {
+            let inputs = row
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing inputs"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = row
+                .get("outputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact missing outputs"))?
+                .iter()
+                .map(tensor_meta)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: req_str(row, "name")?,
+                file: req_str(row, "file")?,
+                inputs,
+                outputs,
+            });
+        }
+        let transformer = match root.get("transformer") {
+            None | Some(Json::Null) => None,
+            Some(t) => Some(TransformerMeta {
+                vocab: req_usize(t, "vocab")?,
+                d_model: req_usize(t, "d_model")?,
+                n_head: req_usize(t, "n_head")?,
+                n_layer: req_usize(t, "n_layer")?,
+                seq_len: req_usize(t, "seq_len")?,
+                n_params: req_usize(t, "n_params")?,
+                n_blocks: req_usize(t, "n_blocks")?,
+                batch: req_usize(t, "batch")?,
+                loss_scale: t
+                    .get("loss_scale")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow!("transformer missing loss_scale"))?,
+                init_file: req_str(t, "init_file")?,
+            }),
+        };
+        Ok(Self { artifacts, transformer })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Find the block_grad artifact matching an (n, b, k) shape.
+    pub fn find_block_grad(&self, n: usize, b: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.name.starts_with("block_grad_")
+                && a.inputs.len() == 3
+                && a.inputs[1].shape == vec![n, b, k]
+        })
+    }
+
+    /// Find the worker_grad artifact for (blocks_per_machine, b, k).
+    pub fn find_worker_grad(&self, blocks: usize, b: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.name.starts_with("worker_grad_")
+                && a.inputs.len() == 3
+                && a.inputs[1].shape == vec![blocks, b, k]
+        })
+    }
+
+    /// Find the decode_combine artifact for (n, k).
+    pub fn find_decode_combine(&self, n: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.name.starts_with("decode_combine_")
+                && a.inputs.len() == 2
+                && a.inputs[0].shape == vec![n, k]
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "block_grad_t_4x2x8", "file": "bg.hlo.txt",
+         "inputs": [{"shape": [8], "dtype": "f32"},
+                     {"shape": [4, 2, 8], "dtype": "f32"},
+                     {"shape": [4, 2], "dtype": "f32"}],
+         "outputs": [{"shape": [4, 8], "dtype": "f32"}]},
+        {"name": "decode_combine_t_4x8", "file": "dc.hlo.txt",
+         "inputs": [{"shape": [4, 8], "dtype": "f32"},
+                     {"shape": [4], "dtype": "f32"}],
+         "outputs": [{"shape": [8], "dtype": "f32"}]}
+      ],
+      "transformer": {"vocab": 256, "d_model": 128, "n_head": 4,
+        "n_layer": 2, "seq_len": 64, "n_params": 437760, "n_blocks": 16,
+        "batch": 8, "loss_scale": 1.22e-4, "init_file": "init.bin"}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.artifact("block_grad_t_4x2x8").unwrap();
+        assert_eq!(a.inputs[1].shape, vec![4, 2, 8]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.outputs[0].elements(), 32);
+        let t = m.transformer.as_ref().unwrap();
+        assert_eq!(t.n_params, 437760);
+        assert!((t.loss_scale - 1.22e-4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shape_lookups() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.find_block_grad(4, 2, 8).is_some());
+        assert!(m.find_block_grad(4, 2, 9).is_none());
+        assert!(m.find_decode_combine(4, 8).is_some());
+        assert!(m.find_worker_grad(2, 2, 8).is_none());
+    }
+
+    #[test]
+    fn null_transformer_ok() {
+        let m = Manifest::parse(r#"{"artifacts": [], "transformer": null}"#).unwrap();
+        assert!(m.transformer.is_none());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse(r#"{"artifacts": [{"name": "x"}]}"#).is_err());
+        assert!(Manifest::parse(r#"{}"#).is_err());
+        assert!(Dtype::parse("f16").is_err());
+    }
+}

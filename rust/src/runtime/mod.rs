@@ -1,0 +1,255 @@
+//! PJRT runtime: load and execute the AOT artifacts from the rust
+//! request path.
+//!
+//! `make artifacts` (build time, python) lowers every L2 function to
+//! HLO *text* and writes `artifacts/MANIFEST.json`; this module parses
+//! the manifest, compiles artifacts on the PJRT CPU client on first
+//! use, and exposes typed execute helpers. HLO text (not serialized
+//! protos) is the interchange format — xla_extension 0.5.1 rejects
+//! jax >= 0.5's 64-bit-instruction-id protos, while the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! `PjRtClient` wraps an `Rc`, so a `Runtime` is **not** `Send`: every
+//! thread that executes artifacts builds its own `Runtime` (the
+//! coordinator's workers each do this; see coordinator/).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Dtype, Manifest, TensorMeta, TransformerMeta};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A host-side tensor to feed or read from an executable.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn i32(shape: &[usize], data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data),
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            t => bail!("unsupported output element type {t:?}"),
+        }
+    }
+}
+
+/// One compiled artifact plus its metadata.
+pub struct LoadedArtifact {
+    pub meta: ArtifactMeta,
+    pub exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedArtifact {
+    /// Execute with host tensors; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let mut out = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let parts = out.decompose_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Upload a tensor to the device once; reuse across `run_b` calls
+    /// (the hot-path variant: only the iterate changes per step).
+    ///
+    /// Uses `buffer_from_host_buffer` (kImmutableOnlyDuringCall — the
+    /// copy is synchronous). Do NOT switch to `buffer_from_host_literal`:
+    /// the TFRT CPU client's `BufferFromHostLiteral` is asynchronous and
+    /// the literal would be freed before the transfer completes
+    /// (observed as a size-check crash in abstract_tfrt_cpu_buffer.cc).
+    pub fn upload(&self, t: &Tensor, client: &xla::PjRtClient) -> Result<xla::PjRtBuffer> {
+        let buf = match t {
+            Tensor::F32 { shape, data } => client.buffer_from_host_buffer(data, shape, None)?,
+            Tensor::I32 { shape, data } => client.buffer_from_host_buffer(data, shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Execute with pre-uploaded device buffers.
+    pub fn run_b(&self, inputs: &[&xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        let result = self.exe.execute_b(inputs)?;
+        let mut out = result[0][0].to_literal_sync()?;
+        let parts = out.decompose_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.meta.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, m)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.shape() != m.shape.as_slice() {
+                bail!(
+                    "artifact {} input {i}: shape {:?} != manifest {:?}",
+                    self.meta.name,
+                    t.shape(),
+                    m.shape
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Artifact registry + executable cache bound to one PJRT client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<LoadedArtifact>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain MANIFEST.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("MANIFEST.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, manifest, dir, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Default artifacts directory: $GCOD_ARTIFACTS or ./artifacts.
+    pub fn open_default() -> Result<Self> {
+        let dir = std::env::var("GCOD_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(dir)
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        self.manifest.artifacts.iter().map(|a| a.name.clone()).collect()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<Rc<LoadedArtifact>> {
+        if let Some(a) = self.cache.borrow().get(name) {
+            return Ok(a.clone());
+        }
+        let meta = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?
+            .clone();
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let loaded = Rc::new(LoadedArtifact { meta, exe });
+        self.cache.borrow_mut().insert(name.to_string(), loaded.clone());
+        Ok(loaded)
+    }
+
+    /// Convenience: execute by name with host tensors.
+    pub fn run(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.load(name)?.run(inputs)
+    }
+
+    /// Read the transformer's initial flat parameters (f32 .bin).
+    pub fn read_transformer_init(&self) -> Result<Vec<f32>> {
+        let tfm = self
+            .manifest
+            .transformer
+            .as_ref()
+            .ok_or_else(|| anyhow!("no transformer metadata in manifest"))?;
+        let bytes = std::fs::read(self.dir.join(&tfm.init_file))?;
+        if bytes.len() != 4 * tfm.n_params {
+            bail!("init file has {} bytes, expected {}", bytes.len(), 4 * tfm.n_params);
+        }
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = Tensor::f32(&[2, 3], vec![0.0; 6]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert!(t.as_f32().is_ok());
+        let i = Tensor::i32(&[2], vec![1, 2]);
+        assert!(i.as_f32().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn tensor_rejects_bad_shape() {
+        Tensor::f32(&[2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn literal_round_trip() {
+        let t = Tensor::f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+        let ti = Tensor::i32(&[3], vec![7, 8, 9]);
+        let back_i = Tensor::from_literal(&ti.to_literal().unwrap()).unwrap();
+        assert_eq!(ti, back_i);
+    }
+
+    // Executable-level tests live in rust/tests/runtime_integration.rs
+    // (they need built artifacts).
+}

@@ -1,0 +1,211 @@
+//! LSQR (Paige & Saunders 1982): iterative least squares on implicit
+//! linear operators.
+//!
+//! This is the *generic* optimal decoder's engine: for non-graph codes
+//! (Raviv expander code, BIBD, rBGC, BRC) the optimal coefficients
+//! `w* = argmin |A_S w - 1|_2` (paper Eq. 3) have no component-wise
+//! closed form, so we solve the sparse least-squares problem directly.
+//! LSQR converges to the minimum-norm solution, which matches the
+//! Moore-Penrose-pseudoinverse characterization of Eq. (9).
+
+/// An m x n linear operator with forward and transpose application.
+pub trait LinearOp {
+    fn rows(&self) -> usize;
+    fn cols(&self) -> usize;
+    /// y = A x  (x: cols, y: rows)
+    fn apply(&self, x: &[f64], y: &mut [f64]);
+    /// y = A^T x (x: rows, y: cols)
+    fn apply_t(&self, x: &[f64], y: &mut [f64]);
+}
+
+#[derive(Clone, Debug)]
+pub struct LsqrResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    /// final |A x - b|
+    pub residual_norm: f64,
+    /// final |A^T (A x - b)| — optimality measure
+    pub normal_residual_norm: f64,
+    pub converged: bool,
+}
+
+fn norm(v: &[f64]) -> f64 {
+    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+fn scale_in(alpha: f64, v: &mut [f64]) {
+    for x in v.iter_mut() {
+        *x *= alpha;
+    }
+}
+
+/// Solve min_x |A x - b|_2 with LSQR.
+///
+/// `atol` bounds the relative normal-equation residual
+/// |A^T r| / (|A| |r|); `max_iter` caps the Golub-Kahan steps.
+pub fn lsqr<M: LinearOp>(a: &M, b: &[f64], atol: f64, max_iter: usize) -> LsqrResult {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(b.len(), m);
+    let mut x = vec![0.0; n];
+
+    // u = b; beta = |u|
+    let mut u = b.to_vec();
+    let mut beta = norm(&u);
+    if beta == 0.0 {
+        return LsqrResult { x, iterations: 0, residual_norm: 0.0,
+                            normal_residual_norm: 0.0, converged: true };
+    }
+    scale_in(1.0 / beta, &mut u);
+
+    // v = A^T u; alpha = |v|
+    let mut v = vec![0.0; n];
+    a.apply_t(&u, &mut v);
+    let mut alpha = norm(&v);
+    if alpha == 0.0 {
+        // b orthogonal to range(A): x = 0 is optimal
+        return LsqrResult { x, iterations: 0, residual_norm: beta,
+                            normal_residual_norm: 0.0, converged: true };
+    }
+    scale_in(1.0 / alpha, &mut v);
+
+    let mut w = v.clone();
+    let mut phibar = beta;
+    let mut rhobar = alpha;
+    let mut anorm2 = 0.0f64; // running |A|_F^2 estimate
+
+    let mut tmp_m = vec![0.0; m];
+    let mut tmp_n = vec![0.0; n];
+    let mut iters = 0;
+    let mut converged = false;
+
+    for it in 1..=max_iter {
+        iters = it;
+        anorm2 += alpha * alpha + beta * beta;
+
+        // bidiagonalization: u = A v - alpha u
+        a.apply(&v, &mut tmp_m);
+        for i in 0..m {
+            u[i] = tmp_m[i] - alpha * u[i];
+        }
+        beta = norm(&u);
+        if beta > 0.0 {
+            scale_in(1.0 / beta, &mut u);
+        }
+
+        // v = A^T u - beta v
+        a.apply_t(&u, &mut tmp_n);
+        for i in 0..n {
+            v[i] = tmp_n[i] - beta * v[i];
+        }
+        alpha = norm(&v);
+        if alpha > 0.0 {
+            scale_in(1.0 / alpha, &mut v);
+        }
+
+        // Givens rotation
+        let rho = (rhobar * rhobar + beta * beta).sqrt();
+        let c = rhobar / rho;
+        let s = beta / rho;
+        let theta = s * alpha;
+        rhobar = -c * alpha;
+        let phi = c * phibar;
+        phibar *= s;
+
+        // update x, w
+        let t1 = phi / rho;
+        let t2 = -theta / rho;
+        for i in 0..n {
+            x[i] += t1 * w[i];
+            w[i] = v[i] + t2 * w[i];
+        }
+
+        // convergence: |A^T r| = phibar * alpha * |c| ; |r| = phibar
+        let norm_ar = phibar * alpha * c.abs();
+        let anorm = anorm2.sqrt();
+        if norm_ar <= atol * anorm * phibar.max(1e-300) || phibar <= atol * norm(b) {
+            converged = true;
+            break;
+        }
+    }
+
+    // exact final residuals
+    a.apply(&x, &mut tmp_m);
+    let r: Vec<f64> = (0..m).map(|i| tmp_m[i] - b[i]).collect();
+    let rnorm = norm(&r);
+    a.apply_t(&r, &mut tmp_n);
+    let nrnorm = norm(&tmp_n);
+    LsqrResult { x, iterations: iters, residual_norm: rnorm,
+                 normal_residual_norm: nrnorm, converged }
+}
+
+impl LinearOp for crate::linalg::Mat {
+    fn rows(&self) -> usize {
+        self.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        y.copy_from_slice(&self.mul_vec(x));
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        y.copy_from_slice(&self.t_mul_vec(x));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    #[test]
+    fn solves_square_system() {
+        let a = Mat::from_rows(vec![vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let b = vec![9.0, 8.0];
+        let r = lsqr(&a, &b, 1e-12, 100);
+        assert!(r.converged);
+        assert!((r.x[0] - 2.0).abs() < 1e-8 && (r.x[1] - 3.0).abs() < 1e-8, "{:?}", r.x);
+    }
+
+    #[test]
+    fn overdetermined_matches_normal_equations() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ]);
+        let b = vec![1.0, 2.9, 5.1, 7.0];
+        let r = lsqr(&a, &b, 1e-12, 200);
+        let exact = crate::linalg::chol::lstsq_normal(&a, &b, 0.0).unwrap();
+        assert!((r.x[0] - exact[0]).abs() < 1e-7);
+        assert!((r.x[1] - exact[1]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn underdetermined_gives_min_norm_solution() {
+        // x + y = 2 has min-norm solution (1, 1)
+        let a = Mat::from_rows(vec![vec![1.0, 1.0]]);
+        let r = lsqr(&a, &[2.0], 1e-14, 100);
+        assert!((r.x[0] - 1.0).abs() < 1e-9 && (r.x[1] - 1.0).abs() < 1e-9, "{:?}", r.x);
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let r = lsqr(&a, &[0.0, 0.0], 1e-12, 10);
+        assert_eq!(r.x, vec![0.0, 0.0]);
+        assert!(r.converged);
+    }
+
+    #[test]
+    fn inconsistent_system_minimizes_residual() {
+        // A = [[1],[1]], b = [0, 2] -> x = 1, residual sqrt(2)
+        let a = Mat::from_rows(vec![vec![1.0], vec![1.0]]);
+        let r = lsqr(&a, &[0.0, 2.0], 1e-12, 100);
+        assert!((r.x[0] - 1.0).abs() < 1e-9);
+        assert!((r.residual_norm - std::f64::consts::SQRT_2).abs() < 1e-9);
+        // optimality: A^T r = 0
+        assert!(r.normal_residual_norm < 1e-9);
+    }
+}

@@ -1,0 +1,218 @@
+//! Sparse-matrix substrate: CSC/CSR assignment matrices + LSQR.
+//!
+//! Assignment matrices A (n data blocks x m machines) are sparse — graph
+//! schemes have exactly 2 non-zeros per column, FRC/BIBD/rBGC/BRC a few
+//! more. The generic optimal decoder (decode::GenericOptimalDecoder)
+//! solves min_w |A_S w - 1|_2 over the surviving columns S with LSQR,
+//! which needs fast `A_S w` and `A_S^T r` — i.e. column access, so CSC
+//! is the primary layout.
+
+pub mod lsqr;
+
+pub use lsqr::{lsqr, LinearOp, LsqrResult};
+
+/// Compressed sparse column matrix (column = machine).
+#[derive(Clone, Debug)]
+pub struct Csc {
+    pub rows: usize,
+    pub cols: usize,
+    /// column pointer, len cols+1
+    pub colptr: Vec<usize>,
+    /// row indices, len nnz
+    pub rowidx: Vec<usize>,
+    /// values, len nnz
+    pub values: Vec<f64>,
+}
+
+impl Csc {
+    /// Build from (row, col, value) triplets (duplicates are summed).
+    pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(usize, usize, f64)>) -> Self {
+        t.sort_unstable_by_key(|&(r, c, _)| (c, r));
+        // merge duplicates (adjacent after the sort)
+        let mut merged: Vec<(usize, usize, f64)> = Vec::with_capacity(t.len());
+        for (r, c, v) in t {
+            assert!(r < rows && c < cols, "triplet ({r},{c}) out of bounds");
+            if let Some(last) = merged.last_mut() {
+                if last.0 == r && last.1 == c {
+                    last.2 += v;
+                    continue;
+                }
+            }
+            merged.push((r, c, v));
+        }
+        let mut colptr = vec![0usize; cols + 1];
+        for &(_, c, _) in &merged {
+            colptr[c + 1] += 1;
+        }
+        for c in 0..cols {
+            colptr[c + 1] += colptr[c];
+        }
+        let rowidx = merged.iter().map(|&(r, _, _)| r).collect();
+        let values = merged.iter().map(|&(_, _, v)| v).collect();
+        Self { rows, cols, colptr, rowidx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.rowidx.len()
+    }
+
+    /// Rows (and values) of column j.
+    #[inline]
+    pub fn col(&self, j: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.colptr[j], self.colptr[j + 1]);
+        (&self.rowidx[a..b], &self.values[a..b])
+    }
+
+    /// y = A x (x over columns/machines, y over rows/blocks).
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols);
+        let mut y = vec![0.0; self.rows];
+        for j in 0..self.cols {
+            let xj = x[j];
+            if xj != 0.0 {
+                let (ri, vals) = self.col(j);
+                for (k, &r) in ri.iter().enumerate() {
+                    y[r] += vals[k] * xj;
+                }
+            }
+        }
+        y
+    }
+
+    /// y = A^T x.
+    pub fn t_mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows);
+        (0..self.cols)
+            .map(|j| {
+                let (ri, vals) = self.col(j);
+                ri.iter().enumerate().map(|(k, &r)| vals[k] * x[r]).sum()
+            })
+            .collect()
+    }
+
+    /// Number of non-zero entries divided by rows — the paper's
+    /// replication factor d (Definition I.1, at block granularity).
+    pub fn replication_factor(&self) -> f64 {
+        self.nnz() as f64 / self.rows as f64
+    }
+
+    /// Max non-zeros in any column — computational load in blocks.
+    pub fn max_col_nnz(&self) -> usize {
+        (0..self.cols)
+            .map(|j| self.colptr[j + 1] - self.colptr[j])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Dense copy (tests / small-n oracles only).
+    pub fn to_dense(&self) -> crate::linalg::Mat {
+        let mut m = crate::linalg::Mat::zeros(self.rows, self.cols);
+        for j in 0..self.cols {
+            let (ri, vals) = self.col(j);
+            for (k, &r) in ri.iter().enumerate() {
+                m[(r, j)] += vals[k];
+            }
+        }
+        m
+    }
+}
+
+/// The column-restricted operator A_S used by the generic optimal
+/// decoder: only the surviving (non-straggler) machines' columns.
+pub struct ColumnSubsetOp<'a> {
+    pub a: &'a Csc,
+    /// surviving column indices
+    pub cols: &'a [usize],
+}
+
+impl LinearOp for ColumnSubsetOp<'_> {
+    fn rows(&self) -> usize {
+        self.a.rows
+    }
+    fn cols(&self) -> usize {
+        self.cols.len()
+    }
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for (jj, &j) in self.cols.iter().enumerate() {
+            let xj = x[jj];
+            if xj != 0.0 {
+                let (ri, vals) = self.a.col(j);
+                for (k, &r) in ri.iter().enumerate() {
+                    y[r] += vals[k] * xj;
+                }
+            }
+        }
+    }
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        for (jj, &j) in self.cols.iter().enumerate() {
+            let (ri, vals) = self.a.col(j);
+            y[jj] = ri.iter().enumerate().map(|(k, &r)| vals[k] * x[r]).sum();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Csc {
+        // A = [1 0 2; 0 3 0] (2x3)
+        Csc::from_triplets(2, 3, vec![(0, 0, 1.0), (1, 1, 3.0), (0, 2, 2.0)])
+    }
+
+    #[test]
+    fn triplets_round_trip() {
+        let a = small();
+        assert_eq!(a.nnz(), 3);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 0)], 1.0);
+        assert_eq!(d[(1, 1)], 3.0);
+        assert_eq!(d[(0, 2)], 2.0);
+        assert_eq!(d[(1, 2)], 0.0);
+    }
+
+    #[test]
+    fn duplicate_triplets_sum() {
+        let a = Csc::from_triplets(2, 2, vec![(0, 0, 1.0), (0, 0, 2.5), (1, 1, 1.0)]);
+        assert_eq!(a.to_dense()[(0, 0)], 3.5);
+        assert_eq!(a.nnz(), 2);
+    }
+
+    #[test]
+    fn empty_columns_ok() {
+        let a = Csc::from_triplets(3, 4, vec![(0, 0, 1.0), (2, 3, 1.0)]);
+        assert_eq!(a.col(1).0.len(), 0);
+        assert_eq!(a.col(2).0.len(), 0);
+        assert_eq!(a.mul_vec(&[1.0, 5.0, 5.0, 1.0]), vec![1.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn matvec_against_dense() {
+        let a = small();
+        let x = vec![1.0, -1.0, 0.5];
+        assert_eq!(a.mul_vec(&x), a.to_dense().mul_vec(&x));
+        let y = vec![2.0, -3.0];
+        assert_eq!(a.t_mul_vec(&y), a.to_dense().t_mul_vec(&y));
+    }
+
+    #[test]
+    fn replication_and_load() {
+        let a = small();
+        assert!((a.replication_factor() - 1.5).abs() < 1e-12);
+        assert_eq!(a.max_col_nnz(), 1);
+    }
+
+    #[test]
+    fn column_subset_op_matches_dense_subset() {
+        let a = small();
+        let cols = vec![0usize, 2];
+        let op = ColumnSubsetOp { a: &a, cols: &cols };
+        let mut y = vec![0.0; 2];
+        op.apply(&[2.0, 3.0], &mut y);
+        assert_eq!(y, vec![2.0 + 6.0, 0.0]);
+        let mut yt = vec![0.0; 2];
+        op.apply_t(&[1.0, 1.0], &mut yt);
+        assert_eq!(yt, vec![1.0, 2.0]);
+    }
+}

@@ -1,0 +1,318 @@
+//! Straggler models: random (Definition I.2) and adversarial
+//! (Definition I.3), plus the stagnant model conjectured in §VIII.
+//!
+//! `sample` returns a boolean mask over machines: true = straggles.
+
+use crate::codes::{FrcCode, GradientCode};
+use crate::graphs::Graph;
+use crate::prng::Rng;
+
+pub trait StragglerModel {
+    fn sample(&mut self, m: usize) -> Vec<bool>;
+    fn name(&self) -> String;
+}
+
+/// Each machine straggles independently with probability p (the
+/// random-straggler model of Definition I.2 and Algorithm 2).
+pub struct BernoulliStragglers {
+    pub p: f64,
+    pub rng: Rng,
+}
+
+impl BernoulliStragglers {
+    pub fn new(p: f64, seed: u64) -> Self {
+        Self { p, rng: Rng::new(seed) }
+    }
+}
+
+impl StragglerModel for BernoulliStragglers {
+    fn sample(&mut self, m: usize) -> Vec<bool> {
+        self.rng.bernoulli_mask(m, self.p)
+    }
+    fn name(&self) -> String {
+        format!("bernoulli(p={})", self.p)
+    }
+}
+
+/// Exactly floor(p m) uniformly-random stragglers — the MPI-Waitany
+/// semantics of the paper's cluster experiments ("the PS waits for the
+/// first ceil(m (1-p)) processors").
+pub struct FixedFractionStragglers {
+    pub p: f64,
+    pub rng: Rng,
+}
+
+impl FixedFractionStragglers {
+    pub fn new(p: f64, seed: u64) -> Self {
+        Self { p, rng: Rng::new(seed) }
+    }
+}
+
+impl StragglerModel for FixedFractionStragglers {
+    fn sample(&mut self, m: usize) -> Vec<bool> {
+        let k = (self.p * m as f64).floor() as usize;
+        let mut mask = vec![false; m];
+        for j in self.rng.sample_indices(m, k) {
+            mask[j] = true;
+        }
+        mask
+    }
+    fn name(&self) -> String {
+        format!("fixed-frac(p={})", self.p)
+    }
+}
+
+/// Stagnant stragglers: "which machines are straggling tends to stay
+/// stagnant throughout a run" (§VIII conjecture for why the graph
+/// scheme beats the FRC on a real cluster). Each round, every machine
+/// keeps its state with probability 1 - churn, else resamples.
+pub struct StagnantStragglers {
+    pub p: f64,
+    pub churn: f64,
+    rng: Rng,
+    current: Vec<bool>,
+}
+
+impl StagnantStragglers {
+    pub fn new(p: f64, churn: f64, seed: u64) -> Self {
+        Self { p, churn, rng: Rng::new(seed), current: Vec::new() }
+    }
+}
+
+impl StragglerModel for StagnantStragglers {
+    fn sample(&mut self, m: usize) -> Vec<bool> {
+        if self.current.len() != m {
+            self.current = self.rng.bernoulli_mask(m, self.p);
+        } else {
+            for j in 0..m {
+                if self.rng.bernoulli(self.churn) {
+                    self.current[j] = self.rng.bernoulli(self.p);
+                }
+            }
+        }
+        self.current.clone()
+    }
+    fn name(&self) -> String {
+        format!("stagnant(p={},churn={})", self.p, self.churn)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Adversarial attacks (Definition I.3): budget floor(p m) machines
+// ---------------------------------------------------------------------
+
+/// Attack on graph schemes (Remark V.4): isolate whole data blocks by
+/// straggling every machine (edge) incident to chosen vertices. Each
+/// isolated block forces alpha_i = 0, costing (1-0)^2 = 1 — so with
+/// budget pm and degree d the adversary zeroes ~pm/d blocks, giving
+/// |alpha*-1|^2/n >= p/2 for graph schemes (nd = 2m). Vertices are
+/// chosen greedily to avoid wasting budget on shared edges.
+pub fn graph_isolation_attack(g: &Graph, budget: usize) -> Vec<bool> {
+    let m = g.m();
+    let mut straggle = vec![false; m];
+    let mut spent = 0usize;
+    let mut killed = vec![false; g.n];
+    // greedy: prefer vertices whose remaining (un-straggled) degree is
+    // smallest so each isolation costs the least budget
+    loop {
+        let mut best: Option<(usize, usize)> = None; // (cost, vertex)
+        for v in 0..g.n {
+            if killed[v] {
+                continue;
+            }
+            let cost = g.adj[v].iter().filter(|&&(_, e)| !straggle[e]).count();
+            if best.map(|(c, _)| cost < c).unwrap_or(true) {
+                best = Some((cost, v));
+            }
+        }
+        match best {
+            Some((cost, v)) if spent + cost <= budget => {
+                for &(_, e) in &g.adj[v] {
+                    if !straggle[e] {
+                        straggle[e] = true;
+                        spent += 1;
+                    }
+                }
+                killed[v] = true;
+            }
+            _ => break,
+        }
+    }
+    // spend any leftover budget on arbitrary extra edges (they can only
+    // help the adversary)
+    for e in 0..m {
+        if spent >= budget {
+            break;
+        }
+        if !straggle[e] {
+            straggle[e] = true;
+            spent += 1;
+        }
+    }
+    straggle
+}
+
+/// Attack on the FRC (the paper's motivation for Question 1): kill
+/// whole machine-groups. Each dead group zeroes all its blocks, so a
+/// budget of pm machines zeroes a p fraction of all data blocks —
+/// error/n = p, versus ~p/2 for graph schemes (Table I).
+pub fn frc_group_attack(code: &FrcCode, budget: usize) -> Vec<bool> {
+    let m = code.assignment().cols;
+    let d = code.d();
+    let mut straggle = vec![false; m];
+    let mut spent = 0;
+    for g in 0..code.n_groups() {
+        if spent + d > budget {
+            break;
+        }
+        for j in 0..m {
+            if code.machine_group[j] == g {
+                straggle[j] = true;
+                spent += 1;
+            }
+        }
+    }
+    // leftovers on arbitrary machines
+    for j in 0..m {
+        if spent >= budget {
+            break;
+        }
+        if !straggle[j] {
+            straggle[j] = true;
+            spent += 1;
+        }
+    }
+    straggle
+}
+
+/// Generic greedy attack for arbitrary codes: repeatedly straggle the
+/// machine whose removal most increases the optimal decoding error
+/// (evaluated with the provided decoder), breaking zero-gain ties by
+/// attacking the block with the fewest surviving replicas (greedy
+/// decoding error alone is myopic: on an expander no single extra
+/// straggler moves alpha* until a block is fully isolated).
+/// O(budget * m * decode-cost) — use on small m only.
+pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
+    decoder: &D,
+    a: &crate::sparse::Csc,
+    budget: usize,
+) -> Vec<bool> {
+    let m = a.cols;
+    let mut straggle = vec![false; m];
+    // surviving replica count per block
+    let mut replicas = a.mul_vec(&vec![1.0; m]);
+    for _ in 0..budget {
+        let mut best: Option<(f64, f64, usize)> = None; // (err, tie-score, machine)
+        for j in 0..m {
+            if straggle[j] {
+                continue;
+            }
+            straggle[j] = true;
+            let err = decoder.decode(&straggle).error_sq();
+            straggle[j] = false;
+            // tie score: how close this machine's blocks are to isolation
+            let (rows, _) = a.col(j);
+            let tie = rows
+                .iter()
+                .map(|&i| 1.0 / replicas[i].max(1.0))
+                .fold(0.0f64, f64::max);
+            let better = match best {
+                None => true,
+                Some((be, bt, _)) => err > be + 1e-15 || ((err - be).abs() <= 1e-15 && tie > bt),
+            };
+            if better {
+                best = Some((err, tie, j));
+            }
+        }
+        if let Some((_, _, j)) = best {
+            straggle[j] = true;
+            let (rows, _) = a.col(j);
+            for &i in rows {
+                replicas[i] -= 1.0;
+            }
+        }
+    }
+    straggle
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, GraphCode};
+    use crate::decode::{Decoder, OptimalGraphDecoder};
+    use crate::graphs::random_regular_graph;
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut s = BernoulliStragglers::new(0.3, 1);
+        let mask = s.sample(50_000);
+        let frac = mask.iter().filter(|&&b| b).count() as f64 / 50_000.0;
+        assert!((frac - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn fixed_fraction_exact_count() {
+        let mut s = FixedFractionStragglers::new(0.25, 2);
+        for _ in 0..10 {
+            let mask = s.sample(24);
+            assert_eq!(mask.iter().filter(|&&b| b).count(), 6);
+        }
+    }
+
+    #[test]
+    fn stagnant_is_sticky() {
+        let mut s = StagnantStragglers::new(0.3, 0.05, 3);
+        let a = s.sample(100);
+        let b = s.sample(100);
+        let changed = a.iter().zip(&b).filter(|(x, y)| x != y).count();
+        assert!(changed < 20, "changed={changed}");
+    }
+
+    #[test]
+    fn isolation_attack_respects_budget_and_hurts() {
+        let mut rng = crate::prng::Rng::new(7);
+        let g = random_regular_graph(20, 4, &mut rng);
+        let budget = 8; // p = 0.2 of m = 40
+        let mask = graph_isolation_attack(&g, budget);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), budget);
+        let code = GraphCode::new("t", g);
+        let err = OptimalGraphDecoder::new(&code.graph).decode(&mask).error_sq();
+        // should isolate budget/d = 2 vertices -> error >= 2
+        assert!(err >= 2.0 - 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn frc_attack_zeroes_p_fraction() {
+        let code = crate::codes::FrcCode::new(16, 24, 3);
+        let budget = 6; // two whole groups
+        let mask = frc_group_attack(&code, budget);
+        assert_eq!(mask.iter().filter(|&&b| b).count(), budget);
+        let d = crate::decode::FrcOptimalDecoder { code: &code }.decode(&mask);
+        // 2 groups x 2 blocks per group zeroed
+        assert!((d.error_sq() - 4.0).abs() < 1e-12, "err={}", d.error_sq());
+    }
+
+    #[test]
+    fn greedy_attack_at_least_matches_random() {
+        let mut rng = crate::prng::Rng::new(8);
+        let g = random_regular_graph(12, 3, &mut rng);
+        let code = GraphCode::new("t", g);
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let budget = 4;
+        let adv = greedy_decode_attack(&dec, code.assignment(), budget);
+        let adv_err = dec.decode(&adv).error_sq();
+        // greedy is myopic, so compare against the *mean* random error:
+        // a real adversary must do at least as well as an average draw
+        let mut sum = 0.0f64;
+        let trials = 50;
+        for _ in 0..trials {
+            let mut mask = vec![false; code.n_machines()];
+            for j in rng.sample_indices(code.n_machines(), budget) {
+                mask[j] = true;
+            }
+            sum += dec.decode(&mask).error_sq();
+        }
+        let mean_random = sum / trials as f64;
+        assert!(adv_err >= mean_random - 1e-9, "adv={adv_err} mean rnd={mean_random}");
+    }
+}

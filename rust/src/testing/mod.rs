@@ -1,0 +1,146 @@
+//! Property-testing mini-framework (no proptest in the offline build).
+//!
+//! `check(name, cases, prop)` runs `prop` against `cases` independent
+//! PRNG streams; on failure it reports the failing case seed so the
+//! exact case can be replayed with `check_seed`. Generators are plain
+//! functions over [`crate::prng::Rng`]. Shrinking is approximated by
+//! re-running failing numeric-size parameters at smaller values where
+//! the generator supports it (callers draw sizes via `Gen::size`).
+
+use crate::prng::Rng;
+
+/// Size-aware generation helper: properties draw their dimensions
+/// through this so failures can be replayed at reduced size.
+pub struct Gen<'a> {
+    pub rng: &'a mut Rng,
+    /// multiplicative size cap in (0, 1]; 1.0 = full size
+    pub size_factor: f64,
+}
+
+impl Gen<'_> {
+    /// A size in [lo, hi], scaled down by the shrink factor.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        let hi_eff = lo + (((hi - lo) as f64) * self.size_factor).round() as usize;
+        lo + self.rng.below(hi_eff - lo + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn choice<'b, T>(&mut self, xs: &'b [T]) -> &'b T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Outcome of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok,
+    Failed { seed: u64, case: usize, msg: String },
+}
+
+/// Run `prop` on `cases` random cases; panics (test failure) with the
+/// reproducing seed on the first violation. A property returns
+/// `Err(msg)` (or panics) to signal failure.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = match std::env::var("GCOD_PROP_SEED") {
+        Ok(s) => s.parse::<u64>().expect("GCOD_PROP_SEED must be a u64"),
+        Err(_) => 0xC0DE_D00D,
+    };
+    for case in 0..cases {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        if let PropResult::Failed { seed, case, msg } = run_case(&mut prop, seed, case, 1.0) {
+            // attempt shrink: re-run at reduced size factors with the same seed
+            for &factor in &[0.25, 0.5] {
+                if let PropResult::Failed { msg: small_msg, .. } =
+                    run_case(&mut prop, seed, case, factor)
+                {
+                    panic!(
+                        "property '{name}' failed (case {case}, seed {seed}, shrunk to {factor}x): {small_msg}"
+                    );
+                }
+            }
+            panic!("property '{name}' failed (case {case}, seed {seed}): {msg}");
+        }
+    }
+}
+
+/// Replay one exact case (debugging helper).
+pub fn check_seed<F>(name: &str, seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    if let PropResult::Failed { msg, .. } = run_case(&mut prop, seed, 0, 1.0) {
+        panic!("property '{name}' failed at seed {seed}: {msg}");
+    }
+}
+
+fn run_case<F>(prop: &mut F, seed: u64, case: usize, size_factor: f64) -> PropResult
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    let mut gen = Gen { rng: &mut rng, size_factor };
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut gen))) {
+        Ok(Ok(())) => PropResult::Ok,
+        Ok(Err(msg)) => PropResult::Failed { seed, case, msg },
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| p.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "panic".to_string());
+            PropResult::Failed { seed, case, msg: format!("panicked: {msg}") }
+        }
+    }
+}
+
+/// Assert helper producing property-friendly errors.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", 50, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            prop_assert!((a + b - (b + a)).abs() < 1e-15, "a={a} b={b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_reports_seed() {
+        check("always-fails", 5, |_| Err("nope".to_string()));
+    }
+
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn panicking_property_is_caught() {
+        check("panics", 3, |_| panic!("boom"));
+    }
+
+    #[test]
+    fn sizes_respect_bounds() {
+        check("sizes", 100, |g| {
+            let s = g.size(3, 17);
+            prop_assert!((3..=17).contains(&s), "s={s}");
+            Ok(())
+        });
+    }
+}

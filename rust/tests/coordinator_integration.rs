@@ -1,0 +1,128 @@
+//! Coordinator integration: the distributed Algorithm-2 cluster over
+//! the real PJRT worker path, plus failure-injection behaviours.
+
+use gcod::codes::{GradientCode, GraphCode};
+use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::data::LstsqData;
+use gcod::decode::{FixedDecoder, OptimalGraphDecoder};
+use gcod::prng::Rng;
+use std::time::Duration;
+
+fn artifacts_dir() -> String {
+    concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").to_string()
+}
+
+/// Full PJRT worker path: m=24 threads, each with its own PJRT client
+/// executing the qs worker artifact; optimal decoding at the leader.
+#[test]
+fn pjrt_cluster_converges_with_stragglers() {
+    let mut rng = Rng::new(0);
+    let code = GraphCode::random_regular(16, 3, &mut rng); // m = 24
+    let data = LstsqData::generate(128, 32, 16, 0.5, &mut rng);
+    let p = 0.2;
+    let cfg = ClusterConfig {
+        wait_fraction: 1.0 - p,
+        backend: ComputeBackend::Pjrt {
+            artifacts_dir: artifacts_dir(),
+            artifact: "worker_grad_qs_2x8x32".to_string(),
+        },
+        injection: StragglerInjection::Random {
+            p,
+            delay: Duration::from_millis(40),
+            seed: 3,
+        },
+        step_size: 0.06,
+        iters: 25,
+        max_duration: None,
+    };
+    let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+    cluster.wait_ready(Duration::from_secs(300)).unwrap();
+    let dec = OptimalGraphDecoder::new(&code.graph);
+    let report = cluster
+        .run(&cfg, &dec, &vec![0.0; 32], |t| data.dist_to_opt(t))
+        .unwrap();
+    cluster.shutdown();
+    let e0 = data.dist_to_opt(&vec![0.0; 32]);
+    assert!(
+        report.final_progress < e0 * 0.05,
+        "no convergence: {e0} -> {}",
+        report.final_progress
+    );
+    // waitany semantics: exactly m - ceil(m(1-p)) stragglers per iter
+    let expect = 24 - ((24.0 * (1.0 - p)).ceil() as usize);
+    assert!(report.iters.iter().all(|s| s.stragglers == expect));
+}
+
+/// The time-budget cutoff (Figure 4b's "error after 60 seconds") stops
+/// the run early.
+#[test]
+fn cluster_respects_time_budget() {
+    let mut rng = Rng::new(1);
+    let code = GraphCode::random_regular(8, 3, &mut rng);
+    let data = LstsqData::generate(32, 6, 8, 0.2, &mut rng);
+    let cfg = ClusterConfig {
+        wait_fraction: 1.0,
+        backend: ComputeBackend::Native,
+        injection: StragglerInjection::Random {
+            p: 0.5,
+            delay: Duration::from_millis(50),
+            seed: 2,
+        },
+        step_size: 0.05,
+        iters: 100_000,
+        max_duration: Some(Duration::from_millis(400)),
+    };
+    let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+    cluster.wait_ready(Duration::from_secs(30)).unwrap();
+    let dec = OptimalGraphDecoder::new(&code.graph);
+    let t0 = std::time::Instant::now();
+    let report = cluster
+        .run(&cfg, &dec, &vec![0.0; 6], |t| data.dist_to_opt(t))
+        .unwrap();
+    cluster.shutdown();
+    assert!(t0.elapsed() < Duration::from_secs(10));
+    assert!(report.iters.len() < 100_000);
+    assert!(!report.iters.is_empty());
+}
+
+/// Stagnant injection: the same machines straggle across consecutive
+/// iterations (the §VIII cluster behaviour), unlike Random.
+#[test]
+fn stagnant_injection_is_sticky_across_iters() {
+    let mut rng = Rng::new(2);
+    let code = GraphCode::random_regular(8, 3, &mut rng); // m = 12
+    let data = LstsqData::generate(32, 6, 8, 0.2, &mut rng);
+    let p = 0.3;
+    let cfg = ClusterConfig {
+        wait_fraction: 1.0 - p,
+        backend: ComputeBackend::Native,
+        injection: StragglerInjection::Stagnant {
+            p,
+            churn: 0.02,
+            delay: Duration::from_millis(60),
+            seed: 5,
+        },
+        step_size: 0.04,
+        iters: 12,
+        max_duration: None,
+    };
+    let mut cluster = Cluster::spawn(code.assignment(), &data, &cfg).unwrap();
+    cluster.wait_ready(Duration::from_secs(30)).unwrap();
+    // fixed decoding here: exercises the non-optimal leader path too
+    let dec = FixedDecoder::new(code.assignment(), p);
+    let report = cluster
+        .run(&cfg, &dec, &vec![0.0; 6], |t| data.dist_to_opt(t))
+        .unwrap();
+    cluster.shutdown();
+    // stickiness: consecutive straggler masks overlap far more than iid
+    // Bernoulli sets would (mean Jaccard of iid 3-of-12 subsets ~ 0.14)
+    let masks: Vec<&Vec<bool>> = report.iters.iter().map(|s| &s.straggler_mask).collect();
+    let mut jac_sum = 0.0;
+    for w in masks.windows(2) {
+        let inter = w[0].iter().zip(w[1].iter()).filter(|(a, b)| **a && **b).count() as f64;
+        let union = w[0].iter().zip(w[1].iter()).filter(|(a, b)| **a || **b).count() as f64;
+        jac_sum += if union == 0.0 { 1.0 } else { inter / union };
+    }
+    let mean_jaccard = jac_sum / (masks.len() - 1) as f64;
+    assert!(mean_jaccard > 0.35, "stagnant not sticky: mean jaccard {mean_jaccard}");
+}

@@ -1,0 +1,209 @@
+//! Property tests (testing:: harness) on the paper's invariants.
+
+use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
+use gcod::codes::{GradientCode, GraphCode};
+use gcod::decode::{Decoder, GenericOptimalDecoder, OptimalGraphDecoder};
+use gcod::graphs::components::{analyze_components, optimal_alpha};
+use gcod::graphs::random_regular_graph;
+use gcod::linalg::{dist2_sq, dist_to_ones_sq};
+use gcod::prop_assert;
+use gcod::testing::check;
+
+/// Eq. (4): on every surviving edge, alpha*_u + alpha*_v = 2 — unless
+/// the component is a single edge-less vertex (alpha 0).
+#[test]
+fn prop_eq4_on_surviving_edges() {
+    check("eq4", 60, |g| {
+        let n = g.size(4, 24);
+        let d = *g.choice(&[2usize, 3, 4]);
+        let n = if n * d % 2 == 1 { n + 1 } else { n };
+        let graph = random_regular_graph(n, d, g.rng);
+        let p = g.f64_in(0.0, 0.6);
+        let alive: Vec<bool> = (0..graph.m()).map(|_| !g.rng.bernoulli(p)).collect();
+        let alpha = optimal_alpha(&graph, &alive);
+        for (e, &(u, v)) in graph.edges.iter().enumerate() {
+            if alive[e] {
+                prop_assert!(
+                    (alpha[u] + alpha[v] - 2.0).abs() < 1e-9,
+                    "edge {e}=({u},{v}): {} + {} != 2",
+                    alpha[u],
+                    alpha[v]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The graph decoder's w reproduces alpha exactly (A w = alpha) and its
+/// alpha agrees with the LSQR characterization (Eq. 9) on every random
+/// graph and straggler pattern.
+#[test]
+fn prop_graph_decoder_is_optimal() {
+    check("graph-decoder-optimal", 40, |g| {
+        let half = g.size(3, 12);
+        let graph = random_regular_graph(2 * half, 3, g.rng);
+        let code = GraphCode::new("t", graph);
+        let p = g.f64_in(0.0, 0.7);
+        let mask: Vec<bool> = (0..code.n_machines()).map(|_| g.rng.bernoulli(p)).collect();
+        let gd = OptimalGraphDecoder::new(&code.graph).decode(&mask);
+        let aw = code.assignment().mul_vec(&gd.w);
+        prop_assert!(dist2_sq(&aw, &gd.alpha) < 1e-14, "A w != alpha");
+        let ld = GenericOptimalDecoder::new(code.assignment()).decode(&mask);
+        prop_assert!(
+            dist2_sq(&gd.alpha, &ld.alpha) < 1e-9,
+            "graph vs lsqr alpha mismatch: {}",
+            dist2_sq(&gd.alpha, &ld.alpha)
+        );
+        // optimality within the machine's w-space: error no worse than lsqr
+        prop_assert!(
+            gd.error_sq() <= ld.error_sq() + 1e-9,
+            "{} > {}",
+            gd.error_sq(),
+            ld.error_sq()
+        );
+        Ok(())
+    });
+}
+
+/// Stragglers never get weight; all-straggle decodes to alpha = 0.
+#[test]
+fn prop_straggler_weights_zero() {
+    check("straggler-weights-zero", 40, |g| {
+        let specs = [
+            SchemeSpec::GraphRandomRegular { n: 10, d: 3 },
+            SchemeSpec::Frc { n: 12, m: 12, d: 4 },
+            SchemeSpec::ExpanderAdj { n: 12, d: 3 },
+            SchemeSpec::Rbgc { n: 12, m: 12, d: 3 },
+        ];
+        let spec = g.choice(&specs).clone();
+        let s = build(&spec, g.rng);
+        let dspec = *g.choice(&[DecoderSpec::Optimal, DecoderSpec::Fixed, DecoderSpec::Ignore]);
+        let dec = make_decoder(&s, dspec, 0.25);
+        let p = g.f64_in(0.0, 1.0);
+        let mask: Vec<bool> = (0..s.n_machines()).map(|_| g.rng.bernoulli(p)).collect();
+        let d = dec.decode(&mask);
+        for j in 0..s.n_machines() {
+            if mask[j] {
+                prop_assert!(d.w[j] == 0.0, "straggler {j} got weight {}", d.w[j]);
+            }
+        }
+        let all = dec.decode(&vec![true; s.n_machines()]);
+        prop_assert!(
+            all.alpha.iter().all(|&a| a.abs() < 1e-12),
+            "all-straggle alpha nonzero"
+        );
+        Ok(())
+    });
+}
+
+/// Component analysis is a partition, and the alpha error decomposes
+/// exactly as the sum of per-component bipartite imbalances
+/// (Section III observations 1-3).
+#[test]
+fn prop_component_error_decomposition() {
+    check("component-decomposition", 50, |g| {
+        let half = g.size(3, 14);
+        let graph = random_regular_graph(2 * half, 4, g.rng);
+        let p = g.f64_in(0.1, 0.8);
+        let alive: Vec<bool> = (0..graph.m()).map(|_| !g.rng.bernoulli(p)).collect();
+        let analysis = analyze_components(&graph, &alive);
+        // partition check
+        let mut seen = vec![false; graph.n];
+        for c in &analysis.components {
+            for &v in &c.vertices {
+                prop_assert!(!seen[v], "vertex {v} in two components");
+                seen[v] = true;
+            }
+        }
+        prop_assert!(seen.iter().all(|&s| s), "missing vertex");
+        // error decomposition
+        let alpha = optimal_alpha(&graph, &alive);
+        let total = dist_to_ones_sq(&alpha);
+        let mut sum = 0.0;
+        for c in &analysis.components {
+            match &c.sides {
+                None => {}
+                Some((l, r)) => {
+                    let (l, r) = (l.len() as f64, r.len() as f64);
+                    // each side deviates by (l-r)/(l+r) in opposite signs
+                    let imb = (l - r) / (l + r);
+                    sum += (l + r) * imb * imb;
+                }
+            }
+        }
+        prop_assert!((total - sum).abs() < 1e-9, "decomposition {total} vs {sum}");
+        Ok(())
+    });
+}
+
+/// Spectral sanity on random regular graphs: estimated lambda_2 is below
+/// d and above the Alon-Boppana-ish floor, and the assignment matrix
+/// identity sigma_2^2 = 2d - lambda holds (Corollary V.2's proof step).
+#[test]
+fn prop_spectral_identities() {
+    check("spectral-identities", 10, |g| {
+        let half = g.size(6, 16);
+        let d = *g.choice(&[3usize, 4]);
+        let graph = random_regular_graph(2 * half, d, g.rng);
+        let l2 = gcod::graphs::spectral::lambda2(&graph, 3000, g.rng);
+        prop_assert!(l2 < d as f64 - 1e-6, "lambda2 {l2} >= d");
+        prop_assert!(l2 > -(d as f64) - 1e-9, "lambda2 {l2} < -d");
+        Ok(())
+    });
+}
+
+/// LSQR matches the dense Cholesky least-squares solution on random
+/// well-conditioned systems.
+#[test]
+fn prop_lsqr_matches_cholesky() {
+    check("lsqr-vs-cholesky", 30, |g| {
+        let m = g.size(3, 10);
+        let n = g.size(2, m.min(8));
+        let mut a = gcod::linalg::Mat::zeros(m, n);
+        for v in a.data.iter_mut() {
+            *v = g.rng.gaussian();
+        }
+        // make it well-conditioned: add identity-ish structure
+        for i in 0..n.min(m) {
+            a[(i, i)] += 3.0;
+        }
+        let b: Vec<f64> = (0..m).map(|_| g.rng.gaussian()).collect();
+        let exact = gcod::linalg::chol::lstsq_normal(&a, &b, 0.0)
+            .map_err(|e| format!("chol: {e}"))?;
+        let got = gcod::sparse::lsqr(&a, &b, 1e-13, 500);
+        prop_assert!(
+            dist2_sq(&got.x, &exact) < 1e-8,
+            "lsqr {:?} vs chol {:?}",
+            got.x,
+            exact
+        );
+        Ok(())
+    });
+}
+
+/// Fixed decoding is unbiased for every regular scheme: empirical
+/// E[alpha] = 1 within Monte-Carlo tolerance.
+#[test]
+fn prop_fixed_decoder_unbiased() {
+    check("fixed-unbiased", 6, |g| {
+        let half = g.size(5, 10);
+        let n = 2 * half;
+        let scheme = build(&SchemeSpec::GraphRandomRegular { n, d: 4 }, g.rng);
+        let p = g.f64_in(0.05, 0.4);
+        let dec = make_decoder(&scheme, DecoderSpec::Fixed, p);
+        let trials = 6000;
+        let mut mean = vec![0.0; n];
+        for _ in 0..trials {
+            let mask: Vec<bool> = (0..scheme.n_machines()).map(|_| g.rng.bernoulli(p)).collect();
+            let d = dec.decode(&mask);
+            for i in 0..n {
+                mean[i] += d.alpha[i] / trials as f64;
+            }
+        }
+        for (i, &m) in mean.iter().enumerate() {
+            prop_assert!((m - 1.0).abs() < 0.08, "E[alpha_{i}] = {m} at p={p}");
+        }
+        Ok(())
+    });
+}

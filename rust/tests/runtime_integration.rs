@@ -1,0 +1,220 @@
+//! Runtime integration: execute the real AOT artifacts and pin their
+//! numerics against the pure-rust oracles. Requires `make artifacts`.
+
+use gcod::data::LstsqData;
+use gcod::prng::Rng;
+use gcod::runtime::{Runtime, Tensor};
+
+fn runtime() -> Runtime {
+    Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+        .expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_covers_required_artifacts() {
+    let rt = runtime();
+    for name in [
+        "block_grad_qs_16x8x32",
+        "decode_combine_qs_16x32",
+        "worker_grad_qs_2x8x32",
+        "lstsq_loss_qs_16x8x32",
+        "block_grad_fig5_2184x3x200",
+        "decode_combine_fig5_2184x200",
+        "worker_grad_fig4_2x375x2000",
+        "tfm_block_grad",
+        "tfm_block_grad_all",
+        "tfm_eval_loss",
+    ] {
+        assert!(rt.manifest.artifact(name).is_some(), "missing artifact {name}");
+    }
+}
+
+/// The Pallas block_grad artifact agrees with the rust oracle.
+#[test]
+fn block_grad_artifact_matches_rust_oracle() {
+    let rt = runtime();
+    let mut rng = Rng::new(0);
+    let data = LstsqData::generate(128, 32, 16, 0.5, &mut rng);
+    let theta = rng.gaussian_vec(32, 1.0);
+    let want = data.block_grads(&theta);
+
+    let (xb, yb) = data.to_f32_buffers();
+    let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+    let out = rt
+        .run(
+            "block_grad_qs_16x8x32",
+            &[
+                Tensor::f32(&[32], theta32),
+                Tensor::f32(&[16, 8, 32], xb),
+                Tensor::f32(&[16, 8], yb),
+            ],
+        )
+        .unwrap();
+    let g = out[0].as_f32().unwrap();
+    assert_eq!(out[0].shape(), &[16, 32]);
+    let mut max_err = 0.0f64;
+    for i in 0..16 {
+        for c in 0..32 {
+            max_err = max_err.max((g[i * 32 + c] as f64 - want[(i, c)]).abs());
+        }
+    }
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+/// decode_combine artifact == G^T alpha in rust.
+#[test]
+fn decode_combine_artifact_matches_rust() {
+    let rt = runtime();
+    let mut rng = Rng::new(1);
+    let g: Vec<f32> = (0..16 * 32).map(|_| rng.gaussian() as f32).collect();
+    let w: Vec<f32> = (0..16).map(|_| rng.gaussian() as f32).collect();
+    let out = rt
+        .run(
+            "decode_combine_qs_16x32",
+            &[Tensor::f32(&[16, 32], g.clone()), Tensor::f32(&[16], w.clone())],
+        )
+        .unwrap();
+    let u = out[0].as_f32().unwrap();
+    for c in 0..32 {
+        let want: f32 = (0..16).map(|i| g[i * 32 + c] * w[i]).sum();
+        assert!((u[c] - want).abs() < 1e-3, "{} vs {}", u[c], want);
+    }
+}
+
+/// worker artifact (2 blocks) slices consistently with the full one.
+#[test]
+fn worker_grad_artifact_is_block_grad_slice() {
+    let rt = runtime();
+    let mut rng = Rng::new(2);
+    let data = LstsqData::generate(128, 32, 16, 0.5, &mut rng);
+    let theta = rng.gaussian_vec(32, 1.0);
+    let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+    let (mx, my) = data.machine_f32_buffers(&[3, 11]);
+    let out = rt
+        .run(
+            "worker_grad_qs_2x8x32",
+            &[
+                Tensor::f32(&[32], theta32),
+                Tensor::f32(&[2, 8, 32], mx),
+                Tensor::f32(&[2, 8], my),
+            ],
+        )
+        .unwrap();
+    let g = out[0].as_f32().unwrap();
+    let want = data.block_grads(&theta);
+    for (slot, blk) in [(0usize, 3usize), (1, 11)] {
+        for c in 0..32 {
+            assert!(
+                (g[slot * 32 + c] as f64 - want[(blk, c)]).abs() < 1e-3,
+                "block {blk} col {c}"
+            );
+        }
+    }
+}
+
+/// lstsq_loss artifact equals |X theta - y|^2.
+#[test]
+fn loss_artifact_matches() {
+    let rt = runtime();
+    let mut rng = Rng::new(3);
+    let data = LstsqData::generate(128, 32, 16, 0.5, &mut rng);
+    let theta = rng.gaussian_vec(32, 1.0);
+    let want = data.loss(&theta);
+    let (xb, yb) = data.to_f32_buffers();
+    let theta32: Vec<f32> = theta.iter().map(|&v| v as f32).collect();
+    let out = rt
+        .run(
+            "lstsq_loss_qs_16x8x32",
+            &[
+                Tensor::f32(&[32], theta32),
+                Tensor::f32(&[16, 8, 32], xb),
+                Tensor::f32(&[16, 8], yb),
+            ],
+        )
+        .unwrap();
+    let got = out[0].as_f32().unwrap()[0] as f64;
+    assert!((got - want).abs() / want < 1e-4, "{got} vs {want}");
+}
+
+/// PJRT-backed coded GD (the full L1+L2+L3 request path) converges and
+/// with p=0 matches batch GD run natively.
+#[test]
+fn pjrt_gcod_matches_native_when_exact() {
+    use gcod::codes::GraphCode;
+    use gcod::decode::OptimalGraphDecoder;
+    use gcod::gd::pjrt::PjrtGcod;
+    use gcod::gd::{SimulatedGcod, StepSize};
+    use gcod::straggler::BernoulliStragglers;
+
+    let rt = runtime();
+    let mut rng = Rng::new(4);
+    let code = GraphCode::random_regular(16, 3, &mut rng);
+    let data = LstsqData::generate(128, 32, 16, 0.5, &mut rng);
+    let dec = OptimalGraphDecoder::new(&code.graph);
+
+    let mut s1 = BernoulliStragglers::new(0.0, 9);
+    let mut pjrt_engine = PjrtGcod {
+        rt: &rt,
+        decoder: &dec,
+        stragglers: &mut s1,
+        m: 24,
+        step: StepSize::Const(0.08),
+        rho: None,
+    };
+    let h_pjrt = pjrt_engine.run(&data, &vec![0.0; 32], 15).unwrap();
+
+    let mut s2 = BernoulliStragglers::new(0.0, 9);
+    let mut native = SimulatedGcod {
+        decoder: &dec,
+        stragglers: &mut s2,
+        step: StepSize::Const(0.08),
+        rho: None,
+        m: 24,
+        alpha_scale: 1.0,
+    };
+    let mut src = &data;
+    let h_native = native.run(&mut src, &vec![0.0; 32], 15);
+
+    for (a, b) in h_pjrt.progress.iter().zip(&h_native.progress) {
+        assert!((a - b).abs() < 1e-2 * (1.0 + b), "pjrt {a} vs native {b}");
+    }
+}
+
+/// Transformer artifacts: one coded step decreases training loss given
+/// a large enough step, and grads have the right shape.
+#[test]
+fn transformer_artifact_grad_step() {
+    let rt = runtime();
+    let tfm = rt.manifest.transformer.clone().expect("transformer meta");
+    let mut rng = Rng::new(5);
+    let corpus = gcod::data::TokenCorpus::generate(50_000, tfm.vocab, &mut rng);
+    let tokens = corpus.blocks(tfm.n_blocks, tfm.batch, tfm.seq_len + 1, &mut rng);
+    let mut params = rt.read_transformer_init().unwrap();
+    assert_eq!(params.len(), tfm.n_params);
+
+    let exe = rt.load("tfm_block_grad_all").unwrap();
+    let run_once = |params: &Vec<f32>| {
+        let out = exe
+            .run(&[
+                Tensor::f32(&[tfm.n_params], params.clone()),
+                Tensor::i32(&[tfm.n_blocks, tfm.batch, tfm.seq_len + 1], tokens.clone()),
+            ])
+            .unwrap();
+        let grads = out[0].as_f32().unwrap().to_vec();
+        let losses = out[1].as_f32().unwrap().to_vec();
+        (grads, losses)
+    };
+    let (grads, losses) = run_once(&params);
+    assert_eq!(grads.len(), tfm.n_blocks * tfm.n_params);
+    assert_eq!(losses.len(), tfm.n_blocks);
+    let loss0: f64 = losses.iter().map(|&l| l as f64).sum();
+    // full-gradient step (all alpha = 1)
+    for i in 0..tfm.n_blocks {
+        for c in 0..tfm.n_params {
+            params[c] -= 1.0 * grads[i * tfm.n_params + c];
+        }
+    }
+    let (_, losses1) = run_once(&params);
+    let loss1: f64 = losses1.iter().map(|&l| l as f64).sum();
+    assert!(loss1 < loss0, "loss did not decrease: {loss0} -> {loss1}");
+}
