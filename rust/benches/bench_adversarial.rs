@@ -4,17 +4,23 @@
 //! (group kill), and — on small m — every scheme with the generic
 //! greedy attack; compare against the spectral upper bound and the p/2
 //! lower bound. Also verifies the error never exceeds Cor. V.2.
+//!
+//! The greedy search evaluates its per-step candidates as parallel
+//! trials on the sweep::TrialEngine (--threads N, default all cores);
+//! the selected attack mask is thread-count-independent.
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
 use gcod::gd::analysis::theory;
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
-use gcod::straggler::{frc_group_attack, graph_isolation_attack, greedy_decode_attack};
+use gcod::straggler::{frc_group_attack, graph_isolation_attack, greedy_decode_attack_on};
+use gcod::sweep::TrialEngine;
 
 fn main() {
     let args = BenchArgs::from_env();
     let include_lps = !args.quick();
+    let engine = TrialEngine::new(args.threads(), 0xADA);
 
     println!("== adversarial error |alpha*-1|^2/n vs theory ==");
     let mut rng = Rng::new(9);
@@ -42,7 +48,12 @@ fn main() {
 
         let bb = (p * bibd.n_machines() as f64).floor() as usize;
         let bdec = make_decoder(&bibd, DecoderSpec::Optimal, p);
-        let bmask = greedy_decode_attack(bdec.as_ref(), &bibd.a, bb);
+        let bmask = greedy_decode_attack_on(
+            &engine,
+            |_chunk| make_decoder(&bibd, DecoderSpec::Optimal, p),
+            &bibd.a,
+            bb,
+        );
         let berr = bdec.decode(&bmask).error_sq() / bibd.n_blocks() as f64;
 
         t.row(vec![

@@ -10,14 +10,18 @@
 //! p^d/(1-p^d), which the FRC achieves exactly.
 //!
 //! Flags: --runs N (default 50, as the paper), --reps R (error bars,
-//! default 5; 2 under --quick), --regime 1|2|both.
+//! default 5; 2 under --quick), --regime 1|2|both, --threads N.
+//!
+//! The Monte-Carlo draws run on the sweep::TrialEngine: per-trial PRNG
+//! substreams + ordered reduction, so the numbers are identical for any
+//! --threads value.
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
-use gcod::gd::analysis::{decoding_stats, theory};
+use gcod::gd::analysis::theory;
 use gcod::metrics::{sci, Stats, Table};
 use gcod::prng::Rng;
-use gcod::straggler::BernoulliStragglers;
+use gcod::sweep::{bernoulli_masks, decoding_stats_par, TrialEngine};
 
 struct Arm {
     label: &'static str,
@@ -25,8 +29,10 @@ struct Arm {
     decoder: DecoderSpec,
 }
 
-fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize) {
-    println!("\n== Figure 3 {regime}: E|alpha_bar-1|^2/n over p ({runs} runs x {reps} reps) ==");
+fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize, threads: usize) {
+    println!(
+        "\n== Figure 3 {regime}: E|alpha_bar-1|^2/n over p ({runs} runs x {reps} reps, {threads} threads) =="
+    );
     let mut err_table = Table::new(&{
         let mut h = vec!["p"];
         h.extend(arms.iter().map(|a| a.label));
@@ -48,14 +54,13 @@ fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize) {
             for rep in 0..reps {
                 let mut rng = Rng::new(1000 + rep as u64);
                 let scheme = build(&arm.scheme, &mut rng);
-                let dec = make_decoder(&scheme, arm.decoder, p);
-                let mut strag =
-                    BernoulliStragglers::new(p, 77 + rep as u64 * 13 + (p * 1000.0) as u64);
-                let s = decoding_stats(
-                    dec.as_ref(),
-                    &mut strag,
-                    scheme.n_machines(),
-                    scheme.n_blocks(),
+                let m = scheme.n_machines();
+                let engine =
+                    TrialEngine::new(threads, 77 + rep as u64 * 13 + (p * 1000.0) as u64);
+                let s = decoding_stats_par(
+                    &engine,
+                    |_chunk| make_decoder(&scheme, arm.decoder, p),
+                    bernoulli_masks(m, p),
                     runs,
                     &mut rng,
                 );
@@ -81,6 +86,7 @@ fn main() {
     let runs = args.usize_or("--runs", 50);
     let reps = if args.quick() { 2 } else { args.usize_or("--reps", 5) };
     let regime = args.str_or("--regime", "both");
+    let threads = args.threads();
 
     if regime == "1" || regime == "both" {
         let arms = [
@@ -105,7 +111,7 @@ fn main() {
                 decoder: DecoderSpec::Optimal,
             },
         ];
-        sweep("regime 1 (m=24, d=3)", &arms, 3.0, runs, reps);
+        sweep("regime 1 (m=24, d=3)", &arms, 3.0, runs, reps, threads);
     }
     if regime == "2" || regime == "both" {
         let runs2 = if args.quick() { 20 } else { runs };
@@ -131,7 +137,7 @@ fn main() {
                 decoder: DecoderSpec::Optimal,
             },
         ];
-        sweep("regime 2 (m=6552, d=6, LPS(5,13))", &arms, 6.0, runs2, reps.min(3));
+        sweep("regime 2 (m=6552, d=6, LPS(5,13))", &arms, 6.0, runs2, reps.min(3), threads);
     }
     println!("\nexpected shape (paper Fig. 3): optimal tracks the p^d/(1-p^d)");
     println!("floor at small p; fixed ~ p/(d(1-p)); expander[6] worst.");

@@ -25,6 +25,10 @@ fn main() {
     let runs = if args.quick() { 1 } else { args.usize_or("--runs", 2) };
     let budget = Duration::from_millis(args.usize_or("--budget-ms", 4000) as u64);
     let pjrt = args.has("--pjrt");
+    if pjrt && !cfg!(feature = "pjrt") {
+        eprintln!("--pjrt requires building with --features pjrt; falling back to native");
+    }
+    let pjrt = pjrt && cfg!(feature = "pjrt");
     let k = if pjrt { 2000 } else { args.usize_or("--dim", 500) };
     let n_points = 6000;
 
@@ -36,14 +40,14 @@ fn main() {
     println!("m=24 workers, backend={}", if pjrt { "pjrt" } else { "native" });
 
     let backend = || {
+        #[cfg(feature = "pjrt")]
         if pjrt {
-            ComputeBackend::Pjrt {
+            return ComputeBackend::Pjrt {
                 artifacts_dir: "artifacts".into(),
                 artifact: format!("worker_grad_fig4_2x{}x{}", data.b, k),
-            }
-        } else {
-            ComputeBackend::Native
+            };
         }
+        ComputeBackend::Native
     };
     let gamma = 2e-5 * (2000.0 / k as f64); // scale with 1/L ~ k/N
 

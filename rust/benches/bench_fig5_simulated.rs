@@ -8,8 +8,13 @@
 //! Schemes: A2 optimal, A2 fixed, expander[6] fixed, FRC optimal,
 //! uncoded (ignore stragglers, 6x iterations per Remark VIII.1).
 //!
+//! The repetition axis (independent GD runs per arm, and the step-size
+//! grid search) fans across the sweep::TrialEngine — each engine trial
+//! is one full trajectory with its own deterministic seed, so results
+//! are identical for any --threads value.
+//!
 //! Flags: --runs (default 5; paper uses 20 — pass --runs 20 for the
-//! full error bars), --iters (default 50), --quick (runs=2).
+//! full error bars), --iters (default 50), --threads N, --quick (runs=2).
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
@@ -18,6 +23,7 @@ use gcod::gd::{SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Stats, Table};
 use gcod::prng::Rng;
 use gcod::straggler::BernoulliStragglers;
+use gcod::sweep::TrialEngine;
 
 const N: usize = 6552;
 const K: usize = 200;
@@ -33,22 +39,21 @@ struct Arm {
     /// this is a *constant* step gamma = gamma0 * 1.05^c scaled to the
     /// workload's curvature (our X scaling differs from the paper's
     /// cluster, so absolute c values are not comparable to Table IV)
-    step_c: std::cell::Cell<u32>,
+    step_c: u32,
 }
 
 fn arms() -> Vec<Arm> {
-    let c = || std::cell::Cell::new(0);
     vec![
         Arm { label: "A2 optimal", scheme: SchemeSpec::GraphLps { p: 5, q: 13 },
-              decoder: DecoderSpec::Optimal, iter_mult: 1, step_c: c() },
+              decoder: DecoderSpec::Optimal, iter_mult: 1, step_c: 0 },
         Arm { label: "A2 fixed", scheme: SchemeSpec::GraphLps { p: 5, q: 13 },
-              decoder: DecoderSpec::Fixed, iter_mult: 1, step_c: c() },
+              decoder: DecoderSpec::Fixed, iter_mult: 1, step_c: 0 },
         Arm { label: "expander[6] fixed", scheme: SchemeSpec::ExpanderAdj { n: 6552, d: 6 },
-              decoder: DecoderSpec::Fixed, iter_mult: 1, step_c: c() },
+              decoder: DecoderSpec::Fixed, iter_mult: 1, step_c: 0 },
         Arm { label: "frc optimal", scheme: SchemeSpec::Frc { n: NBLOCKS, m: 6552, d: 6 },
-              decoder: DecoderSpec::Optimal, iter_mult: 1, step_c: c() },
+              decoder: DecoderSpec::Optimal, iter_mult: 1, step_c: 0 },
         Arm { label: "uncoded 6x", scheme: SchemeSpec::Uncoded { n: NBLOCKS },
-              decoder: DecoderSpec::Ignore, iter_mult: 6, step_c: c() },
+              decoder: DecoderSpec::Ignore, iter_mult: 6, step_c: 0 },
     ]
 }
 
@@ -58,21 +63,9 @@ fn gamma_at(c: u32) -> f64 {
     0.5 / l * 1.05f64.powi(c as i32)
 }
 
-/// Appendix-G-style tuning: short grid search at p=0.2 per arm.
-fn tune_step(arm: &Arm, data: &LstsqData) {
-    let mut best = (f64::INFINITY, 0u32);
-    for c in (0..=24).step_by(4) {
-        arm.step_c.set(c);
-        let prog = run_arm(arm, data, 0.2, 20, 1234);
-        let fin = *prog.last().unwrap();
-        if fin.is_finite() && fin < best.0 {
-            best = (fin, c);
-        }
-    }
-    arm.step_c.set(best.1);
-}
-
-fn run_arm(arm: &Arm, base: &LstsqData, p: f64, iters: usize, seed: u64) -> Vec<f64> {
+/// One full GD trajectory (self-contained per seed: rebuilds the scheme
+/// so it can run as an engine trial on any thread).
+fn run_arm(arm: &Arm, base: &LstsqData, gamma: f64, p: f64, iters: usize, seed: u64) -> Vec<f64> {
     let mut rng = Rng::new(seed);
     let scheme = build(&arm.scheme, &mut rng);
     // schemes disagree on block granularity: the graph scheme uses
@@ -88,9 +81,9 @@ fn run_arm(arm: &Arm, base: &LstsqData, p: f64, iters: usize, seed: u64) -> Vec<
     let mut strag = BernoulliStragglers::new(p, seed ^ 0xABCD);
     let rho = rng.permutation(scheme.n_blocks());
     let mut engine = SimulatedGcod {
-        decoder: dec.as_ref(),
+        decoder: &dec,
         stragglers: &mut strag,
-        step: StepSize::Const(gamma_at(arm.step_c.get())),
+        step: StepSize::Const(gamma),
         rho: Some(rho),
         m: scheme.n_machines(),
         alpha_scale: if arm.decoder == DecoderSpec::Ignore { 1.0 / (1.0 - p) } else { 1.0 },
@@ -99,10 +92,35 @@ fn run_arm(arm: &Arm, base: &LstsqData, p: f64, iters: usize, seed: u64) -> Vec<
     engine.run(&mut src, &vec![0.0; K], iters * arm.iter_mult).progress
 }
 
+/// Appendix-G-style tuning: grid search at p=0.2 per arm, all grid
+/// points evaluated as parallel engine trials.
+fn tune_step(engine: &TrialEngine, arm: &Arm, data: &LstsqData) -> u32 {
+    let grid: Vec<u32> = (0..=24).step_by(4).map(|c| c as u32).collect();
+    let finals = engine.run_map(
+        grid.len(),
+        |_chunk| (),
+        |_ctx, i, _rng| {
+            let prog = run_arm(arm, data, gamma_at(grid[i]), 0.2, 20, 1234);
+            *prog.last().unwrap()
+        },
+    );
+    let mut best = (f64::INFINITY, 0u32);
+    for (i, &fin) in finals.iter().enumerate() {
+        if fin.is_finite() && fin < best.0 {
+            best = (fin, grid[i]);
+        }
+    }
+    best.1
+}
+
 fn main() {
     let args = BenchArgs::from_env();
     let runs = if args.quick() { 2 } else { args.usize_or("--runs", 5) };
     let iters = args.usize_or("--iters", 50);
+    let threads = args.threads();
+    // one run per chunk: trajectories are heavyweight, so load-balance
+    // at run granularity
+    let engine = TrialEngine::new(threads, 0xF195).with_chunk(1);
 
     println!("generating regime-2 data: N={N}, k={K}, sigma=1, n={NBLOCKS} blocks...");
     let mut rng = Rng::new(0);
@@ -111,30 +129,35 @@ fn main() {
     println!("|theta_0 - theta*|^2 = {}", sci(e0));
 
     // tune step sizes per arm (Appendix G grid-search methodology)
-    let arm_list = arms();
-    for arm in &arm_list {
-        tune_step(arm, &data);
-        println!("tuned {}: c={} (gamma={:.2e})", arm.label, arm.step_c.get(), gamma_at(arm.step_c.get()));
+    let mut arm_list = arms();
+    for arm in &mut arm_list {
+        arm.step_c = tune_step(&engine, arm, &data);
+        println!("tuned {}: c={} (gamma={:.2e})", arm.label, arm.step_c, gamma_at(arm.step_c));
     }
+    let arm_list = arm_list;
 
     // ---- (a) convergence curves at p = 0.2 ----
-    println!("\n== Figure 5(a): convergence at p=0.2 ({runs} runs) ==");
+    println!("\n== Figure 5(a): convergence at p=0.2 ({runs} runs, {threads} threads) ==");
     let p = 0.2;
     let mut table = Table::new(&{
         let mut h = vec!["iter"];
-        let a = arms();
-        h.extend(a.iter().map(|x| x.label));
+        h.extend(arm_list.iter().map(|x| x.label));
         h
     });
     let mut curves: Vec<Vec<f64>> = Vec::new();
     for arm in &arm_list {
+        let gamma = gamma_at(arm.step_c);
+        let progs = engine.run_map(
+            runs,
+            |_chunk| (),
+            |_ctx, r, _rng| run_arm(arm, &data, gamma, p, iters, 500 + r as u64),
+        );
         let mut acc: Vec<Stats> = (0..=iters).map(|_| Stats::new()).collect();
-        for r in 0..runs {
-            let prog = run_arm(arm, &data, p, iters, 500 + r as u64);
+        for prog in &progs {
             // sample the curve at coded-iteration granularity
-            for i in 0..=iters {
+            for (i, a) in acc.iter_mut().enumerate() {
                 let idx = (i * arm.iter_mult).min(prog.len() - 1);
-                acc[i].push(prog[idx]);
+                a.push(prog[idx]);
             }
         }
         curves.push(acc.iter().map(|s| s.mean()).collect());
@@ -152,17 +175,23 @@ fn main() {
     println!("\n== Figure 5(b): |theta-theta*|^2 after {iters} iters ==");
     let mut t2 = Table::new(&{
         let mut h = vec!["p"];
-        let a = arms();
-        h.extend(a.iter().map(|x| x.label));
+        h.extend(arm_list.iter().map(|x| x.label));
         h
     });
     for &p in &P_GRID {
         let mut row = vec![format!("{p:.2}")];
         for arm in &arm_list {
+            let gamma = gamma_at(arm.step_c);
+            let finals = engine.run_map(
+                runs,
+                |_chunk| (),
+                |_ctx, r, _rng| {
+                    *run_arm(arm, &data, gamma, p, iters, 900 + r as u64).last().unwrap()
+                },
+            );
             let mut st = Stats::new();
-            for r in 0..runs {
-                let prog = run_arm(arm, &data, p, iters, 900 + r as u64);
-                st.push(*prog.last().unwrap());
+            for f in finals {
+                st.push(f);
             }
             row.push(format!("{}±{}", sci(st.mean()), sci(st.std())));
         }

@@ -9,17 +9,17 @@
 
 use gcod::bench_util::BenchArgs;
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
-use gcod::gd::analysis::{decoding_stats, theory};
+use gcod::gd::analysis::theory;
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
-use gcod::straggler::{
-    frc_group_attack, graph_isolation_attack, greedy_decode_attack, BernoulliStragglers,
-};
+use gcod::straggler::{frc_group_attack, graph_isolation_attack, greedy_decode_attack_on};
+use gcod::sweep::{bernoulli_masks, decoding_stats_par, TrialEngine};
 
 fn main() {
     let args = BenchArgs::from_env();
     let p = args.f64_or("--p", 0.2);
     let runs = if args.quick() { 400 } else { args.usize_or("--runs", 2000) };
+    let threads = args.threads();
 
     struct Row {
         label: &'static str,
@@ -54,16 +54,22 @@ fn main() {
                                    sci(p / (2.0 * (1.0 - p)))) },
     ];
 
-    println!("== Table I at p={p}, d~3, m=24 (measured vs theory) ==");
+    println!("== Table I at p={p}, d~3, m=24 (measured vs theory, {threads} threads) ==");
+    let engine = TrialEngine::new(threads, 5);
     let mut t = Table::new(&["scheme", "E err/n (measured)", "worst err/n (attack)", "theory"]);
     for row in rows {
         let mut rng = Rng::new(17);
         let scheme = build(&row.spec, &mut rng);
         let m = scheme.n_machines();
-        let n = scheme.n_blocks();
         let dec = make_decoder(&scheme, row.dec, p);
-        let stats = decoding_stats(
-            dec.as_ref(), &mut BernoulliStragglers::new(p, 5), m, n, runs, &mut rng);
+        let stats = decoding_stats_par(
+            &engine,
+            |_chunk| make_decoder(&scheme, row.dec, p),
+            bernoulli_masks(m, p),
+            runs,
+            &mut rng,
+        );
+        let n = scheme.n_blocks();
         // worst case: scheme-appropriate attack
         let budget = (p * m as f64).floor() as usize;
         let mask = if let Some(g) = &scheme.graph {
@@ -71,7 +77,12 @@ fn main() {
         } else if let Some(frc) = &scheme.frc {
             frc_group_attack(frc, budget)
         } else {
-            greedy_decode_attack(dec.as_ref(), &scheme.a, budget)
+            greedy_decode_attack_on(
+                &engine,
+                |_chunk| make_decoder(&scheme, row.dec, p),
+                &scheme.a,
+                budget,
+            )
         };
         // worst-case column uses alpha (normalized for fixed decoders by
         // their own calibration, matching the paper's alpha-bar)

@@ -125,10 +125,120 @@ impl BenchArgs {
     pub fn quick(&self) -> bool {
         self.has("--quick")
     }
+
+    /// `--threads N` with an all-cores default — the worker-count knob
+    /// every engine-backed bench shares.
+    pub fn threads(&self) -> usize {
+        self.usize_or(
+            "--threads",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
 }
 
 /// The straggler-fraction grid every paper figure sweeps.
 pub const P_GRID: [f64; 6] = [0.05, 0.10, 0.15, 0.20, 0.25, 0.30];
+
+// ---------------------------------------------------------------------
+// Machine-readable bench output (BENCH_*.json trajectories)
+// ---------------------------------------------------------------------
+
+/// One record in a bench JSON report.
+#[derive(Clone, Debug)]
+pub struct JsonRecord {
+    pub name: String,
+    /// mean wall time per unit of work, nanoseconds
+    pub mean_ns: f64,
+    /// mean_ns divided by the problem's edge/machine count (None when
+    /// the record has no natural per-edge normalization)
+    pub ns_per_edge: Option<f64>,
+    /// worker threads used (1 = serial)
+    pub threads: usize,
+    pub iters: u64,
+}
+
+/// Collects [`JsonRecord`]s and writes a `BENCH_*.json` file so bench
+/// trajectories can be diffed across commits. No serde in the offline
+/// build — the writer emits the fixed schema by hand.
+#[derive(Debug)]
+pub struct JsonReport {
+    bench: String,
+    records: Vec<JsonRecord>,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn json_f64(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        Self { bench: bench.to_string(), records: Vec::new() }
+    }
+
+    pub fn push(&mut self, rec: JsonRecord) {
+        self.records.push(rec);
+    }
+
+    /// Convenience: record a [`BenchResult`] directly.
+    pub fn push_result(&mut self, r: &BenchResult, edges: Option<usize>, threads: usize) {
+        let mean_ns = r.mean.as_nanos() as f64;
+        self.push(JsonRecord {
+            name: r.name.clone(),
+            mean_ns,
+            ns_per_edge: edges.map(|e| mean_ns / e.max(1) as f64),
+            threads,
+            iters: r.iters,
+        });
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
+        out.push_str("  \"schema\": 1,\n");
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.records.iter().enumerate() {
+            let per_edge = match r.ns_per_edge {
+                Some(v) => json_f64(v),
+                None => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"mean_ns\": {}, \"ns_per_edge\": {}, \"threads\": {}, \"iters\": {}}}{}\n",
+                json_escape(&r.name),
+                json_f64(r.mean_ns),
+                per_edge,
+                r.threads,
+                r.iters,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write to `path` (e.g. `BENCH_decode.json`).
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -159,5 +269,37 @@ mod tests {
         assert_eq!(a.f64_or("--p", 0.0), 0.2);
         assert!(a.quick());
         assert_eq!(a.usize_or("--runs", 50), 50);
+    }
+
+    #[test]
+    fn json_report_round_trip() {
+        let mut rep = JsonReport::new("bench_decode_perf");
+        rep.push(JsonRecord {
+            name: "graph-decode \"n=32768\"".into(),
+            mean_ns: 1234.5678,
+            ns_per_edge: Some(0.0125),
+            threads: 8,
+            iters: 100,
+        });
+        rep.push(JsonRecord {
+            name: "lsqr".into(),
+            mean_ns: 9.0,
+            ns_per_edge: None,
+            threads: 1,
+            iters: 3,
+        });
+        let s = rep.render();
+        assert!(s.contains("\"bench\": \"bench_decode_perf\""));
+        assert!(s.contains("\\\"n=32768\\\"")); // quotes escaped
+        assert!(s.contains("\"threads\": 8"));
+        assert!(s.contains("\"ns_per_edge\": null"));
+        // exactly one comma between the two records
+        assert_eq!(s.matches("},\n").count(), 1);
+        // writes to disk
+        let dir = std::env::temp_dir().join("gcod_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        rep.write(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), s);
     }
 }

@@ -194,7 +194,7 @@ pub fn make_decoder<'a>(scheme: &'a BuiltScheme, spec: DecoderSpec, p: f64) -> B
             if let Some(g) = &scheme.graph {
                 Box::new(OptimalGraphDecoder::new(g))
             } else if let Some(frc) = &scheme.frc {
-                Box::new(FrcOptimalDecoder { code: frc })
+                Box::new(FrcOptimalDecoder::new(frc))
             } else {
                 Box::new(GenericOptimalDecoder::new(&scheme.a))
             }

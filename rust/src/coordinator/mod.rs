@@ -18,9 +18,10 @@
 //! `Runtime` — exactly the per-rank process model of the MPI original.
 
 use crate::decode::Decoder;
+use crate::error::{Context, Error, Result};
+#[cfg(feature = "pjrt")]
 use crate::runtime::{Runtime, Tensor};
 use crate::sparse::Csc;
-use anyhow::{Context, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -31,6 +32,8 @@ use std::time::{Duration, Instant};
 pub enum ComputeBackend {
     /// Execute the AOT `worker_grad_*` artifact via PJRT (the real
     /// three-layer path). `artifact` must match (blocks, b, k).
+    /// Only available with the `pjrt` feature.
+    #[cfg(feature = "pjrt")]
     Pjrt { artifacts_dir: String, artifact: String },
     /// Pure-rust gradient (for very large m where per-thread PJRT
     /// clients are wasteful, and for differential testing).
@@ -203,11 +206,11 @@ impl Cluster {
         let t0 = Instant::now();
         while self.ready_workers.load(Ordering::SeqCst) < self.m {
             if t0.elapsed() > timeout {
-                anyhow::bail!(
+                return Err(Error::msg(format!(
                     "only {}/{} workers ready after {timeout:?}",
                     self.ready_workers.load(Ordering::SeqCst),
                     self.m
-                );
+                )));
             }
             std::thread::sleep(Duration::from_millis(5));
         }
@@ -309,6 +312,7 @@ fn worker_main(
     ready: Arc<AtomicUsize>,
 ) {
     // per-thread PJRT runtime (PjRtClient is not Send)
+    #[cfg(feature = "pjrt")]
     let pjrt: Option<(Runtime, String)> = match &backend {
         ComputeBackend::Pjrt { artifacts_dir, artifact } => {
             let rt = Runtime::open(artifacts_dir)
@@ -320,6 +324,8 @@ fn worker_main(
         }
         ComputeBackend::Native => None,
     };
+    #[cfg(not(feature = "pjrt"))]
+    let _ = &backend;
     ready.fetch_add(1, Ordering::SeqCst);
 
     loop {
@@ -342,6 +348,7 @@ fn worker_main(
                 if let Some(delay) = should_straggle(&injection, id, iter) {
                     std::thread::sleep(delay);
                 }
+                #[cfg(feature = "pjrt")]
                 let grad = match &pjrt {
                     Some((rt, artifact)) => {
                         let inputs = [
@@ -365,6 +372,8 @@ fn worker_main(
                     }
                     None => data.native_grad(&theta),
                 };
+                #[cfg(not(feature = "pjrt"))]
+                let grad = data.native_grad(&theta);
                 let _ = tx.send(GradMsg { worker: id, iter, grad });
             }
         }

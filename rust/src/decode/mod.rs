@@ -12,10 +12,24 @@
 //!   coefficients, Section VIII).
 //! * [`FrcOptimalDecoder`] — closed form for FRC group structure.
 //! * [`IgnoreStragglersDecoder`] — the uncoded baseline.
+//!
+//! ## Batched decoding ( §Perf)
+//!
+//! The hot entry point is [`Decoder::decode_into`], which writes into a
+//! caller-owned [`Decoding`] and allocates nothing after the first call:
+//! every decoder keeps its working set in interior-mutable scratch, and
+//! the Monte-Carlo [`crate::sweep::TrialEngine`] gives each worker its
+//! own decoder instance so trials never contend. [`Decoder::decode`] is
+//! a thin allocate-and-forward wrapper kept for one-shot callers.
+//! [`GenericOptimalDecoder`] additionally warm-starts LSQR from the
+//! previous trial's `w` (falling back to a cold start when the mask
+//! changed on more than [`GenericOptimalDecoder::restart_fraction`] of
+//! the machines), so consecutive similar patterns converge in a few
+//! Golub-Kahan steps instead of O(m) of them.
 
-use crate::codes::FrcCode;
+use crate::codes::{FrcCode, GradientCode};
 use crate::graphs::Graph;
-use crate::sparse::{lsqr, ColumnSubsetOp, Csc};
+use crate::sparse::{lsqr_into, Csc, Csr, LsqrScratch, MaskedColumnsOp};
 
 /// A decoded coefficient pair: per-machine weights w (zero on
 /// stragglers) and the induced per-block alpha = A w.
@@ -26,6 +40,21 @@ pub struct Decoding {
 }
 
 impl Decoding {
+    /// An empty output buffer for [`Decoder::decode_into`]; sized (and
+    /// thereafter reused without reallocating) by the first decode.
+    pub fn empty() -> Self {
+        Self { w: Vec::new(), alpha: Vec::new() }
+    }
+
+    /// Resize to (m machines, n blocks) and zero-fill. Keeps capacity,
+    /// so repeated resets on the same scheme never reallocate.
+    pub fn reset(&mut self, m: usize, n: usize) {
+        self.w.clear();
+        self.w.resize(m, 0.0);
+        self.alpha.clear();
+        self.alpha.resize(n, 0.0);
+    }
+
     /// The paper's decoding error |alpha - 1|_2^2.
     pub fn error_sq(&self) -> f64 {
         crate::linalg::dist_to_ones_sq(&self.alpha)
@@ -34,8 +63,30 @@ impl Decoding {
 
 /// `straggler[j] == true` means machine j's result never arrived.
 pub trait Decoder {
-    fn decode(&self, straggler: &[bool]) -> Decoding;
+    /// Allocation-free decode into a caller-owned buffer (the batched
+    /// hot path). `out` is fully overwritten; stale contents are fine.
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding);
+
+    /// Allocating convenience wrapper around [`Decoder::decode_into`].
+    fn decode(&self, straggler: &[bool]) -> Decoding {
+        let mut out = Decoding::empty();
+        self.decode_into(straggler, &mut out);
+        out
+    }
+
     fn name(&self) -> String;
+}
+
+impl<D: Decoder + ?Sized> Decoder for Box<D> {
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
+        (**self).decode_into(straggler, out)
+    }
+    fn decode(&self, straggler: &[bool]) -> Decoding {
+        (**self).decode(straggler)
+    }
+    fn name(&self) -> String {
+        (**self).name()
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -77,10 +128,11 @@ impl Decoder for OptimalGraphDecoder<'_> {
     /// values if bipartite, 0 if isolated); w* follows by leaf-up
     /// spanning-tree substitution, with one odd non-tree edge carrying
     /// the color imbalance in non-bipartite components.
-    fn decode(&self, straggler: &[bool]) -> Decoding {
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
         let g = self.g;
         let (n, m) = (g.n, g.m());
         assert_eq!(straggler.len(), m);
+        out.reset(m, n);
         let mut s = self.scratch.borrow_mut();
         s.order.clear();
         s.comp_of.clear();
@@ -90,8 +142,8 @@ impl Decoder for OptimalGraphDecoder<'_> {
         s.incident.resize(n, 0.0);
         let Scratch { order, comp_of, color, parent_edge, incident } = &mut *s;
 
-        let mut w = vec![0.0; m];
-        let mut alpha = vec![0.0; n];
+        let w = &mut out.w;
+        let alpha = &mut out.alpha;
 
         for root in 0..n {
             if comp_of[root] != usize::MAX {
@@ -173,7 +225,6 @@ impl Decoder for OptimalGraphDecoder<'_> {
                 "root constraint violated"
             );
         }
-        Decoding { w, alpha }
     }
 }
 
@@ -185,11 +236,35 @@ pub struct GenericOptimalDecoder<'a> {
     pub a: &'a Csc,
     pub atol: f64,
     pub max_iter: usize,
+    /// Warm-start guard: if more than this fraction of machines flipped
+    /// straggler state since the previous decode, restart LSQR cold
+    /// (the previous w is then a poor and potentially misleading guess).
+    pub restart_fraction: f64,
+    scratch: std::cell::RefCell<GenericScratch>,
+}
+
+#[derive(Default)]
+struct GenericScratch {
+    /// row-major mirror of `a`, built on first decode
+    csr: Option<Csr>,
+    /// all-ones RHS, kept resized to n
+    rhs: Vec<f64>,
+    /// previous trial's mask + solution for warm starting
+    prev_mask: Vec<bool>,
+    prev_w: Vec<f64>,
+    has_prev: bool,
+    lsqr: LsqrScratch,
 }
 
 impl<'a> GenericOptimalDecoder<'a> {
     pub fn new(a: &'a Csc) -> Self {
-        Self { a, atol: 1e-12, max_iter: 4 * (a.rows + a.cols) }
+        Self {
+            a,
+            atol: 1e-12,
+            max_iter: 4 * (a.rows + a.cols),
+            restart_fraction: 0.25,
+            scratch: std::cell::RefCell::new(GenericScratch::default()),
+        }
     }
 }
 
@@ -198,22 +273,52 @@ impl Decoder for GenericOptimalDecoder<'_> {
         "optimal-lsqr".to_string()
     }
 
-    fn decode(&self, straggler: &[bool]) -> Decoding {
-        let m = self.a.cols;
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
+        let (n, m) = (self.a.rows, self.a.cols);
         assert_eq!(straggler.len(), m);
-        let cols: Vec<usize> = (0..m).filter(|&j| !straggler[j]).collect();
-        let mut w = vec![0.0; m];
-        if cols.is_empty() {
-            return Decoding { w, alpha: vec![0.0; self.a.rows] };
+        out.reset(m, n);
+        let mut s = self.scratch.borrow_mut();
+        if s.csr.is_none() {
+            s.csr = Some(self.a.to_csr());
         }
-        let op = ColumnSubsetOp { a: self.a, cols: &cols };
-        let ones = vec![1.0; self.a.rows];
-        let res = lsqr(&op, &ones, self.atol, self.max_iter);
-        for (jj, &j) in cols.iter().enumerate() {
-            w[j] = res.x[jj];
+        if straggler.iter().all(|&d| d) {
+            // no survivors: w = 0, alpha = 0, and nothing to warm-start
+            // the next trial from
+            s.has_prev = false;
+            return;
         }
-        let alpha = self.a.mul_vec(&w);
-        Decoding { w, alpha }
+        let GenericScratch { csr, rhs, prev_mask, prev_w, has_prev, lsqr: ls } = &mut *s;
+
+        // warm start from the previous trial's w when the mask is close
+        // enough; newly-dead columns are zeroed (LSQR keeps them at
+        // exactly 0.0 through MaskedColumnsOp::apply_t)
+        let warm = *has_prev && prev_mask.len() == m && {
+            let flips = prev_mask.iter().zip(straggler).filter(|(a, b)| a != b).count();
+            flips as f64 <= self.restart_fraction * m as f64
+        };
+        if warm {
+            for j in 0..m {
+                if !straggler[j] {
+                    out.w[j] = prev_w[j];
+                }
+            }
+        }
+
+        rhs.clear();
+        rhs.resize(n, 1.0);
+        let op = MaskedColumnsOp {
+            csc: self.a,
+            csr: csr.as_ref().expect("csr built above"),
+            straggler,
+        };
+        lsqr_into(&op, rhs, self.atol, self.max_iter, &mut out.w, ls);
+        self.a.mul_vec_into(&out.w, &mut out.alpha);
+
+        prev_mask.clear();
+        prev_mask.extend_from_slice(straggler);
+        prev_w.clear();
+        prev_w.extend_from_slice(&out.w);
+        *has_prev = true;
     }
 }
 
@@ -240,11 +345,16 @@ impl Decoder for FixedDecoder<'_> {
         "fixed".to_string()
     }
 
-    fn decode(&self, straggler: &[bool]) -> Decoding {
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
+        assert_eq!(straggler.len(), self.a.cols);
+        out.reset(self.a.cols, self.a.rows);
         let coeff = 1.0 / (self.d * (1.0 - self.p));
-        let w: Vec<f64> = straggler.iter().map(|&s| if s { 0.0 } else { coeff }).collect();
-        let alpha = self.a.mul_vec(&w);
-        Decoding { w, alpha }
+        for (j, &s) in straggler.iter().enumerate() {
+            if !s {
+                out.w[j] = coeff;
+            }
+        }
+        self.a.mul_vec_into(&out.w, &mut out.alpha);
     }
 }
 
@@ -254,6 +364,14 @@ impl Decoder for FixedDecoder<'_> {
 
 pub struct FrcOptimalDecoder<'a> {
     pub code: &'a FrcCode,
+    /// per-group survivor counts, reused across decodes
+    scratch: std::cell::RefCell<Vec<usize>>,
+}
+
+impl<'a> FrcOptimalDecoder<'a> {
+    pub fn new(code: &'a FrcCode) -> Self {
+        Self { code, scratch: std::cell::RefCell::new(Vec::new()) }
+    }
 }
 
 impl Decoder for FrcOptimalDecoder<'_> {
@@ -261,9 +379,36 @@ impl Decoder for FrcOptimalDecoder<'_> {
         "optimal-frc".to_string()
     }
 
-    fn decode(&self, straggler: &[bool]) -> Decoding {
-        let (w, alpha) = self.code.optimal_decode(straggler);
-        Decoding { w, alpha }
+    /// Closed form (same math as [`FrcCode::optimal_decode`], without
+    /// the per-call survivor-list allocations): every group with k >= 1
+    /// surviving machines puts weight 1/k on each survivor (alpha = 1 on
+    /// its blocks); dead groups contribute alpha = 0.
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
+        let a = self.code.assignment();
+        let m = a.cols;
+        assert_eq!(straggler.len(), m);
+        out.reset(m, a.rows);
+        let groups = self.code.n_groups();
+        let mut cnt = self.scratch.borrow_mut();
+        cnt.clear();
+        cnt.resize(groups, 0);
+        for j in 0..m {
+            if !straggler[j] {
+                cnt[self.code.machine_group[j]] += 1;
+            }
+        }
+        for j in 0..m {
+            if !straggler[j] {
+                out.w[j] = 1.0 / cnt[self.code.machine_group[j]] as f64;
+            }
+        }
+        for g in 0..groups {
+            if cnt[g] > 0 {
+                for &blk in &self.code.group_blocks[g] {
+                    out.alpha[blk] = 1.0;
+                }
+            }
+        }
     }
 }
 
@@ -283,13 +428,15 @@ impl Decoder for IgnoreStragglersDecoder<'_> {
         "ignore-stragglers".to_string()
     }
 
-    fn decode(&self, straggler: &[bool]) -> Decoding {
-        let w: Vec<f64> = straggler
-            .iter()
-            .map(|&s| if s { 0.0 } else { self.weight })
-            .collect();
-        let alpha = self.a.mul_vec(&w);
-        Decoding { w, alpha }
+    fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {
+        assert_eq!(straggler.len(), self.a.cols);
+        out.reset(self.a.cols, self.a.rows);
+        for (j, &s) in straggler.iter().enumerate() {
+            if !s {
+                out.w[j] = self.weight;
+            }
+        }
+        self.a.mul_vec_into(&out.w, &mut out.alpha);
     }
 }
 
@@ -359,9 +506,24 @@ mod tests {
         let mut rng = Rng::new(4);
         for _ in 0..20 {
             let s = rng.bernoulli_mask(12, 0.4);
-            let fd = FrcOptimalDecoder { code: &code }.decode(&s);
+            let fd = FrcOptimalDecoder::new(&code).decode(&s);
             let ld = GenericOptimalDecoder::new(code.assignment()).decode(&s);
             assert!(dist2_sq(&fd.alpha, &ld.alpha) < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frc_decode_into_matches_closed_form() {
+        let code = FrcCode::new(16, 24, 3);
+        let mut rng = Rng::new(21);
+        let dec = FrcOptimalDecoder::new(&code);
+        let mut out = Decoding::empty();
+        for _ in 0..40 {
+            let s = rng.bernoulli_mask(24, 0.45);
+            dec.decode_into(&s, &mut out);
+            let (w, alpha) = code.optimal_decode(&s);
+            assert_eq!(out.w, w);
+            assert_eq!(out.alpha, alpha);
         }
     }
 
@@ -373,9 +535,10 @@ mod tests {
         let dec = FixedDecoder::new(code.assignment(), p);
         let mut mean = vec![0.0; 16];
         let trials = 20_000;
+        let mut d = Decoding::empty();
         for _ in 0..trials {
             let s = rng.bernoulli_mask(code.n_machines(), p);
-            let d = dec.decode(&s);
+            dec.decode_into(&s, &mut d);
             for i in 0..16 {
                 mean[i] += d.alpha[i];
             }
@@ -401,5 +564,52 @@ mod tests {
             .decode(&vec![false; 4]);
         // every block held twice with weight 1 -> alpha = 2
         assert!(d.alpha.iter().all(|&a| (a - 2.0).abs() < 1e-12));
+    }
+
+    /// Warm-started decodes must stay optimal: a long mask sequence on
+    /// one (stateful) decoder agrees with a cold decoder built fresh
+    /// per mask, to LSQR tolerance, and stragglers keep exactly zero
+    /// weight.
+    #[test]
+    fn warm_started_lsqr_stays_optimal() {
+        let mut rng = Rng::new(6);
+        let code = GraphCode::random_regular(14, 4, &mut rng);
+        let a = code.assignment();
+        let warm = GenericOptimalDecoder::new(a);
+        let mut out = Decoding::empty();
+        // small p so consecutive masks are close and the warm path runs
+        for trial in 0..40 {
+            let mask = rng.bernoulli_mask(a.cols, 0.12);
+            warm.decode_into(&mask, &mut out);
+            let cold = GenericOptimalDecoder::new(a).decode(&mask);
+            assert!(
+                dist2_sq(&out.alpha, &cold.alpha) < 1e-10,
+                "trial {trial}: warm vs cold alpha {:e}",
+                dist2_sq(&out.alpha, &cold.alpha)
+            );
+            for j in 0..a.cols {
+                if mask[j] {
+                    assert_eq!(out.w[j], 0.0, "trial {trial}: straggler {j} got weight");
+                }
+            }
+        }
+    }
+
+    /// Flipping (almost) the whole mask must trigger the cold restart
+    /// and still decode correctly.
+    #[test]
+    fn warm_start_restart_on_large_mask_change() {
+        let mut rng = Rng::new(7);
+        let code = GraphCode::random_regular(12, 3, &mut rng);
+        let a = code.assignment();
+        let dec = GenericOptimalDecoder::new(a);
+        let m = a.cols;
+        let mut out = Decoding::empty();
+        let mask1: Vec<bool> = (0..m).map(|j| j % 2 == 0).collect();
+        dec.decode_into(&mask1, &mut out);
+        let mask2: Vec<bool> = (0..m).map(|j| j % 2 == 1).collect(); // full flip
+        dec.decode_into(&mask2, &mut out);
+        let cold = GenericOptimalDecoder::new(a).decode(&mask2);
+        assert!(dist2_sq(&out.alpha, &cold.alpha) < 1e-10);
     }
 }

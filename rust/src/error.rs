@@ -1,0 +1,90 @@
+//! Crate-local error substrate (no `anyhow` in the offline build).
+//!
+//! The coordinator and CLI previously pulled in `anyhow` for ad-hoc
+//! errors; only the PJRT runtime (feature `pjrt`, which ships its own
+//! vendored dependencies) still does. Everything on the default build
+//! uses this message-carrying error, which is cheap, `Send + Sync`, and
+//! formats identically under `{e}` and `{e:#}`.
+
+use std::fmt;
+
+/// A human-readable error message, optionally wrapping a chain of
+/// context strings (outermost first, like `anyhow`).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Self { msg: m.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Self { msg }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self { msg: e.to_string() }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `.context("...")` / `.with_context(|| ...)` on any displayable error.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context(self, f: impl FnOnce() -> String) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = Error::msg("boom");
+        assert_eq!(format!("{e}"), "boom");
+        assert_eq!(format!("{e:#}"), "boom");
+        let r: std::result::Result<(), Error> = Err(Error::msg("inner"));
+        let c = r.context("outer").unwrap_err();
+        assert_eq!(format!("{c}"), "outer: inner");
+    }
+
+    #[test]
+    fn conversions() {
+        let _: Error = "s".into();
+        let _: Error = String::from("s").into();
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(format!("{e}").contains("gone"));
+    }
+}

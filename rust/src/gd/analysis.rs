@@ -29,6 +29,12 @@ pub struct DecodingStats {
 }
 
 /// Estimate Figure-3 statistics with `runs` straggler draws.
+///
+/// Serial reference path (stateful [`StragglerModel`]s can't be fanned
+/// out); the parallel counterpart is
+/// [`crate::sweep::decoding_stats_par`], which collects the same alpha
+/// samples across threads and reduces them through the shared
+/// [`stats_from_samples`].
 pub fn decoding_stats(
     decoder: &dyn Decoder,
     stragglers: &mut dyn StragglerModel,
@@ -39,14 +45,29 @@ pub fn decoding_stats(
 ) -> DecodingStats {
     assert!(runs >= 2);
     let mut samples: Vec<Vec<f64>> = Vec::with_capacity(runs);
-    let mut mean = vec![0.0; n];
-    let mut raw_err = 0.0;
+    let mut out = crate::decode::Decoding::empty();
     for _ in 0..runs {
         let mask = stragglers.sample(m);
-        let dec = decoder.decode(&mask);
-        raw_err += crate::linalg::dist_to_ones_sq(&dec.alpha);
-        axpy(1.0, &dec.alpha, &mut mean);
-        samples.push(dec.alpha);
+        decoder.decode_into(&mask, &mut out);
+        assert_eq!(out.alpha.len(), n);
+        samples.push(out.alpha.clone());
+    }
+    stats_from_samples(samples, rng)
+}
+
+/// Reduce a set of per-trial alpha samples to the Figure-3 statistics.
+/// Deterministic in the sample order; both the serial and the parallel
+/// collection paths feed this, so they agree exactly on identical
+/// samples.
+pub fn stats_from_samples(samples: Vec<Vec<f64>>, rng: &mut Rng) -> DecodingStats {
+    let runs = samples.len();
+    assert!(runs >= 2);
+    let n = samples[0].len();
+    let mut mean = vec![0.0; n];
+    let mut raw_err = 0.0;
+    for sample in &samples {
+        raw_err += crate::linalg::dist_to_ones_sq(sample);
+        axpy(1.0, sample, &mut mean);
     }
     scale(1.0 / runs as f64, &mut mean);
     // normalization alpha-bar = alpha * |1|_2 / |E[alpha]|_2
@@ -117,7 +138,7 @@ mod tests {
         // probability a block's whole group dies), matching [8]
         let code = FrcCode::new(64, 64, 2);
         let p = 0.3;
-        let dec = FrcOptimalDecoder { code: &code };
+        let dec = FrcOptimalDecoder::new(&code);
         let mut strag = BernoulliStragglers::new(p, 0);
         let mut rng = Rng::new(1);
         let stats = decoding_stats(&dec, &mut strag, 64, 64, 3000, &mut rng);

@@ -11,6 +11,7 @@
 pub mod analysis;
 pub mod bounds;
 pub mod grid;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 use crate::decode::Decoder;

@@ -7,18 +7,46 @@
 //! to HLO text at build time; this crate (L3) is the coordinator that
 //! owns assignment construction, straggler handling, optimal decoding and
 //! the coded gradient-descent loop, executing the AOT artifacts via the
-//! PJRT CPU client. Python never runs on the request path.
+//! PJRT CPU client (feature `pjrt`). Python never runs on the request
+//! path.
 //!
 //! Top-level layout (see DESIGN.md for the full inventory):
 //! * [`graphs`] — graph assignment schemes incl. LPS Ramanujan expanders
 //! * [`codes`] — the paper's scheme + every baseline (FRC, expander, …)
 //! * [`decode`] — linear-time optimal graph decoder, LSQR generic decoder
 //! * [`straggler`] — random & adversarial straggler models
+//! * [`sweep`] — parallel deterministic Monte-Carlo trial engine
 //! * [`gd`] — coded gradient descent engines & convergence bounds
 //! * [`coordinator`] — distributed leader/worker runtime (Algorithm 2)
-//! * [`runtime`] — PJRT artifact loading & execution
+//! * [`runtime`] — PJRT artifact loading & execution (feature `pjrt`)
 //! * substrates: [`prng`], [`linalg`], [`sparse`], [`config`], [`cli`],
-//!   [`metrics`], [`bench_util`], [`testing`], [`data`]
+//!   [`metrics`], [`bench_util`], [`testing`], [`data`], [`error`]
+//!
+//! ## Performance architecture
+//!
+//! The paper's systems claim (Section III) is that optimal graph
+//! decoding costs `c*m` operations — the same order as the update
+//! itself — so the experiment harness must not drown that constant in
+//! allocator and layout overhead. Three mechanisms keep the per-trial
+//! hot path lean (README.md has the long-form version):
+//!
+//! 1. **Scratch reuse.** [`decode::Decoder::decode_into`] writes into a
+//!    caller-owned [`decode::Decoding`]; every decoder parks its working
+//!    set (BFS queues, survivor counts, LSQR Krylov vectors) in
+//!    interior-mutable scratch sized on first use. After warm-up a
+//!    decode performs zero heap allocations.
+//! 2. **CSC + CSR mirrors.** The assignment matrix lives in
+//!    [`sparse::Csc`] (column = machine: per-machine access, transpose
+//!    products) with a read-only [`sparse::Csr`] mirror built once
+//!    (row = data block: forward products as one contiguous sweep).
+//!    [`sparse::MaskedColumnsOp`] combines both so the generic LSQR
+//!    decoder needs no per-trial survivor index, which also makes its
+//!    warm start (previous trial's `w`) a plain buffer copy.
+//! 3. **Deterministic parallel sweeps.** [`sweep::TrialEngine`] fans
+//!    Monte-Carlo trials across scoped threads with per-trial PRNG
+//!    substreams, chunk-scoped decoder state and an ordered reduction,
+//!    so the accumulated metrics are bit-identical for every thread
+//!    count — parallelism is purely a wall-clock lever.
 
 pub mod bench_util;
 pub mod cli;
@@ -27,12 +55,15 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod error;
 pub mod gd;
 pub mod graphs;
 pub mod linalg;
 pub mod metrics;
 pub mod prng;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sparse;
 pub mod straggler;
+pub mod sweep;
 pub mod testing;

@@ -6,6 +6,7 @@
 use gcod::cli::{flag, switch, App, CommandSpec};
 use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
@@ -104,15 +105,15 @@ fn main() {
     }
 }
 
-fn build_scheme(inv: &gcod::cli::Invocation) -> anyhow::Result<(zoo::BuiltScheme, Rng)> {
-    let spec = SchemeSpec::parse(&inv.str_or("scheme", "graph-rr:16,3"))
-        .map_err(|e| anyhow::anyhow!(e))?;
+fn build_scheme(inv: &gcod::cli::Invocation) -> Result<(zoo::BuiltScheme, Rng)> {
+    let spec =
+        SchemeSpec::parse(&inv.str_or("scheme", "graph-rr:16,3")).map_err(Error::msg)?;
     let mut rng = Rng::new(inv.u64_or("seed", 0));
     let scheme = zoo::build(&spec, &mut rng);
     Ok((scheme, rng))
 }
 
-fn cmd_info(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+fn cmd_info(inv: &gcod::cli::Invocation) -> Result<()> {
     let (scheme, mut rng) = build_scheme(inv)?;
     println!("scheme    : {}", scheme.name);
     println!("blocks n  : {}", scheme.n_blocks());
@@ -128,6 +129,7 @@ fn cmd_info(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
                      d - l2, 2.0 * (d - 1.0).sqrt());
         }
     }
+    #[cfg(feature = "pjrt")]
     match gcod::runtime::Runtime::open(inv.str_or("artifacts", "artifacts")) {
         Ok(rt) => {
             println!("artifacts : {} loaded from manifest", rt.artifact_names().len());
@@ -137,14 +139,16 @@ fn cmd_info(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
         }
         Err(e) => println!("artifacts : unavailable ({e})"),
     }
+    #[cfg(not(feature = "pjrt"))]
+    println!("artifacts : pjrt feature not compiled in");
     Ok(())
 }
 
-fn cmd_decode_error(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+fn cmd_decode_error(inv: &gcod::cli::Invocation) -> Result<()> {
     let (scheme, mut rng) = build_scheme(inv)?;
     let p = inv.f64_or("p", 0.2);
     let runs = inv.usize_or("runs", 200);
-    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(|e| anyhow::anyhow!(e))?;
+    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(Error::msg)?;
     let dec = zoo::make_decoder(&scheme, dspec, p);
     let mut strag = BernoulliStragglers::new(p, inv.u64_or("seed", 0) ^ 0xFEED);
     let stats = analysis::decoding_stats(
@@ -159,14 +163,14 @@ fn cmd_decode_error(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_simulate(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+fn cmd_simulate(inv: &gcod::cli::Invocation) -> Result<()> {
     let (scheme, mut rng) = build_scheme(inv)?;
     let p = inv.f64_or("p", 0.2);
     let n_points = inv.usize_or("n-points", 1024);
     let k = inv.usize_or("dim", 64);
     let sigma = inv.f64_or("sigma", 1.0);
     let iters = inv.usize_or("iters", 50);
-    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(|e| anyhow::anyhow!(e))?;
+    let dspec = DecoderSpec::parse(&inv.str_or("decoder", "optimal")).map_err(Error::msg)?;
     let data = gcod::data::LstsqData::generate(n_points, k, scheme.n_blocks(), sigma, &mut rng);
     let dec = zoo::make_decoder(&scheme, dspec, p);
     let mut strag = BernoulliStragglers::new(p, inv.u64_or("seed", 0) ^ 0xFACE);
@@ -190,19 +194,28 @@ fn cmd_simulate(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_train(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
     let (scheme, mut rng) = build_scheme(inv)?;
-    let graph = scheme.graph.as_ref().ok_or_else(|| anyhow::anyhow!("train needs a graph scheme"))?;
+    let graph = scheme
+        .graph
+        .as_ref()
+        .ok_or_else(|| Error::msg("train needs a graph scheme"))?;
     let p = inv.f64_or("p", 0.2);
     let n_points = inv.usize_or("n-points", 6000);
     let k = inv.usize_or("dim", 2000);
     let data = gcod::data::LstsqData::generate(n_points, k, scheme.n_blocks(), 1.0, &mut rng);
     let backend = match inv.str_or("backend", "pjrt").as_str() {
+        #[cfg(feature = "pjrt")]
         "pjrt" => {
             let art = format!("worker_grad_fig4_2x{}x{}", data.b, k);
             ComputeBackend::Pjrt { artifacts_dir: inv.str_or("artifacts", "artifacts"), artifact: art }
         }
-        _ => ComputeBackend::Native,
+        other => {
+            if other == "pjrt" {
+                eprintln!("pjrt feature not compiled in; falling back to the native backend");
+            }
+            ComputeBackend::Native
+        }
     };
     let cfg = ClusterConfig {
         wait_fraction: 1.0 - p,
@@ -234,7 +247,7 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_adversarial(inv: &gcod::cli::Invocation) -> anyhow::Result<()> {
+fn cmd_adversarial(inv: &gcod::cli::Invocation) -> Result<()> {
     let (scheme, _rng) = build_scheme(inv)?;
     let p = inv.f64_or("p", 0.2);
     let budget = (p * scheme.n_machines() as f64).floor() as usize;

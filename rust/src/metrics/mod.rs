@@ -87,6 +87,31 @@ impl Stats {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Merge another accumulator into this one (Chan et al. pairwise
+    /// Welford update). For streaming sweep reductions that don't want
+    /// to materialize per-trial results: merging per-chunk partials in
+    /// fixed chunk order yields results independent of how chunks were
+    /// scheduled across threads. (`sweep::TrialEngine::run_map` itself
+    /// returns trial-ordered results and folds sequentially.)
+    pub fn merge(&mut self, other: &Stats) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n1 = self.n as f64;
+        let n2 = other.n as f64;
+        let n = n1 + n2;
+        let d = other.mean - self.mean;
+        self.mean += d * n2 / n;
+        self.m2 += other.m2 + d * d * n1 * n2 / n;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Fixed-bucket latency histogram (log-spaced), for dispatch timings.
@@ -239,6 +264,32 @@ mod tests {
         assert_eq!(s.min(), 2.0);
         assert_eq!(s.max(), 9.0);
         assert_eq!(s.count(), 8);
+    }
+
+    #[test]
+    fn stats_merge_matches_sequential() {
+        let xs: Vec<f64> = (0..97).map(|i| (i as f64 * 0.37).sin() * 3.0).collect();
+        let mut all = Stats::new();
+        for &x in &xs {
+            all.push(x);
+        }
+        let mut merged = Stats::new();
+        for chunk in xs.chunks(10) {
+            let mut part = Stats::new();
+            for &x in chunk {
+                part.push(x);
+            }
+            merged.merge(&part);
+        }
+        assert_eq!(merged.count(), all.count());
+        assert!((merged.mean() - all.mean()).abs() < 1e-12);
+        assert!((merged.var() - all.var()).abs() < 1e-12);
+        assert_eq!(merged.min(), all.min());
+        assert_eq!(merged.max(), all.max());
+        // merging an empty accumulator is a no-op
+        let before = merged.mean();
+        merged.merge(&Stats::new());
+        assert_eq!(merged.mean(), before);
     }
 
     #[test]

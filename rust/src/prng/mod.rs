@@ -154,7 +154,21 @@ impl Rng {
 
     /// Bernoulli(p) mask of length n: the random straggler set S.
     pub fn bernoulli_mask(&mut self, n: usize, p: f64) -> Vec<bool> {
-        (0..n).map(|_| self.bernoulli(p)).collect()
+        let mut mask = Vec::new();
+        self.bernoulli_mask_into(n, p, &mut mask);
+        mask
+    }
+
+    /// Allocation-free [`Rng::bernoulli_mask`]: refill a caller-owned
+    /// buffer (the sweep engine's per-trial hot path). Draw-for-draw
+    /// identical to the allocating variant.
+    pub fn bernoulli_mask_into(&mut self, n: usize, p: f64, mask: &mut Vec<bool>) {
+        mask.clear();
+        mask.reserve(n);
+        for _ in 0..n {
+            let b = self.bernoulli(p);
+            mask.push(b);
+        }
     }
 }
 
@@ -251,6 +265,18 @@ mod tests {
         let mask = r.bernoulli_mask(100_000, 0.2);
         let frac = mask.iter().filter(|&&b| b).count() as f64 / 100_000.0;
         assert!((frac - 0.2).abs() < 0.01, "frac={frac}");
+    }
+
+    #[test]
+    fn bernoulli_mask_into_matches_allocating() {
+        let mut r1 = Rng::new(23);
+        let mut r2 = Rng::new(23);
+        let mut buf = vec![true; 3]; // stale contents must be discarded
+        for n in [0usize, 1, 17, 100] {
+            let a = r1.bernoulli_mask(n, 0.3);
+            r2.bernoulli_mask_into(n, 0.3, &mut buf);
+            assert_eq!(a, buf);
+        }
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! PJRT runtime: load and execute the AOT artifacts from the rust
-//! request path.
+//! request path. Compiled only with the `pjrt` feature: this module
+//! (and `gd::pjrt`, the `ComputeBackend::Pjrt` worker path and the
+//! PJRT integration tests) needs the `xla` and `anyhow` crates, which
+//! are environment-provided (vendored registry / `[patch]`) — the
+//! default offline build excludes them entirely.
 //!
 //! `make artifacts` (build time, python) lowers every L2 function to
 //! HLO *text* and writes `artifacts/MANIFEST.json`; this module parses

@@ -7,6 +7,18 @@
 //! closed form, so we solve the sparse least-squares problem directly.
 //! LSQR converges to the minimum-norm solution, which matches the
 //! Moore-Penrose-pseudoinverse characterization of Eq. (9).
+//!
+//! Two entry points:
+//! * [`lsqr`] — the original allocate-per-call API (cold start).
+//! * [`lsqr_into`] — allocation-free and warm-startable: the caller
+//!   passes `x` holding an initial guess x0 (zeros = cold start) and a
+//!   reusable [`LsqrScratch`]. Internally the solve runs on the shifted
+//!   problem `min |A dx - (b - A x0)|` and accumulates `x = x0 + dx`,
+//!   so a good x0 (e.g. the previous Monte-Carlo trial's `w`) cuts the
+//!   Golub-Kahan iteration count without changing the minimizer of the
+//!   residual (in the underdetermined case the *minimum-norm* tie-break
+//!   is relative to x0; decoding only consumes alpha = A w, which is
+//!   unique, so this is correctness-preserving).
 
 /// An m x n linear operator with forward and transpose application.
 pub trait LinearOp {
@@ -29,8 +41,53 @@ pub struct LsqrResult {
     pub converged: bool,
 }
 
+/// [`lsqr_into`]'s summary (the solution lives in the caller's `x`).
+#[derive(Clone, Copy, Debug)]
+pub struct LsqrSummary {
+    pub iterations: usize,
+    /// final |A x - b|
+    pub residual_norm: f64,
+    /// final |A^T (A x - b)| — optimality measure
+    pub normal_residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Reusable work vectors for [`lsqr_into`]; grown on demand, never
+/// shrunk, so a long trial loop allocates exactly once.
+#[derive(Clone, Debug, Default)]
+pub struct LsqrScratch {
+    u: Vec<f64>,
+    v: Vec<f64>,
+    w: Vec<f64>,
+    tmp_m: Vec<f64>,
+    tmp_n: Vec<f64>,
+}
+
+impl LsqrScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn resize(&mut self, m: usize, n: usize) {
+        self.u.clear();
+        self.u.resize(m, 0.0);
+        self.v.clear();
+        self.v.resize(n, 0.0);
+        self.w.clear();
+        self.w.resize(n, 0.0);
+        self.tmp_m.clear();
+        self.tmp_m.resize(m, 0.0);
+        self.tmp_n.clear();
+        self.tmp_n.resize(n, 0.0);
+    }
+}
+
 fn norm(v: &[f64]) -> f64 {
-    v.iter().map(|x| x * x).sum::<f64>().sqrt()
+    let mut s = 0.0;
+    for &x in v {
+        s += x * x;
+    }
+    s.sqrt()
 }
 
 fn scale_in(alpha: f64, v: &mut [f64]) {
@@ -39,42 +96,82 @@ fn scale_in(alpha: f64, v: &mut [f64]) {
     }
 }
 
-/// Solve min_x |A x - b|_2 with LSQR.
+/// Solve min_x |A x - b|_2 with LSQR from a cold start.
 ///
 /// `atol` bounds the relative normal-equation residual
 /// |A^T r| / (|A| |r|); `max_iter` caps the Golub-Kahan steps.
 pub fn lsqr<M: LinearOp>(a: &M, b: &[f64], atol: f64, max_iter: usize) -> LsqrResult {
+    let mut x = vec![0.0; a.cols()];
+    let mut scratch = LsqrScratch::new();
+    let s = lsqr_into(a, b, atol, max_iter, &mut x, &mut scratch);
+    LsqrResult {
+        x,
+        iterations: s.iterations,
+        residual_norm: s.residual_norm,
+        normal_residual_norm: s.normal_residual_norm,
+        converged: s.converged,
+    }
+}
+
+/// Allocation-free, warm-startable LSQR. On entry `x` holds the initial
+/// guess x0 (all-zero = cold start, bit-identical to [`lsqr`]); on exit
+/// it holds the solution.
+pub fn lsqr_into<M: LinearOp>(
+    a: &M,
+    b: &[f64],
+    atol: f64,
+    max_iter: usize,
+    x: &mut [f64],
+    scratch: &mut LsqrScratch,
+) -> LsqrSummary {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(b.len(), m);
-    let mut x = vec![0.0; n];
+    assert_eq!(x.len(), n);
+    scratch.resize(m, n);
+    let LsqrScratch { u, v, w, tmp_m, tmp_n } = scratch;
 
-    // u = b; beta = |u|
-    let mut u = b.to_vec();
-    let mut beta = norm(&u);
-    if beta == 0.0 {
-        return LsqrResult { x, iterations: 0, residual_norm: 0.0,
-                            normal_residual_norm: 0.0, converged: true };
+    // u = b - A x0; for the cold start this is exactly u = b.
+    let cold = x.iter().all(|&xi| xi == 0.0);
+    if cold {
+        u.copy_from_slice(b);
+    } else {
+        a.apply(x, u);
+        for i in 0..m {
+            u[i] = b[i] - u[i];
+        }
     }
-    scale_in(1.0 / beta, &mut u);
+    let mut beta = norm(u);
+    let rhs_norm = beta;
+    if beta == 0.0 {
+        // x0 already solves the system exactly
+        return LsqrSummary {
+            iterations: 0,
+            residual_norm: 0.0,
+            normal_residual_norm: 0.0,
+            converged: true,
+        };
+    }
+    scale_in(1.0 / beta, u);
 
     // v = A^T u; alpha = |v|
-    let mut v = vec![0.0; n];
-    a.apply_t(&u, &mut v);
-    let mut alpha = norm(&v);
+    a.apply_t(u, v);
+    let mut alpha = norm(v);
     if alpha == 0.0 {
-        // b orthogonal to range(A): x = 0 is optimal
-        return LsqrResult { x, iterations: 0, residual_norm: beta,
-                            normal_residual_norm: 0.0, converged: true };
+        // residual orthogonal to range(A): x0 is optimal
+        return LsqrSummary {
+            iterations: 0,
+            residual_norm: beta,
+            normal_residual_norm: 0.0,
+            converged: true,
+        };
     }
-    scale_in(1.0 / alpha, &mut v);
+    scale_in(1.0 / alpha, v);
 
-    let mut w = v.clone();
+    w.copy_from_slice(v);
     let mut phibar = beta;
     let mut rhobar = alpha;
     let mut anorm2 = 0.0f64; // running |A|_F^2 estimate
 
-    let mut tmp_m = vec![0.0; m];
-    let mut tmp_n = vec![0.0; n];
     let mut iters = 0;
     let mut converged = false;
 
@@ -83,23 +180,23 @@ pub fn lsqr<M: LinearOp>(a: &M, b: &[f64], atol: f64, max_iter: usize) -> LsqrRe
         anorm2 += alpha * alpha + beta * beta;
 
         // bidiagonalization: u = A v - alpha u
-        a.apply(&v, &mut tmp_m);
+        a.apply(v, tmp_m);
         for i in 0..m {
             u[i] = tmp_m[i] - alpha * u[i];
         }
-        beta = norm(&u);
+        beta = norm(u);
         if beta > 0.0 {
-            scale_in(1.0 / beta, &mut u);
+            scale_in(1.0 / beta, u);
         }
 
         // v = A^T u - beta v
-        a.apply_t(&u, &mut tmp_n);
+        a.apply_t(u, tmp_n);
         for i in 0..n {
             v[i] = tmp_n[i] - beta * v[i];
         }
-        alpha = norm(&v);
+        alpha = norm(v);
         if alpha > 0.0 {
-            scale_in(1.0 / alpha, &mut v);
+            scale_in(1.0 / alpha, v);
         }
 
         // Givens rotation
@@ -122,20 +219,26 @@ pub fn lsqr<M: LinearOp>(a: &M, b: &[f64], atol: f64, max_iter: usize) -> LsqrRe
         // convergence: |A^T r| = phibar * alpha * |c| ; |r| = phibar
         let norm_ar = phibar * alpha * c.abs();
         let anorm = anorm2.sqrt();
-        if norm_ar <= atol * anorm * phibar.max(1e-300) || phibar <= atol * norm(b) {
+        if norm_ar <= atol * anorm * phibar.max(1e-300) || phibar <= atol * rhs_norm {
             converged = true;
             break;
         }
     }
 
-    // exact final residuals
-    a.apply(&x, &mut tmp_m);
-    let r: Vec<f64> = (0..m).map(|i| tmp_m[i] - b[i]).collect();
-    let rnorm = norm(&r);
-    a.apply_t(&r, &mut tmp_n);
-    let nrnorm = norm(&tmp_n);
-    LsqrResult { x, iterations: iters, residual_norm: rnorm,
-                 normal_residual_norm: nrnorm, converged }
+    // exact final residuals (against the original b, with the full x)
+    a.apply(x, tmp_m);
+    for i in 0..m {
+        tmp_m[i] -= b[i];
+    }
+    let rnorm = norm(tmp_m);
+    a.apply_t(tmp_m, tmp_n);
+    let nrnorm = norm(tmp_n);
+    LsqrSummary {
+        iterations: iters,
+        residual_norm: rnorm,
+        normal_residual_norm: nrnorm,
+        converged,
+    }
 }
 
 impl LinearOp for crate::linalg::Mat {
@@ -207,5 +310,67 @@ mod tests {
         assert!((r.residual_norm - std::f64::consts::SQRT_2).abs() < 1e-9);
         // optimality: A^T r = 0
         assert!(r.normal_residual_norm < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_from_exact_solution_is_immediate() {
+        let a = Mat::from_rows(vec![vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let b = vec![9.0, 8.0];
+        let mut x = vec![2.0, 3.0]; // the exact solution
+        let mut scratch = LsqrScratch::new();
+        let s = lsqr_into(&a, &b, 1e-12, 100, &mut x, &mut scratch);
+        assert!(s.converged);
+        assert_eq!(s.iterations, 0);
+        assert!((x[0] - 2.0).abs() < 1e-12 && (x[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn warm_start_matches_cold_solution() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ]);
+        let b = vec![1.0, 2.9, 5.1, 7.0];
+        let cold = lsqr(&a, &b, 1e-12, 200);
+        let mut x = vec![0.9, 1.8]; // near-but-not-exact guess
+        let mut scratch = LsqrScratch::new();
+        let s = lsqr_into(&a, &b, 1e-12, 200, &mut x, &mut scratch);
+        assert!(s.converged);
+        assert!((x[0] - cold.x[0]).abs() < 1e-7 && (x[1] - cold.x[1]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn cold_lsqr_into_is_bit_identical_to_lsqr() {
+        let a = Mat::from_rows(vec![
+            vec![2.0, -1.0, 0.5],
+            vec![0.0, 1.5, 1.0],
+            vec![1.0, 0.0, -2.0],
+            vec![0.5, 0.5, 0.5],
+        ]);
+        let b = vec![1.0, -2.0, 0.25, 3.0];
+        let r = lsqr(&a, &b, 1e-12, 300);
+        let mut x = vec![0.0; 3];
+        let mut scratch = LsqrScratch::new();
+        let s = lsqr_into(&a, &b, 1e-12, 300, &mut x, &mut scratch);
+        assert_eq!(s.iterations, r.iterations);
+        for i in 0..3 {
+            assert_eq!(x[i].to_bits(), r.x[i].to_bits(), "component {i}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_across_shapes() {
+        let mut scratch = LsqrScratch::new();
+        let a1 = Mat::from_rows(vec![vec![1.0, 1.0]]);
+        let mut x1 = vec![0.0; 2];
+        lsqr_into(&a1, &[2.0], 1e-14, 50, &mut x1, &mut scratch);
+        assert!((x1[0] - 1.0).abs() < 1e-9);
+        let a2 = Mat::from_rows(vec![vec![3.0, 1.0], vec![1.0, 2.0]]);
+        let mut x2 = vec![0.0; 2];
+        let s = lsqr_into(&a2, &[9.0, 8.0], 1e-12, 100, &mut x2, &mut scratch);
+        assert!(s.converged);
+        assert!((x2[0] - 2.0).abs() < 1e-8 && (x2[1] - 3.0).abs() < 1e-8);
     }
 }

@@ -4,12 +4,23 @@
 //! schemes have exactly 2 non-zeros per column, FRC/BIBD/rBGC/BRC a few
 //! more. The generic optimal decoder (decode::GenericOptimalDecoder)
 //! solves min_w |A_S w - 1|_2 over the surviving columns S with LSQR,
-//! which needs fast `A_S w` and `A_S^T r` — i.e. column access, so CSC
-//! is the primary layout.
+//! which needs fast `A_S w` and `A_S^T r`.
+//!
+//! Layout roles (see README.md "Performance architecture"):
+//! * [`Csc`] — the primary layout. Column = machine, so per-machine
+//!   access (`col`, `apply_t` gathers) is contiguous.
+//! * [`Csr`] — a read-only row-major mirror built once from the CSC
+//!   ([`Csc::to_csr`]). Forward products `y = A x` walk `rowptr`
+//!   sequentially, one contiguous pass over the value array with a
+//!   single write per row — the hot layout for the LSQR forward apply
+//!   inside the Monte-Carlo trial loop.
+//!
+//! Every product has an `_into` variant writing a caller-owned buffer so
+//! repeated decodes are allocation-free.
 
 pub mod lsqr;
 
-pub use lsqr::{lsqr, LinearOp, LsqrResult};
+pub use lsqr::{lsqr, lsqr_into, LinearOp, LsqrResult, LsqrScratch, LsqrSummary};
 
 /// Compressed sparse column matrix (column = machine).
 #[derive(Clone, Debug)]
@@ -63,31 +74,55 @@ impl Csc {
         (&self.rowidx[a..b], &self.values[a..b])
     }
 
+    /// Build the row-major mirror (one pass; call once, reuse forever).
+    pub fn to_csr(&self) -> Csr {
+        Csr::from_csc(self)
+    }
+
     /// y = A x (x over columns/machines, y over rows/blocks).
     pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
         let mut y = vec![0.0; self.rows];
+        self.mul_vec_into(x, &mut y);
+        y
+    }
+
+    /// In-place y = A x; `y` is fully overwritten.
+    #[inline]
+    pub fn mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        y.iter_mut().for_each(|v| *v = 0.0);
         for j in 0..self.cols {
             let xj = x[j];
             if xj != 0.0 {
                 let (ri, vals) = self.col(j);
-                for (k, &r) in ri.iter().enumerate() {
-                    y[r] += vals[k] * xj;
+                for k in 0..ri.len() {
+                    y[ri[k]] += vals[k] * xj;
                 }
             }
         }
-        y
     }
 
     /// y = A^T x.
     pub fn t_mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        self.t_mul_vec_into(x, &mut y);
+        y
+    }
+
+    /// In-place y = A^T x; `y` is fully overwritten.
+    #[inline]
+    pub fn t_mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
         assert_eq!(x.len(), self.rows);
-        (0..self.cols)
-            .map(|j| {
-                let (ri, vals) = self.col(j);
-                ri.iter().enumerate().map(|(k, &r)| vals[k] * x[r]).sum()
-            })
-            .collect()
+        assert_eq!(y.len(), self.cols);
+        for j in 0..self.cols {
+            let (ri, vals) = self.col(j);
+            let mut s = 0.0;
+            for k in 0..ri.len() {
+                s += vals[k] * x[ri[k]];
+            }
+            y[j] = s;
+        }
     }
 
     /// Number of non-zero entries divided by rows — the paper's
@@ -117,8 +152,110 @@ impl Csc {
     }
 }
 
-/// The column-restricted operator A_S used by the generic optimal
-/// decoder: only the surviving (non-straggler) machines' columns.
+/// Compressed sparse row mirror of a [`Csc`] (row = data block).
+///
+/// Column indices within each row are ascending (inherited from the
+/// column-major build order). Forward products read `colidx`/`values`
+/// in one contiguous sweep and write each `y[i]` exactly once, so they
+/// vectorize and never false-share. The batched decoding hot path is
+/// [`MaskedColumnsOp::apply`], which iterates [`Csr::row`] directly
+/// with the straggler mask applied; the `mul_vec*` methods here are
+/// the standalone (unmasked) equivalents.
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    /// row pointer, len rows+1
+    pub rowptr: Vec<usize>,
+    /// column indices, len nnz
+    pub colidx: Vec<usize>,
+    /// values, len nnz
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Transpose-copy from the column-major primary.
+    pub fn from_csc(a: &Csc) -> Self {
+        let nnz = a.nnz();
+        let mut rowptr = vec![0usize; a.rows + 1];
+        for &r in &a.rowidx {
+            rowptr[r + 1] += 1;
+        }
+        for i in 0..a.rows {
+            rowptr[i + 1] += rowptr[i];
+        }
+        let mut next = rowptr.clone();
+        let mut colidx = vec![0usize; nnz];
+        let mut values = vec![0.0; nnz];
+        for j in 0..a.cols {
+            let (ri, vals) = a.col(j);
+            for k in 0..ri.len() {
+                let slot = next[ri[k]];
+                next[ri[k]] += 1;
+                colidx[slot] = j;
+                values[slot] = vals[k];
+            }
+        }
+        Self { rows: a.rows, cols: a.cols, rowptr, colidx, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.colidx.len()
+    }
+
+    /// Columns (and values) of row i.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[usize], &[f64]) {
+        let (a, b) = (self.rowptr[i], self.rowptr[i + 1]);
+        (&self.colidx[a..b], &self.values[a..b])
+    }
+
+    /// y = A x, row-contiguous.
+    pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.rows];
+        self.mul_vec_into(x, &mut y);
+        y
+    }
+
+    /// In-place y = A x; one contiguous pass, one write per row.
+    #[inline]
+    pub fn mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        for i in 0..self.rows {
+            let (cj, vals) = self.row(i);
+            let mut s = 0.0;
+            for k in 0..cj.len() {
+                s += vals[k] * x[cj[k]];
+            }
+            y[i] = s;
+        }
+    }
+
+    /// In-place y = A^T x: still a single contiguous sweep of the value
+    /// array (scattered writes into y).
+    #[inline]
+    pub fn t_mul_vec_into(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.rows);
+        assert_eq!(y.len(), self.cols);
+        y.iter_mut().for_each(|v| *v = 0.0);
+        for i in 0..self.rows {
+            let xi = x[i];
+            if xi != 0.0 {
+                let (cj, vals) = self.row(i);
+                for k in 0..cj.len() {
+                    y[cj[k]] += vals[k] * xi;
+                }
+            }
+        }
+    }
+}
+
+/// The column-restricted operator A_S over an explicit survivor index
+/// list. The generic optimal decoder now uses [`MaskedColumnsOp`]
+/// (dense machine indexing, no per-trial index build); this operator is
+/// kept as the independent reference implementation the masked-op
+/// equivalence tests compare against.
 pub struct ColumnSubsetOp<'a> {
     pub a: &'a Csc,
     /// surviving column indices
@@ -132,22 +269,81 @@ impl LinearOp for ColumnSubsetOp<'_> {
     fn cols(&self) -> usize {
         self.cols.len()
     }
+    #[inline]
     fn apply(&self, x: &[f64], y: &mut [f64]) {
         y.iter_mut().for_each(|v| *v = 0.0);
         for (jj, &j) in self.cols.iter().enumerate() {
             let xj = x[jj];
             if xj != 0.0 {
                 let (ri, vals) = self.a.col(j);
-                for (k, &r) in ri.iter().enumerate() {
-                    y[r] += vals[k] * xj;
+                for k in 0..ri.len() {
+                    y[ri[k]] += vals[k] * xj;
                 }
             }
         }
     }
+    #[inline]
     fn apply_t(&self, x: &[f64], y: &mut [f64]) {
         for (jj, &j) in self.cols.iter().enumerate() {
             let (ri, vals) = self.a.col(j);
-            y[jj] = ri.iter().enumerate().map(|(k, &r)| vals[k] * x[r]).sum();
+            let mut s = 0.0;
+            for k in 0..ri.len() {
+                s += vals[k] * x[ri[k]];
+            }
+            y[jj] = s;
+        }
+    }
+}
+
+/// Column-masked operator over the *full* machine axis: `x`/`w` are
+/// dense length-m vectors and straggler columns contribute nothing
+/// (their components stay exactly 0.0 through LSQR because `apply_t`
+/// writes 0 there). Compared to [`ColumnSubsetOp`] this needs no
+/// per-trial survivor index build and keeps machine indexing stable
+/// across trials, which is what makes LSQR warm-starting from the
+/// previous trial's `w` a plain buffer copy. Forward uses the CSR
+/// mirror (row-contiguous), transpose the CSC (column-contiguous).
+pub struct MaskedColumnsOp<'a> {
+    pub csc: &'a Csc,
+    pub csr: &'a Csr,
+    /// straggler[j] == true means column j is dead
+    pub straggler: &'a [bool],
+}
+
+impl LinearOp for MaskedColumnsOp<'_> {
+    fn rows(&self) -> usize {
+        self.csc.rows
+    }
+    fn cols(&self) -> usize {
+        self.csc.cols
+    }
+    #[inline]
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        for i in 0..self.csr.rows {
+            let (cj, vals) = self.csr.row(i);
+            let mut s = 0.0;
+            for k in 0..cj.len() {
+                let j = cj[k];
+                if !self.straggler[j] {
+                    s += vals[k] * x[j];
+                }
+            }
+            y[i] = s;
+        }
+    }
+    #[inline]
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        for j in 0..self.csc.cols {
+            if self.straggler[j] {
+                y[j] = 0.0;
+                continue;
+            }
+            let (ri, vals) = self.csc.col(j);
+            let mut s = 0.0;
+            for k in 0..ri.len() {
+                s += vals[k] * x[ri[k]];
+            }
+            y[j] = s;
         }
     }
 }
@@ -214,5 +410,107 @@ mod tests {
         let mut yt = vec![0.0; 2];
         op.apply_t(&[1.0, 1.0], &mut yt);
         assert_eq!(yt, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn csr_mirror_round_trip() {
+        let mut rng = crate::prng::Rng::new(11);
+        let mut t = Vec::new();
+        for _ in 0..60 {
+            t.push((rng.below(7), rng.below(9), rng.gaussian()));
+        }
+        let a = Csc::from_triplets(7, 9, t);
+        let r = a.to_csr();
+        assert_eq!(r.nnz(), a.nnz());
+        let dense = a.to_dense();
+        for i in 0..7 {
+            let (cj, vals) = r.row(i);
+            // ascending column indices within the row
+            assert!(cj.windows(2).all(|w| w[0] < w[1]));
+            let mut row_sum = 0.0;
+            for k in 0..cj.len() {
+                assert_eq!(vals[k], dense[(i, cj[k])]);
+                row_sum += vals[k];
+            }
+            let want: f64 = (0..9).map(|j| dense[(i, j)]).sum();
+            assert!((row_sum - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn csr_products_match_csc() {
+        let mut rng = crate::prng::Rng::new(12);
+        let mut t = Vec::new();
+        for _ in 0..40 {
+            t.push((rng.below(6), rng.below(8), rng.gaussian()));
+        }
+        let a = Csc::from_triplets(6, 8, t);
+        let r = a.to_csr();
+        let x: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+        let yr: Vec<f64> = (0..6).map(|_| rng.gaussian()).collect();
+        let mut y1 = vec![0.0; 6];
+        r.mul_vec_into(&x, &mut y1);
+        let y2 = a.mul_vec(&x);
+        for i in 0..6 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12);
+        }
+        let mut t1 = vec![0.0; 8];
+        r.t_mul_vec_into(&yr, &mut t1);
+        let t2 = a.t_mul_vec(&yr);
+        for j in 0..8 {
+            assert!((t1[j] - t2[j]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_stale_buffers() {
+        let a = small();
+        let mut y = vec![99.0, 99.0];
+        a.mul_vec_into(&[1.0, 1.0, 1.0], &mut y);
+        assert_eq!(y, vec![3.0, 3.0]);
+        let mut yt = vec![-5.0, -5.0, -5.0];
+        a.t_mul_vec_into(&[1.0, 1.0], &mut yt);
+        assert_eq!(yt, vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn masked_op_matches_column_subset_op() {
+        let mut rng = crate::prng::Rng::new(13);
+        let mut t = Vec::new();
+        for _ in 0..50 {
+            t.push((rng.below(8), rng.below(10), rng.gaussian()));
+        }
+        let a = Csc::from_triplets(8, 10, t);
+        let csr = a.to_csr();
+        let straggler = rng.bernoulli_mask(10, 0.4);
+        let cols: Vec<usize> = (0..10).filter(|&j| !straggler[j]).collect();
+        let masked = MaskedColumnsOp { csc: &a, csr: &csr, straggler: &straggler };
+        let subset = ColumnSubsetOp { a: &a, cols: &cols };
+
+        // dense x with zeros on stragglers vs compact x over survivors
+        let x_dense: Vec<f64> =
+            (0..10).map(|j| if straggler[j] { 0.0 } else { rng.gaussian() }).collect();
+        let x_compact: Vec<f64> = cols.iter().map(|&j| x_dense[j]).collect();
+        let mut ym = vec![0.0; 8];
+        masked.apply(&x_dense, &mut ym);
+        let mut ys = vec![0.0; 8];
+        subset.apply(&x_compact, &mut ys);
+        for i in 0..8 {
+            assert!((ym[i] - ys[i]).abs() < 1e-12);
+        }
+
+        let r: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+        let mut tm = vec![1.0; 10]; // stale values must be overwritten
+        masked.apply_t(&r, &mut tm);
+        let mut ts = vec![0.0; cols.len()];
+        subset.apply_t(&r, &mut ts);
+        for (jj, &j) in cols.iter().enumerate() {
+            assert!((tm[j] - ts[jj]).abs() < 1e-12);
+        }
+        for j in 0..10 {
+            if straggler[j] {
+                assert_eq!(tm[j], 0.0, "dead column {j} must read exactly 0");
+            }
+        }
     }
 }

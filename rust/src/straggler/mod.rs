@@ -191,7 +191,9 @@ pub fn frc_group_attack(code: &FrcCode, budget: usize) -> Vec<bool> {
 /// attacking the block with the fewest surviving replicas (greedy
 /// decoding error alone is myopic: on an expander no single extra
 /// straggler moves alpha* until a block is fully isolated).
-/// O(budget * m * decode-cost) — use on small m only.
+/// O(budget * m * decode-cost) — use on small m only. For larger m, use
+/// [`greedy_decode_attack_on`], which fans the candidate evaluation
+/// across a [`TrialEngine`].
 pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
     decoder: &D,
     a: &crate::sparse::Csc,
@@ -199,6 +201,7 @@ pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
 ) -> Vec<bool> {
     let m = a.cols;
     let mut straggle = vec![false; m];
+    let mut out = crate::decode::Decoding::empty();
     // surviving replica count per block
     let mut replicas = a.mul_vec(&vec![1.0; m]);
     for _ in 0..budget {
@@ -208,19 +211,11 @@ pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
                 continue;
             }
             straggle[j] = true;
-            let err = decoder.decode(&straggle).error_sq();
+            decoder.decode_into(&straggle, &mut out);
+            let err = out.error_sq();
             straggle[j] = false;
-            // tie score: how close this machine's blocks are to isolation
-            let (rows, _) = a.col(j);
-            let tie = rows
-                .iter()
-                .map(|&i| 1.0 / replicas[i].max(1.0))
-                .fold(0.0f64, f64::max);
-            let better = match best {
-                None => true,
-                Some((be, bt, _)) => err > be + 1e-15 || ((err - be).abs() <= 1e-15 && tie > bt),
-            };
-            if better {
+            let tie = isolation_tie_score(a, j, &replicas);
+            if better_candidate(best, err, tie) {
                 best = Some((err, tie, j));
             }
         }
@@ -233,6 +228,89 @@ pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
         }
     }
     straggle
+}
+
+/// Engine-parallel greedy attack: each greedy step evaluates all
+/// candidate machines as engine trials (every worker owns a decoder
+/// from `make_decoder` plus its own copy of the current mask), then
+/// the argmax folds over candidates in machine order.
+///
+/// Candidates are dealt one per chunk (a fresh decoder per candidate),
+/// so the evaluation parallelizes even when m is smaller than the
+/// engine's default chunk, and the selected mask is independent of
+/// both the thread count and the engine's configured chunk size. For
+/// *stateless* decoders (the graph and FRC decoders) it is additionally
+/// identical to [`greedy_decode_attack`]'s. For the warm-started
+/// [`crate::decode::GenericOptimalDecoder`] the two searches see
+/// LSQR-tolerance-level differences in candidate errors (serial threads
+/// one warm decoder through the whole search), so near-exact ties may
+/// resolve to a different — equally greedy — machine.
+pub fn greedy_decode_attack_on<D, F>(
+    engine: &crate::sweep::TrialEngine,
+    make_decoder: F,
+    a: &crate::sparse::Csc,
+    budget: usize,
+) -> Vec<bool>
+where
+    D: crate::decode::Decoder,
+    F: Fn(usize) -> D + Sync,
+{
+    let m = a.cols;
+    let mut straggle = vec![false; m];
+    let mut replicas = a.mul_vec(&vec![1.0; m]);
+    // one candidate per chunk: parallelizes for small m and decouples
+    // the result from the engine's chunk configuration
+    let engine = engine.clone().with_chunk(1);
+    for _ in 0..budget {
+        let errs: Vec<Option<f64>> = engine.run_map(
+            m,
+            |chunk| {
+                (make_decoder(chunk), crate::decode::Decoding::empty(), straggle.clone())
+            },
+            |(dec, out, mask), j, _rng| {
+                if mask[j] {
+                    return None;
+                }
+                mask[j] = true;
+                dec.decode_into(mask, out);
+                mask[j] = false;
+                Some(out.error_sq())
+            },
+        );
+        let mut best: Option<(f64, f64, usize)> = None;
+        for (j, err) in errs.into_iter().enumerate() {
+            let Some(err) = err else { continue };
+            let tie = isolation_tie_score(a, j, &replicas);
+            if better_candidate(best, err, tie) {
+                best = Some((err, tie, j));
+            }
+        }
+        if let Some((_, _, j)) = best {
+            straggle[j] = true;
+            let (rows, _) = a.col(j);
+            for &i in rows {
+                replicas[i] -= 1.0;
+            }
+        }
+    }
+    straggle
+}
+
+/// Tie score: how close machine j's blocks are to isolation.
+#[inline]
+fn isolation_tie_score(a: &crate::sparse::Csc, j: usize, replicas: &[f64]) -> f64 {
+    let (rows, _) = a.col(j);
+    rows.iter().map(|&i| 1.0 / replicas[i].max(1.0)).fold(0.0f64, f64::max)
+}
+
+/// Shared greedy comparison so the serial and engine attacks pick
+/// identical machines.
+#[inline]
+fn better_candidate(best: Option<(f64, f64, usize)>, err: f64, tie: f64) -> bool {
+    match best {
+        None => true,
+        Some((be, bt, _)) => err > be + 1e-15 || ((err - be).abs() <= 1e-15 && tie > bt),
+    }
 }
 
 #[cfg(test)]
@@ -287,7 +365,7 @@ mod tests {
         let budget = 6; // two whole groups
         let mask = frc_group_attack(&code, budget);
         assert_eq!(mask.iter().filter(|&&b| b).count(), budget);
-        let d = crate::decode::FrcOptimalDecoder { code: &code }.decode(&mask);
+        let d = crate::decode::FrcOptimalDecoder::new(&code).decode(&mask);
         // 2 groups x 2 blocks per group zeroed
         assert!((d.error_sq() - 4.0).abs() < 1e-12, "err={}", d.error_sq());
     }

@@ -1,0 +1,308 @@
+//! Parallel Monte-Carlo trial engine.
+//!
+//! Every experiment in the paper — Fig. 3's decoding-error curves,
+//! Fig. 5's simulated GD error bars, Table I's expected-error column,
+//! the adversarial searches — is "run the decoder against N straggler
+//! patterns and reduce". [`TrialEngine`] fans those N trials across
+//! `std::thread::scope` workers while keeping the results **bit-for-bit
+//! independent of the thread count**:
+//!
+//! * **Per-trial PRNG substreams.** Trial `t` always draws from
+//!   [`TrialEngine::trial_rng`]`(t)`, a SplitMix64-derived xoshiro
+//!   stream keyed only by `(seed, t)` — never from a shared sequential
+//!   stream — so the mask for trial 17 is the same whether 1 or 32
+//!   threads ran the sweep.
+//! * **Chunk-scoped worker state.** Trials are dealt in fixed-size
+//!   chunks (an atomic cursor hands chunks to idle workers). The
+//!   per-worker context — decoder scratch, output buffers, LSQR
+//!   warm-start state — is rebuilt at every chunk boundary, so any
+//!   carry-over between consecutive trials (e.g.
+//!   [`crate::decode::GenericOptimalDecoder`]'s warm start) sees a
+//!   deterministic trial sequence regardless of which thread got the
+//!   chunk.
+//! * **Ordered reduction.** [`TrialEngine::run_map`] returns results in
+//!   trial order; reductions (into [`Stats`] or anything else) then fold
+//!   sequentially, which is trivially order-independent of scheduling.
+//!   (A streaming alternative that skips materializing per-trial
+//!   results can fold per-chunk partials in chunk order via
+//!   [`Stats::merge`] with the same guarantee.)
+//!
+//! Determinism contract: `engine.run_map(...)` with the same seed,
+//! trial count, chunk size and per-trial closure returns identical bits
+//! for every `threads` value. The sweep tests in
+//! `rust/tests/sweep_determinism.rs` pin this.
+
+use crate::decode::{Decoder, Decoding};
+use crate::metrics::Stats;
+use crate::prng::{Rng, SplitMix64};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Default trials per chunk: big enough to amortize context
+/// construction and keep warm starts effective, small enough to load
+/// balance across workers.
+pub const DEFAULT_CHUNK: usize = 32;
+
+#[derive(Clone, Debug)]
+pub struct TrialEngine {
+    threads: usize,
+    seed: u64,
+    chunk: usize,
+}
+
+impl TrialEngine {
+    pub fn new(threads: usize, seed: u64) -> Self {
+        Self { threads: threads.max(1), seed, chunk: DEFAULT_CHUNK }
+    }
+
+    /// One worker per available core.
+    pub fn auto(seed: u64) -> Self {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Self::new(threads, seed)
+    }
+
+    /// Override the chunk size. NOTE: the chunk size is part of the
+    /// determinism contract — results are identical across thread
+    /// counts, but changing the chunk size re-scopes stateful contexts
+    /// (warm starts) and may change low-order bits.
+    pub fn with_chunk(mut self, chunk: usize) -> Self {
+        self.chunk = chunk.max(1);
+        self
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The deterministic PRNG substream for one trial, independent of
+    /// thread assignment and of every other trial's stream.
+    pub fn trial_rng(&self, trial: usize) -> Rng {
+        let mut sm =
+            SplitMix64::new(self.seed ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        Rng::new(sm.next_u64())
+    }
+
+    /// Run `n_trials` trials and collect their results **in trial
+    /// order**. `make_ctx(chunk_index)` builds the mutable per-chunk
+    /// context (decoder + scratch buffers); `trial_fn(ctx, trial, rng)`
+    /// runs one trial on its deterministic substream.
+    pub fn run_map<Ctx, T, FC, FT>(&self, n_trials: usize, make_ctx: FC, trial_fn: FT) -> Vec<T>
+    where
+        FC: Fn(usize) -> Ctx + Sync,
+        FT: Fn(&mut Ctx, usize, &mut Rng) -> T + Sync,
+        T: Send,
+    {
+        if n_trials == 0 {
+            return Vec::new();
+        }
+        let n_chunks = n_trials.div_ceil(self.chunk);
+        let run_chunk = |chunk_idx: usize, sink: &mut Vec<(usize, T)>| {
+            let lo = chunk_idx * self.chunk;
+            let hi = (lo + self.chunk).min(n_trials);
+            let mut ctx = make_ctx(chunk_idx);
+            for t in lo..hi {
+                let mut rng = self.trial_rng(t);
+                sink.push((t, trial_fn(&mut ctx, t, &mut rng)));
+            }
+        };
+
+        let mut parts: Vec<Vec<(usize, T)>> = Vec::new();
+        if self.threads == 1 || n_chunks == 1 {
+            let mut sink = Vec::with_capacity(n_trials);
+            for c in 0..n_chunks {
+                run_chunk(c, &mut sink);
+            }
+            parts.push(sink);
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let workers = self.threads.min(n_chunks);
+            std::thread::scope(|s| {
+                let handles: Vec<_> = (0..workers)
+                    .map(|_| {
+                        s.spawn(|| {
+                            let mut sink = Vec::new();
+                            loop {
+                                let c = cursor.fetch_add(1, Ordering::Relaxed);
+                                if c >= n_chunks {
+                                    return sink;
+                                }
+                                run_chunk(c, &mut sink);
+                            }
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    parts.push(h.join().expect("sweep worker panicked"));
+                }
+            });
+        }
+
+        // place results by trial index — the ordered reduction
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n_trials);
+        slots.resize_with(n_trials, || None);
+        for part in parts {
+            for (t, v) in part {
+                debug_assert!(slots[t].is_none(), "trial {t} ran twice");
+                slots[t] = Some(v);
+            }
+        }
+        slots
+            .into_iter()
+            .enumerate()
+            .map(|(t, v)| v.unwrap_or_else(|| panic!("trial {t} never ran")))
+            .collect()
+    }
+}
+
+/// Context for one sweep chunk: a decoder plus reusable buffers.
+pub struct DecodeCtx<D> {
+    pub decoder: D,
+    pub out: Decoding,
+    pub mask: Vec<bool>,
+}
+
+/// Sweep N straggler patterns through a decoder and accumulate the
+/// decoding error |alpha - 1|^2 of every trial into a [`Stats`].
+///
+/// `make_decoder(chunk)` builds a fresh decoder per chunk (scratch and
+/// warm-start state are chunk-scoped, see the module docs);
+/// `fill_mask(trial, rng, mask)` writes trial `trial`'s straggler
+/// pattern into the reusable buffer. The whole loop is allocation-free
+/// after each chunk's first trial.
+pub fn decoding_error_sweep<D, FD, FM>(
+    engine: &TrialEngine,
+    make_decoder: FD,
+    fill_mask: FM,
+    trials: usize,
+) -> Stats
+where
+    D: Decoder,
+    FD: Fn(usize) -> D + Sync,
+    FM: Fn(usize, &mut Rng, &mut Vec<bool>) + Sync,
+{
+    let errs = engine.run_map(
+        trials,
+        |chunk| DecodeCtx { decoder: make_decoder(chunk), out: Decoding::empty(), mask: Vec::new() },
+        |ctx, t, rng| {
+            fill_mask(t, rng, &mut ctx.mask);
+            ctx.decoder.decode_into(&ctx.mask, &mut ctx.out);
+            ctx.out.error_sq()
+        },
+    );
+    let mut stats = Stats::new();
+    for e in errs {
+        stats.push(e);
+    }
+    stats
+}
+
+/// Parallel counterpart of [`crate::gd::analysis::decoding_stats`]: the
+/// Figure-3 statistics (normalized error, covariance spectral norm) with
+/// the trials fanned across the engine. The post-processing reuses
+/// [`crate::gd::analysis::stats_from_samples`], so for a given sample
+/// set the numbers are identical to the serial path.
+pub fn decoding_stats_par<D, FD, FM>(
+    engine: &TrialEngine,
+    make_decoder: FD,
+    fill_mask: FM,
+    runs: usize,
+    rng: &mut Rng,
+) -> crate::gd::analysis::DecodingStats
+where
+    D: Decoder,
+    FD: Fn(usize) -> D + Sync,
+    FM: Fn(usize, &mut Rng, &mut Vec<bool>) + Sync,
+{
+    assert!(runs >= 2);
+    let samples = engine.run_map(
+        runs,
+        |chunk| DecodeCtx { decoder: make_decoder(chunk), out: Decoding::empty(), mask: Vec::new() },
+        |ctx, t, trial_rng| {
+            fill_mask(t, trial_rng, &mut ctx.mask);
+            ctx.decoder.decode_into(&ctx.mask, &mut ctx.out);
+            ctx.out.alpha.clone()
+        },
+    );
+    crate::gd::analysis::stats_from_samples(samples, rng)
+}
+
+/// Bernoulli(p) mask filler for the common random-straggler sweeps.
+pub fn bernoulli_masks(m: usize, p: f64) -> impl Fn(usize, &mut Rng, &mut Vec<bool>) + Sync {
+    move |_t, rng, mask| rng.bernoulli_mask_into(m, p, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codes::{GradientCode, GraphCode};
+    use crate::decode::OptimalGraphDecoder;
+
+    #[test]
+    fn run_map_returns_results_in_trial_order() {
+        let engine = TrialEngine::new(4, 9).with_chunk(3);
+        let out = engine.run_map(17, |_c| (), |_ctx, t, _rng| t * 10);
+        assert_eq!(out, (0..17).map(|t| t * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn trial_rng_is_stable_per_trial() {
+        let engine = TrialEngine::new(8, 42);
+        let a: Vec<u64> = (0..5).map(|t| engine.trial_rng(t).next_u64()).collect();
+        let b: Vec<u64> = (0..5).map(|t| engine.trial_rng(t).next_u64()).collect();
+        assert_eq!(a, b);
+        // distinct trials get distinct streams
+        assert!(a.windows(2).all(|w| w[0] != w[1]));
+        // distinct seeds get distinct streams
+        let c = TrialEngine::new(8, 43).trial_rng(0).next_u64();
+        assert_ne!(a[0], c);
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(0);
+        let code = GraphCode::random_regular(24, 4, &mut rng);
+        let g = &code.graph;
+        let m = code.n_machines();
+        let run = |threads: usize| {
+            let engine = TrialEngine::new(threads, 7).with_chunk(8);
+            decoding_error_sweep(
+                &engine,
+                |_c| OptimalGraphDecoder::new(g),
+                bernoulli_masks(m, 0.25),
+                200,
+            )
+        };
+        let s1 = run(1);
+        let s8 = run(8);
+        assert_eq!(s1.count(), s8.count());
+        assert_eq!(s1.mean().to_bits(), s8.mean().to_bits());
+        assert_eq!(s1.var().to_bits(), s8.var().to_bits());
+        assert_eq!(s1.min().to_bits(), s8.min().to_bits());
+        assert_eq!(s1.max().to_bits(), s8.max().to_bits());
+    }
+
+    #[test]
+    fn chunk_context_is_rebuilt_per_chunk() {
+        let engine = TrialEngine::new(1, 1).with_chunk(4);
+        // ctx counts trials within its chunk; every chunk must restart at 0
+        let counts = engine.run_map(
+            10,
+            |_c| 0usize,
+            |ctx, _t, _rng| {
+                *ctx += 1;
+                *ctx
+            },
+        );
+        assert_eq!(counts, vec![1, 2, 3, 4, 1, 2, 3, 4, 1, 2]);
+    }
+
+    #[test]
+    fn zero_trials_is_empty() {
+        let engine = TrialEngine::new(4, 0);
+        let out: Vec<u8> = engine.run_map(0, |_c| (), |_ctx, _t, _rng| 0u8);
+        assert!(out.is_empty());
+    }
+}

@@ -1,5 +1,9 @@
 //! Coordinator integration: the distributed Algorithm-2 cluster over
 //! the real PJRT worker path, plus failure-injection behaviours.
+//! Environment-bound behind the `pjrt` feature (needs the vendored
+//! xla/anyhow dependencies and `make artifacts`); the native-backend
+//! coordinator is covered by the unit tests in src/coordinator/.
+#![cfg(feature = "pjrt")]
 
 use gcod::codes::{GradientCode, GraphCode};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};

@@ -57,7 +57,7 @@ fn table1_adversarial_factor_two() {
     let gmask = graph_isolation_attack(&g.graph, budget);
     let gerr = OptimalGraphDecoder::new(&g.graph).decode(&gmask).error_sq() / 64.0;
     let fmask = frc_group_attack(&frc, budget);
-    let ferr = FrcOptimalDecoder { code: &frc }.decode(&fmask).error_sq() / 64.0;
+    let ferr = FrcOptimalDecoder::new(&frc).decode(&fmask).error_sq() / 64.0;
 
     // frc: exactly p (kills pm/d whole groups)
     assert!((ferr - p).abs() < 0.05, "frc adversarial {ferr} vs p {p}");

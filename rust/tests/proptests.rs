@@ -66,6 +66,43 @@ fn prop_graph_decoder_is_optimal() {
     });
 }
 
+/// decode_into == decode (bit for bit) on freshly built decoders, for
+/// every scheme/decoder pair in the zoo and any mask (the allocation-free
+/// path must be the same computation as the allocating wrapper).
+#[test]
+fn prop_decode_into_equals_decode() {
+    check("decode-into-equals-decode", 60, |g| {
+        let specs = [
+            SchemeSpec::GraphRandomRegular { n: 12, d: 3 },
+            SchemeSpec::Frc { n: 12, m: 12, d: 4 },
+            SchemeSpec::ExpanderAdj { n: 12, d: 3 },
+            SchemeSpec::Brc { n: 12, m: 12, batch: 4 },
+        ];
+        let spec = g.choice(&specs).clone();
+        let s = build(&spec, g.rng);
+        let dspec = *g.choice(&[DecoderSpec::Optimal, DecoderSpec::Fixed, DecoderSpec::Ignore]);
+        let p = g.f64_in(0.0, 1.0);
+        let mask: Vec<bool> = (0..s.n_machines()).map(|_| g.rng.bernoulli(p)).collect();
+        // two independently-built decoders with identical (empty) history
+        let a = make_decoder(&s, dspec, 0.25).decode(&mask);
+        let mut b = gcod::decode::Decoding::empty();
+        make_decoder(&s, dspec, 0.25).decode_into(&mask, &mut b);
+        prop_assert!(a.w.len() == b.w.len() && a.alpha.len() == b.alpha.len(), "shape");
+        for j in 0..a.w.len() {
+            prop_assert!(a.w[j].to_bits() == b.w[j].to_bits(), "w[{j}]: {} vs {}", a.w[j], b.w[j]);
+        }
+        for i in 0..a.alpha.len() {
+            prop_assert!(
+                a.alpha[i].to_bits() == b.alpha[i].to_bits(),
+                "alpha[{i}]: {} vs {}",
+                a.alpha[i],
+                b.alpha[i]
+            );
+        }
+        Ok(())
+    });
+}
+
 /// Stragglers never get weight; all-straggle decodes to alpha = 0.
 #[test]
 fn prop_straggler_weights_zero() {

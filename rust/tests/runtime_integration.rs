@@ -1,5 +1,8 @@
 //! Runtime integration: execute the real AOT artifacts and pin their
-//! numerics against the pure-rust oracles. Requires `make artifacts`.
+//! numerics against the pure-rust oracles. Requires `make artifacts`
+//! and the `pjrt` feature (environment-bound: needs the vendored
+//! xla/anyhow dependencies and the PJRT CPU client).
+#![cfg(feature = "pjrt")]
 
 use gcod::data::LstsqData;
 use gcod::prng::Rng;

@@ -1,0 +1,212 @@
+//! Determinism contracts of the batched decoding + trial engine stack:
+//!
+//! * `decode_into` is bit-exactly the same computation as `decode` for
+//!   all five decoders (decode() is a thin wrapper; for the stateful
+//!   warm-started LSQR decoder, two instances fed the same mask history
+//!   must agree bit for bit);
+//! * `TrialEngine` reductions are identical for 1 vs 8 threads;
+//! * the engine-parallel greedy adversarial attack returns the serial
+//!   attack's mask.
+
+use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
+use gcod::codes::{FrcCode, GradientCode, GraphCode};
+use gcod::decode::{
+    Decoder, Decoding, FixedDecoder, FrcOptimalDecoder, GenericOptimalDecoder,
+    IgnoreStragglersDecoder, OptimalGraphDecoder,
+};
+use gcod::prng::Rng;
+use gcod::straggler::{greedy_decode_attack, greedy_decode_attack_on};
+use gcod::sweep::{bernoulli_masks, decoding_error_sweep, decoding_stats_par, TrialEngine};
+
+fn assert_bit_equal(a: &Decoding, b: &Decoding, ctx: &str) {
+    assert_eq!(a.w.len(), b.w.len(), "{ctx}: w length");
+    assert_eq!(a.alpha.len(), b.alpha.len(), "{ctx}: alpha length");
+    for j in 0..a.w.len() {
+        assert_eq!(a.w[j].to_bits(), b.w[j].to_bits(), "{ctx}: w[{j}]");
+    }
+    for i in 0..a.alpha.len() {
+        assert_eq!(a.alpha[i].to_bits(), b.alpha[i].to_bits(), "{ctx}: alpha[{i}]");
+    }
+}
+
+/// Feed two independently-constructed decoder instances the same mask
+/// sequence: one through `decode()`, one through `decode_into` with a
+/// reused buffer. Results must agree bit for bit on every trial.
+fn check_decode_into_equiv<A: Decoder, B: Decoder>(
+    via_decode: &A,
+    via_into: &B,
+    m: usize,
+    masks: usize,
+    p: f64,
+    seed: u64,
+) {
+    let mut rng = Rng::new(seed);
+    let mut out = Decoding { w: vec![f64::NAN; 1], alpha: vec![f64::NAN; 3] }; // stale junk
+    for trial in 0..masks {
+        let mask = rng.bernoulli_mask(m, p);
+        let d = via_decode.decode(&mask);
+        via_into.decode_into(&mask, &mut out);
+        assert_bit_equal(&d, &out, &format!("{} trial {trial}", via_decode.name()));
+    }
+}
+
+#[test]
+fn decode_into_matches_decode_graph() {
+    let mut rng = Rng::new(1);
+    let code = GraphCode::random_regular(20, 4, &mut rng);
+    check_decode_into_equiv(
+        &OptimalGraphDecoder::new(&code.graph),
+        &OptimalGraphDecoder::new(&code.graph),
+        code.n_machines(),
+        50,
+        0.3,
+        7,
+    );
+}
+
+#[test]
+fn decode_into_matches_decode_lsqr_warm() {
+    let mut rng = Rng::new(2);
+    let code = GraphCode::random_regular(16, 4, &mut rng);
+    let a = code.assignment();
+    // identical construction => identical warm-start history => bits
+    check_decode_into_equiv(
+        &GenericOptimalDecoder::new(a),
+        &GenericOptimalDecoder::new(a),
+        a.cols,
+        50,
+        0.2,
+        8,
+    );
+}
+
+#[test]
+fn decode_into_matches_decode_fixed() {
+    let mut rng = Rng::new(3);
+    let code = GraphCode::random_regular(18, 3, &mut rng);
+    let a = code.assignment();
+    check_decode_into_equiv(
+        &FixedDecoder::new(a, 0.25),
+        &FixedDecoder::new(a, 0.25),
+        a.cols,
+        50,
+        0.25,
+        9,
+    );
+}
+
+#[test]
+fn decode_into_matches_decode_frc() {
+    let code = FrcCode::new(16, 24, 3);
+    check_decode_into_equiv(
+        &FrcOptimalDecoder::new(&code),
+        &FrcOptimalDecoder::new(&code),
+        24,
+        50,
+        0.4,
+        10,
+    );
+}
+
+#[test]
+fn decode_into_matches_decode_ignore() {
+    let code = FrcCode::new(12, 12, 3);
+    let a = code.assignment();
+    check_decode_into_equiv(
+        &IgnoreStragglersDecoder { a, weight: 1.25 },
+        &IgnoreStragglersDecoder { a, weight: 1.25 },
+        12,
+        50,
+        0.35,
+        11,
+    );
+}
+
+/// The headline contract: a Monte-Carlo sweep accumulates identical
+/// metrics on 1 thread and on 8, for both a stateless decoder and the
+/// stateful warm-started LSQR decoder (chunk-scoped state).
+#[test]
+fn engine_one_thread_equals_eight_threads() {
+    let mut rng = Rng::new(4);
+    let code = GraphCode::random_regular(32, 4, &mut rng);
+    let g = &code.graph;
+    let a = code.assignment();
+    let m = code.n_machines();
+
+    let graph_sweep = |threads: usize| {
+        let engine = TrialEngine::new(threads, 0xD15C).with_chunk(8);
+        decoding_error_sweep(&engine, |_c| OptimalGraphDecoder::new(g), bernoulli_masks(m, 0.25), 256)
+    };
+    let s1 = graph_sweep(1);
+    let s8 = graph_sweep(8);
+    assert_eq!(s1.count(), s8.count());
+    assert_eq!(s1.mean().to_bits(), s8.mean().to_bits(), "graph mean");
+    assert_eq!(s1.var().to_bits(), s8.var().to_bits(), "graph var");
+    assert_eq!(s1.min().to_bits(), s8.min().to_bits(), "graph min");
+    assert_eq!(s1.max().to_bits(), s8.max().to_bits(), "graph max");
+
+    let lsqr_sweep = |threads: usize| {
+        let engine = TrialEngine::new(threads, 0xD15C).with_chunk(8);
+        decoding_error_sweep(&engine, |_c| GenericOptimalDecoder::new(a), bernoulli_masks(m, 0.2), 96)
+    };
+    let l1 = lsqr_sweep(1);
+    let l8 = lsqr_sweep(8);
+    assert_eq!(l1.mean().to_bits(), l8.mean().to_bits(), "lsqr mean (warm-start chunking)");
+    assert_eq!(l1.var().to_bits(), l8.var().to_bits(), "lsqr var");
+}
+
+/// Same for the full Figure-3 statistics (normalized error + covariance
+/// norm): the parallel collection and shared reduction must not depend
+/// on the thread count.
+#[test]
+fn decoding_stats_par_thread_invariant() {
+    let mut rng = Rng::new(5);
+    let scheme = build(&SchemeSpec::GraphRandomRegular { n: 16, d: 3 }, &mut rng);
+    let m = scheme.n_machines();
+    let run = |threads: usize| {
+        let engine = TrialEngine::new(threads, 99).with_chunk(16);
+        // power iteration consumes the caller rng: give each run an
+        // identical fresh stream
+        let mut prng = Rng::new(1234);
+        decoding_stats_par(
+            &engine,
+            |_c| make_decoder(&scheme, DecoderSpec::Optimal, 0.2),
+            bernoulli_masks(m, 0.2),
+            200,
+            &mut prng,
+        )
+    };
+    let a = run(1);
+    let b = run(8);
+    assert_eq!(a.mean_err_per_block.to_bits(), b.mean_err_per_block.to_bits());
+    assert_eq!(a.cov_norm.to_bits(), b.cov_norm.to_bits());
+    assert_eq!(a.mean_alpha_scale.to_bits(), b.mean_alpha_scale.to_bits());
+    assert_eq!(a.raw_err_per_block.to_bits(), b.raw_err_per_block.to_bits());
+}
+
+/// The engine-parallel greedy attack selects exactly the serial greedy
+/// attack's machines (deterministic decoder, shared tie-break), and is
+/// itself thread-count-invariant.
+#[test]
+fn parallel_greedy_attack_matches_serial() {
+    let mut rng = Rng::new(6);
+    let code = GraphCode::random_regular(14, 3, &mut rng);
+    let a = code.assignment();
+    let budget = 5;
+    let serial = greedy_decode_attack(&OptimalGraphDecoder::new(&code.graph), a, budget);
+    let par1 = greedy_decode_attack_on(
+        &TrialEngine::new(1, 0),
+        |_c| OptimalGraphDecoder::new(&code.graph),
+        a,
+        budget,
+    );
+    let par8 = greedy_decode_attack_on(
+        &TrialEngine::new(8, 0),
+        |_c| OptimalGraphDecoder::new(&code.graph),
+        a,
+        budget,
+    );
+    assert_eq!(serial, par1, "serial vs 1-thread engine");
+    assert_eq!(par1, par8, "1-thread vs 8-thread engine");
+    assert_eq!(serial.iter().filter(|&&s| s).count(), budget);
+}
