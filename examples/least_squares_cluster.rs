@@ -10,7 +10,8 @@
 //! the paper's 60000 x 20000 — same code path, laptop-sized); pass
 //! --n-points/--dim to grow it (requires re-lowering artifacts).
 //!
-//! Run: `cargo run --release --example least_squares_cluster -- [--p 0.2] [--iters 30] [--backend pjrt]`
+//! Run: `cargo run --release --example least_squares_cluster --
+//! [--p 0.2] [--iters 30] [--backend pjrt]`
 
 use gcod::bench_util::BenchArgs;
 use gcod::codes::{GradientCode, GraphCode};
@@ -63,7 +64,8 @@ fn main() -> anyhow::Result<()> {
     let report = cluster.run(&cfg, &dec, &vec![0.0; k], |t| data.dist_to_opt(t))?;
     cluster.shutdown();
 
-    let mut table = Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
+    let mut table =
+        Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
     for s in report.iters.iter().step_by((iters / 10).max(1)) {
         table.row(vec![
             s.iter.to_string(),

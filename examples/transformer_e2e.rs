@@ -10,7 +10,8 @@
 //! Loss curves are written to transformer_e2e_loss.csv and summarized
 //! in EXPERIMENTS.md.
 //!
-//! Run: `make artifacts && cargo run --release --example transformer_e2e -- [--iters 300] [--p 0.2]`
+//! Run: `make artifacts && cargo run --release --example transformer_e2e --
+//! [--iters 300] [--p 0.2]`
 
 use gcod::bench_util::BenchArgs;
 use gcod::codes::{GradientCode, GraphCode};
@@ -70,7 +71,8 @@ fn main() -> anyhow::Result<()> {
         let run = trainer.run(&tokens, &eval_tokens, iters, (iters / 10).max(1), Some(&rho))?;
         let dt = t0.elapsed().as_secs_f64();
         println!(
-            "{label:>14}: train CE {:.4} -> {:.4} | eval CE {:.4} -> {:.4} | {:.1}s ({:.0} ms/iter)",
+            "{label:>14}: train CE {:.4} -> {:.4} | eval CE {:.4} -> {:.4} | \
+             {:.1}s ({:.0} ms/iter)",
             run.train_loss[0],
             run.train_loss.last().unwrap(),
             run.eval_loss[0].1,

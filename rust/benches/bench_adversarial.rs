@@ -5,33 +5,81 @@
 //! greedy attack; compare against the spectral upper bound and the p/2
 //! lower bound. Also verifies the error never exceeds Cor. V.2.
 //!
-//! The greedy search evaluates its per-step candidates as parallel
-//! trials on the sweep::TrialEngine (--threads N, default all cores);
-//! the selected attack mask is thread-count-independent.
+//! The greedy search runs on the sweep::shard attack path: the nested
+//! greedy trace gives the whole error-vs-budget curve in one pass and
+//! the trial axis *is* the attack budget. --shard i/k + --out PATH
+//! record only this process's budget slice in a merge-ready manifest
+//! (`gcod sweep-merge` folds the slices bit-exactly) — note the greedy
+//! search is sequential, so each shard still recomputes the trace
+//! prefix up to its own hi; sharding trims the trailing budgets only.
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
 use gcod::gd::analysis::theory;
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
-use gcod::straggler::{frc_group_attack, graph_isolation_attack, greedy_decode_attack_on};
-use gcod::sweep::TrialEngine;
+use gcod::straggler::{frc_group_attack, graph_isolation_attack};
+use gcod::sweep::shard::{self, ShardSpec, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
 
 fn main() {
     let args = BenchArgs::from_env();
     let include_lps = !args.quick();
-    let engine = TrialEngine::new(args.threads(), 0xADA);
+    let shard_spec = match ShardSpec::parse(&args.str_or("--shard", "0/1")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
 
     println!("== adversarial error |alpha*-1|^2/n vs theory ==");
     let mut rng = Rng::new(9);
     let graph = build(&SchemeSpec::GraphRandomRegular { n: 64, d: 4 }, &mut rng);
     let frc = build(&SchemeSpec::Frc { n: 64, m: 128, d: 4 }, &mut rng);
     let bibd = build(&SchemeSpec::Bibd { s: 5 }, &mut rng); // 31 pts, d=6
-    let lambda = gcod::graphs::spectral::spectral_gap(graph.graph.as_ref().unwrap(), 4000, &mut rng);
+    let lambda =
+        gcod::graphs::spectral::spectral_gap(graph.graph.as_ref().unwrap(), 4000, &mut rng);
     println!("graph rr(64,4): spectral gap lambda = {lambda:.3}");
 
+    // the BIBD greedy search as a standard attack sweep: one nested
+    // trace to the largest budget on the grid covers every p
+    let max_budget = (P_GRID[P_GRID.len() - 1] * bibd.n_machines() as f64).floor() as usize;
+    let attack_cfg = SweepConfig {
+        sweep: SweepKind::Attack,
+        scheme: "bibd:5".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 0xADA,
+        trials: max_budget,
+        chunk: 1,
+        params: BTreeMap::new(),
+    };
+    let attack = shard::run_shard(&attack_cfg, 1, shard_spec).expect("attack sweep");
+    if let Some(out) = args.get("--out") {
+        match attack.write(std::path::Path::new(out)) {
+            Ok(()) => println!("wrote attack-shard manifest {out}"),
+            Err(e) => eprintln!("{e}"),
+        }
+    }
+    // err/n after budget b = attack value at trial b-1 (when this
+    // process's shard covers it)
+    let bibd_err_at = |budget: usize| -> Option<f64> {
+        if budget == 0 {
+            return Some(0.0);
+        }
+        let t = budget - 1;
+        (attack.lo..attack.hi).contains(&t).then(|| attack.values[t - attack.lo])
+    };
+
     let mut t = Table::new(&[
-        "p", "graph attack", "lower p/2", "CorV.2 bound", "frc attack", "frc theory p", "bibd greedy",
+        "p",
+        "graph attack",
+        "lower p/2",
+        "CorV.2 bound",
+        "frc attack",
+        "frc theory p",
+        "bibd greedy",
     ]);
     for &p in &P_GRID {
         let gb = (p * graph.n_machines() as f64).floor() as usize;
@@ -47,14 +95,7 @@ fn main() {
         let ferr = fdec.decode(&fmask).error_sq() / frc.n_blocks() as f64;
 
         let bb = (p * bibd.n_machines() as f64).floor() as usize;
-        let bdec = make_decoder(&bibd, DecoderSpec::Optimal, p);
-        let bmask = greedy_decode_attack_on(
-            &engine,
-            |_chunk| make_decoder(&bibd, DecoderSpec::Optimal, p),
-            &bibd.a,
-            bb,
-        );
-        let berr = bdec.decode(&bmask).error_sq() / bibd.n_blocks() as f64;
+        let berr = bibd_err_at(bb);
 
         t.row(vec![
             format!("{p:.2}"),
@@ -63,7 +104,7 @@ fn main() {
             sci(bound),
             sci(ferr),
             sci(p),
-            sci(berr),
+            berr.map(sci).unwrap_or_else(|| format!("(shard {shard_spec})")),
         ]);
     }
     t.print();
@@ -72,7 +113,8 @@ fn main() {
         println!("\n== LPS(5,13) full scale (Cor V.3: (1+o(1))/2 * p/(1-p)) ==");
         let lps = build(&SchemeSpec::GraphLps { p: 5, q: 13 }, &mut rng);
         let lam = gcod::graphs::spectral::spectral_gap(lps.graph.as_ref().unwrap(), 2000, &mut rng);
-        let mut t2 = Table::new(&["p", "attack err/n", "lower p/2", "CorV.3 ~ p/(2(1-p))", "CorV.2 bound"]);
+        let mut t2 =
+            Table::new(&["p", "attack err/n", "lower p/2", "CorV.3 ~ p/(2(1-p))", "CorV.2 bound"]);
         for &p in &[0.1, 0.2, 0.3] {
             let b = (p * 6552.0) as usize;
             let mask = graph_isolation_attack(lps.graph.as_ref().unwrap(), b);

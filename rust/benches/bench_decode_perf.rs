@@ -11,7 +11,8 @@
 //! * LSQR warm-starting on the generic decoder.
 //!
 //! Flags: --quick, --threads N (default: all cores), --trials N,
-//! --json PATH (default BENCH_decode.json; "none" disables).
+//! --json PATH (default BENCH_decode.json; "none" disables),
+//! --baseline (write the tracked rust/benches/baselines/ file instead).
 
 use gcod::bench_util::{bench, black_box, fmt_dur, BenchArgs, JsonReport};
 use gcod::codes::{GradientCode, GraphCode};
@@ -165,7 +166,12 @@ fn main() {
         report.push_result(&rg, Some(m), 1);
         report.push_result(&rl, Some(m), 1);
         let speedup = rl.mean.as_secs_f64() / rg.mean.as_secs_f64();
-        t3.row(vec![label.into(), "graph O(m)".into(), fmt_dur(rg.mean), format!("{speedup:.0}x vs lsqr")]);
+        t3.row(vec![
+            label.into(),
+            "graph O(m)".into(),
+            fmt_dur(rg.mean),
+            format!("{speedup:.0}x vs lsqr"),
+        ]);
         t3.row(vec![label.into(), "lsqr".into(), fmt_dur(rl.mean), "1x".into()]);
     }
     t3.print();
@@ -204,7 +210,16 @@ fn main() {
         fmt_dur(r_cold.mean)
     );
 
-    let json = args.str_or("--json", "BENCH_decode.json");
+    // --baseline writes the tracked baseline (diffed by CI and across
+    // commits) instead of the working directory; an explicit --json
+    // PATH always wins.
+    let json = match args.get("--json") {
+        Some(path) => path.to_string(),
+        None if args.has("--baseline") => {
+            format!("{}/benches/baselines/BENCH_decode.json", env!("CARGO_MANIFEST_DIR"))
+        }
+        None => "BENCH_decode.json".to_string(),
+    };
     if json != "none" {
         match report.write(std::path::Path::new(&json)) {
             Ok(()) => println!("\nwrote {json}"),

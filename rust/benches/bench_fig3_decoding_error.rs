@@ -15,13 +15,22 @@
 //! The Monte-Carlo draws run on the sweep::TrialEngine: per-trial PRNG
 //! substreams + ordered reduction, so the numbers are identical for any
 //! --threads value.
+//!
+//! Sharded mode: --shard i/k [--out-dir DIR] [--trials N] switches to
+//! the sweep::shard decode-error path — one manifest per (regime-1 arm,
+//! p), covering this process's slice of the trials; merge the k
+//! processes' manifests per combo with `gcod sweep-merge` for results
+//! bit-identical to a single-process run.
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
 use gcod::gd::analysis::theory;
 use gcod::metrics::{sci, Stats, Table};
 use gcod::prng::Rng;
+use gcod::sweep::shard::{self, ShardSpec, SweepConfig, SweepKind};
 use gcod::sweep::{bernoulli_masks, decoding_stats_par, TrialEngine};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 struct Arm {
     label: &'static str,
@@ -31,7 +40,8 @@ struct Arm {
 
 fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize, threads: usize) {
     println!(
-        "\n== Figure 3 {regime}: E|alpha_bar-1|^2/n over p ({runs} runs x {reps} reps, {threads} threads) =="
+        "\n== Figure 3 {regime}: E|alpha_bar-1|^2/n over p \
+         ({runs} runs x {reps} reps, {threads} threads) =="
     );
     let mut err_table = Table::new(&{
         let mut h = vec!["p"];
@@ -71,7 +81,8 @@ fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize, threads: 
             cov_row.push(format!("{}±{}", sci(covs.mean()), sci(covs.std())));
         }
         err_row.push(sci(theory::optimal_lower_bound(p, d)));
-        cov_row.push(sci(2.0 * theory::optimal_lower_bound(p, d))); // ell=2 blocks/machine at n=N... see Fig 3 text
+        // ell=2 blocks/machine at n=N... see Fig 3 text
+        cov_row.push(sci(2.0 * theory::optimal_lower_bound(p, d)));
         err_table.row(err_row);
         cov_table.row(cov_row);
     }
@@ -81,8 +92,72 @@ fn sweep(regime: &str, arms: &[Arm], d: f64, runs: usize, reps: usize, threads: 
     cov_table.print();
 }
 
+/// Sharded manifest mode: the regime-1 arms as standard decode-error
+/// sweeps, one shard manifest per (arm, p).
+fn run_shard_mode(args: &BenchArgs, spec: ShardSpec) {
+    let trials = args.usize_or("--trials", 10_000);
+    let threads = args.threads();
+    let out_dir = PathBuf::from(args.str_or("--out-dir", "fig3_shards"));
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("cannot create --out-dir {}: {e}", out_dir.display());
+        std::process::exit(2);
+    }
+    let arms: [(&str, &str, &str); 4] = [
+        ("a1_optimal", "graph-rr:16,3", "optimal"),
+        ("a1_fixed", "graph-rr:16,3", "fixed"),
+        ("expander_optimal", "expander:24,3", "optimal"),
+        ("frc_optimal", "frc:16,24,3", "optimal"),
+    ];
+    println!(
+        "== Figure 3 sharded mode: shard {spec}, {trials} trials/combo, {threads} threads =="
+    );
+    for (name, scheme, decoder) in arms {
+        for &p in &P_GRID {
+            let cfg = SweepConfig {
+                sweep: SweepKind::DecodeError,
+                scheme: scheme.into(),
+                decoder: decoder.into(),
+                p,
+                seed: 1000 + (p * 1000.0).round() as u64,
+                trials,
+                chunk: 32,
+                params: BTreeMap::new(),
+            };
+            let res = shard::run_shard(&cfg, threads, spec).expect("decode-error sweep");
+            let path = out_dir.join(format!(
+                "fig3_{name}_p{:03}_shard{}of{}.json",
+                (p * 100.0).round() as u32,
+                spec.index,
+                spec.count
+            ));
+            match res.write(&path) {
+                Ok(()) => println!(
+                    "  {name} p={p:.2}: trials [{}, {}) mean={} -> {}",
+                    res.lo,
+                    res.hi,
+                    sci(res.stats.mean()),
+                    path.display()
+                ),
+                Err(e) => eprintln!("  {e}"),
+            }
+        }
+    }
+    println!("merge each combo's {} shard(s) with `gcod sweep-merge`.", spec.count);
+}
+
 fn main() {
     let args = BenchArgs::from_env();
+    if let Some(s) = args.get("--shard") {
+        let spec = match ShardSpec::parse(s) {
+            Ok(spec) => spec,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        };
+        run_shard_mode(&args, spec);
+        return;
+    }
     let runs = args.usize_or("--runs", 50);
     let reps = if args.quick() { 2 } else { args.usize_or("--reps", 5) };
     let regime = args.str_or("--regime", "both");

@@ -8,7 +8,14 @@
 //! worker_grad artifacts at the lowered shape k=2000.
 //!
 //! Flags: --iters (default 25), --budget-ms (default 4000, Fig 4b),
-//! --runs (default 2), --pjrt, --quick.
+//! --runs (default 2), --pjrt, --quick, and the sharded-sweep pair
+//! --shard i/k + --out-dir DIR: the Fig 4(b) repetition axis runs on
+//! the shard layer (`sweep::shard`), so `k` processes can each take a
+//! contiguous slice of the runs and write `fig4-cluster` manifests that
+//! `gcod sweep-merge` validates and folds. (Unlike the simulated
+//! sweeps, cluster values depend on real scheduling, so merges check
+//! coverage/config, not bit-reproducibility — for the deterministic
+//! Figure-4 stand-in use `gcod sweep-shard --sweep gd-final`.)
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::{GradientCode, GraphCode};
@@ -17,6 +24,9 @@ use gcod::data::LstsqData;
 use gcod::decode::{Decoder, FixedDecoder, IgnoreStragglersDecoder, OptimalGraphDecoder};
 use gcod::metrics::{sci, Stats, Table};
 use gcod::prng::Rng;
+use gcod::sweep::shard::{ShardResult, ShardSpec, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::time::Duration;
 
 fn main() {
@@ -24,6 +34,20 @@ fn main() {
     let iters = args.usize_or("--iters", 25);
     let runs = if args.quick() { 1 } else { args.usize_or("--runs", 2) };
     let budget = Duration::from_millis(args.usize_or("--budget-ms", 4000) as u64);
+    let shard_spec = match ShardSpec::parse(&args.str_or("--shard", "0/1")) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    let out_dir: Option<PathBuf> = args.get("--out-dir").map(PathBuf::from);
+    if let Some(dir) = &out_dir {
+        if let Err(e) = std::fs::create_dir_all(dir) {
+            eprintln!("cannot create --out-dir {}: {e}", dir.display());
+            std::process::exit(2);
+        }
+    }
     let pjrt = args.has("--pjrt");
     if pjrt && !cfg!(feature = "pjrt") {
         eprintln!("--pjrt requires building with --features pjrt; falling back to native");
@@ -51,7 +75,8 @@ fn main() {
     };
     let gamma = 2e-5 * (2000.0 / k as f64); // scale with 1/L ~ k/N
 
-    let mut run_one = |p: f64, which: &str, seed: u64, max_dur: Option<Duration>| -> (f64, Vec<f64>, f64) {
+    type RunOut = (f64, Vec<f64>, f64);
+    let run_one = |p: f64, which: &str, seed: u64, max_dur: Option<Duration>| -> RunOut {
         let cfg = ClusterConfig {
             wait_fraction: 1.0 - p,
             backend: backend(),
@@ -83,43 +108,88 @@ fn main() {
     };
 
     // ---- Fig 4(a): convergence curves at p = 0.2 ----
-    println!("\n== Figure 4(a): convergence at p=0.2, |theta_0-theta*|^2 = {} ==", sci(e0));
-    let mut table = Table::new(&["iter", "optimal", "fixed", "ignore"]);
-    let mut curves = Vec::new();
-    for which in ["optimal", "fixed", "ignore"] {
-        let (_, curve, ms) = run_one(0.2, which, 42, None);
-        println!("  {which}: {:.1} ms/iter", ms);
-        curves.push(curve);
+    // the curve section is not trial-indexed; only the primary shard
+    // runs it when the repetition axis is split across processes
+    if shard_spec.index == 0 {
+        println!("\n== Figure 4(a): convergence at p=0.2, |theta_0-theta*|^2 = {} ==", sci(e0));
+        let mut table = Table::new(&["iter", "optimal", "fixed", "ignore"]);
+        let mut curves = Vec::new();
+        for which in ["optimal", "fixed", "ignore"] {
+            let (_, curve, ms) = run_one(0.2, which, 42, None);
+            println!("  {which}: {:.1} ms/iter", ms);
+            curves.push(curve);
+        }
+        let len = curves.iter().map(|c| c.len()).min().unwrap_or(0);
+        for i in (0..len).step_by((len / 10).max(1)) {
+            table.row(vec![
+                i.to_string(),
+                sci(curves[0][i]),
+                sci(curves[1][i]),
+                sci(curves[2][i]),
+            ]);
+        }
+        table.print();
+    } else {
+        println!("\n(shard {shard_spec}: skipping Figure 4(a), it is not trial-indexed)");
     }
-    let len = curves.iter().map(|c| c.len()).min().unwrap_or(0);
-    for i in (0..len).step_by((len / 10).max(1)) {
-        table.row(vec![
-            i.to_string(),
-            sci(curves[0][i]),
-            sci(curves[1][i]),
-            sci(curves[2][i]),
-        ]);
-    }
-    table.print();
 
     // ---- Fig 4(b): error after a fixed time budget across p ----
+    // the repetition axis rides the shard layer: this process runs runs
+    // [lo, hi) of [0, runs) and can emit a manifest per (p, decoder)
+    let (run_lo, run_hi) = shard_spec.range(runs);
     println!(
-        "\n== Figure 4(b): |theta-theta*|^2 after {:?} budget ({runs} runs) ==",
-        budget
+        "\n== Figure 4(b): |theta-theta*|^2 after {budget:?} budget \
+         (runs [{run_lo}, {run_hi}) of {runs}) =="
     );
     let ps: Vec<f64> = if args.quick() { vec![0.1, 0.2, 0.3] } else { P_GRID.to_vec() };
     let mut t2 = Table::new(&["p", "optimal", "fixed", "ignore"]);
     for &p in &ps {
         let mut row = vec![format!("{p:.2}")];
         for which in ["optimal", "fixed", "ignore"] {
-            let mut st = Stats::new();
-            for r in 0..runs {
+            let mut values = Vec::with_capacity(run_hi - run_lo);
+            for r in run_lo..run_hi {
                 let (fin, _, _) = run_one(p, which, 100 + r as u64, Some(budget));
-                st.push(fin);
+                values.push(fin);
             }
+            if let Some(dir) = &out_dir {
+                let mut params = BTreeMap::new();
+                params.insert("iters".into(), iters.to_string());
+                params.insert("budget-ms".into(), budget.as_millis().to_string());
+                params.insert("dim".into(), k.to_string());
+                params.insert("backend".into(), if pjrt { "pjrt" } else { "native" }.into());
+                let cfg = SweepConfig {
+                    sweep: SweepKind::Fig4Cluster,
+                    scheme: "graph-rr:16,3".into(),
+                    decoder: which.into(),
+                    p,
+                    seed: 100,
+                    trials: runs,
+                    chunk: 1,
+                    params,
+                };
+                let res = ShardResult::from_values(cfg, run_lo, run_hi, values.clone());
+                let path = dir.join(format!(
+                    "fig4b_p{:03}_{which}_shard{}of{}.json",
+                    (p * 100.0).round() as u32,
+                    shard_spec.index,
+                    shard_spec.count
+                ));
+                match res.write(&path) {
+                    Ok(()) => println!("  wrote {}", path.display()),
+                    Err(e) => eprintln!("  {e}"),
+                }
+            }
+            let st = Stats::from_values(&values);
             row.push(format!("{}±{}", sci(st.mean()), sci(st.std())));
         }
         t2.row(row);
+    }
+    if shard_spec.count > 1 {
+        println!(
+            "(partial table: shard {shard_spec} ran {} of {runs} runs per cell —",
+            run_hi - run_lo
+        );
+        println!(" merge the manifests with `gcod sweep-merge` for the full statistics)");
     }
     t2.print();
     println!("\nexpected shape (paper Fig. 4): optimal reaches machine-precision-ish");

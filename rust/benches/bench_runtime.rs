@@ -23,13 +23,18 @@ fn main() {
     // qs block grad: 16x8x32
     {
         let exe = rt.load("block_grad_qs_16x8x32").unwrap();
-        let theta = Tensor::f32(&[32], rng.gaussian_vec(32, 1.0).iter().map(|&v| v as f32).collect());
+        let theta =
+            Tensor::f32(&[32], rng.gaussian_vec(32, 1.0).iter().map(|&v| v as f32).collect());
         let x = Tensor::f32(&[16, 8, 32], (0..4096).map(|_| rng.gaussian() as f32).collect());
         let y = Tensor::f32(&[16, 8], (0..128).map(|_| rng.gaussian() as f32).collect());
         let r = bench("block_grad_qs", 3, budget, 100_000, || {
             black_box(exe.run(&[theta.clone(), x.clone(), y.clone()]).unwrap());
         });
-        t.row(vec!["block_grad_qs_16x8x32".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+        t.row(vec![
+            "block_grad_qs_16x8x32".into(),
+            gcod::bench_util::fmt_dur(r.mean),
+            gcod::bench_util::fmt_dur(r.min),
+        ]);
     }
     // fig5 block grad: 2184x3x200 — the simulated-regime hot dispatch
     {
@@ -42,12 +47,20 @@ fn main() {
         let r = bench("block_grad_fig5 (host)", 2, budget, 10_000, || {
             black_box(exe.run(&[theta.clone(), x.clone(), y.clone()]).unwrap());
         });
-        t.row(vec!["block_grad_fig5 host-inputs".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+        t.row(vec![
+            "block_grad_fig5 host-inputs".into(),
+            gcod::bench_util::fmt_dur(r.mean),
+            gcod::bench_util::fmt_dur(r.min),
+        ]);
         let r2 = bench("block_grad_fig5 (device)", 2, budget, 10_000, || {
             let tb = exe.upload(&theta, &rt.client).unwrap();
             black_box(exe.run_b(&[&tb, &xb, &yb]).unwrap());
         });
-        t.row(vec!["block_grad_fig5 device-resident".into(), gcod::bench_util::fmt_dur(r2.mean), gcod::bench_util::fmt_dur(r2.min)]);
+        t.row(vec![
+            "block_grad_fig5 device-resident".into(),
+            gcod::bench_util::fmt_dur(r2.mean),
+            gcod::bench_util::fmt_dur(r2.min),
+        ]);
     }
     // combine
     {
@@ -57,7 +70,11 @@ fn main() {
         let r = bench("decode_combine_fig5", 3, budget, 100_000, || {
             black_box(exe.run(&[g.clone(), w.clone()]).unwrap());
         });
-        t.row(vec!["decode_combine_fig5".into(), gcod::bench_util::fmt_dur(r.mean), gcod::bench_util::fmt_dur(r.min)]);
+        t.row(vec![
+            "decode_combine_fig5".into(),
+            gcod::bench_util::fmt_dur(r.mean),
+            gcod::bench_util::fmt_dur(r.min),
+        ]);
     }
     t.print();
 
@@ -84,7 +101,11 @@ fn main() {
         black_box(exe.run_b(&[&tb, &xbuf, &ybuf]).unwrap());
     });
     let g_host = exe
-        .run(&[theta.clone(), Tensor::f32(&[2184, 3, 200], data.to_f32_buffers().0), Tensor::f32(&[2184, 3], data.to_f32_buffers().1)])
+        .run(&[
+            theta.clone(),
+            Tensor::f32(&[2184, 3, 200], data.to_f32_buffers().0),
+            Tensor::f32(&[2184, 3], data.to_f32_buffers().1),
+        ])
         .unwrap()
         .into_iter()
         .next()

@@ -32,7 +32,8 @@ fn main() {
         Row { label: "expander code [6] (fixed)", spec: SchemeSpec::ExpanderAdj { n: 24, d: 3 },
               dec: DecoderSpec::Fixed,
               theory_note: format!("worst < 4p/(d(1-p)) = {}", sci(4.0 * p / (d * (1.0 - p)))) },
-        Row { label: "pairwise balanced [5] (fixed)", spec: SchemeSpec::Pairwise { n: 16, m: 24, d: 3 },
+        Row { label: "pairwise balanced [5] (fixed)",
+              spec: SchemeSpec::Pairwise { n: 16, m: 24, d: 3 },
               dec: DecoderSpec::Fixed,
               theory_note: format!("E >= p/(d(1-p)) = {}", sci(theory::fixed_lower_bound(p, d))) },
         Row { label: "BIBD [7] (optimal=fixed)", spec: SchemeSpec::Bibd { s: 3 },
@@ -47,7 +48,8 @@ fn main() {
         Row { label: "FRC [4] (optimal)", spec: SchemeSpec::Frc { n: 16, m: 24, d: 3 },
               dec: DecoderSpec::Optimal,
               theory_note: format!("E = p^d = {}; worst = p = {}", sci(p.powf(d)), sci(p)) },
-        Row { label: "THIS PAPER graph (optimal)", spec: SchemeSpec::GraphRandomRegular { n: 16, d: 3 },
+        Row { label: "THIS PAPER graph (optimal)",
+              spec: SchemeSpec::GraphRandomRegular { n: 16, d: 3 },
               dec: DecoderSpec::Optimal,
               theory_note: format!("E = p^(d-o(d)) = {}; worst ~ p/(2(1-p)) = {}",
                                    sci(theory::optimal_lower_bound(p, d)),

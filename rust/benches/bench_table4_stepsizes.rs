@@ -27,8 +27,18 @@ fn main() {
     let data = LstsqData::generate(512, 48, n_blocks, 1.0, &mut rng);
 
     let arms: Vec<(&str, SchemeSpec, DecoderSpec, usize)> = vec![
-        ("A (graph) optimal", SchemeSpec::GraphRandomRegular { n: n_blocks, d: 6 }, DecoderSpec::Optimal, 1),
-        ("A (graph) fixed", SchemeSpec::GraphRandomRegular { n: n_blocks, d: 6 }, DecoderSpec::Fixed, 1),
+        (
+            "A (graph) optimal",
+            SchemeSpec::GraphRandomRegular { n: n_blocks, d: 6 },
+            DecoderSpec::Optimal,
+            1,
+        ),
+        (
+            "A (graph) fixed",
+            SchemeSpec::GraphRandomRegular { n: n_blocks, d: 6 },
+            DecoderSpec::Fixed,
+            1,
+        ),
         ("uncoded (6x iters)", SchemeSpec::Uncoded { n: n_blocks }, DecoderSpec::Ignore, 6),
         ("expander [6] fixed", SchemeSpec::ExpanderAdj { n: 128, d: 6 }, DecoderSpec::Fixed, 1),
         ("FRC [4] optimal", SchemeSpec::Frc { n: n_blocks, m: 192, d: 6 }, DecoderSpec::Optimal, 1),
@@ -36,7 +46,8 @@ fn main() {
 
     println!("== Table IV (simulated regime grid, c in 0..=20{}) ==",
              if step > 1 { " step 4 (--quick)" } else { "" });
-    let mut t = Table::new(&["assignment/decoder", "p=0.05", "0.10", "0.15", "0.20", "0.25", "0.30"]);
+    let mut t =
+        Table::new(&["assignment/decoder", "p=0.05", "0.10", "0.15", "0.20", "0.25", "0.30"]);
     for (label, spec, dspec, mult) in arms {
         let mut row = vec![label.to_string()];
         for &p in &P_GRID {
@@ -58,7 +69,11 @@ fn main() {
                         step: stepsize,
                         rho: Some(rng2.permutation(scheme.n_blocks())),
                         m: scheme.n_machines(),
-                        alpha_scale: if dspec == DecoderSpec::Ignore { 1.0 / (1.0 - p) } else { 1.0 },
+                        alpha_scale: if dspec == DecoderSpec::Ignore {
+                            1.0 / (1.0 - p)
+                        } else {
+                            1.0
+                        },
                     };
                     let mut src = &data;
                     eng.run(&mut src, &vec![0.0; 48], iters * mult).final_progress()

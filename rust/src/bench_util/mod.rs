@@ -45,7 +45,13 @@ pub fn fmt_dur(d: Duration) -> String {
 
 /// Run `f` repeatedly: `warmup` unmeasured calls, then measured calls
 /// until `budget` elapses or `max_iters` is reached (min 3 iters).
-pub fn bench<F: FnMut()>(name: &str, warmup: u64, budget: Duration, max_iters: u64, mut f: F) -> BenchResult {
+pub fn bench<F: FnMut()>(
+    name: &str,
+    warmup: u64,
+    budget: Duration,
+    max_iters: u64,
+    mut f: F,
+) -> BenchResult {
     for _ in 0..warmup {
         f();
     }
@@ -166,7 +172,13 @@ pub struct JsonReport {
     records: Vec<JsonRecord>,
 }
 
-fn json_escape(s: &str) -> String {
+/// Schema version stamped into `BENCH_*.json` reports.
+pub const BENCH_SCHEMA: u64 = 1;
+
+/// Escape a string for embedding in the hand-rolled JSON writers (this
+/// report and the sweep shard manifests — no serde in the offline
+/// build).
+pub fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
         match c {
@@ -183,6 +195,34 @@ fn json_escape(s: &str) -> String {
 fn json_f64(x: f64) -> String {
     if x.is_finite() {
         format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Bit-exact f64 serialization for cross-process merging: the IEEE-754
+/// bit pattern as 16 lowercase hex digits. Decimal JSON numbers are kept
+/// alongside for humans, but merges parse this field so every value
+/// round-trips exactly — including -0.0, infinities and NaNs, which
+/// decimal JSON cannot carry.
+pub fn f64_to_hex_bits(x: f64) -> String {
+    format!("{:016x}", x.to_bits())
+}
+
+/// Inverse of [`f64_to_hex_bits`].
+pub fn f64_from_hex_bits(s: &str) -> Option<f64> {
+    if s.len() != 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok().map(f64::from_bits)
+}
+
+/// Human-readable decimal for manifest JSON: Rust's shortest
+/// round-trip `Display` for finite values, `null` otherwise (JSON has
+/// no inf/nan literals; the `_bits` sibling is authoritative).
+pub fn json_f64_display(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
     } else {
         "null".to_string()
     }
@@ -213,7 +253,7 @@ impl JsonReport {
         let mut out = String::new();
         out.push_str("{\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(&self.bench)));
-        out.push_str("  \"schema\": 1,\n");
+        out.push_str(&format!("  \"schema\": {BENCH_SCHEMA},\n"));
         out.push_str("  \"results\": [\n");
         for (i, r) in self.records.iter().enumerate() {
             let per_edge = match r.ns_per_edge {
@@ -221,7 +261,8 @@ impl JsonReport {
                 None => "null".to_string(),
             };
             out.push_str(&format!(
-                "    {{\"name\": \"{}\", \"mean_ns\": {}, \"ns_per_edge\": {}, \"threads\": {}, \"iters\": {}}}{}\n",
+                "    {{\"name\": \"{}\", \"mean_ns\": {}, \"ns_per_edge\": {}, \
+                 \"threads\": {}, \"iters\": {}}}{}\n",
                 json_escape(&r.name),
                 json_f64(r.mean_ns),
                 per_edge,
@@ -269,6 +310,30 @@ mod tests {
         assert_eq!(a.f64_or("--p", 0.0), 0.2);
         assert!(a.quick());
         assert_eq!(a.usize_or("--runs", 50), 50);
+    }
+
+    #[test]
+    fn f64_hex_bits_round_trip() {
+        for x in [0.0, -0.0, 1.5, -3.25e-30, f64::INFINITY, f64::NEG_INFINITY, f64::MIN_POSITIVE] {
+            let s = f64_to_hex_bits(x);
+            assert_eq!(s.len(), 16);
+            assert_eq!(f64_from_hex_bits(&s).unwrap().to_bits(), x.to_bits(), "{x}");
+        }
+        // NaN payload preserved bit-for-bit
+        let nan = f64::from_bits(0x7ff8_0000_0000_1234);
+        assert_eq!(f64_from_hex_bits(&f64_to_hex_bits(nan)).unwrap().to_bits(), nan.to_bits());
+        assert!(f64_from_hex_bits("xyz").is_none());
+        assert!(f64_from_hex_bits("0").is_none());
+    }
+
+    #[test]
+    fn json_f64_display_round_trips_and_guards() {
+        for x in [0.1, -7.25, 1e300, 4.9e-324] {
+            let s = json_f64_display(x);
+            assert_eq!(s.parse::<f64>().unwrap().to_bits(), x.to_bits(), "{x}");
+        }
+        assert_eq!(json_f64_display(f64::NAN), "null");
+        assert_eq!(json_f64_display(f64::INFINITY), "null");
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub struct CommandSpec {
 pub struct Invocation {
     pub command: String,
     values: BTreeMap<String, String>,
+    /// every explicit --flag value occurrence, in argv order (defaults
+    /// are not recorded here) — for repeatable flags like `--input`
+    repeated: Vec<(String, String)>,
     switches: Vec<String>,
     /// --set key=value overrides, applied to Settings by the caller
     pub overrides: Vec<String>,
@@ -48,6 +51,18 @@ pub struct Invocation {
 impl Invocation {
     pub fn get(&self, flag: &str) -> Option<&str> {
         self.values.get(flag).map(|s| s.as_str())
+    }
+
+    /// All explicitly-passed values of a repeatable flag, in argv
+    /// order. Empty if the flag was never passed (defaults don't
+    /// count); [`Invocation::get`] still returns the last occurrence
+    /// (or the default).
+    pub fn get_all(&self, flag: &str) -> Vec<&str> {
+        self.repeated
+            .iter()
+            .filter(|(name, _)| name == flag)
+            .map(|(_, v)| v.as_str())
+            .collect()
     }
 
     pub fn str_or(&self, flag: &str, default: &str) -> String {
@@ -119,6 +134,7 @@ impl App {
         let mut inv = Invocation {
             command: cmd_name.clone(),
             values: BTreeMap::new(),
+            repeated: Vec::new(),
             switches: Vec::new(),
             overrides: Vec::new(),
         };
@@ -160,6 +176,7 @@ impl App {
                     .get(i + 1)
                     .ok_or_else(|| CliError(format!("--{name} needs a value")))?;
                 inv.values.insert(name.to_string(), v.clone());
+                inv.repeated.push((name.to_string(), v.clone()));
                 i += 2;
             }
         }
@@ -208,6 +225,21 @@ mod tests {
         assert_eq!(inv.usize_or("iters", 0), 50); // default
         assert!(inv.switch("verbose"));
         assert!(!inv.switch("other"));
+    }
+
+    #[test]
+    fn repeated_flags_collect_in_order() {
+        let inv = app()
+            .parse(&argv(&["train", "--p", "0.1", "--p", "0.3", "--iters", "9"]))
+            .unwrap();
+        assert_eq!(inv.get_all("p"), vec!["0.1", "0.3"]);
+        assert_eq!(inv.get_all("iters"), vec!["9"]);
+        // defaults never appear in get_all, get() sees the last value
+        assert!(inv.get_all("missing").is_empty());
+        let with_default = app().parse(&argv(&["train"])).unwrap();
+        assert!(with_default.get_all("iters").is_empty());
+        assert_eq!(with_default.usize_or("iters", 0), 50);
+        assert_eq!(inv.f64_or("p", 0.0), 0.3);
     }
 
     #[test]

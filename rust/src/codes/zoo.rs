@@ -124,11 +124,21 @@ pub fn build(spec: &SchemeSpec, rng: &mut Rng) -> BuiltScheme {
     match spec {
         SchemeSpec::GraphRandomRegular { n, d } => {
             let c = GraphCode::random_regular(*n, *d, rng);
-            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: Some(c.graph), frc: None }
+            BuiltScheme {
+                name: c.name(),
+                a: c.assignment().clone(),
+                graph: Some(c.graph),
+                frc: None,
+            }
         }
         SchemeSpec::GraphLps { p, q } => {
             let c = GraphCode::lps(*p, *q);
-            BuiltScheme { name: c.name(), a: c.assignment().clone(), graph: Some(c.graph), frc: None }
+            BuiltScheme {
+                name: c.name(),
+                a: c.assignment().clone(),
+                graph: Some(c.graph),
+                frc: None,
+            }
         }
         SchemeSpec::Frc { n, m, d } => {
             let c = FrcCode::new(*n, *m, *d);
@@ -188,7 +198,11 @@ impl DecoderSpec {
 }
 
 /// Build the decoder for a scheme. `p` calibrates fixed coefficients.
-pub fn make_decoder<'a>(scheme: &'a BuiltScheme, spec: DecoderSpec, p: f64) -> Box<dyn Decoder + 'a> {
+pub fn make_decoder<'a>(
+    scheme: &'a BuiltScheme,
+    spec: DecoderSpec,
+    p: f64,
+) -> Box<dyn Decoder + 'a> {
     match spec {
         DecoderSpec::Optimal => {
             if let Some(g) = &scheme.graph {

@@ -146,7 +146,8 @@ mod tests {
     #[test]
     fn parses_sections_and_types() {
         let s = Settings::parse(
-            "top = 1\n[run]\np = 0.2 # straggler rate\nname = \"fig4\"\niters = 50\nflag = true\nps = [0.05, 0.1]\n",
+            "top = 1\n[run]\np = 0.2 # straggler rate\nname = \"fig4\"\n\
+             iters = 50\nflag = true\nps = [0.05, 0.1]\n",
         )
         .unwrap();
         assert_eq!(s.usize_or("top", 0), 1);

@@ -163,7 +163,13 @@ impl TokenCorpus {
     }
 
     /// Slice into (n_blocks, batch, seq+1) i32 blocks, row-major.
-    pub fn blocks(&self, n_blocks: usize, batch: usize, seq_plus1: usize, rng: &mut Rng) -> Vec<i32> {
+    pub fn blocks(
+        &self,
+        n_blocks: usize,
+        batch: usize,
+        seq_plus1: usize,
+        rng: &mut Rng,
+    ) -> Vec<i32> {
         let per_seq = seq_plus1;
         let total = n_blocks * batch * per_seq;
         let mut out = Vec::with_capacity(total);

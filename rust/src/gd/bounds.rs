@@ -31,7 +31,13 @@ pub fn prop_vi1_bound(
 
 /// Corollary VI.2: the step size and iteration count reaching accuracy
 /// eps from dist0_sq. Returns (gamma, k).
-pub fn cor_vi2_schedule(c: &ProblemConstants, r: f64, s: f64, eps: f64, dist0_sq: f64) -> (f64, f64) {
+pub fn cor_vi2_schedule(
+    c: &ProblemConstants,
+    r: f64,
+    s: f64,
+    eps: f64,
+    dist0_sq: f64,
+) -> (f64, f64) {
     let n1 = 1.0 + 1.0 / (c.n as f64 - 1.0);
     let gamma = c.mu * eps
         / (2.0 * c.mu * eps * (s * c.l_prime + c.l) + 2.0 * r * n1 * c.sigma_sq);
@@ -75,7 +81,10 @@ pub fn prop_vi3_iters(c: &ProblemConstants, p: f64, d: f64, eps: f64, dist0_sq: 
 /// (Remark VII.3): mu ~ 2N(1 - sqrt(k/N))... but since rows are scaled
 /// by 1/sqrt(k) in our generator, X^T X ~ (N/k) I at N >> k; we expose
 /// the empirical estimator instead.
-pub fn estimate_lstsq_constants(data: &crate::data::LstsqData, rng: &mut crate::prng::Rng) -> ProblemConstants {
+pub fn estimate_lstsq_constants(
+    data: &crate::data::LstsqData,
+    rng: &mut crate::prng::Rng,
+) -> ProblemConstants {
     // power-iterate X^T X for L = lambda_max; mu via inverse-ish bound
     // from trace: lambda_min >= trace - (n-1) lambda_max is useless;
     // instead use the Gaussian concentration estimate (Remark VII.3)

@@ -26,13 +26,20 @@ pub struct PjrtGcod<'a> {
 impl PjrtGcod<'_> {
     /// Run `iters` iterations on `data`, using the artifacts matching
     /// its (n, b, k) shape. Returns the progress history |theta-theta*|^2.
-    pub fn run(&mut self, data: &LstsqData, theta0: &[f64], iters: usize) -> Result<super::RunHistory> {
+    pub fn run(
+        &mut self,
+        data: &LstsqData,
+        theta0: &[f64],
+        iters: usize,
+    ) -> Result<super::RunHistory> {
         let (n, b, k) = (data.n_blocks, data.b, data.k);
         let grad_name = self
             .rt
             .manifest
             .find_block_grad(n, b, k)
-            .ok_or_else(|| anyhow!("no block_grad artifact for shape ({n},{b},{k}); re-run `make artifacts`"))?
+            .ok_or_else(|| {
+                anyhow!("no block_grad artifact for shape ({n},{b},{k}); re-run `make artifacts`")
+            })?
             .name
             .clone();
         let combine_name = self

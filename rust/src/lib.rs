@@ -15,7 +15,9 @@
 //! * [`codes`] — the paper's scheme + every baseline (FRC, expander, …)
 //! * [`decode`] — linear-time optimal graph decoder, LSQR generic decoder
 //! * [`straggler`] — random & adversarial straggler models
-//! * [`sweep`] — parallel deterministic Monte-Carlo trial engine
+//! * [`sweep`] — parallel deterministic Monte-Carlo trial engine;
+//!   [`sweep::shard`] splits sweeps across processes with bit-exact
+//!   JSON-manifest merging (`gcod sweep-shard` / `gcod sweep-merge`)
 //! * [`gd`] — coded gradient descent engines & convergence bounds
 //! * [`coordinator`] — distributed leader/worker runtime (Algorithm 2)
 //! * [`runtime`] — PJRT artifact loading & execution (feature `pjrt`)
@@ -46,7 +48,10 @@
 //!    Monte-Carlo trials across scoped threads with per-trial PRNG
 //!    substreams, chunk-scoped decoder state and an ordered reduction,
 //!    so the accumulated metrics are bit-identical for every thread
-//!    count — parallelism is purely a wall-clock lever.
+//!    count — parallelism is purely a wall-clock lever. The
+//!    [`sweep::shard`] layer extends the same contract across process
+//!    boundaries: any contiguous split of a trial range, run anywhere,
+//!    merges back to the single-process bits.
 
 pub mod bench_util;
 pub mod cli;

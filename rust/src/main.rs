@@ -11,6 +11,9 @@ use gcod::gd::{analysis, SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
 use gcod::straggler::BernoulliStragglers;
+use gcod::sweep::{self, shard};
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Duration;
 
 fn app() -> App {
@@ -22,7 +25,11 @@ fn app() -> App {
                 name: "info",
                 help: "artifact inventory + assignment-scheme statistics",
                 flags: vec![
-                    flag("scheme", "scheme spec (e.g. graph-rr:16,3 | lps:5,13)", Some("graph-rr:16,3")),
+                    flag(
+                        "scheme",
+                        "scheme spec (e.g. graph-rr:16,3 | lps:5,13)",
+                        Some("graph-rr:16,3"),
+                    ),
                     flag("seed", "rng seed", Some("0")),
                     flag("artifacts", "artifacts dir", Some("artifacts")),
                     switch("spectral", "estimate the spectral gap (slower)"),
@@ -78,6 +85,35 @@ fn app() -> App {
                     flag("seed", "rng seed", Some("0")),
                 ],
             },
+            CommandSpec {
+                name: "sweep-shard",
+                help: "run one shard of a Monte-Carlo sweep, write a JSON manifest",
+                flags: vec![
+                    flag("sweep", "decode-error|gd-final|attack", Some("decode-error")),
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
+                    flag("p", "straggler probability", Some("0.2")),
+                    flag("trials", "total trials N across all shards", Some("1000")),
+                    flag("seed", "sweep seed (shared by all shards)", Some("0")),
+                    flag("chunk", "engine chunk size >= 1 (determinism contract)", Some("32")),
+                    flag(
+                        "threads",
+                        "worker threads (0 = all cores; attack sweeps run serially)",
+                        Some("0"),
+                    ),
+                    flag("shard", "shard spec i/k (contiguous split of [0,N))", Some("0/1")),
+                    flag("out", "manifest path (default sweep_<kind>_shard_<i>of<k>.json)", None),
+                ],
+            },
+            CommandSpec {
+                name: "sweep-merge",
+                help: "validate + merge shard manifests into the canonical sweep result",
+                flags: vec![
+                    flag("input", "shard manifest path (repeatable)", None),
+                    flag("inputs", "comma-separated shard manifest paths", None),
+                    flag("out", "merged result path", Some("sweep_merged.json")),
+                ],
+            },
         ],
     }
 }
@@ -97,6 +133,8 @@ fn main() {
         "simulate" => cmd_simulate(&inv),
         "train" => cmd_train(&inv),
         "adversarial" => cmd_adversarial(&inv),
+        "sweep-shard" => cmd_sweep_shard(&inv),
+        "sweep-merge" => cmd_sweep_merge(&inv),
         _ => unreachable!(),
     };
     if let Err(e) = result {
@@ -158,8 +196,14 @@ fn cmd_decode_error(inv: &gcod::cli::Invocation) -> Result<()> {
     println!("E|alpha_bar-1|^2/n = {}", sci(stats.mean_err_per_block));
     println!("|cov|_2            = {}", sci(stats.cov_norm));
     println!("normalization c    = {:.4}", stats.mean_alpha_scale);
-    println!("theory: optimal lower bound p^d/(1-p^d) = {}", sci(analysis::theory::optimal_lower_bound(p, d)));
-    println!("theory: fixed lower bound p/(d(1-p))    = {}", sci(analysis::theory::fixed_lower_bound(p, d)));
+    println!(
+        "theory: optimal lower bound p^d/(1-p^d) = {}",
+        sci(analysis::theory::optimal_lower_bound(p, d))
+    );
+    println!(
+        "theory: fixed lower bound p/(d(1-p))    = {}",
+        sci(analysis::theory::fixed_lower_bound(p, d))
+    );
     Ok(())
 }
 
@@ -208,7 +252,10 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
         #[cfg(feature = "pjrt")]
         "pjrt" => {
             let art = format!("worker_grad_fig4_2x{}x{}", data.b, k);
-            ComputeBackend::Pjrt { artifacts_dir: inv.str_or("artifacts", "artifacts"), artifact: art }
+            ComputeBackend::Pjrt {
+                artifacts_dir: inv.str_or("artifacts", "artifacts"),
+                artifact: art,
+            }
         }
         other => {
             if other == "pjrt" {
@@ -232,7 +279,8 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
     let dec = gcod::decode::OptimalGraphDecoder::new(graph);
     let report = cluster.run(&cfg, &dec, &vec![0.0; k], |t| data.dist_to_opt(t))?;
     cluster.shutdown();
-    let mut table = Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
+    let mut table =
+        Table::new(&["iter", "wall(ms)", "stragglers", "decode err^2", "|theta-theta*|^2"]);
     for s in report.iters.iter().step_by((cfg.iters / 10).max(1)) {
         table.row(vec![
             s.iter.to_string(),
@@ -243,7 +291,100 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
         ]);
     }
     table.print();
-    println!("total {:.2}s  final |theta-theta*|^2 = {}", report.total.as_secs_f64(), sci(report.final_progress));
+    println!(
+        "total {:.2}s  final |theta-theta*|^2 = {}",
+        report.total.as_secs_f64(),
+        sci(report.final_progress)
+    );
+    Ok(())
+}
+
+fn cmd_sweep_shard(inv: &gcod::cli::Invocation) -> Result<()> {
+    let kind = shard::SweepKind::parse(&inv.str_or("sweep", "decode-error"))?;
+    let mut params = BTreeMap::new();
+    for ov in &inv.overrides {
+        let (k, v) = ov
+            .split_once('=')
+            .ok_or_else(|| Error::msg(format!("--set needs key=value, got '{ov}'")))?;
+        params.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let cfg = shard::SweepConfig {
+        sweep: kind,
+        scheme: inv.str_or("scheme", "graph-rr:16,3"),
+        decoder: inv.str_or("decoder", "optimal"),
+        p: inv.f64_or("p", 0.2),
+        seed: inv.u64_or("seed", 0),
+        trials: inv.usize_or("trials", 1000),
+        chunk: inv.usize_or("chunk", sweep::DEFAULT_CHUNK),
+        params,
+    };
+    let spec = shard::ShardSpec::parse(&inv.str_or("shard", "0/1"))?;
+    let threads = match inv.usize_or("threads", 0) {
+        0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        t => t,
+    };
+    let res = shard::run_shard(&cfg, threads, spec)?;
+    let out = match inv.get("out") {
+        Some(o) if !o.is_empty() => o.to_string(),
+        _ => format!("sweep_{}_shard_{}of{}.json", cfg.sweep.as_str(), spec.index, spec.count),
+    };
+    res.write(Path::new(&out))?;
+    println!(
+        "shard {spec} of sweep '{}' ({} {} p={} seed={}): trials [{}, {}) of {}",
+        cfg.sweep.as_str(),
+        cfg.scheme,
+        cfg.decoder,
+        cfg.p,
+        cfg.seed,
+        res.lo,
+        res.hi,
+        cfg.trials
+    );
+    println!(
+        "partial: count={} mean={} std={} min={} max={}",
+        res.stats.count(),
+        sci(res.stats.mean()),
+        sci(res.stats.std()),
+        sci(res.stats.min()),
+        sci(res.stats.max())
+    );
+    println!("manifest written to {out}");
+    Ok(())
+}
+
+fn cmd_sweep_merge(inv: &gcod::cli::Invocation) -> Result<()> {
+    let mut paths: Vec<String> = inv.get_all("input").iter().map(|s| s.to_string()).collect();
+    if let Some(list) = inv.get("inputs") {
+        paths.extend(list.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()));
+    }
+    if paths.is_empty() {
+        return Err(Error::msg("sweep-merge needs at least one --input (or --inputs) manifest"));
+    }
+    let shards: Vec<shard::ShardResult> = paths
+        .iter()
+        .map(|p| shard::ShardResult::read(Path::new(p)))
+        .collect::<Result<_>>()?;
+    let merged = shard::merge(shards)?;
+    let out = inv.str_or("out", "sweep_merged.json");
+    merged.write(Path::new(&out))?;
+    println!(
+        "merged {} shard manifest(s): sweep '{}' ({} {} p={} seed={}), {} trials",
+        paths.len(),
+        merged.config.sweep.as_str(),
+        merged.config.scheme,
+        merged.config.decoder,
+        merged.config.p,
+        merged.config.seed,
+        merged.config.trials
+    );
+    println!(
+        "result: mean={} std={} min={} max={}",
+        sci(merged.stats.mean()),
+        sci(merged.stats.std()),
+        sci(merged.stats.min()),
+        sci(merged.stats.max())
+    );
+    println!("merged result written to {out}");
     Ok(())
 }
 

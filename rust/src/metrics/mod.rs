@@ -50,6 +50,19 @@ impl Stats {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Sequentially fold a slice of samples. This is the *canonical*
+    /// reduction the sharded sweep path reproduces bit-for-bit: a merge
+    /// of per-shard trial vectors refolds the concatenation through
+    /// this, so the result is independent of how the trials were split
+    /// across shards or threads.
+    pub fn from_values(values: &[f64]) -> Self {
+        let mut s = Self::new();
+        for &x in values {
+            s.push(x);
+        }
+        s
+    }
+
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -80,6 +93,13 @@ impl Stats {
         self.var().sqrt()
     }
 
+    /// The raw Welford second moment sum(x - mean)^2. Exposed so shard
+    /// manifests can serialize and cross-check the accumulator state
+    /// bit-for-bit (var() collapses n<2 to 0 and divides).
+    pub fn m2(&self) -> f64 {
+        self.m2
+    }
+
     pub fn min(&self) -> f64 {
         self.min
     }
@@ -94,6 +114,16 @@ impl Stats {
     /// fixed chunk order yields results independent of how chunks were
     /// scheduled across threads. (`sweep::TrialEngine::run_map` itself
     /// returns trial-ordered results and folds sequentially.)
+    ///
+    /// Exactness: `count`, `min` and `max` are *bitwise* associative
+    /// under merge (integer add / IEEE min-max), so any merge tree of
+    /// the same partials agrees exactly. `mean`/`m2` are associative
+    /// only up to floating-point rounding — the Chan update is not the
+    /// same sequence of operations as per-sample [`Stats::push`] — which
+    /// is why the sharded sweep path ships per-trial vectors and refolds
+    /// them through [`Stats::from_values`] for its bit-exact contract,
+    /// using this merge as a redundancy cross-check. Merging an empty
+    /// accumulator (either side) is a bitwise no-op/copy.
     pub fn merge(&mut self, other: &Stats) {
         if other.n == 0 {
             return;

@@ -199,9 +199,25 @@ pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
     a: &crate::sparse::Csc,
     budget: usize,
 ) -> Vec<bool> {
+    greedy_decode_attack_trace(decoder, a, budget).0
+}
+
+/// [`greedy_decode_attack`] plus its per-step error trace: element `s`
+/// of the returned vector is the decoding error |alpha* - 1|^2 after
+/// the first `s + 1` greedily-chosen stragglers. Because the greedy
+/// masks are nested (each step adds one machine), one pass to budget
+/// `B` yields the whole attack-vs-budget curve — the trace is a pure
+/// function of `(decoder, a)`, which is what lets the shard layer slice
+/// the budget axis across processes bit-exactly.
+pub fn greedy_decode_attack_trace<D: crate::decode::Decoder + ?Sized>(
+    decoder: &D,
+    a: &crate::sparse::Csc,
+    budget: usize,
+) -> (Vec<bool>, Vec<f64>) {
     let m = a.cols;
     let mut straggle = vec![false; m];
     let mut out = crate::decode::Decoding::empty();
+    let mut trace = Vec::with_capacity(budget);
     // surviving replica count per block
     let mut replicas = a.mul_vec(&vec![1.0; m]);
     for _ in 0..budget {
@@ -219,15 +235,27 @@ pub fn greedy_decode_attack<D: crate::decode::Decoder + ?Sized>(
                 best = Some((err, tie, j));
             }
         }
-        if let Some((_, _, j)) = best {
-            straggle[j] = true;
-            let (rows, _) = a.col(j);
-            for &i in rows {
-                replicas[i] -= 1.0;
+        match best {
+            Some((err, _, j)) => {
+                straggle[j] = true;
+                let (rows, _) = a.col(j);
+                for &i in rows {
+                    replicas[i] -= 1.0;
+                }
+                trace.push(err);
+            }
+            None => {
+                // budget exceeds m: every machine already straggles and
+                // the trace is flat from here — decode the saturated
+                // mask once and pad
+                decoder.decode_into(&straggle, &mut out);
+                let saturated = out.error_sq();
+                trace.resize(budget, saturated);
+                break;
             }
         }
     }
-    straggle
+    (straggle, trace)
 }
 
 /// Engine-parallel greedy attack: each greedy step evaluates all
@@ -368,6 +396,30 @@ mod tests {
         let d = crate::decode::FrcOptimalDecoder::new(&code).decode(&mask);
         // 2 groups x 2 blocks per group zeroed
         assert!((d.error_sq() - 4.0).abs() < 1e-12, "err={}", d.error_sq());
+    }
+
+    #[test]
+    fn greedy_trace_is_monotone_and_matches_mask() {
+        let mut rng = crate::prng::Rng::new(12);
+        let g = random_regular_graph(10, 3, &mut rng);
+        let code = GraphCode::new("t", g);
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let budget = 6;
+        let (mask, trace) = greedy_decode_attack_trace(&dec, code.assignment(), budget);
+        assert_eq!(trace.len(), budget);
+        assert_eq!(mask.iter().filter(|&&s| s).count(), budget);
+        // the last trace entry is the final mask's error, bit for bit
+        let fin = dec.decode(&mask).error_sq();
+        assert_eq!(trace[budget - 1].to_bits(), fin.to_bits());
+        // adding stragglers can only increase the optimal error
+        for w in trace.windows(2) {
+            assert!(w[1] >= w[0] - 1e-12, "trace decreased: {trace:?}");
+        }
+        // a prefix run reproduces the prefix of the trace (nestedness)
+        let (_, short) = greedy_decode_attack_trace(&dec, code.assignment(), 3);
+        for i in 0..3 {
+            assert_eq!(short[i].to_bits(), trace[i].to_bits(), "step {i}");
+        }
     }
 
     #[test]

@@ -34,8 +34,10 @@
 
 use crate::decode::{Decoder, Decoding};
 use crate::metrics::Stats;
-use crate::prng::{Rng, SplitMix64};
+use crate::prng::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub mod shard;
 
 /// Default trials per chunk: big enough to amortize context
 /// construction and keep warm starts effective, small enough to load
@@ -78,11 +80,10 @@ impl TrialEngine {
     }
 
     /// The deterministic PRNG substream for one trial, independent of
-    /// thread assignment and of every other trial's stream.
+    /// thread assignment and of every other trial's stream (keyed only
+    /// by `(seed, trial)` via [`crate::prng::substream`]).
     pub fn trial_rng(&self, trial: usize) -> Rng {
-        let mut sm =
-            SplitMix64::new(self.seed ^ (trial as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        Rng::new(sm.next_u64())
+        crate::prng::substream(self.seed, trial as u64)
     }
 
     /// Run `n_trials` trials and collect their results **in trial
@@ -95,24 +96,58 @@ impl TrialEngine {
         FT: Fn(&mut Ctx, usize, &mut Rng) -> T + Sync,
         T: Send,
     {
-        if n_trials == 0 {
+        self.run_range_map(0, n_trials, make_ctx, trial_fn)
+    }
+
+    /// Run the trial subrange `[lo, hi)` of a conceptual `[0, N)` sweep
+    /// and collect results in trial order. This is the shard primitive:
+    /// chunks are aligned to the engine's *global* chunk grid (chunk `c`
+    /// always covers trials `[c*chunk, (c+1)*chunk)` no matter which
+    /// range is requested), and when `lo` falls inside a chunk the
+    /// worker silently **replays** the chunk's leading trials to rebuild
+    /// the per-chunk context state (e.g. LSQR warm starts) before
+    /// recording — so every recorded trial value is bit-identical to the
+    /// value a full `[0, N)` run produces, for *any* split of the range
+    /// across shards, processes, or threads. The replay overhead is at
+    /// most `chunk - 1` trials per shard.
+    pub fn run_range_map<Ctx, T, FC, FT>(
+        &self,
+        lo: usize,
+        hi: usize,
+        make_ctx: FC,
+        trial_fn: FT,
+    ) -> Vec<T>
+    where
+        FC: Fn(usize) -> Ctx + Sync,
+        FT: Fn(&mut Ctx, usize, &mut Rng) -> T + Sync,
+        T: Send,
+    {
+        assert!(lo <= hi, "bad trial range [{lo}, {hi})");
+        if lo == hi {
             return Vec::new();
         }
-        let n_chunks = n_trials.div_ceil(self.chunk);
+        let n_out = hi - lo;
+        let c_lo = lo / self.chunk; // first chunk on the global grid
+        let c_hi = hi.div_ceil(self.chunk); // one past the last chunk
+        let n_chunks = c_hi - c_lo;
         let run_chunk = |chunk_idx: usize, sink: &mut Vec<(usize, T)>| {
-            let lo = chunk_idx * self.chunk;
-            let hi = (lo + self.chunk).min(n_trials);
+            let start = chunk_idx * self.chunk; // global-grid chunk start
+            let end = (start + self.chunk).min(hi);
             let mut ctx = make_ctx(chunk_idx);
-            for t in lo..hi {
+            for t in start..end {
                 let mut rng = self.trial_rng(t);
-                sink.push((t, trial_fn(&mut ctx, t, &mut rng)));
+                let v = trial_fn(&mut ctx, t, &mut rng);
+                // trials below lo are warm-up replay: state only
+                if t >= lo {
+                    sink.push((t, v));
+                }
             }
         };
 
         let mut parts: Vec<Vec<(usize, T)>> = Vec::new();
         if self.threads == 1 || n_chunks == 1 {
-            let mut sink = Vec::with_capacity(n_trials);
-            for c in 0..n_chunks {
+            let mut sink = Vec::with_capacity(n_out);
+            for c in c_lo..c_hi {
                 run_chunk(c, &mut sink);
             }
             parts.push(sink);
@@ -125,8 +160,8 @@ impl TrialEngine {
                         s.spawn(|| {
                             let mut sink = Vec::new();
                             loop {
-                                let c = cursor.fetch_add(1, Ordering::Relaxed);
-                                if c >= n_chunks {
+                                let c = c_lo + cursor.fetch_add(1, Ordering::Relaxed);
+                                if c >= c_hi {
                                     return sink;
                                 }
                                 run_chunk(c, &mut sink);
@@ -141,18 +176,18 @@ impl TrialEngine {
         }
 
         // place results by trial index — the ordered reduction
-        let mut slots: Vec<Option<T>> = Vec::with_capacity(n_trials);
-        slots.resize_with(n_trials, || None);
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(n_out);
+        slots.resize_with(n_out, || None);
         for part in parts {
             for (t, v) in part {
-                debug_assert!(slots[t].is_none(), "trial {t} ran twice");
-                slots[t] = Some(v);
+                debug_assert!(slots[t - lo].is_none(), "trial {t} ran twice");
+                slots[t - lo] = Some(v);
             }
         }
         slots
             .into_iter()
             .enumerate()
-            .map(|(t, v)| v.unwrap_or_else(|| panic!("trial {t} never ran")))
+            .map(|(i, v)| v.unwrap_or_else(|| panic!("trial {} never ran", lo + i)))
             .collect()
     }
 }
@@ -183,20 +218,41 @@ where
     FD: Fn(usize) -> D + Sync,
     FM: Fn(usize, &mut Rng, &mut Vec<bool>) + Sync,
 {
-    let errs = engine.run_map(
-        trials,
-        |chunk| DecodeCtx { decoder: make_decoder(chunk), out: Decoding::empty(), mask: Vec::new() },
+    Stats::from_values(&decoding_error_values(engine, make_decoder, fill_mask, 0, trials))
+}
+
+/// Per-trial decoding errors for the trial subrange `[lo, hi)` of an
+/// `N`-trial sweep — the shard building block behind
+/// [`decoding_error_sweep`] (which is the `[0, N)` case folded into a
+/// [`Stats`]). Values are bit-identical to the corresponding slice of a
+/// full single-process run for any split, per
+/// [`TrialEngine::run_range_map`]'s replay contract.
+pub fn decoding_error_values<D, FD, FM>(
+    engine: &TrialEngine,
+    make_decoder: FD,
+    fill_mask: FM,
+    lo: usize,
+    hi: usize,
+) -> Vec<f64>
+where
+    D: Decoder,
+    FD: Fn(usize) -> D + Sync,
+    FM: Fn(usize, &mut Rng, &mut Vec<bool>) + Sync,
+{
+    engine.run_range_map(
+        lo,
+        hi,
+        |chunk| DecodeCtx {
+            decoder: make_decoder(chunk),
+            out: Decoding::empty(),
+            mask: Vec::new(),
+        },
         |ctx, t, rng| {
             fill_mask(t, rng, &mut ctx.mask);
             ctx.decoder.decode_into(&ctx.mask, &mut ctx.out);
             ctx.out.error_sq()
         },
-    );
-    let mut stats = Stats::new();
-    for e in errs {
-        stats.push(e);
-    }
-    stats
+    )
 }
 
 /// Parallel counterpart of [`crate::gd::analysis::decoding_stats`]: the
@@ -219,7 +275,11 @@ where
     assert!(runs >= 2);
     let samples = engine.run_map(
         runs,
-        |chunk| DecodeCtx { decoder: make_decoder(chunk), out: Decoding::empty(), mask: Vec::new() },
+        |chunk| DecodeCtx {
+            decoder: make_decoder(chunk),
+            out: Decoding::empty(),
+            mask: Vec::new(),
+        },
         |ctx, t, trial_rng| {
             fill_mask(t, trial_rng, &mut ctx.mask);
             ctx.decoder.decode_into(&ctx.mask, &mut ctx.out);
@@ -304,5 +364,70 @@ mod tests {
         let engine = TrialEngine::new(4, 0);
         let out: Vec<u8> = engine.run_map(0, |_c| (), |_ctx, _t, _rng| 0u8);
         assert!(out.is_empty());
+        let out: Vec<u8> = engine.run_range_map(5, 5, |_c| (), |_ctx, _t, _rng| 0u8);
+        assert!(out.is_empty());
+    }
+
+    /// A range run must return exactly the corresponding slice of the
+    /// full run, even for a *stateful* per-chunk context whose first
+    /// covered chunk is only partially inside the range (the replay
+    /// path), and regardless of threads.
+    #[test]
+    fn range_map_matches_full_run_slice() {
+        let full_engine = TrialEngine::new(1, 21).with_chunk(5);
+        // ctx = running sum within the chunk: trial value depends on all
+        // chunk predecessors, so unreplayed partial chunks would differ
+        let run_full = |e: &TrialEngine| {
+            e.run_map(
+                23,
+                |_c| 0u64,
+                |acc, t, rng| {
+                    *acc = acc.wrapping_add(rng.next_u64()).wrapping_add(t as u64);
+                    *acc
+                },
+            )
+        };
+        let full = run_full(&full_engine);
+        for threads in [1usize, 4] {
+            let engine = TrialEngine::new(threads, 21).with_chunk(5);
+            for (lo, hi) in [(0usize, 23usize), (3, 23), (7, 11), (4, 5), (22, 23), (0, 1)] {
+                let part = engine.run_range_map(
+                    lo,
+                    hi,
+                    |_c| 0u64,
+                    |acc, t, rng| {
+                        *acc = acc.wrapping_add(rng.next_u64()).wrapping_add(t as u64);
+                        *acc
+                    },
+                );
+                assert_eq!(part, full[lo..hi], "range [{lo},{hi}) threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoding_error_values_slice_invariant() {
+        let mut rng = Rng::new(3);
+        let code = GraphCode::random_regular(16, 4, &mut rng);
+        let g = &code.graph;
+        let m = code.n_machines();
+        let engine = TrialEngine::new(2, 11).with_chunk(8);
+        let run = |lo: usize, hi: usize| {
+            decoding_error_values(
+                &engine,
+                |_c| OptimalGraphDecoder::new(g),
+                bernoulli_masks(m, 0.3),
+                lo,
+                hi,
+            )
+        };
+        let full = run(0, 60);
+        let a = run(0, 13);
+        let b = run(13, 60);
+        let stitched: Vec<f64> = a.iter().chain(b.iter()).copied().collect();
+        assert_eq!(full.len(), stitched.len());
+        for (i, (x, y)) in full.iter().zip(&stitched).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "trial {i}");
+        }
     }
 }

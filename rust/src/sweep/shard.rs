@@ -1,0 +1,909 @@
+//! Sharded sweeps: split a trial range across processes, merge the
+//! partial results bit-exactly.
+//!
+//! The engine layer ([`crate::sweep::TrialEngine`]) already makes a
+//! Monte-Carlo sweep independent of the *thread* count; this module
+//! extends the same determinism contract across *process* boundaries so
+//! a 10^6-trial sweep can be split over machines and folded back
+//! together:
+//!
+//! * [`ShardSpec`] partitions `[0, N)` into contiguous shards
+//!   (`--shard i/k` on the CLI). Any contiguous split works — not just
+//!   the balanced one — because trial `t`'s PRNG substream is keyed
+//!   only by `(seed, t)` and
+//!   [`TrialEngine::run_range_map`](crate::sweep::TrialEngine::run_range_map)
+//!   aligns chunks to the global grid (replaying partial leading chunks
+//!   for warm state), so per-trial values never depend on the split.
+//! * [`ShardResult`] serializes a shard's output — the [`SweepConfig`]
+//!   identity, the per-trial metric vector, and a [`Stats`] partial —
+//!   to a versioned JSON manifest ([`SHARD_SCHEMA`]). Floats are
+//!   carried as IEEE-754 hex bit patterns
+//!   ([`crate::bench_util::f64_to_hex_bits`]) so they round-trip
+//!   exactly through text.
+//! * [`merge`] validates a set of manifests (matching config, matching
+//!   schema version, gap-free/overlap-free coverage of `[0, N)`),
+//!   refolds the concatenated per-trial vectors through
+//!   [`Stats::from_values`] — the *same* sequential fold a
+//!   single-process run performs, hence bit-identical output for any
+//!   shard split — and cross-checks the result against the
+//!   [`Stats::merge`] (Chan) combination of the shard partials
+//!   (`count`/`min`/`max` exactly, the float moments to 1e-9).
+//!
+//! The standard sweeps ([`SweepKind`]) cover the paper's three
+//! experiment families: `decode-error` (Figure 3 style Monte-Carlo
+//! decoding error), `gd-final` (Figure 4/5 style simulated coded-GD
+//! final error, one full deterministic trajectory per trial), and
+//! `attack` (the greedy adversarial error-vs-budget curve, sliced along
+//! the budget axis via the nested
+//! [`crate::straggler::greedy_decode_attack_trace`]).
+
+use crate::bench_util::{f64_from_hex_bits, f64_to_hex_bits, json_escape, json_f64_display};
+use crate::codes::zoo::{build, make_decoder, BuiltScheme, DecoderSpec, SchemeSpec};
+use crate::config::json::Json;
+use crate::data::LstsqData;
+use crate::error::{Error, Result};
+use crate::gd::{SimulatedGcod, StepSize};
+use crate::metrics::Stats;
+use crate::prng::Rng;
+use crate::straggler::{greedy_decode_attack_trace, BernoulliStragglers};
+use crate::sweep::{bernoulli_masks, decoding_error_values, TrialEngine};
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// Version stamped into every shard/merged manifest. [`merge`] (and so
+/// `gcod sweep-merge`) rejects manifests written by a different schema.
+pub const SHARD_SCHEMA: u64 = 1;
+
+/// `"kind"` of a per-shard manifest.
+pub const SHARD_KIND: &str = "gcod-sweep-shard";
+
+/// `"kind"` of a merged sweep result.
+pub const MERGED_KIND: &str = "gcod-sweep-merged";
+
+/// Salt for the scheme-construction RNG so the (shared) scheme build
+/// never draws from a trial substream.
+const SCHEME_SALT: u64 = 0x5C4E_4D45_B11D;
+
+/// Salt for the `gd-final` data-generation RNG (shared by all shards).
+const DATA_SALT: u64 = 0xDA7A_6E4E;
+
+// ---------------------------------------------------------------------
+// Shard ranges
+// ---------------------------------------------------------------------
+
+/// One contiguous shard of a trial range: `index` of `count`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub index: usize,
+    pub count: usize,
+}
+
+impl ShardSpec {
+    pub fn new(index: usize, count: usize) -> Result<Self> {
+        if count == 0 {
+            return Err(Error::msg("shard count must be >= 1"));
+        }
+        if index >= count {
+            return Err(Error::msg(format!("shard index {index} out of range for {count} shards")));
+        }
+        Ok(Self { index, count })
+    }
+
+    /// Parse `"i/k"` (e.g. `--shard 2/8`).
+    pub fn parse(s: &str) -> Result<Self> {
+        let (i, k) = s
+            .split_once('/')
+            .ok_or_else(|| Error::msg(format!("bad shard spec '{s}': want i/k, e.g. 0/4")))?;
+        let index = i
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| Error::msg(format!("bad shard index '{i}': {e}")))?;
+        let count = k
+            .trim()
+            .parse::<usize>()
+            .map_err(|e| Error::msg(format!("bad shard count '{k}': {e}")))?;
+        Self::new(index, count)
+    }
+
+    /// The balanced contiguous trial range `[lo, hi)` this shard covers
+    /// out of `n_trials`: shard sizes differ by at most one, earlier
+    /// shards take the remainder.
+    pub fn range(&self, n_trials: usize) -> (usize, usize) {
+        let base = n_trials / self.count;
+        let rem = n_trials % self.count;
+        let lo = self.index * base + self.index.min(rem);
+        let hi = lo + base + usize::from(self.index < rem);
+        (lo, hi)
+    }
+}
+
+impl fmt::Display for ShardSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}/{}", self.index, self.count)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Sweep identity
+// ---------------------------------------------------------------------
+
+/// Which standard sweep a manifest holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SweepKind {
+    /// Figure-3-style Monte-Carlo decoding error: trial `t` draws a
+    /// Bernoulli(p) straggler mask from substream `t` and records
+    /// |alpha* - 1|^2.
+    DecodeError,
+    /// Figure-4/5-style simulated coded GD: trial `t` runs one full
+    /// deterministic trajectory (straggler seed, block permutation and
+    /// step grid from substream `t`) and records the final
+    /// |theta - theta*|^2.
+    GdFinal,
+    /// Greedy adversarial curve: trial `t` records the per-block error
+    /// after `t + 1` greedily-chosen stragglers (the trial axis is the
+    /// attack budget). NOTE: the greedy search is inherently sequential
+    /// — a shard recomputes the nested trace from budget 0 up to its
+    /// own `hi` (serially; `threads` is unused), so sharding the budget
+    /// axis only saves the *trailing* budgets' steps, not the prefix.
+    Attack,
+    /// Figure 4 on the real worker-thread cluster: trial `t` is one
+    /// wall-clock-budgeted distributed GD run. Manifests of this kind
+    /// are produced by `bench_fig4_cluster` (the trial values depend on
+    /// real scheduling, so they are *not* bit-reproducible — merge
+    /// validation still applies, the bit-exactness contract does not).
+    Fig4Cluster,
+}
+
+impl SweepKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "decode-error" => SweepKind::DecodeError,
+            "gd-final" => SweepKind::GdFinal,
+            "attack" => SweepKind::Attack,
+            "fig4-cluster" => SweepKind::Fig4Cluster,
+            _ => {
+                return Err(Error::msg(format!(
+                    "unknown sweep kind '{s}' (decode-error|gd-final|attack|fig4-cluster)"
+                )))
+            }
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SweepKind::DecodeError => "decode-error",
+            SweepKind::GdFinal => "gd-final",
+            SweepKind::Attack => "attack",
+            SweepKind::Fig4Cluster => "fig4-cluster",
+        }
+    }
+}
+
+/// Everything that identifies a sweep — two manifests merge only if all
+/// of this matches (with `p` compared bit-for-bit). `chunk` is part of
+/// the identity because chunk scoping re-seats stateful decoder
+/// contexts (see `TrialEngine::with_chunk`); `threads` is *not*, by the
+/// engine's thread-invariance contract.
+#[derive(Clone, Debug)]
+pub struct SweepConfig {
+    pub sweep: SweepKind,
+    /// scheme spec string, e.g. "graph-rr:16,3" (see `codes::zoo`)
+    pub scheme: String,
+    /// decoder spec string: optimal|optimal-lsqr|fixed|ignore
+    pub decoder: String,
+    /// straggler probability (decode-error, gd-final) / fixed-decoder
+    /// calibration (attack)
+    pub p: f64,
+    pub seed: u64,
+    /// total trials N across all shards
+    pub trials: usize,
+    /// engine chunk size (part of the determinism contract)
+    pub chunk: usize,
+    /// extra sweep parameters (e.g. gd-final's n-points/dim/iters),
+    /// canonically sorted by key
+    pub params: BTreeMap<String, String>,
+}
+
+impl PartialEq for SweepConfig {
+    fn eq(&self, o: &Self) -> bool {
+        self.sweep == o.sweep
+            && self.scheme == o.scheme
+            && self.decoder == o.decoder
+            && self.p.to_bits() == o.p.to_bits()
+            && self.seed == o.seed
+            && self.trials == o.trials
+            && self.chunk == o.chunk
+            && self.params == o.params
+    }
+}
+
+impl Eq for SweepConfig {}
+
+impl SweepConfig {
+    pub fn param_usize(&self, key: &str, default: usize) -> usize {
+        self.params.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn param_f64(&self, key: &str, default: f64) -> f64 {
+        self.params.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shard + merged results
+// ---------------------------------------------------------------------
+
+/// One shard's output: the per-trial metric vector for `[lo, hi)` plus
+/// its sequential-fold [`Stats`] partial.
+#[derive(Clone, Debug)]
+pub struct ShardResult {
+    pub config: SweepConfig,
+    pub lo: usize,
+    pub hi: usize,
+    /// metric value of trial `lo + i` at index `i`
+    pub values: Vec<f64>,
+    /// `Stats::from_values(&values)` — recomputed (never trusted) when
+    /// a manifest is parsed
+    pub stats: Stats,
+}
+
+impl ShardResult {
+    pub fn from_values(config: SweepConfig, lo: usize, hi: usize, values: Vec<f64>) -> Self {
+        assert_eq!(values.len(), hi - lo, "shard [{lo},{hi}) got {} values", values.len());
+        let stats = Stats::from_values(&values);
+        Self { config, lo, hi, values, stats }
+    }
+
+    /// Serialize to the versioned shard-manifest JSON.
+    pub fn render(&self) -> String {
+        render_doc(SHARD_KIND, &self.config, Some((self.lo, self.hi)), &self.values, &self.stats)
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.render())
+            .map_err(|e| Error::msg(format!("write {}: {e}", path.display())))
+    }
+
+    /// Parse and validate a shard manifest: kind and schema must match
+    /// this binary, and the recorded [`Stats`] partial must agree
+    /// bit-for-bit with a refold of the recorded values (corruption
+    /// check).
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_doc(text, SHARD_KIND)?;
+        let lo = get_usize(&doc.json, "lo")?;
+        let hi = get_usize(&doc.json, "hi")?;
+        if lo > hi || hi > doc.config.trials {
+            return Err(Error::msg(format!(
+                "shard range [{lo}, {hi}) outside sweep of {} trials",
+                doc.config.trials
+            )));
+        }
+        if doc.values.len() != hi - lo {
+            return Err(Error::msg(format!(
+                "shard [{lo}, {hi}) carries {} values, expected {}",
+                doc.values.len(),
+                hi - lo
+            )));
+        }
+        Ok(Self { config: doc.config, lo, hi, values: doc.values, stats: doc.stats })
+    }
+
+    pub fn read(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text).map_err(|e| Error::msg(format!("{}: {e}", path.display())))
+    }
+}
+
+/// A fully merged sweep: the per-trial vector for all of `[0, N)` and
+/// its canonical sequential-fold [`Stats`].
+#[derive(Clone, Debug)]
+pub struct MergedSweep {
+    pub config: SweepConfig,
+    pub values: Vec<f64>,
+    pub stats: Stats,
+}
+
+impl MergedSweep {
+    /// Serialize the merged result. The output depends only on the
+    /// config and the per-trial values — never on how many shards fed
+    /// the merge — so any split of the same sweep renders byte-identical
+    /// JSON.
+    pub fn render(&self) -> String {
+        render_doc(MERGED_KIND, &self.config, None, &self.values, &self.stats)
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.render())
+            .map_err(|e| Error::msg(format!("write {}: {e}", path.display())))
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = parse_doc(text, MERGED_KIND)?;
+        if doc.values.len() != doc.config.trials {
+            return Err(Error::msg(format!(
+                "merged sweep carries {} values for {} trials",
+                doc.values.len(),
+                doc.config.trials
+            )));
+        }
+        Ok(Self { config: doc.config, values: doc.values, stats: doc.stats })
+    }
+}
+
+/// Validate and fold a set of shard results into the canonical merged
+/// sweep. Shards may arrive in any order but must share one config,
+/// cover `[0, N)` exactly (no gaps, no overlaps) and carry partials
+/// consistent with their values; the merged [`Stats`] is the sequential
+/// refold of the concatenated trial vector (bit-identical to a
+/// single-process run), cross-checked against the [`Stats::merge`]
+/// combination of the shard partials.
+pub fn merge(mut shards: Vec<ShardResult>) -> Result<MergedSweep> {
+    let first = shards.first().ok_or_else(|| Error::msg("no shard manifests to merge"))?;
+    let config = first.config.clone();
+    for s in &shards {
+        if s.config != config {
+            return Err(Error::msg(format!(
+                "shard config mismatch: [{}, {}) was run as {:?}, expected {config:?}",
+                s.lo, s.hi, s.config
+            )));
+        }
+    }
+    shards.sort_by_key(|s| (s.lo, s.hi));
+    let mut covered = 0usize;
+    for s in &shards {
+        match s.lo.cmp(&covered) {
+            std::cmp::Ordering::Greater => {
+                return Err(Error::msg(format!(
+                    "trial coverage gap: [{covered}, {}) missing before shard [{}, {})",
+                    s.lo, s.lo, s.hi
+                )));
+            }
+            std::cmp::Ordering::Less => {
+                return Err(Error::msg(format!(
+                    "trial coverage overlap: shard [{}, {}) re-covers trials below {covered}",
+                    s.lo, s.hi
+                )));
+            }
+            std::cmp::Ordering::Equal => covered = s.hi,
+        }
+    }
+    if covered != config.trials {
+        return Err(Error::msg(format!(
+            "trial coverage incomplete: shards cover [0, {covered}) of {} trials",
+            config.trials
+        )));
+    }
+
+    let mut values = Vec::with_capacity(config.trials);
+    let mut chan = Stats::new();
+    for s in &shards {
+        values.extend_from_slice(&s.values);
+        chan.merge(&s.stats);
+    }
+    let stats = Stats::from_values(&values);
+
+    // Redundancy cross-check: the Chan merge of the shard partials must
+    // agree with the canonical refold — exactly on count/min/max,
+    // to rounding on the float moments.
+    if chan.count() != stats.count()
+        || chan.min().to_bits() != stats.min().to_bits()
+        || chan.max().to_bits() != stats.max().to_bits()
+    {
+        return Err(Error::msg("shard partials inconsistent with trial values (count/min/max)"));
+    }
+    // the float moments are only cross-checkable when finite: a
+    // non-finite trial value (diverged gd-final run, say) degenerates
+    // the Welford fold and the Chan merge differently (inf - inf = NaN)
+    // even for honest manifests, and with all-finite values the Chan
+    // merge cannot go non-finite — so bitwise-equal or either-non-finite
+    // counts as consistent, and count/min/max above still validate
+    // exactly
+    let close = |a: f64, b: f64| {
+        a.to_bits() == b.to_bits()
+            || !(a.is_finite() && b.is_finite())
+            || (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    };
+    if stats.count() > 0 && (!close(chan.mean(), stats.mean()) || !close(chan.m2(), stats.m2())) {
+        return Err(Error::msg(format!(
+            "shard partials inconsistent with trial values: merged mean/m2 {}/{} vs refold {}/{}",
+            chan.mean(),
+            chan.m2(),
+            stats.mean(),
+            stats.m2()
+        )));
+    }
+
+    Ok(MergedSweep { config, values, stats })
+}
+
+// ---------------------------------------------------------------------
+// Standard sweep runners
+// ---------------------------------------------------------------------
+
+/// Run this process's shard of a standard sweep.
+pub fn run_shard(cfg: &SweepConfig, threads: usize, shard: ShardSpec) -> Result<ShardResult> {
+    let (lo, hi) = shard.range(cfg.trials);
+    run_range(cfg, threads, lo, hi)
+}
+
+/// Run an explicit trial range `[lo, hi)` of a standard sweep. Values
+/// are bit-identical to the corresponding slice of the full `[0, N)`
+/// run for any range, thread count and process placement.
+pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Result<ShardResult> {
+    if lo > hi || hi > cfg.trials {
+        return Err(Error::msg(format!(
+            "trial range [{lo}, {hi}) outside sweep of {} trials",
+            cfg.trials
+        )));
+    }
+    // the engine would clamp chunk 0 to 1, but the manifest would then
+    // record a chunk the reader (parse_doc) rejects — fail fast instead
+    if cfg.chunk == 0 {
+        return Err(Error::msg("sweep chunk must be >= 1 (it is part of the sweep identity)"));
+    }
+    if cfg.sweep == SweepKind::Fig4Cluster {
+        return Err(Error::msg(
+            "fig4-cluster shards are produced by `cargo bench --bench bench_fig4_cluster -- \
+             --shard i/k --out-dir DIR`, not by the standard runner (they need the \
+             worker-thread cluster)",
+        ));
+    }
+    let spec = SchemeSpec::parse(&cfg.scheme).map_err(Error::msg)?;
+    let dspec = DecoderSpec::parse(&cfg.decoder).map_err(Error::msg)?;
+    // every shard rebuilds the identical scheme from the salted seed
+    let scheme = build(&spec, &mut Rng::new(cfg.seed ^ SCHEME_SALT));
+    let engine = TrialEngine::new(threads, cfg.seed).with_chunk(cfg.chunk);
+    let values = match cfg.sweep {
+        SweepKind::DecodeError => {
+            let m = scheme.n_machines();
+            decoding_error_values(
+                &engine,
+                |_chunk| make_decoder(&scheme, dspec, cfg.p),
+                bernoulli_masks(m, cfg.p),
+                lo,
+                hi,
+            )
+        }
+        SweepKind::GdFinal => gd_final_values(cfg, &scheme, dspec, &engine, lo, hi),
+        SweepKind::Fig4Cluster => unreachable!("rejected above"),
+        SweepKind::Attack => {
+            let dec = make_decoder(&scheme, dspec, cfg.p);
+            let (_, trace) = greedy_decode_attack_trace(dec.as_ref(), &scheme.a, hi);
+            let n = scheme.n_blocks() as f64;
+            trace[lo..hi].iter().map(|e| e / n).collect()
+        }
+    };
+    Ok(ShardResult::from_values(cfg.clone(), lo, hi, values))
+}
+
+/// Run the whole sweep in-process (the single-process reference a
+/// multi-shard merge must reproduce byte-for-byte).
+pub fn run_full(cfg: &SweepConfig, threads: usize) -> Result<MergedSweep> {
+    merge(vec![run_range(cfg, threads, 0, cfg.trials)?])
+}
+
+fn gd_final_values(
+    cfg: &SweepConfig,
+    scheme: &BuiltScheme,
+    dspec: DecoderSpec,
+    engine: &TrialEngine,
+    lo: usize,
+    hi: usize,
+) -> Vec<f64> {
+    // round the point count up to a block multiple (LstsqData requires
+    // n_blocks | N); keep it above dim so theta* stays well-defined
+    let n_points = cfg
+        .param_usize("n-points", 512)
+        .max(cfg.param_usize("dim", 32) + 1)
+        .div_ceil(scheme.n_blocks())
+        * scheme.n_blocks();
+    let dim = cfg.param_usize("dim", 32);
+    let iters = cfg.param_usize("iters", 30);
+    let sigma = cfg.param_f64("sigma", 1.0);
+    let step_c = cfg.param_usize("step-c", 9) as u32;
+    // the dataset is part of the sweep identity: same seed, same data
+    // in every shard
+    let data = LstsqData::generate(
+        n_points,
+        dim,
+        scheme.n_blocks(),
+        sigma,
+        &mut Rng::new(cfg.seed ^ DATA_SALT),
+    );
+    // the per-chunk context is stateless (every trial is self-contained),
+    // so trial values are provably independent of the chunk grid — run
+    // with chunk 1 to avoid replaying full GD trajectories below `lo`;
+    // the manifest still records cfg.chunk as part of the identity
+    let engine = engine.clone().with_chunk(1);
+    engine.run_range_map(
+        lo,
+        hi,
+        |_chunk| (),
+        |_ctx, _t, rng| {
+            // one self-contained trajectory per trial: everything below
+            // derives from the trial substream, so the value is a pure
+            // function of (config, t)
+            let dec = make_decoder(scheme, dspec, cfg.p);
+            let mut strag = BernoulliStragglers::new(cfg.p, rng.next_u64());
+            let rho = rng.permutation(scheme.n_blocks());
+            let mut gd = SimulatedGcod {
+                decoder: dec.as_ref(),
+                stragglers: &mut strag,
+                step: StepSize::simulated_grid(step_c),
+                rho: Some(rho),
+                m: scheme.n_machines(),
+                alpha_scale: 1.0,
+            };
+            let mut src = &data;
+            gd.run(&mut src, &vec![0.0; dim], iters).final_progress()
+        },
+    )
+}
+
+// ---------------------------------------------------------------------
+// Manifest JSON (hand-rolled, deterministic, no serde)
+// ---------------------------------------------------------------------
+
+fn render_doc(
+    kind: &str,
+    cfg: &SweepConfig,
+    range: Option<(usize, usize)>,
+    values: &[f64],
+    stats: &Stats,
+) -> String {
+    let mut out = String::with_capacity(256 + 32 * values.len());
+    out.push_str("{\n");
+    out.push_str(&format!("  \"kind\": \"{}\",\n", json_escape(kind)));
+    out.push_str(&format!("  \"schema\": {SHARD_SCHEMA},\n"));
+    out.push_str(&format!("  \"sweep\": \"{}\",\n", cfg.sweep.as_str()));
+    out.push_str(&format!("  \"scheme\": \"{}\",\n", json_escape(&cfg.scheme)));
+    out.push_str(&format!("  \"decoder\": \"{}\",\n", json_escape(&cfg.decoder)));
+    out.push_str(&format!(
+        "  \"p\": {}, \"p_bits\": \"{}\",\n",
+        json_f64_display(cfg.p),
+        f64_to_hex_bits(cfg.p)
+    ));
+    out.push_str(&format!("  \"seed\": \"{}\",\n", cfg.seed));
+    out.push_str(&format!("  \"trials\": {},\n", cfg.trials));
+    out.push_str(&format!("  \"chunk\": {},\n", cfg.chunk));
+    out.push_str("  \"params\": {");
+    for (i, (k, v)) in cfg.params.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+    }
+    out.push_str("},\n");
+    if let Some((lo, hi)) = range {
+        out.push_str(&format!("  \"lo\": {lo},\n  \"hi\": {hi},\n"));
+    }
+    out.push_str("  \"stats\": {\n");
+    out.push_str(&format!("    \"count\": {},\n", stats.count()));
+    for (name, x) in
+        [("mean", stats.mean()), ("m2", stats.m2()), ("min", stats.min()), ("max", stats.max())]
+    {
+        out.push_str(&format!(
+            "    \"{name}\": {}, \"{name}_bits\": \"{}\",\n",
+            json_f64_display(x),
+            f64_to_hex_bits(x)
+        ));
+    }
+    out.push_str(&format!("    \"std\": {}\n", json_f64_display(stats.std())));
+    out.push_str("  },\n");
+    out.push_str("  \"values_bits\": [");
+    for (i, v) in values.iter().enumerate() {
+        if i % 8 == 0 {
+            out.push_str("\n    ");
+        } else {
+            out.push(' ');
+        }
+        out.push('"');
+        out.push_str(&f64_to_hex_bits(*v));
+        out.push('"');
+        if i + 1 < values.len() {
+            out.push(',');
+        }
+    }
+    if values.is_empty() {
+        out.push_str("]\n");
+    } else {
+        out.push_str("\n  ]\n");
+    }
+    out.push_str("}\n");
+    out
+}
+
+struct ParsedDoc {
+    json: Json,
+    config: SweepConfig,
+    values: Vec<f64>,
+    /// refold of `values` — validated against the recorded partial
+    stats: Stats,
+}
+
+fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| Error::msg(format!("manifest missing field '{key}'")))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(get(j, key)?
+        .as_str()
+        .ok_or_else(|| Error::msg(format!("manifest field '{key}' is not a string")))?
+        .to_string())
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    get(j, key)?
+        .as_usize()
+        .ok_or_else(|| Error::msg(format!("manifest field '{key}' is not a non-negative integer")))
+}
+
+fn get_f64_bits(j: &Json, name: &str) -> Result<f64> {
+    let key = format!("{name}_bits");
+    let s = get_str(j, &key)?;
+    f64_from_hex_bits(&s)
+        .ok_or_else(|| Error::msg(format!("manifest field '{key}' is not 16 hex digits")))
+}
+
+fn parse_doc(text: &str, expect_kind: &str) -> Result<ParsedDoc> {
+    let json = Json::parse(text).map_err(|e| Error::msg(format!("manifest is not JSON: {e}")))?;
+    let kind = get_str(&json, "kind")?;
+    if kind != expect_kind {
+        return Err(Error::msg(format!("manifest kind '{kind}', expected '{expect_kind}'")));
+    }
+    let schema = get_usize(&json, "schema")? as u64;
+    if schema != SHARD_SCHEMA {
+        return Err(Error::msg(format!(
+            "manifest schema version {schema} does not match this binary's {SHARD_SCHEMA} — \
+             re-run the shards and the merge with the same gcod build"
+        )));
+    }
+    let sweep = SweepKind::parse(&get_str(&json, "sweep")?)?;
+    let scheme = get_str(&json, "scheme")?;
+    let decoder = get_str(&json, "decoder")?;
+    let p = get_f64_bits(&json, "p")?;
+    let seed = get_str(&json, "seed")?
+        .parse::<u64>()
+        .map_err(|e| Error::msg(format!("manifest field 'seed' is not a u64: {e}")))?;
+    let trials = get_usize(&json, "trials")?;
+    let chunk = get_usize(&json, "chunk")?;
+    if chunk == 0 {
+        return Err(Error::msg("manifest field 'chunk' must be >= 1"));
+    }
+    let mut params = BTreeMap::new();
+    match get(&json, "params")? {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let v = v
+                    .as_str()
+                    .ok_or_else(|| Error::msg(format!("manifest param '{k}' is not a string")))?;
+                params.insert(k.clone(), v.to_string());
+            }
+        }
+        _ => return Err(Error::msg("manifest field 'params' is not an object")),
+    }
+    let config = SweepConfig { sweep, scheme, decoder, p, seed, trials, chunk, params };
+
+    let raw = get(&json, "values_bits")?
+        .as_arr()
+        .ok_or_else(|| Error::msg("manifest field 'values_bits' is not an array"))?;
+    let mut values = Vec::with_capacity(raw.len());
+    for (i, v) in raw.iter().enumerate() {
+        let s = v
+            .as_str()
+            .ok_or_else(|| Error::msg(format!("values_bits[{i}] is not a string")))?;
+        values.push(
+            f64_from_hex_bits(s)
+                .ok_or_else(|| Error::msg(format!("values_bits[{i}] is not 16 hex digits")))?,
+        );
+    }
+
+    // integrity: the recorded partial must match a refold of the values
+    let stats = Stats::from_values(&values);
+    let rec = get(&json, "stats")?;
+    let rec_count = get_usize(rec, "count")? as u64;
+    let consistent = rec_count == stats.count()
+        && get_f64_bits(rec, "mean")?.to_bits() == stats.mean().to_bits()
+        && get_f64_bits(rec, "m2")?.to_bits() == stats.m2().to_bits()
+        && get_f64_bits(rec, "min")?.to_bits() == stats.min().to_bits()
+        && get_f64_bits(rec, "max")?.to_bits() == stats.max().to_bits();
+    if !consistent {
+        return Err(Error::msg(
+            "manifest stats block does not match its values (corrupt or hand-edited manifest)",
+        ));
+    }
+
+    Ok(ParsedDoc { json, config, values, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(trials: usize) -> SweepConfig {
+        SweepConfig {
+            sweep: SweepKind::DecodeError,
+            scheme: "graph-rr:12,3".into(),
+            decoder: "optimal".into(),
+            p: 0.25,
+            seed: 42,
+            trials,
+            chunk: 8,
+            params: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn shard_spec_parse_and_range() {
+        let s = ShardSpec::parse("2/5").unwrap();
+        assert_eq!((s.index, s.count), (2, 5));
+        assert_eq!(format!("{s}"), "2/5");
+        assert!(ShardSpec::parse("5/5").is_err());
+        assert!(ShardSpec::parse("0/0").is_err());
+        assert!(ShardSpec::parse("x/2").is_err());
+        assert!(ShardSpec::parse("3").is_err());
+        // ranges partition [0, n) contiguously, sizes within 1
+        for n in [0usize, 1, 7, 16, 23] {
+            for k in [1usize, 2, 3, 5, 8] {
+                let mut cur = 0;
+                for i in 0..k {
+                    let (lo, hi) = ShardSpec::new(i, k).unwrap().range(n);
+                    assert_eq!(lo, cur, "n={n} k={k} i={i}");
+                    assert!(hi - lo <= n / k + 1);
+                    cur = hi;
+                }
+                assert_eq!(cur, n, "n={n} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn manifest_round_trip_bitwise() {
+        let values = vec![0.5, -0.0, 3.25e-30, 1.0 / 3.0, f64::MIN_POSITIVE];
+        let mut c = cfg(5);
+        c.params.insert("dim".into(), "32".into());
+        let shard = ShardResult::from_values(c, 0, 5, values.clone());
+        let text = shard.render();
+        let back = ShardResult::parse(&text).unwrap();
+        assert_eq!(back.config, shard.config);
+        assert_eq!((back.lo, back.hi), (0, 5));
+        for (a, b) in back.values.iter().zip(&values) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // render is deterministic
+        assert_eq!(text, ShardResult::parse(&text).unwrap().render());
+    }
+
+    #[test]
+    fn empty_shard_round_trips() {
+        let shard = ShardResult::from_values(cfg(4), 2, 2, vec![]);
+        let back = ShardResult::parse(&shard.render()).unwrap();
+        assert_eq!((back.lo, back.hi), (2, 2));
+        assert!(back.values.is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_schema_and_kind_mismatch() {
+        let text = ShardResult::from_values(cfg(2), 0, 2, vec![1.0, 2.0]).render();
+        let bad_schema = text.replace("\"schema\": 1", "\"schema\": 99");
+        let err = ShardResult::parse(&bad_schema).unwrap_err();
+        assert!(format!("{err}").contains("schema version 99"), "{err}");
+        let bad_kind = text.replace(SHARD_KIND, "gcod-other");
+        assert!(ShardResult::parse(&bad_kind).is_err());
+        assert!(ShardResult::parse("{}").is_err());
+        assert!(ShardResult::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_tampered_values() {
+        let text = ShardResult::from_values(cfg(2), 0, 2, vec![1.0, 2.0]).render();
+        // flip one value without updating the stats block
+        let tampered = text.replace(&f64_to_hex_bits(2.0), &f64_to_hex_bits(3.0));
+        let err = ShardResult::parse(&tampered).unwrap_err();
+        assert!(format!("{err}").contains("does not match its values"), "{err}");
+    }
+
+    #[test]
+    fn merge_validates_coverage() {
+        let c = cfg(10);
+        let mk = |lo: usize, hi: usize| {
+            ShardResult::from_values(c.clone(), lo, hi, (lo..hi).map(|t| t as f64).collect())
+        };
+        // out-of-order shards merge fine
+        let merged = merge(vec![mk(6, 10), mk(0, 3), mk(3, 6)]).unwrap();
+        assert_eq!(merged.values, (0..10).map(|t| t as f64).collect::<Vec<_>>());
+        assert_eq!(merged.stats.count(), 10);
+        // gap
+        let err = merge(vec![mk(0, 3), mk(4, 10)]).unwrap_err();
+        assert!(format!("{err}").contains("gap"), "{err}");
+        // overlap
+        let err = merge(vec![mk(0, 5), mk(4, 10)]).unwrap_err();
+        assert!(format!("{err}").contains("overlap"), "{err}");
+        // incomplete
+        let err = merge(vec![mk(0, 9)]).unwrap_err();
+        assert!(format!("{err}").contains("incomplete"), "{err}");
+        // empty
+        assert!(merge(vec![]).is_err());
+        // config mismatch
+        let mut other = cfg(10);
+        other.seed = 43;
+        let b = ShardResult::from_values(other, 5, 10, (5..10).map(|t| t as f64).collect());
+        let err = merge(vec![mk(0, 5), b]).unwrap_err();
+        assert!(format!("{err}").contains("config mismatch"), "{err}");
+    }
+
+    #[test]
+    fn merge_matches_single_fold_bitwise() {
+        let c = cfg(97);
+        let vals: Vec<f64> = (0..97).map(|i| ((i * i) as f64 * 0.37).sin() * 3.0).collect();
+        let single = Stats::from_values(&vals);
+        let shards = vec![
+            ShardResult::from_values(c.clone(), 0, 13, vals[0..13].to_vec()),
+            ShardResult::from_values(c.clone(), 13, 50, vals[13..50].to_vec()),
+            ShardResult::from_values(c.clone(), 50, 50, vec![]),
+            ShardResult::from_values(c.clone(), 50, 97, vals[50..97].to_vec()),
+        ];
+        let merged = merge(shards).unwrap();
+        assert_eq!(merged.stats.count(), single.count());
+        assert_eq!(merged.stats.mean().to_bits(), single.mean().to_bits());
+        assert_eq!(merged.stats.m2().to_bits(), single.m2().to_bits());
+        assert_eq!(merged.stats.min().to_bits(), single.min().to_bits());
+        assert_eq!(merged.stats.max().to_bits(), single.max().to_bits());
+    }
+
+    #[test]
+    fn merge_accepts_non_finite_values() {
+        // a diverged gd-final run can legitimately record inf/NaN; the
+        // Chan cross-check must not reject the honest manifests (the
+        // Welford fold and the Chan merge degenerate differently there)
+        let c = cfg(4);
+        let a = ShardResult::from_values(c.clone(), 0, 2, vec![1.0, f64::INFINITY]);
+        let b = ShardResult::from_values(c.clone(), 2, 4, vec![f64::NAN, 2.0]);
+        // shard manifests round-trip their non-finite values bit-exactly
+        let a = ShardResult::parse(&a.render()).unwrap();
+        let merged = merge(vec![a, b]).unwrap();
+        assert_eq!(merged.stats.count(), 4);
+        assert!(merged.values[1].is_infinite());
+        assert!(merged.values[2].is_nan());
+    }
+
+    #[test]
+    fn merged_render_parses_back() {
+        let c = cfg(3);
+        let m = merge(vec![ShardResult::from_values(c, 0, 3, vec![1.0, 2.0, 4.0])]).unwrap();
+        let text = m.render();
+        let back = MergedSweep::parse(&text).unwrap();
+        assert_eq!(back.config, m.config);
+        assert_eq!(back.values.len(), 3);
+        assert_eq!(back.stats.mean().to_bits(), m.stats.mean().to_bits());
+    }
+
+    #[test]
+    fn sweep_kind_strings() {
+        for k in [
+            SweepKind::DecodeError,
+            SweepKind::GdFinal,
+            SweepKind::Attack,
+            SweepKind::Fig4Cluster,
+        ] {
+            assert_eq!(SweepKind::parse(k.as_str()).unwrap(), k);
+        }
+        assert!(SweepKind::parse("nope").is_err());
+        // fig4-cluster is bench-produced: the standard runner refuses it
+        let mut c = cfg(4);
+        c.sweep = SweepKind::Fig4Cluster;
+        assert!(run_range(&c, 1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn run_range_rejects_chunk_zero() {
+        // a chunk-0 manifest would be unreadable by parse_doc, so the
+        // runner must refuse to produce one
+        let mut c = cfg(4);
+        c.chunk = 0;
+        let err = run_range(&c, 1, 0, 4).unwrap_err();
+        assert!(format!("{err}").contains("chunk"), "{err}");
+    }
+}

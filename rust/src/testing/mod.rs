@@ -60,7 +60,8 @@ where
                     run_case(&mut prop, seed, case, factor)
                 {
                     panic!(
-                        "property '{name}' failed (case {case}, seed {seed}, shrunk to {factor}x): {small_msg}"
+                        "property '{name}' failed (case {case}, seed {seed}, \
+                         shrunk to {factor}x): {small_msg}"
                     );
                 }
             }

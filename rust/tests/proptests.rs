@@ -6,6 +6,7 @@ use gcod::decode::{Decoder, GenericOptimalDecoder, OptimalGraphDecoder};
 use gcod::graphs::components::{analyze_components, optimal_alpha};
 use gcod::graphs::random_regular_graph;
 use gcod::linalg::{dist2_sq, dist_to_ones_sq};
+use gcod::metrics::Stats;
 use gcod::prop_assert;
 use gcod::testing::check;
 
@@ -215,6 +216,97 @@ fn prop_lsqr_matches_cholesky() {
             got.x,
             exact
         );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Stats::merge algebra (the shard-merge cross-check relies on these)
+// ---------------------------------------------------------------------
+
+fn random_stats(g: &mut gcod::testing::Gen<'_>, len: usize) -> (Vec<f64>, Stats) {
+    let xs: Vec<f64> = (0..len).map(|_| g.rng.gaussian() * 10.0).collect();
+    let s = Stats::from_values(&xs);
+    (xs, s)
+}
+
+fn close(a: f64, b: f64) -> bool {
+    (a - b).abs() <= 1e-12 * a.abs().max(b.abs()).max(1.0)
+}
+
+/// merge is associative: count/min/max bitwise, mean/m2 to rounding.
+#[test]
+fn prop_stats_merge_associative() {
+    check("stats-merge-associative", 60, |g| {
+        let (la, lb, lc) = (g.size(0, 20), g.size(0, 20), g.size(0, 20));
+        let (_, a) = random_stats(g, la);
+        let (_, b) = random_stats(g, lb);
+        let (_, c) = random_stats(g, lc);
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        prop_assert!(left.count() == right.count(), "count");
+        prop_assert!(left.min().to_bits() == right.min().to_bits(), "min");
+        prop_assert!(left.max().to_bits() == right.max().to_bits(), "max");
+        prop_assert!(close(left.mean(), right.mean()), "mean {} vs {}", left.mean(), right.mean());
+        prop_assert!(close(left.m2(), right.m2()), "m2 {} vs {}", left.m2(), right.m2());
+        Ok(())
+    });
+}
+
+/// The empty accumulator is a two-sided identity, bit for bit.
+#[test]
+fn prop_stats_merge_identity() {
+    check("stats-merge-identity", 40, |g| {
+        let len = g.size(0, 30);
+        let (_, s) = random_stats(g, len);
+        let mut right = s.clone();
+        right.merge(&Stats::new());
+        let mut left = Stats::new();
+        left.merge(&s);
+        for t in [&right, &left] {
+            prop_assert!(t.count() == s.count(), "count");
+            prop_assert!(t.mean().to_bits() == s.mean().to_bits(), "mean");
+            prop_assert!(t.m2().to_bits() == s.m2().to_bits(), "m2");
+            prop_assert!(t.min().to_bits() == s.min().to_bits(), "min");
+            prop_assert!(t.max().to_bits() == s.max().to_bits(), "max");
+        }
+        Ok(())
+    });
+}
+
+/// Merging singletons reproduces the sequential fold (count/min/max
+/// bitwise, float moments to rounding) — and chunked partial merges
+/// agree with both.
+#[test]
+fn prop_stats_merge_of_singletons_matches_fold() {
+    check("stats-merge-singletons", 40, |g| {
+        let len = g.size(1, 40);
+        let (xs, folded) = random_stats(g, len);
+        let mut singles = Stats::new();
+        for &x in &xs {
+            let mut one = Stats::new();
+            one.push(x);
+            singles.merge(&one);
+        }
+        let chunk = 1 + g.rng.below(7);
+        let mut chunked = Stats::new();
+        for c in xs.chunks(chunk) {
+            chunked.merge(&Stats::from_values(c));
+        }
+        for t in [&singles, &chunked] {
+            prop_assert!(t.count() == folded.count(), "count");
+            prop_assert!(t.min().to_bits() == folded.min().to_bits(), "min");
+            prop_assert!(t.max().to_bits() == folded.max().to_bits(), "max");
+            prop_assert!(close(t.mean(), folded.mean()), "mean {} vs {}", t.mean(), folded.mean());
+            prop_assert!(close(t.m2(), folded.m2()), "m2 {} vs {}", t.m2(), folded.m2());
+        }
         Ok(())
     });
 }

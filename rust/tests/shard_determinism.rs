@@ -1,0 +1,334 @@
+//! Cross-shard determinism + conformance suite for the sharded sweep
+//! subsystem (`sweep::shard`). The contracts pinned here:
+//!
+//! * running a standard sweep as 1, 4 or 8 shards (any thread counts)
+//!   and merging produces a result **bit-identical** to the
+//!   single-process run — including byte-identical merged JSON — for
+//!   the Fig-3 (`decode-error`), Fig-4 (`gd-final`, the deterministic
+//!   substream port of the cluster experiment) and greedy-attack
+//!   (`attack`) sweeps, with both stateless and warm-started (LSQR)
+//!   decoders;
+//! * a property test: *any* random contiguous split of `[0, N)` merges
+//!   to the single-run bits, for random chunk sizes (partial leading
+//!   chunks exercise the warm-state replay path);
+//! * the `gcod sweep-shard` / `gcod sweep-merge` CLI round-trip over
+//!   real separate OS processes is byte-identical to the in-process
+//!   single run, and the merge CLI rejects bad shard sets.
+
+use gcod::prop_assert;
+use gcod::sweep::shard::{self, MergedSweep, ShardSpec, SweepConfig, SweepKind};
+use gcod::testing::check;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+
+fn cfg(
+    kind: SweepKind,
+    scheme: &str,
+    decoder: &str,
+    trials: usize,
+    seed: u64,
+    chunk: usize,
+) -> SweepConfig {
+    SweepConfig {
+        sweep: kind,
+        scheme: scheme.into(),
+        decoder: decoder.into(),
+        p: 0.25,
+        seed,
+        trials,
+        chunk,
+        params: BTreeMap::new(),
+    }
+}
+
+/// Run the sweep as `k` balanced shards (each with its own thread
+/// count, to compose shard- and thread-invariance) and merge.
+fn run_split(cfg: &SweepConfig, k: usize) -> MergedSweep {
+    let shards: Vec<_> = (0..k)
+        .map(|i| {
+            let threads = 1 + (i % 3);
+            shard::run_shard(cfg, threads, ShardSpec::new(i, k).unwrap()).unwrap()
+        })
+        .collect();
+    shard::merge(shards).unwrap()
+}
+
+fn assert_merged_identical(a: &MergedSweep, b: &MergedSweep, ctx: &str) {
+    assert_eq!(a.values.len(), b.values.len(), "{ctx}: value count");
+    for (i, (x, y)) in a.values.iter().zip(&b.values).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: trial {i}: {x} vs {y}");
+    }
+    assert_eq!(a.stats.mean().to_bits(), b.stats.mean().to_bits(), "{ctx}: mean");
+    assert_eq!(a.stats.m2().to_bits(), b.stats.m2().to_bits(), "{ctx}: m2");
+    // the headline acceptance contract: byte-identical merged JSON
+    assert_eq!(a.render(), b.render(), "{ctx}: merged JSON bytes");
+}
+
+/// Fig-3 sweep: stateless linear-time graph decoder.
+#[test]
+fn decode_error_1_vs_4_vs_8_shards_bit_exact() {
+    let c = cfg(SweepKind::DecodeError, "graph-rr:16,3", "optimal", 200, 7, 8);
+    let single = shard::run_full(&c, 2).unwrap();
+    for k in [4usize, 8] {
+        let merged = run_split(&c, k);
+        assert_merged_identical(&single, &merged, &format!("decode-error {k} shards"));
+    }
+}
+
+/// Fig-3 sweep through the *warm-started* LSQR decoder: shard
+/// boundaries that cut chunks mid-way exercise the replay path, which
+/// must rebuild the warm-start history exactly.
+#[test]
+fn decode_error_lsqr_warm_replay_bit_exact() {
+    // 90 trials, chunk 8: balanced 4-way shards are 23/23/22/22 wide,
+    // so shard starts (23, 46, 68) all land mid-chunk
+    let c = cfg(SweepKind::DecodeError, "graph-rr:12,3", "optimal-lsqr", 90, 13, 8);
+    let single = shard::run_full(&c, 1).unwrap();
+    let merged = run_split(&c, 4);
+    assert_merged_identical(&single, &merged, "lsqr warm replay 4 shards");
+    // explicit ragged split (empty shard included)
+    let ranges = [(0usize, 5usize), (5, 37), (37, 37), (37, 90)];
+    let shards: Vec<_> =
+        ranges.iter().map(|&(lo, hi)| shard::run_range(&c, 2, lo, hi).unwrap()).collect();
+    let ragged = shard::merge(shards).unwrap();
+    assert_merged_identical(&single, &ragged, "lsqr warm replay ragged split");
+}
+
+/// Fig-4 on deterministic substreams (`gd-final`): each trial is one
+/// full simulated coded-GD trajectory.
+#[test]
+fn gd_final_1_vs_4_vs_8_shards_bit_exact() {
+    let mut c = cfg(SweepKind::GdFinal, "graph-rr:8,3", "optimal", 12, 3, 4);
+    c.params.insert("n-points".into(), "64".into());
+    c.params.insert("dim".into(), "8".into());
+    c.params.insert("iters".into(), "10".into());
+    let single = shard::run_full(&c, 2).unwrap();
+    for k in [4usize, 8] {
+        let merged = run_split(&c, k);
+        assert_merged_identical(&single, &merged, &format!("gd-final {k} shards"));
+    }
+}
+
+/// Greedy adversarial sweep: the trial axis is the attack budget, and
+/// shards recompute the nested greedy trace up to their own `hi` — the
+/// prefix property must make every slice agree with the full run.
+#[test]
+fn attack_1_vs_3_shards_bit_exact() {
+    let c = cfg(SweepKind::Attack, "graph-rr:12,3", "optimal", 10, 0, 4);
+    let single = shard::run_full(&c, 1).unwrap();
+    let merged = run_split(&c, 3);
+    assert_merged_identical(&single, &merged, "attack 3 shards");
+    // and through the warm-started generic decoder
+    let c2 = cfg(SweepKind::Attack, "graph-rr:12,3", "optimal-lsqr", 8, 0, 4);
+    let single2 = shard::run_full(&c2, 1).unwrap();
+    let merged2 = run_split(&c2, 4);
+    assert_merged_identical(&single2, &merged2, "attack lsqr 4 shards");
+}
+
+/// Property: ANY random contiguous split of [0, N) merges to the
+/// single-run bits, for random chunk sizes, seeds and both decoder
+/// families (the stateless graph decoder and the warm-started LSQR
+/// decoder whose replay path depends on the chunk grid).
+#[test]
+fn prop_random_shard_splits_merge_to_single_bits() {
+    check("shard-random-splits", 12, |g| {
+        let trials = g.size(20, 60);
+        let chunk = g.size(1, 16);
+        let seed = g.rng.next_u64();
+        let decoder = *g.choice(&["optimal", "optimal-lsqr"]);
+        let c = cfg(SweepKind::DecodeError, "graph-rr:12,3", decoder, trials, seed, chunk);
+        let single = shard::run_full(&c, 2).map_err(|e| format!("full run: {e}"))?;
+        // random cut points -> contiguous ranges covering [0, trials)
+        let n_cuts = g.size(0, 4);
+        let mut cuts: Vec<usize> = (0..n_cuts).map(|_| g.rng.below(trials + 1)).collect();
+        cuts.push(0);
+        cuts.push(trials);
+        cuts.sort_unstable();
+        cuts.dedup();
+        let mut shards = Vec::new();
+        for w in cuts.windows(2) {
+            let threads = 1 + g.rng.below(3);
+            shards.push(
+                shard::run_range(&c, threads, w[0], w[1]).map_err(|e| format!("range: {e}"))?,
+            );
+        }
+        let merged = shard::merge(shards).map_err(|e| format!("merge: {e}"))?;
+        prop_assert!(
+            merged.render() == single.render(),
+            "split {cuts:?} chunk {chunk} decoder {decoder} diverged from single run"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// CLI round-trip: real separate OS processes
+// ---------------------------------------------------------------------
+
+fn gcod_bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_gcod"))
+}
+
+fn run_ok(cmd: &mut Command) {
+    let out = cmd.output().expect("spawn gcod");
+    assert!(
+        out.status.success(),
+        "gcod failed: {:?}\nstdout: {}\nstderr: {}",
+        cmd,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gcod_shard_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The acceptance contract: `gcod sweep-shard` + `gcod sweep-merge`
+/// across separate OS processes produce byte-identical merged metric
+/// JSON to the equivalent single-process run, for at least two shard
+/// counts (here 1, 2 and 3).
+#[test]
+fn cli_shard_merge_round_trip_byte_identical() {
+    let dir = tmp_dir("cli");
+    let sweep_args: &[&str] = &[
+        "sweep-shard",
+        "--sweep",
+        "decode-error",
+        "--scheme",
+        "graph-rr:16,3",
+        "--decoder",
+        "optimal",
+        "--p",
+        "0.2",
+        "--trials",
+        "120",
+        "--seed",
+        "9",
+        "--chunk",
+        "8",
+        "--threads",
+        "2",
+    ];
+    let shard_path = |i: usize, k: usize| dir.join(format!("s{i}of{k}.json"));
+    for k in [1usize, 2, 3] {
+        for i in 0..k {
+            run_ok(gcod_bin().args(sweep_args).args([
+                "--shard",
+                &format!("{i}/{k}"),
+                "--out",
+                shard_path(i, k).to_str().unwrap(),
+            ]));
+        }
+        let merged = dir.join(format!("merged_{k}.json"));
+        let mut merge_cmd = gcod_bin();
+        merge_cmd.arg("sweep-merge");
+        for i in 0..k {
+            merge_cmd.args(["--input", shard_path(i, k).to_str().unwrap()]);
+        }
+        merge_cmd.args(["--out", merged.to_str().unwrap()]);
+        run_ok(&mut merge_cmd);
+    }
+    let m1 = std::fs::read_to_string(dir.join("merged_1.json")).unwrap();
+    let m2 = std::fs::read_to_string(dir.join("merged_2.json")).unwrap();
+    let m3 = std::fs::read_to_string(dir.join("merged_3.json")).unwrap();
+    assert_eq!(m1, m2, "1-shard vs 2-shard merged JSON");
+    assert_eq!(m1, m3, "1-shard vs 3-shard merged JSON");
+
+    // and both equal the in-process single run of the same config
+    let c = SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 9,
+        trials: 120,
+        chunk: 8,
+        params: BTreeMap::new(),
+    };
+    let single = shard::run_full(&c, 4).unwrap();
+    assert_eq!(m1, single.render(), "CLI merge vs in-process run");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// sweep-merge must reject incomplete and mismatched shard sets.
+#[test]
+fn cli_merge_rejects_bad_shard_sets() {
+    let dir = tmp_dir("cli_bad");
+    let base: &[&str] =
+        &["sweep-shard", "--trials", "60", "--seed", "4", "--threads", "1"];
+    let s0 = dir.join("s0.json");
+    let s2 = dir.join("s2.json");
+    run_ok(gcod_bin().args(base).args(["--shard", "0/3", "--out", s0.to_str().unwrap()]));
+    run_ok(gcod_bin().args(base).args(["--shard", "2/3", "--out", s2.to_str().unwrap()]));
+
+    // gap: shard 1/3 missing
+    let out = gcod_bin()
+        .args(["sweep-merge", "--input", s0.to_str().unwrap(), "--input", s2.to_str().unwrap()])
+        .args(["--out", dir.join("m.json").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "merge of gapped shards must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("gap"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // seed mismatch
+    let s1_other = dir.join("s1_other.json");
+    run_ok(gcod_bin().args([
+        "sweep-shard",
+        "--trials",
+        "60",
+        "--seed",
+        "5",
+        "--threads",
+        "1",
+        "--shard",
+        "1/3",
+        "--out",
+        s1_other.to_str().unwrap(),
+    ]));
+    let out = gcod_bin()
+        .args([
+            "sweep-merge",
+            "--input",
+            s0.to_str().unwrap(),
+            "--input",
+            s1_other.to_str().unwrap(),
+            "--input",
+            s2.to_str().unwrap(),
+        ])
+        .args(["--out", dir.join("m2.json").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "merge of mismatched-seed shards must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("config mismatch"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+
+    // schema mismatch: doctor one manifest's schema version
+    let doctored = std::fs::read_to_string(&s0)
+        .unwrap()
+        .replace("\"schema\": 1", "\"schema\": 99");
+    let s0_bad = dir.join("s0_bad.json");
+    std::fs::write(&s0_bad, doctored).unwrap();
+    let out = gcod_bin()
+        .args(["sweep-merge", "--input", s0_bad.to_str().unwrap()])
+        .args(["--out", dir.join("m3.json").to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "merge of wrong-schema manifest must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("schema version 99"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

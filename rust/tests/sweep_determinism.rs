@@ -122,6 +122,127 @@ fn decode_into_matches_decode_ignore() {
     );
 }
 
+/// decode_into == decode at the degenerate sizes every decoder must
+/// survive: n=1 and n=2 blocks, zero machines, the no-straggler mask
+/// and the all-straggler mask — across all five decoder families.
+#[test]
+fn decode_into_matches_decode_edge_sizes() {
+    use gcod::graphs::Graph;
+
+    /// no stragglers, all stragglers, and (when m > 0) the two
+    /// single-flip boundary masks
+    fn edge_masks(m: usize) -> Vec<Vec<bool>> {
+        let mut v = vec![vec![false; m], vec![true; m]];
+        if m >= 1 {
+            let mut one = vec![false; m];
+            one[0] = true;
+            v.push(one);
+            let mut all_but_one = vec![true; m];
+            all_but_one[m - 1] = false;
+            v.push(all_but_one);
+        }
+        v
+    }
+
+    fn check_masks<A: Decoder, B: Decoder>(
+        via_decode: &A,
+        via_into: &B,
+        masks: &[Vec<bool>],
+        ctx: &str,
+    ) {
+        let mut out = Decoding { w: vec![f64::NAN; 2], alpha: vec![f64::NAN; 1] }; // stale junk
+        for (i, mask) in masks.iter().enumerate() {
+            let d = via_decode.decode(mask);
+            via_into.decode_into(mask, &mut out);
+            assert_bit_equal(&d, &out, &format!("{ctx}, mask {i}"));
+        }
+    }
+
+    // n = 1 block, zero machines: the literally-empty mask
+    let g1 = Graph::new(1, vec![]);
+    let a1 = g1.assignment_matrix();
+    check_masks(
+        &OptimalGraphDecoder::new(&g1),
+        &OptimalGraphDecoder::new(&g1),
+        &edge_masks(0),
+        "graph n=1 m=0",
+    );
+    check_masks(
+        &GenericOptimalDecoder::new(&a1),
+        &GenericOptimalDecoder::new(&a1),
+        &edge_masks(0),
+        "lsqr n=1 m=0",
+    );
+    check_masks(
+        &FixedDecoder::new(&a1, 0.2),
+        &FixedDecoder::new(&a1, 0.2),
+        &edge_masks(0),
+        "fixed n=1 m=0",
+    );
+    check_masks(
+        &IgnoreStragglersDecoder { a: &a1, weight: 1.0 },
+        &IgnoreStragglersDecoder { a: &a1, weight: 1.0 },
+        &edge_masks(0),
+        "ignore n=1 m=0",
+    );
+
+    // n = 2 blocks, one machine (a single graph edge)
+    let g2 = Graph::new(2, vec![(0, 1)]);
+    let a2 = g2.assignment_matrix();
+    check_masks(
+        &OptimalGraphDecoder::new(&g2),
+        &OptimalGraphDecoder::new(&g2),
+        &edge_masks(1),
+        "graph n=2 m=1",
+    );
+    check_masks(
+        &GenericOptimalDecoder::new(&a2),
+        &GenericOptimalDecoder::new(&a2),
+        &edge_masks(1),
+        "lsqr n=2 m=1",
+    );
+    check_masks(
+        &FixedDecoder::new(&a2, 0.2),
+        &FixedDecoder::new(&a2, 0.2),
+        &edge_masks(1),
+        "fixed n=2 m=1",
+    );
+    check_masks(
+        &IgnoreStragglersDecoder { a: &a2, weight: 0.5 },
+        &IgnoreStragglersDecoder { a: &a2, weight: 0.5 },
+        &edge_masks(1),
+        "ignore n=2 m=1",
+    );
+
+    // FRC at its smallest shapes: 1 block / 1 machine and 2 / 2
+    let f1 = FrcCode::new(1, 1, 1);
+    check_masks(
+        &FrcOptimalDecoder::new(&f1),
+        &FrcOptimalDecoder::new(&f1),
+        &edge_masks(1),
+        "frc n=1 m=1",
+    );
+    let f2 = FrcCode::new(2, 2, 1);
+    check_masks(
+        &FrcOptimalDecoder::new(&f2),
+        &FrcOptimalDecoder::new(&f2),
+        &edge_masks(2),
+        "frc n=2 m=2",
+    );
+    check_masks(
+        &FixedDecoder::new(f2.assignment(), 0.3),
+        &FixedDecoder::new(f2.assignment(), 0.3),
+        &edge_masks(2),
+        "fixed frc n=2",
+    );
+    check_masks(
+        &GenericOptimalDecoder::new(f2.assignment()),
+        &GenericOptimalDecoder::new(f2.assignment()),
+        &edge_masks(2),
+        "lsqr frc n=2",
+    );
+}
+
 /// The headline contract: a Monte-Carlo sweep accumulates identical
 /// metrics on 1 thread and on 8, for both a stateless decoder and the
 /// stateful warm-started LSQR decoder (chunk-scoped state).
@@ -135,7 +256,12 @@ fn engine_one_thread_equals_eight_threads() {
 
     let graph_sweep = |threads: usize| {
         let engine = TrialEngine::new(threads, 0xD15C).with_chunk(8);
-        decoding_error_sweep(&engine, |_c| OptimalGraphDecoder::new(g), bernoulli_masks(m, 0.25), 256)
+        decoding_error_sweep(
+            &engine,
+            |_c| OptimalGraphDecoder::new(g),
+            bernoulli_masks(m, 0.25),
+            256,
+        )
     };
     let s1 = graph_sweep(1);
     let s8 = graph_sweep(8);
@@ -147,7 +273,12 @@ fn engine_one_thread_equals_eight_threads() {
 
     let lsqr_sweep = |threads: usize| {
         let engine = TrialEngine::new(threads, 0xD15C).with_chunk(8);
-        decoding_error_sweep(&engine, |_c| GenericOptimalDecoder::new(a), bernoulli_masks(m, 0.2), 96)
+        decoding_error_sweep(
+            &engine,
+            |_c| GenericOptimalDecoder::new(a),
+            bernoulli_masks(m, 0.2),
+            96,
+        )
     };
     let l1 = lsqr_sweep(1);
     let l8 = lsqr_sweep(8);
