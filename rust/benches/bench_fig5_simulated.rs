@@ -15,6 +15,16 @@
 //!
 //! Flags: --runs (default 5; paper uses 20 — pass --runs 20 for the
 //! full error bars), --iters (default 50), --threads N, --quick (runs=2).
+//!
+//! Sharded mode: --shard i/k [--out-dir DIR] [--trials N] ports the
+//! repetition axis onto standard `gd-final` sweep configs — one
+//! manifest per (arm, p) covering this process's slice of the
+//! repetitions, mergeable with `gcod sweep-merge` (or runnable whole
+//! under `gcod sweep-launch`) bit-identically to a single-process run.
+//! The sharded arms use the standard gd-final runner (grid step sizes
+//! via --set step-c, no per-arm gamma tuning or uncoded 6x iteration
+//! compensation — those remain interactive-mode features); --quick (or
+//! --small) swaps in regime-1-sized schemes for CI smoke runs.
 
 use gcod::bench_util::{BenchArgs, P_GRID};
 use gcod::codes::zoo::{build, make_decoder, DecoderSpec, SchemeSpec};
@@ -23,7 +33,10 @@ use gcod::gd::{SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Stats, Table};
 use gcod::prng::Rng;
 use gcod::straggler::BernoulliStragglers;
+use gcod::sweep::shard::{self, ShardSpec, SweepConfig, SweepKind};
 use gcod::sweep::TrialEngine;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 const N: usize = 6552;
 const K: usize = 200;
@@ -113,8 +126,105 @@ fn tune_step(engine: &TrialEngine, arm: &Arm, data: &LstsqData) -> u32 {
     best.1
 }
 
+/// Sharded manifest mode: the Figure-5 arms as standard `gd-final`
+/// sweeps (one full deterministic GD trajectory per trial), one shard
+/// manifest per (arm, p) — the last ROADMAP "port" item, making every
+/// figure sweep dispatchable.
+fn run_shard_mode(args: &BenchArgs, spec: ShardSpec) {
+    let small = args.quick() || args.has("--small");
+    let trials = args.usize_or("--trials", if small { 4 } else { 20 });
+    let threads = args.threads();
+    let out_dir = PathBuf::from(args.str_or("--out-dir", "fig5_shards"));
+    if let Err(e) = std::fs::create_dir_all(&out_dir) {
+        eprintln!("cannot create --out-dir {}: {e}", out_dir.display());
+        std::process::exit(2);
+    }
+    // (label, scheme, decoder): regime-2 paper arms, or regime-1-sized
+    // stand-ins for smoke runs
+    let arms: Vec<(&str, String, &str)> = if small {
+        vec![
+            ("a1_optimal", "graph-rr:16,3".into(), "optimal"),
+            ("a1_fixed", "graph-rr:16,3".into(), "fixed"),
+            ("frc_optimal", "frc:16,24,3".into(), "optimal"),
+        ]
+    } else {
+        vec![
+            ("a2_optimal", "lps:5,13".into(), "optimal"),
+            ("a2_fixed", "lps:5,13".into(), "fixed"),
+            ("expander_fixed", format!("expander:{N},6"), "fixed"),
+            ("frc_optimal", format!("frc:{NBLOCKS},{N},6"), "optimal"),
+            ("uncoded_ignore", format!("uncoded:{NBLOCKS}"), "ignore"),
+        ]
+    };
+    let mut params = BTreeMap::new();
+    if small {
+        params.insert("n-points".into(), "96".into());
+        params.insert("dim".into(), "12".into());
+        params.insert("iters".into(), "10".into());
+    } else {
+        params.insert("n-points".into(), N.to_string());
+        params.insert("dim".into(), K.to_string());
+        params.insert("iters".into(), args.usize_or("--iters", 50).to_string());
+    }
+    params.insert("step-c".into(), "9".into());
+    println!(
+        "== Figure 5 sharded mode: shard {spec}, {trials} repetitions/combo, {threads} threads =="
+    );
+    let mut write_failures = 0usize;
+    for (name, scheme, decoder) in arms {
+        for &p in &P_GRID {
+            let cfg = SweepConfig {
+                sweep: SweepKind::GdFinal,
+                scheme: scheme.clone(),
+                decoder: decoder.into(),
+                p,
+                seed: 5000 + (p * 1000.0).round() as u64,
+                trials,
+                chunk: 1, // trajectories are heavyweight: lease per run
+                params: params.clone(),
+            };
+            let res = shard::run_shard(&cfg, threads, spec).expect("gd-final sweep");
+            let path = out_dir.join(format!(
+                "fig5_{name}_p{:03}_shard{}of{}.json",
+                (p * 100.0).round() as u32,
+                spec.index,
+                spec.count
+            ));
+            match res.write(&path) {
+                Ok(()) => println!(
+                    "  {name} p={p:.2}: reps [{}, {}) mean={} -> {}",
+                    res.lo,
+                    res.hi,
+                    sci(res.stats.mean()),
+                    path.display()
+                ),
+                Err(e) => {
+                    eprintln!("  {e}");
+                    write_failures += 1;
+                }
+            }
+        }
+    }
+    if write_failures > 0 {
+        eprintln!("{write_failures} shard manifest(s) could not be written");
+        std::process::exit(1);
+    }
+    println!("merge each combo's {} shard(s) with `gcod sweep-merge`.", spec.count);
+}
+
 fn main() {
     let args = BenchArgs::from_env();
+    if let Some(s) = args.get("--shard") {
+        let spec = match ShardSpec::parse(s) {
+            Ok(spec) => spec,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        };
+        run_shard_mode(&args, spec);
+        return;
+    }
     let runs = if args.quick() { 2 } else { args.usize_or("--runs", 5) };
     let iters = args.usize_or("--iters", 50);
     let threads = args.threads();

@@ -140,6 +140,23 @@ impl BenchArgs {
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         )
     }
+
+    /// Comma-separated usize list (e.g. `--workers 2,4,8`); falls back
+    /// to `default` when the flag is absent or any element fails to
+    /// parse.
+    pub fn usize_list_or(&self, flag: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(flag) {
+            Some(s) => {
+                let parsed: Option<Vec<usize>> =
+                    s.split(',').map(|x| x.trim().parse::<usize>().ok()).collect();
+                match parsed {
+                    Some(v) if !v.is_empty() => v,
+                    _ => default.to_vec(),
+                }
+            }
+            None => default.to_vec(),
+        }
+    }
 }
 
 /// The straggler-fraction grid every paper figure sweeps.
@@ -310,6 +327,15 @@ mod tests {
         assert_eq!(a.f64_or("--p", 0.0), 0.2);
         assert!(a.quick());
         assert_eq!(a.usize_or("--runs", 50), 50);
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = BenchArgs { args: vec!["--workers".into(), "2, 4,8".into()] };
+        assert_eq!(a.usize_list_or("--workers", &[1]), vec![2, 4, 8]);
+        assert_eq!(a.usize_list_or("--missing", &[3, 5]), vec![3, 5]);
+        let bad = BenchArgs { args: vec!["--workers".into(), "2,x".into()] };
+        assert_eq!(bad.usize_list_or("--workers", &[1]), vec![1]);
     }
 
     #[test]

@@ -84,6 +84,20 @@ impl Invocation {
     pub fn switch(&self, flag: &str) -> bool {
         self.switches.iter().any(|s| s == flag)
     }
+
+    /// The `--set key=value` overrides as a sorted map (later
+    /// occurrences of a key win). Shared by the sweep subcommands,
+    /// whose extra parameters travel as `--set` pairs.
+    pub fn override_map(&self) -> Result<BTreeMap<String, String>, CliError> {
+        let mut map = BTreeMap::new();
+        for ov in &self.overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| CliError(format!("--set needs key=value, got '{ov}'")))?;
+            map.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Ok(map)
+    }
 }
 
 /// Application = a set of subcommands.
@@ -248,6 +262,16 @@ mod tests {
             .parse(&argv(&["train", "--set", "a.b=1", "--set", "c=2"]))
             .unwrap();
         assert_eq!(inv.overrides, vec!["a.b=1", "c=2"]);
+        let map = inv.override_map().unwrap();
+        assert_eq!(map.get("a.b").map(String::as_str), Some("1"));
+        assert_eq!(map.get("c").map(String::as_str), Some("2"));
+        // malformed pairs are an error, later keys win
+        let inv = app()
+            .parse(&argv(&["train", "--set", "k=1", "--set", "k=2"]))
+            .unwrap();
+        assert_eq!(inv.override_map().unwrap().get("k").map(String::as_str), Some("2"));
+        let inv = app().parse(&argv(&["train", "--set", "oops"])).unwrap();
+        assert!(inv.override_map().is_err());
     }
 
     #[test]

@@ -1,0 +1,634 @@
+//! Elastic, fault-tolerant dispatch of sharded sweeps.
+//!
+//! The paper's premise is a computation that survives straggling and
+//! adversarial machines; this module applies the same idea to the
+//! repo's own Monte-Carlo sweep infrastructure. A [`Dispatcher`]
+//! executes any standard [`SweepConfig`] across a pool of workers and
+//! returns a merged result **byte-identical to a single-process run**:
+//!
+//! * a [`queue::WorkQueue`] partitions `[0, N)` into contiguous
+//!   lease-able ranges (initial size from the `grain` knob, aligned to
+//!   the engine's chunk grid so `run_range_map` warm-replay stays
+//!   exact) and tracks leases with deadlines;
+//! * a [`transport::WorkerTransport`] executes leased ranges —
+//!   [`transport::LocalProcess`] spawns `gcod sweep-shard --range a..b`
+//!   subprocesses; ssh/k8s transports slot in behind the same trait;
+//! * the [`Dispatcher`] event loop polls workers, re-enqueues ranges
+//!   from dead or deadline-blown workers (bounded retries, failure
+//!   log), speculatively re-executes the slowest ranges on idle
+//!   workers, and finally feeds the collected shard results through
+//!   [`shard::dedup_cover`] (duplicate covers from speculation are
+//!   dropped or trimmed — bit-neutral, because per-trial values are
+//!   split-invariant) into [`shard::merge`], which still fails loudly
+//!   on any coverage gap.
+//!
+//! Lost work is cheap by construction: any contiguous re-cover of a
+//! lost range merges cleanly, so fault tolerance is pure scheduling —
+//! no checkpointing, no coordination with the surviving workers.
+
+pub mod queue;
+pub mod transport;
+
+use crate::error::{Error, Result};
+use crate::straggler::{BernoulliStragglers, DelaySampler};
+use crate::sweep::shard::{self, MergedSweep, ShardResult, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+pub use queue::{Lease, LeaseId, WorkQueue, WorkerId};
+pub use transport::{LocalProcess, WorkerJob, WorkerPoll, WorkerTransport};
+
+/// Simulate straggling workers: each assignment wave samples a
+/// Bernoulli(p) mask over the pool and delays the chosen workers' jobs
+/// by `delay` (via the transport's startup-delay hook). Reuses the
+/// paper's random-straggler model for the dispatcher's own test bench.
+#[derive(Clone, Debug)]
+pub struct StragglerSimCfg {
+    pub p: f64,
+    pub delay: Duration,
+    pub seed: u64,
+}
+
+/// Dispatcher tuning knobs.
+#[derive(Clone, Debug)]
+pub struct DispatchConfig {
+    /// initial lease size in trials (0 = auto: `trials / (4 * workers)`,
+    /// clamped to the chunk grid)
+    pub grain: usize,
+    /// engine threads inside each worker
+    pub threads_per_worker: usize,
+    /// a lease older than this is presumed lost: its worker is killed
+    /// and the range re-enqueued (catches hung workers that never
+    /// complete — for a local transport, "never heartbeats")
+    pub lease_timeout: Duration,
+    /// re-enqueues allowed per range before the dispatch fails loudly
+    pub max_retries: usize,
+    /// event-loop pause between polls
+    pub poll_interval: Duration,
+    /// duplicate the slowest running ranges onto idle workers once the
+    /// queue drains (duplicates are deduplicated before the merge)
+    pub speculate: bool,
+    /// workers emit stats-only manifests (relaxed Chan-merge contract)
+    pub stats_only: bool,
+    /// directory for worker manifests (created on demand)
+    pub out_dir: PathBuf,
+    /// straggler simulation (tests/benches)
+    pub straggler_sim: Option<StragglerSimCfg>,
+    /// fault injection: delay worker w's *first* job by this many ms —
+    /// with a delay past `lease_timeout` this simulates a worker that
+    /// never heartbeats
+    pub fault_delay_ms: Vec<(WorkerId, u64)>,
+}
+
+impl Default for DispatchConfig {
+    fn default() -> Self {
+        Self {
+            grain: 0,
+            threads_per_worker: 1,
+            lease_timeout: Duration::from_secs(300),
+            max_retries: 3,
+            poll_interval: Duration::from_millis(10),
+            speculate: true,
+            stats_only: false,
+            out_dir: std::env::temp_dir().join(format!("gcod_dispatch_{}", std::process::id())),
+            straggler_sim: None,
+            fault_delay_ms: Vec::new(),
+        }
+    }
+}
+
+/// What happened during a dispatch, for operators and tests.
+#[derive(Clone, Debug, Default)]
+pub struct DispatchReport {
+    pub leases_issued: u64,
+    pub completed: u64,
+    pub speculative_issued: u64,
+    /// worker failures that led to a re-enqueue
+    pub retried: u64,
+    /// leases reaped by the deadline (hung/straggling workers)
+    pub timeouts: u64,
+    /// speculation losers cancelled after a duplicate finished first
+    pub cancelled: u64,
+    /// redundant results dropped/trimmed by `dedup_cover`
+    pub duplicates_dropped: usize,
+    pub per_worker_completed: Vec<u64>,
+    pub failure_log: Vec<String>,
+    pub elapsed: Duration,
+}
+
+impl DispatchReport {
+    /// One-paragraph operator summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "dispatched {} lease(s) ({} speculative): {} completed, {} retried, \
+             {} timeout(s), {} cancelled, {} duplicate result(s) deduped, {:.2}s \
+             [per-worker completions: {}]",
+            self.leases_issued,
+            self.speculative_issued,
+            self.completed,
+            self.retried,
+            self.timeouts,
+            self.cancelled,
+            self.duplicates_dropped,
+            self.elapsed.as_secs_f64(),
+            self.per_worker_completed
+                .iter()
+                .map(|c| c.to_string())
+                .collect::<Vec<_>>()
+                .join("/")
+        )
+    }
+}
+
+/// A finished dispatch: the canonical merged sweep plus the scheduling
+/// report.
+#[derive(Debug)]
+pub struct DispatchOutcome {
+    pub merged: MergedSweep,
+    pub report: DispatchReport,
+}
+
+/// Executes one sweep across a worker pool. See the module docs.
+pub struct Dispatcher {
+    cfg: DispatchConfig,
+}
+
+impl Dispatcher {
+    pub fn new(cfg: DispatchConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Run `sweep` to completion on `transport`'s worker pool and merge
+    /// the collected shard results. Full-manifest dispatches are
+    /// byte-identical to `shard::run_full` regardless of worker count,
+    /// grain, failures, timeouts or speculation.
+    pub fn run(
+        &self,
+        sweep: &SweepConfig,
+        transport: &mut dyn WorkerTransport,
+    ) -> Result<DispatchOutcome> {
+        if sweep.sweep == SweepKind::Fig4Cluster {
+            return Err(Error::msg(
+                "fig4-cluster sweeps need the worker-thread cluster and cannot be dispatched",
+            ));
+        }
+        if sweep.trials == 0 {
+            return Err(Error::msg("nothing to dispatch: sweep has 0 trials"));
+        }
+        if sweep.chunk == 0 {
+            return Err(Error::msg("sweep chunk must be >= 1"));
+        }
+        let n = transport.n_workers();
+        if n == 0 {
+            return Err(Error::msg("transport has no workers to dispatch to"));
+        }
+        let grain = match self.cfg.grain {
+            0 => (sweep.trials.div_ceil(4 * n)).max(sweep.chunk),
+            g => g,
+        };
+        let mut queue = WorkQueue::new(sweep.trials, grain, sweep.chunk, self.cfg.max_retries)?;
+        std::fs::create_dir_all(&self.cfg.out_dir)
+            .map_err(|e| Error::msg(format!("create {}: {e}", self.cfg.out_dir.display())))?;
+
+        let mut sim = self
+            .cfg
+            .straggler_sim
+            .as_ref()
+            .map(|s| DelaySampler::new(BernoulliStragglers::new(s.p, s.seed), s.delay));
+        let mut fault_delay: BTreeMap<WorkerId, u64> =
+            self.cfg.fault_delay_ms.iter().copied().collect();
+
+        let mut busy: Vec<Option<LeaseId>> = vec![None; n];
+        let mut results: Vec<ShardResult> = Vec::new();
+        let mut report =
+            DispatchReport { per_worker_completed: vec![0; n], ..DispatchReport::default() };
+        let started = Instant::now();
+
+        // wraps a queue error (retry budget blown) with the failure log
+        // so the loud failure explains itself
+        let with_log = |e: Error, log: &[String]| {
+            Error::msg(if log.is_empty() {
+                e.to_string()
+            } else {
+                format!("{e}\nworker failure log:\n  {}", log.join("\n  "))
+            })
+        };
+
+        loop {
+            // 1. poll busy workers (redundancy computed once per tick —
+            // a lease turning redundant mid-sweep is caught next tick)
+            let redundant = queue.redundant();
+            for w in 0..n {
+                let Some(id) = busy[w] else { continue };
+                match transport.poll(w) {
+                    WorkerPoll::Running => {
+                        // speculation loser: a duplicate already
+                        // finished this range
+                        if redundant.contains(&id) {
+                            transport.kill(w);
+                            queue.cancel(id);
+                            busy[w] = None;
+                            report.cancelled += 1;
+                        }
+                    }
+                    WorkerPoll::Done => {
+                        busy[w] = None;
+                        let lease = queue.get(id).cloned().expect("busy lease is active");
+                        match transport.collect(w).and_then(|r| {
+                            validate_result(r, sweep, &lease, self.cfg.stats_only)
+                        }) {
+                            Ok(res) => {
+                                queue.complete(id)?;
+                                results.push(res);
+                                report.completed += 1;
+                                report.per_worker_completed[w] += 1;
+                            }
+                            Err(e) => {
+                                report.failure_log.push(format!(
+                                    "worker {w} lease [{}, {}): bad result: {e}",
+                                    lease.lo, lease.hi
+                                ));
+                                let (_, requeued) = queue
+                                    .fail(id)
+                                    .map_err(|e| with_log(e, &report.failure_log))?;
+                                report.retried += u64::from(requeued);
+                            }
+                        }
+                    }
+                    WorkerPoll::Failed(msg) => {
+                        busy[w] = None;
+                        report.failure_log.push(msg);
+                        let (_, requeued) =
+                            queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
+                        report.retried += u64::from(requeued);
+                    }
+                    WorkerPoll::Idle => {
+                        busy[w] = None;
+                        report.failure_log.push(format!(
+                            "worker {w} lost its job for lease {id} (transport reported idle)"
+                        ));
+                        let (_, requeued) =
+                            queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
+                        report.retried += u64::from(requeued);
+                    }
+                }
+            }
+
+            // 2. reap leases past their deadline (dead-but-undetected or
+            // hung workers — the "never heartbeats" case)
+            for id in queue.expired(self.cfg.lease_timeout) {
+                let lease = queue.get(id).cloned().expect("expired lease is active");
+                transport.kill(lease.worker);
+                busy[lease.worker] = None;
+                report.timeouts += 1;
+                report.failure_log.push(format!(
+                    "worker {} lease [{}, {}): deadline {:?} exceeded, re-enqueueing",
+                    lease.worker, lease.lo, lease.hi, self.cfg.lease_timeout
+                ));
+                let (_, requeued) =
+                    queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
+                report.retried += u64::from(requeued);
+            }
+
+            // 3. hand ranges to idle workers
+            let delays: Option<Vec<Duration>> = if busy.iter().any(Option::is_none) {
+                sim.as_mut().map(|s| s.sample_delays(n))
+            } else {
+                None
+            };
+            for w in 0..n {
+                if busy[w].is_some() {
+                    continue;
+                }
+                let lease = match queue.lease(w) {
+                    Some(l) => l,
+                    None if self.cfg.speculate => match queue.speculative_lease(w) {
+                        Some(l) => l,
+                        None => continue,
+                    },
+                    None => continue,
+                };
+                let mut delay_ms = delays.as_ref().map(|d| d[w].as_millis() as u64).unwrap_or(0);
+                if let Some(ms) = fault_delay.remove(&w) {
+                    delay_ms = ms;
+                }
+                let job = WorkerJob {
+                    config: sweep.clone(),
+                    lo: lease.lo,
+                    hi: lease.hi,
+                    threads: self.cfg.threads_per_worker.max(1),
+                    stats_only: self.cfg.stats_only,
+                    out_path: self
+                        .cfg
+                        .out_dir
+                        .join(format!("lease_{}_{}_{}.json", lease.id, lease.lo, lease.hi)),
+                    delay_ms,
+                };
+                report.leases_issued += 1;
+                report.speculative_issued += u64::from(lease.speculative);
+                match transport.start(w, &job) {
+                    Ok(()) => busy[w] = Some(lease.id),
+                    Err(e) => {
+                        report.failure_log.push(format!(
+                            "worker {w} lease [{}, {}): start failed: {e}",
+                            lease.lo, lease.hi
+                        ));
+                        let (_, requeued) = queue
+                            .fail(lease.id)
+                            .map_err(|e| with_log(e, &report.failure_log))?;
+                        report.retried += u64::from(requeued);
+                    }
+                }
+            }
+
+            // 4. termination
+            let all_idle = busy.iter().all(Option::is_none);
+            if queue.is_complete() && all_idle {
+                break;
+            }
+            if all_idle && queue.active_leases() == 0 && queue.pending_ranges() == 0 {
+                // unreachable by construction (fail() either requeues or
+                // errors), but never spin silently
+                return Err(with_log(
+                    Error::msg("dispatcher stalled: no pending work, no active leases, sweep \
+                                incomplete"),
+                    &report.failure_log,
+                ));
+            }
+            std::thread::sleep(self.cfg.poll_interval);
+        }
+
+        let (cover, deduped) =
+            shard::dedup_cover(results).map_err(|e| with_log(e, &report.failure_log))?;
+        report.duplicates_dropped = deduped;
+        let merged = shard::merge(cover).map_err(|e| with_log(e, &report.failure_log))?;
+        report.elapsed = started.elapsed();
+        Ok(DispatchOutcome { merged, report })
+    }
+}
+
+/// A collected result must be exactly the leased range of the requested
+/// sweep — anything else is treated as a worker failure (and the range
+/// re-leased), never silently merged.
+fn validate_result(
+    res: ShardResult,
+    sweep: &SweepConfig,
+    lease: &Lease,
+    stats_only: bool,
+) -> Result<ShardResult> {
+    if res.config != *sweep {
+        return Err(Error::msg("worker manifest config differs from the dispatched sweep"));
+    }
+    if (res.lo, res.hi) != (lease.lo, lease.hi) {
+        return Err(Error::msg(format!(
+            "worker manifest covers [{}, {}), lease was [{}, {})",
+            res.lo, res.hi, lease.lo, lease.hi
+        )));
+    }
+    if res.stats_only != stats_only {
+        return Err(Error::msg("worker manifest stats-only mode differs from the dispatch"));
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    /// Per-worker behavior script for the in-process mock transport.
+    #[derive(Clone, Default)]
+    struct WorkerScript {
+        /// report Failed for this many jobs before behaving
+        fail_first: usize,
+        /// hang (Running forever, until killed) for this many jobs
+        hang_first: usize,
+        /// healthy jobs stay Running for this many polls before Done
+        done_after_polls: usize,
+    }
+
+    enum SlotState {
+        Failing,
+        Hung,
+        Working { polls_left: usize, result: ShardResult },
+        Done { result: ShardResult },
+    }
+
+    /// In-process transport: computes leased ranges via
+    /// `shard::run_range` but exposes them through the same poll-based
+    /// interface as a real process pool, with scripted faults.
+    struct Scripted {
+        scripts: Vec<WorkerScript>,
+        slots: Vec<Option<SlotState>>,
+    }
+
+    impl Scripted {
+        fn new(scripts: Vec<WorkerScript>) -> Self {
+            let slots = scripts.iter().map(|_| None).collect();
+            Self { scripts, slots }
+        }
+    }
+
+    impl WorkerTransport for Scripted {
+        fn n_workers(&self) -> usize {
+            self.scripts.len()
+        }
+
+        fn start(&mut self, worker: WorkerId, job: &WorkerJob) -> Result<()> {
+            assert!(self.slots[worker].is_none(), "worker {worker} double-started");
+            let script = &mut self.scripts[worker];
+            let state = if script.fail_first > 0 {
+                script.fail_first -= 1;
+                SlotState::Failing
+            } else if script.hang_first > 0 {
+                script.hang_first -= 1;
+                SlotState::Hung
+            } else {
+                let mut result = shard::run_range(&job.config, job.threads, job.lo, job.hi)?;
+                if job.stats_only {
+                    result = result.into_stats_only();
+                }
+                SlotState::Working { polls_left: script.done_after_polls, result }
+            };
+            self.slots[worker] = Some(state);
+            Ok(())
+        }
+
+        fn poll(&mut self, worker: WorkerId) -> WorkerPoll {
+            match self.slots[worker].take() {
+                None => WorkerPoll::Idle,
+                Some(SlotState::Failing) => {
+                    WorkerPoll::Failed(format!("worker {worker}: scripted death"))
+                }
+                Some(SlotState::Hung) => {
+                    self.slots[worker] = Some(SlotState::Hung);
+                    WorkerPoll::Running
+                }
+                Some(SlotState::Working { polls_left, result }) => {
+                    if polls_left == 0 {
+                        self.slots[worker] = Some(SlotState::Done { result });
+                        WorkerPoll::Done
+                    } else {
+                        self.slots[worker] =
+                            Some(SlotState::Working { polls_left: polls_left - 1, result });
+                        WorkerPoll::Running
+                    }
+                }
+                Some(SlotState::Done { result }) => {
+                    self.slots[worker] = Some(SlotState::Done { result });
+                    WorkerPoll::Done
+                }
+            }
+        }
+
+        fn kill(&mut self, worker: WorkerId) {
+            self.slots[worker] = None;
+        }
+
+        fn collect(&mut self, worker: WorkerId) -> Result<ShardResult> {
+            match self.slots[worker].take() {
+                Some(SlotState::Done { result }) => Ok(result),
+                _ => Err(Error::msg(format!("worker {worker}: nothing to collect"))),
+            }
+        }
+    }
+
+    fn sweep_cfg(trials: usize) -> SweepConfig {
+        SweepConfig {
+            sweep: SweepKind::DecodeError,
+            scheme: "graph-rr:12,3".into(),
+            decoder: "optimal".into(),
+            p: 0.25,
+            seed: 11,
+            trials,
+            chunk: 8,
+            params: BTreeMap::new(),
+        }
+    }
+
+    fn fast_dispatch() -> DispatchConfig {
+        DispatchConfig {
+            grain: 8,
+            poll_interval: Duration::from_millis(1),
+            lease_timeout: Duration::from_secs(30),
+            out_dir: std::env::temp_dir()
+                .join(format!("gcod_dispatch_test_{}", std::process::id())),
+            ..DispatchConfig::default()
+        }
+    }
+
+    #[test]
+    fn healthy_pool_matches_single_process_bits() {
+        let c = sweep_cfg(60);
+        let single = shard::run_full(&c, 2).unwrap();
+        let mut t = Scripted::new(vec![WorkerScript::default(); 3]);
+        let out = Dispatcher::new(fast_dispatch()).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "merged JSON bytes");
+        assert!(out.report.leases_issued >= 3, "{}", out.report.summary());
+        // at least one completion per range (speculation may add more)
+        assert!(out.report.completed as usize >= out.merged.config.trials.div_ceil(8));
+    }
+
+    #[test]
+    fn worker_deaths_requeue_and_stay_bit_exact() {
+        let c = sweep_cfg(48);
+        let single = shard::run_full(&c, 1).unwrap();
+        let scripts = vec![
+            WorkerScript { fail_first: 2, ..WorkerScript::default() },
+            WorkerScript::default(),
+        ];
+        let mut t = Scripted::new(scripts);
+        let out = Dispatcher::new(fast_dispatch()).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render());
+        assert!(out.report.retried >= 2, "{}", out.report.summary());
+        assert!(!out.report.failure_log.is_empty());
+    }
+
+    #[test]
+    fn hung_worker_hits_deadline_and_range_redispatches() {
+        let c = sweep_cfg(32);
+        let single = shard::run_full(&c, 1).unwrap();
+        let scripts = vec![
+            WorkerScript { hang_first: 1, ..WorkerScript::default() },
+            WorkerScript::default(),
+        ];
+        let mut t = Scripted::new(scripts);
+        let dcfg = DispatchConfig {
+            lease_timeout: Duration::from_millis(40),
+            speculate: false, // force the timeout path to do the rescue
+            ..fast_dispatch()
+        };
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render());
+        assert!(out.report.timeouts >= 1, "{}", out.report.summary());
+    }
+
+    #[test]
+    fn speculative_duplicates_dedup_before_merge() {
+        let c = sweep_cfg(32);
+        let single = shard::run_full(&c, 1).unwrap();
+        // worker 0 is slow (extra poll) so its first range drains the
+        // queue while still running; idle worker 1 speculates on it and
+        // both results arrive — a genuine duplicate cover
+        let scripts = vec![
+            WorkerScript { done_after_polls: 1, ..WorkerScript::default() },
+            WorkerScript::default(),
+        ];
+        let mut t = Scripted::new(scripts);
+        let dcfg = DispatchConfig { grain: 16, ..fast_dispatch() };
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render());
+        assert!(
+            out.report.speculative_issued >= 1,
+            "expected speculation: {}",
+            out.report.summary()
+        );
+        assert!(
+            out.report.duplicates_dropped >= 1 || out.report.cancelled >= 1,
+            "expected a deduped duplicate or a cancelled loser: {}",
+            out.report.summary()
+        );
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_loudly() {
+        let c = sweep_cfg(16);
+        let scripts = vec![WorkerScript { fail_first: usize::MAX, ..WorkerScript::default() }];
+        let mut t = Scripted::new(scripts);
+        let dcfg = DispatchConfig { max_retries: 1, ..fast_dispatch() };
+        let err = Dispatcher::new(dcfg).run(&c, &mut t).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("giving up"), "{msg}");
+        assert!(msg.contains("failure log"), "{msg}");
+    }
+
+    #[test]
+    fn stats_only_dispatch_uses_chan_contract() {
+        let c = sweep_cfg(40);
+        let single = shard::run_full(&c, 1).unwrap();
+        let mut t = Scripted::new(vec![WorkerScript::default(); 2]);
+        let dcfg = DispatchConfig { stats_only: true, ..fast_dispatch() };
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert!(out.merged.stats_only && out.merged.values.is_empty());
+        assert_eq!(out.merged.stats.count(), 40);
+        assert_eq!(out.merged.stats.min().to_bits(), single.stats.min().to_bits());
+        assert_eq!(out.merged.stats.max().to_bits(), single.stats.max().to_bits());
+        assert!((out.merged.stats.mean() - single.stats.mean()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_undispatchable_sweeps() {
+        let mut t = Scripted::new(vec![WorkerScript::default()]);
+        let mut c = sweep_cfg(0);
+        let d = Dispatcher::new(fast_dispatch());
+        assert!(d.run(&c, &mut t).is_err());
+        c.trials = 8;
+        c.sweep = SweepKind::Fig4Cluster;
+        assert!(d.run(&c, &mut t).is_err());
+        // a worker-less transport must error, not spin or divide by zero
+        let mut empty = Scripted::new(vec![]);
+        let err = d.run(&sweep_cfg(8), &mut empty).unwrap_err();
+        assert!(format!("{err}").contains("no workers"), "{err}");
+    }
+}

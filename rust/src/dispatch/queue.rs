@@ -1,0 +1,346 @@
+//! Lease-based work queue over a trial range.
+//!
+//! [`WorkQueue`] partitions `[0, N)` into contiguous ranges of roughly
+//! `grain` trials, aligned to the engine's chunk grid (split points are
+//! multiples of `chunk`, so `TrialEngine::run_range_map` never has to
+//! warm-replay a partial leading chunk). Ranges are handed out as
+//! [`Lease`]s with issue timestamps; the dispatcher re-enqueues the
+//! range of a lease whose worker died or exceeded its deadline, with a
+//! bounded per-range retry budget. Completion is tracked as a set of
+//! coalesced done-intervals, which makes duplicate covers (speculative
+//! re-execution) harmless bookkeeping: a range can complete twice, and
+//! leases whose range is already fully covered are reported by
+//! [`WorkQueue::redundant`] so the dispatcher can cancel them.
+
+use crate::error::{Error, Result};
+use std::collections::{BTreeMap, VecDeque};
+use std::time::{Duration, Instant};
+
+/// Index of a worker slot in the transport's pool.
+pub type WorkerId = usize;
+
+/// Monotonic identifier of one issued lease.
+pub type LeaseId = u64;
+
+/// One outstanding claim on a trial range.
+#[derive(Clone, Debug)]
+pub struct Lease {
+    pub id: LeaseId,
+    pub lo: usize,
+    pub hi: usize,
+    pub worker: WorkerId,
+    pub issued: Instant,
+    /// duplicate cover of a range some other lease is still running
+    pub speculative: bool,
+}
+
+/// Elastic range queue: pending ranges, outstanding leases, coalesced
+/// done-intervals and per-range retry counts.
+#[derive(Debug)]
+pub struct WorkQueue {
+    trials: usize,
+    pending: VecDeque<(usize, usize)>,
+    active: BTreeMap<LeaseId, Lease>,
+    /// sorted, disjoint, coalesced completed intervals
+    done: Vec<(usize, usize)>,
+    /// re-enqueue count per original range (keyed by bounds — ranges
+    /// are never re-split, so the key is stable)
+    retries: BTreeMap<(usize, usize), usize>,
+    max_retries: usize,
+    next_id: LeaseId,
+}
+
+impl WorkQueue {
+    /// Partition `[0, trials)` into lease-able ranges of `grain` trials
+    /// rounded up to a multiple of `chunk` (the last range is ragged).
+    pub fn new(trials: usize, grain: usize, chunk: usize, max_retries: usize) -> Result<Self> {
+        if trials == 0 {
+            return Err(Error::msg("work queue needs at least one trial"));
+        }
+        if grain == 0 || chunk == 0 {
+            return Err(Error::msg("work queue grain and chunk must be >= 1"));
+        }
+        // clamp before rounding up to the chunk grid: a grain beyond
+        // the sweep is just "one lease", and the clamp keeps the
+        // round-up multiply from overflowing on absurd inputs
+        let grain = grain.min(trials).div_ceil(chunk) * chunk;
+        let mut pending = VecDeque::new();
+        let mut lo = 0usize;
+        while lo < trials {
+            let hi = (lo + grain).min(trials);
+            pending.push_back((lo, hi));
+            lo = hi;
+        }
+        Ok(Self {
+            trials,
+            pending,
+            active: BTreeMap::new(),
+            done: Vec::new(),
+            retries: BTreeMap::new(),
+            max_retries,
+            next_id: 0,
+        })
+    }
+
+    pub fn trials(&self) -> usize {
+        self.trials
+    }
+
+    pub fn pending_ranges(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn active_leases(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Claim the next pending range for `worker`.
+    pub fn lease(&mut self, worker: WorkerId) -> Option<Lease> {
+        let (lo, hi) = self.pending.pop_front()?;
+        Some(self.issue(lo, hi, worker, false))
+    }
+
+    /// With nothing pending, duplicate the oldest still-running range
+    /// onto an idle worker (speculative re-execution of the slowest
+    /// ranges — safe because [`crate::sweep::shard::dedup_cover`] drops
+    /// duplicate covers before the merge). At most one duplicate per
+    /// range is issued.
+    pub fn speculative_lease(&mut self, worker: WorkerId) -> Option<Lease> {
+        if !self.pending.is_empty() {
+            return None;
+        }
+        let candidate = self
+            .active
+            .values()
+            .filter(|l| {
+                !l.speculative
+                    && !self.range_done(l.lo, l.hi)
+                    && !self
+                        .active
+                        .values()
+                        .any(|o| o.speculative && (o.lo, o.hi) == (l.lo, l.hi))
+            })
+            .min_by_key(|l| l.issued)
+            .map(|l| (l.lo, l.hi))?;
+        Some(self.issue(candidate.0, candidate.1, worker, true))
+    }
+
+    fn issue(&mut self, lo: usize, hi: usize, worker: WorkerId, speculative: bool) -> Lease {
+        let lease = Lease { id: self.next_id, lo, hi, worker, issued: Instant::now(), speculative };
+        self.next_id += 1;
+        self.active.insert(lease.id, lease.clone());
+        lease
+    }
+
+    pub fn get(&self, id: LeaseId) -> Option<&Lease> {
+        self.active.get(&id)
+    }
+
+    /// The lease's range finished successfully: retire the lease and
+    /// mark the interval covered.
+    pub fn complete(&mut self, id: LeaseId) -> Result<Lease> {
+        let lease =
+            self.active.remove(&id).ok_or_else(|| Error::msg(format!("unknown lease {id}")))?;
+        self.mark_done(lease.lo, lease.hi);
+        Ok(lease)
+    }
+
+    /// The lease's worker died, timed out or returned garbage: retire
+    /// the lease and re-enqueue its range unless a duplicate cover
+    /// already completed it — or is still running it (a failed
+    /// speculative duplicate must neither resurrect the range nor
+    /// charge its retry budget while the healthy original is mid-run,
+    /// and vice versa). Errors once a range exhausts its retry budget —
+    /// the dispatcher fails loudly rather than spinning. Returns the
+    /// lease and whether the range was re-enqueued.
+    pub fn fail(&mut self, id: LeaseId) -> Result<(Lease, bool)> {
+        let lease =
+            self.active.remove(&id).ok_or_else(|| Error::msg(format!("unknown lease {id}")))?;
+        if self.range_done(lease.lo, lease.hi) {
+            return Ok((lease, false));
+        }
+        if self.active.values().any(|o| (o.lo, o.hi) == (lease.lo, lease.hi)) {
+            return Ok((lease, false));
+        }
+        let tries = self.retries.entry((lease.lo, lease.hi)).or_insert(0);
+        *tries += 1;
+        if *tries > self.max_retries {
+            return Err(Error::msg(format!(
+                "trial range [{}, {}) failed {} times (max {} retries) — giving up",
+                lease.lo, lease.hi, *tries, self.max_retries
+            )));
+        }
+        self.pending.push_back((lease.lo, lease.hi));
+        Ok((lease, true))
+    }
+
+    /// Retire a lease without re-enqueueing (its range was finished by
+    /// a duplicate cover).
+    pub fn cancel(&mut self, id: LeaseId) -> Option<Lease> {
+        self.active.remove(&id)
+    }
+
+    /// Active leases whose issue time predates `now - timeout`.
+    pub fn expired(&self, timeout: Duration) -> Vec<LeaseId> {
+        self.active
+            .values()
+            .filter(|l| l.issued.elapsed() > timeout)
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Active leases whose whole range is already covered by completed
+    /// duplicates — speculation losers the dispatcher should cancel.
+    pub fn redundant(&self) -> Vec<LeaseId> {
+        self.active
+            .values()
+            .filter(|l| self.range_done(l.lo, l.hi))
+            .map(|l| l.id)
+            .collect()
+    }
+
+    /// Every trial in `[0, trials)` has a completed cover.
+    pub fn is_complete(&self) -> bool {
+        self.done == [(0, self.trials)]
+    }
+
+    fn range_done(&self, lo: usize, hi: usize) -> bool {
+        lo == hi || self.done.iter().any(|&(a, b)| a <= lo && hi <= b)
+    }
+
+    fn mark_done(&mut self, lo: usize, hi: usize) {
+        if lo == hi {
+            return;
+        }
+        self.done.push((lo, hi));
+        self.done.sort_unstable();
+        let mut merged: Vec<(usize, usize)> = Vec::with_capacity(self.done.len());
+        for &(lo, hi) in &self.done {
+            match merged.last_mut() {
+                Some(last) if lo <= last.1 => last.1 = last.1.max(hi),
+                _ => merged.push((lo, hi)),
+            }
+        }
+        self.done = merged;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_aligns_to_chunk_grid() {
+        // grain 10 rounds up to 16; ranges are [0,16), [16,32), ... [96,100)
+        let mut q = WorkQueue::new(100, 10, 8, 3).unwrap();
+        let mut lo = 0;
+        while let Some(l) = q.lease(0) {
+            assert_eq!(l.lo, lo);
+            assert!(l.lo % 16 == 0);
+            assert!(l.hi - l.lo <= 16);
+            lo = l.hi;
+        }
+        assert_eq!(lo, 100);
+        // rejects degenerate inputs
+        assert!(WorkQueue::new(0, 4, 4, 3).is_err());
+        assert!(WorkQueue::new(10, 0, 4, 3).is_err());
+        assert!(WorkQueue::new(10, 4, 0, 3).is_err());
+        // absurd grain clamps to one whole-sweep lease, no overflow
+        let mut q = WorkQueue::new(10, usize::MAX, 32, 3).unwrap();
+        let l = q.lease(0).unwrap();
+        assert_eq!((l.lo, l.hi), (0, 10));
+        assert_eq!(q.pending_ranges(), 0);
+    }
+
+    #[test]
+    fn complete_all_leases_completes_queue() {
+        let mut q = WorkQueue::new(40, 16, 8, 3).unwrap();
+        assert!(!q.is_complete());
+        let mut ids = Vec::new();
+        while let Some(l) = q.lease(ids.len() % 3) {
+            ids.push(l.id);
+        }
+        assert_eq!(q.pending_ranges(), 0);
+        for id in ids {
+            q.complete(id).unwrap();
+        }
+        assert!(q.is_complete());
+        assert_eq!(q.active_leases(), 0);
+    }
+
+    #[test]
+    fn fail_requeues_until_retry_budget_exhausted() {
+        let mut q = WorkQueue::new(16, 16, 8, 2).unwrap();
+        for round in 0..2 {
+            let l = q.lease(0).unwrap();
+            let (lease, requeued) = q.fail(l.id).unwrap();
+            assert_eq!((lease.lo, lease.hi), (0, 16), "round {round}");
+            assert!(requeued);
+        }
+        let l = q.lease(0).unwrap();
+        let err = q.fail(l.id).unwrap_err();
+        assert!(format!("{err}").contains("giving up"), "{err}");
+    }
+
+    #[test]
+    fn fail_after_duplicate_completion_does_not_requeue() {
+        let mut q = WorkQueue::new(16, 16, 8, 1).unwrap();
+        let a = q.lease(0).unwrap();
+        // speculation: nothing pending, duplicate the running range
+        let b = q.speculative_lease(1).unwrap();
+        assert!(b.speculative);
+        assert_eq!((b.lo, b.hi), (a.lo, a.hi));
+        // only one duplicate per range
+        assert!(q.speculative_lease(2).is_none());
+        q.complete(b.id).unwrap();
+        assert!(q.is_complete());
+        // the original lease is now redundant; failing it must not
+        // resurrect the range
+        assert_eq!(q.redundant(), vec![a.id]);
+        let (_, requeued) = q.fail(a.id).unwrap();
+        assert!(!requeued);
+        assert_eq!(q.pending_ranges(), 0);
+    }
+
+    #[test]
+    fn failed_duplicate_is_free_while_a_live_lease_covers_the_range() {
+        let mut q = WorkQueue::new(16, 16, 8, 1).unwrap();
+        let a = q.lease(0).unwrap();
+        let b = q.speculative_lease(1).unwrap();
+        // the duplicate dies while the original is mid-run: no requeue,
+        // no retry charge
+        let (_, requeued) = q.fail(b.id).unwrap();
+        assert!(!requeued);
+        assert_eq!(q.pending_ranges(), 0);
+        // the original dies too: now the range really is lost -> requeue
+        let (_, requeued) = q.fail(a.id).unwrap();
+        assert!(requeued);
+        // and the budget only counts real losses: one retry left burns
+        // on the next failure
+        let c = q.lease(0).unwrap();
+        let err = q.fail(c.id).unwrap_err();
+        assert!(format!("{err}").contains("giving up"), "{err}");
+    }
+
+    #[test]
+    fn expiry_is_time_based() {
+        let mut q = WorkQueue::new(16, 16, 8, 3).unwrap();
+        let l = q.lease(0).unwrap();
+        assert!(q.expired(Duration::from_secs(60)).is_empty());
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(q.expired(Duration::ZERO), vec![l.id]);
+    }
+
+    #[test]
+    fn done_intervals_coalesce_across_duplicates() {
+        let mut q = WorkQueue::new(48, 16, 16, 3).unwrap();
+        let a = q.lease(0).unwrap(); // [0,16)
+        let b = q.lease(1).unwrap(); // [16,32)
+        let c = q.lease(2).unwrap(); // [32,48)
+        q.complete(c.id).unwrap();
+        q.complete(a.id).unwrap();
+        assert!(!q.is_complete());
+        q.complete(b.id).unwrap();
+        assert!(q.is_complete());
+    }
+}

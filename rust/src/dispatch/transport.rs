@@ -1,0 +1,271 @@
+//! Worker transports: how the dispatcher runs a leased range somewhere.
+//!
+//! [`WorkerTransport`] is the seam between the [`super::Dispatcher`]'s
+//! scheduling logic and the mechanics of executing `gcod sweep-shard
+//! --range lo..hi` on a machine: [`LocalProcess`] spawns subprocesses
+//! of the `gcod` binary on this host and collects their JSON manifests;
+//! an ssh or k8s transport slots in behind the same trait later (the
+//! dispatcher never touches a process handle or a path directly).
+//!
+//! The trait is deliberately poll-based and non-blocking: the
+//! dispatcher owns the event loop and calls [`WorkerTransport::poll`]
+//! on its own cadence, so a transport never needs threads of its own.
+//! For a local process, "heartbeat" degenerates to "the process is
+//! still alive"; a *hung* worker stays `Running` forever and is caught
+//! by the dispatcher's lease deadline instead.
+//!
+//! Fault injection for tests lives here too: [`LocalProcess::inject_kill`]
+//! arms a one-shot kill of a worker's next job mid-run (simulating a
+//! machine death), and [`WorkerJob::delay_ms`] is forwarded to the
+//! subprocess via the `GCOD_SWEEP_TEST_DELAY_MS` hook so straggling and
+//! never-completing workers can be simulated with the crate's own
+//! straggler models.
+
+use crate::error::{Error, Result};
+use crate::sweep::shard::{ShardResult, SweepConfig};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+pub use super::queue::WorkerId;
+
+/// Environment variable read by `gcod sweep-shard` at startup: sleep
+/// this many milliseconds before doing any work. Test/simulation hook
+/// for slow and hung workers.
+pub const DELAY_ENV: &str = "GCOD_SWEEP_TEST_DELAY_MS";
+
+/// One leased range, fully specified for remote execution.
+#[derive(Clone, Debug)]
+pub struct WorkerJob {
+    pub config: SweepConfig,
+    pub lo: usize,
+    pub hi: usize,
+    /// engine threads inside the worker
+    pub threads: usize,
+    pub stats_only: bool,
+    /// where the worker must write its shard manifest
+    pub out_path: PathBuf,
+    /// injected startup delay (0 = none) — straggler simulation
+    pub delay_ms: u64,
+}
+
+/// Non-blocking status of a worker slot.
+#[derive(Debug)]
+pub enum WorkerPoll {
+    /// no job running (nothing started, or the last job was collected)
+    Idle,
+    Running,
+    /// job finished; [`WorkerTransport::collect`] will yield its result
+    Done,
+    /// the worker died or exited without producing a manifest
+    Failed(String),
+}
+
+/// Execution backend for dispatcher workers.
+pub trait WorkerTransport {
+    /// Number of worker slots in the pool.
+    fn n_workers(&self) -> usize;
+
+    /// Begin executing `job` on an idle worker slot.
+    fn start(&mut self, worker: WorkerId, job: &WorkerJob) -> Result<()>;
+
+    /// Current status of the slot. Must not block.
+    fn poll(&mut self, worker: WorkerId) -> WorkerPoll;
+
+    /// Tear down whatever runs on the slot (lease timeout, speculation
+    /// loser). The slot is idle afterwards.
+    fn kill(&mut self, worker: WorkerId);
+
+    /// Retrieve the result of a slot whose last [`WorkerTransport::poll`]
+    /// returned [`WorkerPoll::Done`]. The slot becomes idle.
+    fn collect(&mut self, worker: WorkerId) -> Result<ShardResult>;
+}
+
+// ---------------------------------------------------------------------
+// Local subprocess transport
+// ---------------------------------------------------------------------
+
+struct Slot {
+    child: Option<Child>,
+    out_path: PathBuf,
+    /// worker stderr sidecar file — a file, not a pipe, so a chatty or
+    /// panicking worker can never block on a full pipe buffer
+    err_path: PathBuf,
+    started: Instant,
+    /// one-shot fault injection: kill the current/next job after this
+    /// long
+    kill_after: Option<Duration>,
+}
+
+/// Runs each leased range as a `gcod sweep-shard --range lo..hi`
+/// subprocess on this host. The process boundary is real — workers
+/// share nothing with the dispatcher but the manifest files — so this
+/// transport exercises exactly the contract a multi-host transport
+/// needs.
+pub struct LocalProcess {
+    gcod_bin: PathBuf,
+    slots: Vec<Slot>,
+}
+
+impl LocalProcess {
+    /// `gcod_bin` is the `gcod` binary to spawn (the dispatcher CLI
+    /// passes its own `std::env::current_exe()`; tests pass
+    /// `env!("CARGO_BIN_EXE_gcod")`).
+    pub fn new(gcod_bin: impl Into<PathBuf>, workers: usize) -> Self {
+        let gcod_bin = gcod_bin.into();
+        let slots = (0..workers.max(1))
+            .map(|_| Slot {
+                child: None,
+                out_path: PathBuf::new(),
+                err_path: PathBuf::new(),
+                started: Instant::now(),
+                kill_after: None,
+            })
+            .collect();
+        Self { gcod_bin, slots }
+    }
+
+    /// Fault injection: kill `worker`'s next job this long after it
+    /// starts (one-shot). Simulates a machine dying mid-shard.
+    pub fn inject_kill(&mut self, worker: WorkerId, after: Duration) {
+        self.slots[worker].kill_after = Some(after);
+    }
+
+    fn args_for(job: &WorkerJob) -> Vec<String> {
+        let c = &job.config;
+        let mut args = vec![
+            "sweep-shard".into(),
+            "--sweep".into(),
+            c.sweep.as_str().into(),
+            "--scheme".into(),
+            c.scheme.clone(),
+            "--decoder".into(),
+            c.decoder.clone(),
+            // shortest round-trip Display: the worker re-parses the
+            // exact same f64 bits
+            "--p".into(),
+            format!("{}", c.p),
+            "--trials".into(),
+            c.trials.to_string(),
+            "--seed".into(),
+            c.seed.to_string(),
+            "--chunk".into(),
+            c.chunk.to_string(),
+            "--threads".into(),
+            job.threads.to_string(),
+            "--range".into(),
+            format!("{}..{}", job.lo, job.hi),
+            "--out".into(),
+            job.out_path.display().to_string(),
+        ];
+        if job.stats_only {
+            args.push("--stats-only".into());
+        }
+        for (k, v) in &c.params {
+            args.push("--set".into());
+            args.push(format!("{k}={v}"));
+        }
+        args
+    }
+}
+
+impl WorkerTransport for LocalProcess {
+    fn n_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn start(&mut self, worker: WorkerId, job: &WorkerJob) -> Result<()> {
+        let slot = &mut self.slots[worker];
+        if slot.child.is_some() {
+            return Err(Error::msg(format!("worker {worker} is already running a job")));
+        }
+        let err_path = job.out_path.with_extension("stderr.log");
+        let err_file = std::fs::File::create(&err_path)
+            .map_err(|e| Error::msg(format!("create {}: {e}", err_path.display())))?;
+        let mut cmd = Command::new(&self.gcod_bin);
+        cmd.args(Self::args_for(job)).stdout(Stdio::null()).stderr(Stdio::from(err_file));
+        if job.delay_ms > 0 {
+            cmd.env(DELAY_ENV, job.delay_ms.to_string());
+        }
+        let child = cmd.spawn().map_err(|e| {
+            Error::msg(format!("spawn {} for worker {worker}: {e}", self.gcod_bin.display()))
+        })?;
+        slot.child = Some(child);
+        slot.out_path = job.out_path.clone();
+        slot.err_path = err_path;
+        slot.started = Instant::now();
+        Ok(())
+    }
+
+    fn poll(&mut self, worker: WorkerId) -> WorkerPoll {
+        let slot = &mut self.slots[worker];
+        let Some(child) = slot.child.as_mut() else { return WorkerPoll::Idle };
+        // armed fault: simulate the machine dying mid-shard
+        if let Some(after) = slot.kill_after {
+            if slot.started.elapsed() >= after {
+                let _ = child.kill();
+                slot.kill_after = None;
+            }
+        }
+        match child.try_wait() {
+            Ok(None) => WorkerPoll::Running,
+            Ok(Some(status)) => {
+                slot.child = None;
+                let stderr = read_tail(&slot.err_path, 4096);
+                let _ = std::fs::remove_file(&slot.err_path);
+                if status.success() && slot.out_path.is_file() {
+                    WorkerPoll::Done
+                } else {
+                    WorkerPoll::Failed(format!(
+                        "worker {worker} process exited ({status}) without a manifest{}{}",
+                        if stderr.is_empty() { "" } else { ": " },
+                        stderr
+                    ))
+                }
+            }
+            Err(e) => {
+                slot.child = None;
+                WorkerPoll::Failed(format!("worker {worker} wait failed: {e}"))
+            }
+        }
+    }
+
+    fn kill(&mut self, worker: WorkerId) {
+        let slot = &mut self.slots[worker];
+        if let Some(mut child) = slot.child.take() {
+            let _ = child.kill();
+            let _ = child.wait(); // reap
+            let _ = std::fs::remove_file(&slot.err_path);
+            // the job's manifest will never be collected — don't let a
+            // just-finished-then-killed worker leave a stale file
+            let _ = std::fs::remove_file(&slot.out_path);
+        }
+        slot.kill_after = None;
+    }
+
+    fn collect(&mut self, worker: WorkerId) -> Result<ShardResult> {
+        let path = self.slots[worker].out_path.clone();
+        let res = ShardResult::read(&path);
+        // the manifest was parsed (or is corrupt) — either way the file
+        // has served its purpose
+        let _ = std::fs::remove_file(&path);
+        res
+    }
+}
+
+impl Drop for LocalProcess {
+    fn drop(&mut self) {
+        for w in 0..self.slots.len() {
+            self.kill(w);
+        }
+    }
+}
+
+/// Last `max` bytes of a worker's stderr sidecar file, lossy-decoded
+/// and trimmed — enough context for the failure log without ever
+/// holding a pipe the worker could block on.
+fn read_tail(path: &Path, max: usize) -> String {
+    let Ok(bytes) = std::fs::read(path) else { return String::new() };
+    let start = bytes.len().saturating_sub(max);
+    String::from_utf8_lossy(&bytes[start..]).trim().to_string()
+}

@@ -18,6 +18,10 @@
 //! * [`sweep`] — parallel deterministic Monte-Carlo trial engine;
 //!   [`sweep::shard`] splits sweeps across processes with bit-exact
 //!   JSON-manifest merging (`gcod sweep-shard` / `gcod sweep-merge`)
+//! * [`dispatch`] — elastic fault-tolerant work-queue coordinator:
+//!   leases trial ranges to a worker-process pool, re-dispatches lost
+//!   ranges, dedups speculative covers, merges to the single-process
+//!   bits (`gcod sweep-launch`)
 //! * [`gd`] — coded gradient descent engines & convergence bounds
 //! * [`coordinator`] — distributed leader/worker runtime (Algorithm 2)
 //! * [`runtime`] — PJRT artifact loading & execution (feature `pjrt`)
@@ -60,6 +64,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod decode;
+pub mod dispatch;
 pub mod error;
 pub mod gd;
 pub mod graphs;

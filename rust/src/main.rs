@@ -6,13 +6,13 @@
 use gcod::cli::{flag, switch, App, CommandSpec};
 use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
+use gcod::dispatch::{DispatchConfig, Dispatcher, LocalProcess, StragglerSimCfg};
 use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Table};
 use gcod::prng::Rng;
 use gcod::straggler::BernoulliStragglers;
 use gcod::sweep::{self, shard};
-use std::collections::BTreeMap;
 use std::path::Path;
 use std::time::Duration;
 
@@ -102,7 +102,48 @@ fn app() -> App {
                         Some("0"),
                     ),
                     flag("shard", "shard spec i/k (contiguous split of [0,N))", Some("0/1")),
+                    flag("range", "explicit trial range lo..hi (overrides --shard)", None),
                     flag("out", "manifest path (default sweep_<kind>_shard_<i>of<k>.json)", None),
+                    switch(
+                        "stats-only",
+                        "omit the per-trial vector (smaller manifest, Chan-merge contract)",
+                    ),
+                ],
+            },
+            CommandSpec {
+                name: "sweep-launch",
+                help: "elastic fault-tolerant sweep across a pool of local worker processes",
+                flags: vec![
+                    flag("sweep", "decode-error|gd-final|attack", Some("decode-error")),
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
+                    flag("p", "straggler probability", Some("0.2")),
+                    flag("trials", "total trials N", Some("1000")),
+                    flag("seed", "sweep seed", Some("0")),
+                    flag("chunk", "engine chunk size >= 1 (determinism contract)", Some("32")),
+                    flag("workers", "local worker processes", Some("4")),
+                    flag(
+                        "grain",
+                        "initial lease size in trials (0 = auto, chunk-aligned)",
+                        Some("0"),
+                    ),
+                    flag("threads", "engine threads per worker", Some("1")),
+                    flag("lease-timeout-ms", "presume a lease lost after this long", Some("30000")),
+                    flag("max-retries", "re-enqueues per range before failing", Some("3")),
+                    flag("poll-ms", "dispatcher poll interval", Some("10")),
+                    flag("out", "merged result path", Some("sweep_launched.json")),
+                    switch("stats-only", "stats-only manifests (relaxed Chan-merge contract)"),
+                    switch("no-speculate", "disable speculative re-execution of slow ranges"),
+                    flag("kill-worker", "fault injection: kill this worker id mid-shard", None),
+                    flag(
+                        "kill-after-ms",
+                        "fault injection: kill this long after job start",
+                        Some("50"),
+                    ),
+                    flag("hang-worker", "fault injection: this worker id never heartbeats", None),
+                    flag("hang-ms", "fault injection: hang duration (ms)", Some("120000")),
+                    flag("sim-stragglers", "simulate Bernoulli(p) straggling workers", None),
+                    flag("sim-delay-ms", "simulated straggler delay (ms)", Some("200")),
                 ],
             },
             CommandSpec {
@@ -134,6 +175,7 @@ fn main() {
         "train" => cmd_train(&inv),
         "adversarial" => cmd_adversarial(&inv),
         "sweep-shard" => cmd_sweep_shard(&inv),
+        "sweep-launch" => cmd_sweep_launch(&inv),
         "sweep-merge" => cmd_sweep_merge(&inv),
         _ => unreachable!(),
     };
@@ -299,38 +341,65 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep_shard(inv: &gcod::cli::Invocation) -> Result<()> {
-    let kind = shard::SweepKind::parse(&inv.str_or("sweep", "decode-error"))?;
-    let mut params = BTreeMap::new();
-    for ov in &inv.overrides {
-        let (k, v) = ov
-            .split_once('=')
-            .ok_or_else(|| Error::msg(format!("--set needs key=value, got '{ov}'")))?;
-        params.insert(k.trim().to_string(), v.trim().to_string());
-    }
-    let cfg = shard::SweepConfig {
-        sweep: kind,
+/// Shared by `sweep-shard` and `sweep-launch`: the sweep identity from
+/// the common flag set (extra parameters travel as `--set key=value`).
+fn sweep_config_from(inv: &gcod::cli::Invocation) -> Result<shard::SweepConfig> {
+    Ok(shard::SweepConfig {
+        sweep: shard::SweepKind::parse(&inv.str_or("sweep", "decode-error"))?,
         scheme: inv.str_or("scheme", "graph-rr:16,3"),
         decoder: inv.str_or("decoder", "optimal"),
         p: inv.f64_or("p", 0.2),
         seed: inv.u64_or("seed", 0),
         trials: inv.usize_or("trials", 1000),
         chunk: inv.usize_or("chunk", sweep::DEFAULT_CHUNK),
-        params,
-    };
-    let spec = shard::ShardSpec::parse(&inv.str_or("shard", "0/1"))?;
+        params: inv.override_map().map_err(|e| Error::msg(e.to_string()))?,
+    })
+}
+
+fn cmd_sweep_shard(inv: &gcod::cli::Invocation) -> Result<()> {
+    // dispatch fault-injection/simulation hook: a worker process can be
+    // made slow (straggler sim) or effectively hung (never heartbeats)
+    // by its parent via this env var — see dispatch::transport
+    if let Ok(ms) = std::env::var(gcod::dispatch::transport::DELAY_ENV) {
+        // warn-and-ignore garbage: a stray exported value must not break
+        // real runs
+        match ms.parse::<u64>() {
+            Ok(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            Err(e) => eprintln!(
+                "ignoring unparseable {}='{ms}': {e}",
+                gcod::dispatch::transport::DELAY_ENV
+            ),
+        }
+    }
+    let cfg = sweep_config_from(inv)?;
     let threads = match inv.usize_or("threads", 0) {
         0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         t => t,
     };
-    let res = shard::run_shard(&cfg, threads, spec)?;
+    let spec = shard::ShardSpec::parse(&inv.str_or("shard", "0/1"))?;
+    let (label, default_out, res) = match inv.get("range") {
+        Some(r) if !r.is_empty() => {
+            let (lo, hi) = shard::parse_range(r)?;
+            (
+                format!("range {lo}..{hi}"),
+                format!("sweep_{}_range_{lo}_{hi}.json", cfg.sweep.as_str()),
+                shard::run_range(&cfg, threads, lo, hi)?,
+            )
+        }
+        _ => (
+            format!("shard {spec}"),
+            format!("sweep_{}_shard_{}of{}.json", cfg.sweep.as_str(), spec.index, spec.count),
+            shard::run_shard(&cfg, threads, spec)?,
+        ),
+    };
+    let res = if inv.switch("stats-only") { res.into_stats_only() } else { res };
     let out = match inv.get("out") {
         Some(o) if !o.is_empty() => o.to_string(),
-        _ => format!("sweep_{}_shard_{}of{}.json", cfg.sweep.as_str(), spec.index, spec.count),
+        _ => default_out,
     };
     res.write(Path::new(&out))?;
     println!(
-        "shard {spec} of sweep '{}' ({} {} p={} seed={}): trials [{}, {}) of {}",
+        "{label} of sweep '{}' ({} {} p={} seed={}): trials [{}, {}) of {}{}",
         cfg.sweep.as_str(),
         cfg.scheme,
         cfg.decoder,
@@ -338,7 +407,8 @@ fn cmd_sweep_shard(inv: &gcod::cli::Invocation) -> Result<()> {
         cfg.seed,
         res.lo,
         res.hi,
-        cfg.trials
+        cfg.trials,
+        if res.stats_only { " [stats-only]" } else { "" }
     );
     println!(
         "partial: count={} mean={} std={} min={} max={}",
@@ -349,6 +419,83 @@ fn cmd_sweep_shard(inv: &gcod::cli::Invocation) -> Result<()> {
         sci(res.stats.max())
     );
     println!("manifest written to {out}");
+    Ok(())
+}
+
+fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
+    let cfg = sweep_config_from(inv)?;
+    let workers = inv.usize_or("workers", 4).max(1);
+    let out_dir = std::env::temp_dir().join(format!("gcod_launch_{}", std::process::id()));
+    let mut dcfg = DispatchConfig {
+        grain: inv.usize_or("grain", 0),
+        threads_per_worker: inv.usize_or("threads", 1),
+        lease_timeout: Duration::from_millis(inv.u64_or("lease-timeout-ms", 30_000)),
+        max_retries: inv.usize_or("max-retries", 3),
+        poll_interval: Duration::from_millis(inv.u64_or("poll-ms", 10)),
+        speculate: !inv.switch("no-speculate"),
+        stats_only: inv.switch("stats-only"),
+        out_dir: out_dir.clone(),
+        straggler_sim: None,
+        fault_delay_ms: Vec::new(),
+    };
+    if let Some(p) = inv.get("sim-stragglers") {
+        let p = p.parse::<f64>().map_err(|e| Error::msg(format!("bad --sim-stragglers: {e}")))?;
+        dcfg.straggler_sim = Some(StragglerSimCfg {
+            p,
+            delay: Duration::from_millis(inv.u64_or("sim-delay-ms", 200)),
+            seed: cfg.seed ^ 0x5157,
+        });
+    }
+    let worker_id = |flag: &str| -> Result<Option<usize>> {
+        match inv.get(flag) {
+            None => Ok(None),
+            Some(w) => {
+                let w = w
+                    .parse::<usize>()
+                    .map_err(|e| Error::msg(format!("bad --{flag}: {e}")))?;
+                if w >= workers {
+                    return Err(Error::msg(format!(
+                        "bad --{flag}: worker {w} out of range for {workers} workers"
+                    )));
+                }
+                Ok(Some(w))
+            }
+        }
+    };
+    if let Some(w) = worker_id("hang-worker")? {
+        dcfg.fault_delay_ms.push((w, inv.u64_or("hang-ms", 120_000)));
+    }
+    let exe = std::env::current_exe()?;
+    let mut transport = LocalProcess::new(exe, workers);
+    if let Some(w) = worker_id("kill-worker")? {
+        transport.inject_kill(w, Duration::from_millis(inv.u64_or("kill-after-ms", 50)));
+    }
+    println!(
+        "launching sweep '{}' ({} {} p={} seed={}, {} trials) on {workers} local worker(s)...",
+        cfg.sweep.as_str(),
+        cfg.scheme,
+        cfg.decoder,
+        cfg.p,
+        cfg.seed,
+        cfg.trials
+    );
+    let result = Dispatcher::new(dcfg).run(&cfg, &mut transport);
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let outcome = result?;
+    let out = inv.str_or("out", "sweep_launched.json");
+    outcome.merged.write(Path::new(&out))?;
+    println!("{}", outcome.report.summary());
+    for line in &outcome.report.failure_log {
+        println!("  [fault] {line}");
+    }
+    println!(
+        "result: mean={} std={} min={} max={}",
+        sci(outcome.merged.stats.mean()),
+        sci(outcome.merged.stats.std()),
+        sci(outcome.merged.stats.min()),
+        sci(outcome.merged.stats.max())
+    );
+    println!("merged result written to {out}");
     Ok(())
 }
 

@@ -100,6 +100,14 @@ impl Stats {
         self.m2
     }
 
+    /// Rebuild an accumulator from its serialized state. Used by
+    /// stats-only shard manifests (`sweep::shard`), whose per-trial
+    /// vector is omitted so the recorded accumulator cannot be refolded
+    /// from values and must be reconstructed verbatim.
+    pub fn from_raw(count: u64, mean: f64, m2: f64, min: f64, max: f64) -> Self {
+        Self { n: count, mean, m2, min, max }
+    }
+
     pub fn min(&self) -> f64 {
         self.min
     }

@@ -97,6 +97,35 @@ impl StragglerModel for StagnantStragglers {
     }
 }
 
+/// Adapter from a [`StragglerModel`] to per-worker startup *delays*,
+/// for the dispatch layer's straggler simulation: each call samples a
+/// mask over the worker pool and maps straggling workers to `delay`,
+/// healthy ones to zero. Any model plugs in — Bernoulli for the
+/// paper's random model, [`StagnantStragglers`] for sticky slow hosts.
+pub struct DelaySampler<M: StragglerModel> {
+    model: M,
+    delay: std::time::Duration,
+}
+
+impl<M: StragglerModel> DelaySampler<M> {
+    pub fn new(model: M, delay: std::time::Duration) -> Self {
+        Self { model, delay }
+    }
+
+    /// Delay for each of `m` workers this round.
+    pub fn sample_delays(&mut self, m: usize) -> Vec<std::time::Duration> {
+        self.model
+            .sample(m)
+            .into_iter()
+            .map(|s| if s { self.delay } else { std::time::Duration::ZERO })
+            .collect()
+    }
+
+    pub fn name(&self) -> String {
+        format!("delay({}, {:?})", self.model.name(), self.delay)
+    }
+}
+
 // ---------------------------------------------------------------------
 // Adversarial attacks (Definition I.3): budget floor(p m) machines
 // ---------------------------------------------------------------------
@@ -363,6 +392,17 @@ mod tests {
             let mask = s.sample(24);
             assert_eq!(mask.iter().filter(|&&b| b).count(), 6);
         }
+    }
+
+    #[test]
+    fn delay_sampler_maps_mask_to_delays() {
+        let delay = std::time::Duration::from_millis(80);
+        let mut s = DelaySampler::new(BernoulliStragglers::new(0.5, 9), delay);
+        let d = s.sample_delays(1000);
+        assert!(d.iter().all(|&x| x.is_zero() || x == delay));
+        let slow = d.iter().filter(|x| !x.is_zero()).count();
+        assert!((300..700).contains(&slow), "slow={slow}");
+        assert!(s.name().contains("bernoulli"));
     }
 
     #[test]

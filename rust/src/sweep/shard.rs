@@ -36,6 +36,21 @@
 //! `attack` (the greedy adversarial error-vs-budget curve, sliced along
 //! the budget axis via the nested
 //! [`crate::straggler::greedy_decode_attack_trace`]).
+//!
+//! Two extensions serve the elastic dispatcher ([`crate::dispatch`]):
+//!
+//! * [`ShardResult::slice`] and [`dedup_cover`] turn an over-complete
+//!   set of shard results (speculative re-execution of straggling
+//!   ranges produces duplicate covers) into an exact gap-free cover of
+//!   `[0, N)` before [`merge`] — safe because per-trial values are
+//!   split-invariant, so any trimmed cover folds to the same bits.
+//! * **Stats-only manifests** ([`ShardResult::into_stats_only`], CLI
+//!   `--stats-only`) omit the per-trial vector to cap manifest size for
+//!   very large N. The merge contract relaxes from the bit-exact refold
+//!   to the [`Stats::merge`] (Chan) combination: `count`/`min`/`max`
+//!   stay exact, the float moments agree only to rounding and depend on
+//!   the shard split. [`merge`] refuses to mix stats-only and full
+//!   manifests.
 
 use crate::bench_util::{f64_from_hex_bits, f64_to_hex_bits, json_escape, json_f64_display};
 use crate::codes::zoo::{build, make_decoder, BuiltScheme, DecoderSpec, SchemeSpec};
@@ -53,7 +68,9 @@ use std::path::Path;
 
 /// Version stamped into every shard/merged manifest. [`merge`] (and so
 /// `gcod sweep-merge`) rejects manifests written by a different schema.
-pub const SHARD_SCHEMA: u64 = 1;
+/// Schema 2 added the `stats_only` flag (schema-1 manifests, which
+/// predate it, are rejected rather than guessed at).
+pub const SHARD_SCHEMA: u64 = 2;
 
 /// `"kind"` of a per-shard manifest.
 pub const SHARD_KIND: &str = "gcod-sweep-shard";
@@ -122,6 +139,28 @@ impl fmt::Display for ShardSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}/{}", self.index, self.count)
     }
+}
+
+/// Parse an explicit trial range `"lo..hi"` (e.g. `--range 128..256`,
+/// the form the dispatcher hands to its workers). `lo <= hi` is
+/// enforced; the upper bound against `trials` is checked by
+/// [`run_range`].
+pub fn parse_range(s: &str) -> Result<(usize, usize)> {
+    let (a, b) = s
+        .split_once("..")
+        .ok_or_else(|| Error::msg(format!("bad range '{s}': want lo..hi, e.g. 0..256")))?;
+    let lo = a
+        .trim()
+        .parse::<usize>()
+        .map_err(|e| Error::msg(format!("bad range start '{a}': {e}")))?;
+    let hi = b
+        .trim()
+        .parse::<usize>()
+        .map_err(|e| Error::msg(format!("bad range end '{b}': {e}")))?;
+    if lo > hi {
+        return Err(Error::msg(format!("bad range '{s}': start exceeds end")));
+    }
+    Ok((lo, hi))
 }
 
 // ---------------------------------------------------------------------
@@ -235,29 +274,80 @@ impl SweepConfig {
 // ---------------------------------------------------------------------
 
 /// One shard's output: the per-trial metric vector for `[lo, hi)` plus
-/// its sequential-fold [`Stats`] partial.
+/// its sequential-fold [`Stats`] partial. In stats-only mode the vector
+/// is omitted (empty) and only the partial travels.
 #[derive(Clone, Debug)]
 pub struct ShardResult {
     pub config: SweepConfig,
     pub lo: usize,
     pub hi: usize,
-    /// metric value of trial `lo + i` at index `i`
+    /// metric value of trial `lo + i` at index `i`; empty when
+    /// `stats_only`
     pub values: Vec<f64>,
-    /// `Stats::from_values(&values)` — recomputed (never trusted) when
-    /// a manifest is parsed
+    /// the shard's sequential fold: `Stats::from_values(&values)` —
+    /// recomputed (never trusted) when a full manifest is parsed, taken
+    /// verbatim from the manifest when stats-only
     pub stats: Stats,
+    /// per-trial vector omitted: the manifest carries only the [`Stats`]
+    /// partial (relaxed Chan-merge contract)
+    pub stats_only: bool,
 }
 
 impl ShardResult {
     pub fn from_values(config: SweepConfig, lo: usize, hi: usize, values: Vec<f64>) -> Self {
         assert_eq!(values.len(), hi - lo, "shard [{lo},{hi}) got {} values", values.len());
         let stats = Stats::from_values(&values);
-        Self { config, lo, hi, values, stats }
+        Self { config, lo, hi, values, stats, stats_only: false }
+    }
+
+    /// Drop the per-trial vector, keeping only the (already exact,
+    /// sequentially folded) [`Stats`] partial. Caps manifest size for
+    /// very large N at the cost of the bit-exact merge contract: a
+    /// merge of stats-only shards combines partials via [`Stats::merge`]
+    /// (Chan), whose float moments depend on the split.
+    pub fn into_stats_only(mut self) -> Self {
+        self.values = Vec::new();
+        self.stats_only = true;
+        self
+    }
+
+    /// The sub-range `[lo, hi)` of this shard's result, with values and
+    /// stats recomputed for the slice. Split-invariance of per-trial
+    /// values makes the slice bit-identical to a shard run directly on
+    /// `[lo, hi)` — this is what lets [`dedup_cover`] trim overlapping
+    /// speculative covers. Stats-only shards cannot be sliced (no
+    /// per-trial vector to cut).
+    pub fn slice(&self, lo: usize, hi: usize) -> Result<ShardResult> {
+        if self.stats_only {
+            return Err(Error::msg(format!(
+                "cannot slice stats-only shard [{}, {}): per-trial values were dropped",
+                self.lo, self.hi
+            )));
+        }
+        if lo < self.lo || hi > self.hi || lo > hi {
+            return Err(Error::msg(format!(
+                "slice [{lo}, {hi}) outside shard [{}, {})",
+                self.lo, self.hi
+            )));
+        }
+        Ok(ShardResult::from_values(
+            self.config.clone(),
+            lo,
+            hi,
+            self.values[lo - self.lo..hi - self.lo].to_vec(),
+        ))
     }
 
     /// Serialize to the versioned shard-manifest JSON.
     pub fn render(&self) -> String {
-        render_doc(SHARD_KIND, &self.config, Some((self.lo, self.hi)), &self.values, &self.stats)
+        render_doc(
+            SHARD_KIND,
+            &self.config,
+            Some((self.lo, self.hi)),
+            &self.values,
+            &self.stats,
+            self.stats_only,
+        )
     }
 
     pub fn write(&self, path: &Path) -> Result<()> {
@@ -279,14 +369,29 @@ impl ShardResult {
                 doc.config.trials
             )));
         }
-        if doc.values.len() != hi - lo {
+        if doc.stats_only {
+            if doc.stats.count() != (hi - lo) as u64 {
+                return Err(Error::msg(format!(
+                    "stats-only shard [{lo}, {hi}) records count {}, expected {}",
+                    doc.stats.count(),
+                    hi - lo
+                )));
+            }
+        } else if doc.values.len() != hi - lo {
             return Err(Error::msg(format!(
                 "shard [{lo}, {hi}) carries {} values, expected {}",
                 doc.values.len(),
                 hi - lo
             )));
         }
-        Ok(Self { config: doc.config, lo, hi, values: doc.values, stats: doc.stats })
+        Ok(Self {
+            config: doc.config,
+            lo,
+            hi,
+            values: doc.values,
+            stats: doc.stats,
+            stats_only: doc.stats_only,
+        })
     }
 
     pub fn read(path: &Path) -> Result<Self> {
@@ -297,21 +402,25 @@ impl ShardResult {
 }
 
 /// A fully merged sweep: the per-trial vector for all of `[0, N)` and
-/// its canonical sequential-fold [`Stats`].
+/// its canonical sequential-fold [`Stats`] (vector empty and stats
+/// Chan-combined in stats-only mode).
 #[derive(Clone, Debug)]
 pub struct MergedSweep {
     pub config: SweepConfig,
     pub values: Vec<f64>,
     pub stats: Stats,
+    pub stats_only: bool,
 }
 
 impl MergedSweep {
-    /// Serialize the merged result. The output depends only on the
-    /// config and the per-trial values — never on how many shards fed
-    /// the merge — so any split of the same sweep renders byte-identical
-    /// JSON.
+    /// Serialize the merged result. For full manifests the output
+    /// depends only on the config and the per-trial values — never on
+    /// how many shards fed the merge — so any split of the same sweep
+    /// renders byte-identical JSON. Stats-only merges are deterministic
+    /// for a given shard split but their float moments carry
+    /// split-dependent Chan rounding.
     pub fn render(&self) -> String {
-        render_doc(MERGED_KIND, &self.config, None, &self.values, &self.stats)
+        render_doc(MERGED_KIND, &self.config, None, &self.values, &self.stats, self.stats_only)
     }
 
     pub fn write(&self, path: &Path) -> Result<()> {
@@ -321,14 +430,27 @@ impl MergedSweep {
 
     pub fn parse(text: &str) -> Result<Self> {
         let doc = parse_doc(text, MERGED_KIND)?;
-        if doc.values.len() != doc.config.trials {
+        if doc.stats_only {
+            if doc.stats.count() != doc.config.trials as u64 {
+                return Err(Error::msg(format!(
+                    "stats-only merged sweep records count {} for {} trials",
+                    doc.stats.count(),
+                    doc.config.trials
+                )));
+            }
+        } else if doc.values.len() != doc.config.trials {
             return Err(Error::msg(format!(
                 "merged sweep carries {} values for {} trials",
                 doc.values.len(),
                 doc.config.trials
             )));
         }
-        Ok(Self { config: doc.config, values: doc.values, stats: doc.stats })
+        Ok(Self {
+            config: doc.config,
+            values: doc.values,
+            stats: doc.stats,
+            stats_only: doc.stats_only,
+        })
     }
 }
 
@@ -342,11 +464,22 @@ impl MergedSweep {
 pub fn merge(mut shards: Vec<ShardResult>) -> Result<MergedSweep> {
     let first = shards.first().ok_or_else(|| Error::msg("no shard manifests to merge"))?;
     let config = first.config.clone();
+    let stats_only = first.stats_only;
     for s in &shards {
         if s.config != config {
             return Err(Error::msg(format!(
                 "shard config mismatch: [{}, {}) was run as {:?}, expected {config:?}",
                 s.lo, s.hi, s.config
+            )));
+        }
+        if s.stats_only != stats_only {
+            return Err(Error::msg(format!(
+                "cannot merge stats-only and full shard manifests: shard [{}, {}) is {}, \
+                 expected {} — re-run the odd shards in the other mode",
+                s.lo,
+                s.hi,
+                if s.stats_only { "stats-only" } else { "full" },
+                if stats_only { "stats-only" } else { "full" }
             )));
         }
     }
@@ -374,6 +507,19 @@ pub fn merge(mut shards: Vec<ShardResult>) -> Result<MergedSweep> {
             "trial coverage incomplete: shards cover [0, {covered}) of {} trials",
             config.trials
         )));
+    }
+
+    if stats_only {
+        // relaxed contract: no per-trial vector to refold, so the
+        // merged stats are the Chan combination of the (internally
+        // exact, sequentially folded) shard partials in range order.
+        // count/min/max stay exact; mean/m2 carry split-dependent
+        // rounding.
+        let mut chan = Stats::new();
+        for s in &shards {
+            chan.merge(&s.stats);
+        }
+        return Ok(MergedSweep { config, values: Vec::new(), stats: chan, stats_only: true });
     }
 
     let mut values = Vec::with_capacity(config.trials);
@@ -415,7 +561,72 @@ pub fn merge(mut shards: Vec<ShardResult>) -> Result<MergedSweep> {
         )));
     }
 
-    Ok(MergedSweep { config, values, stats })
+    Ok(MergedSweep { config, values, stats, stats_only: false })
+}
+
+/// Reduce an over-complete set of shard results — duplicates and
+/// overlaps included, as produced by speculative re-execution of
+/// straggling ranges — to an exact gap-free cover of `[0, N)`, ready
+/// for [`merge`]. Redundant results are dropped and partially-redundant
+/// ones trimmed via [`ShardResult::slice`]; because per-trial values
+/// are split-invariant, *which* duplicate survives cannot change the
+/// merged bits. Returns the cover plus the number of results dropped
+/// or trimmed. Stats-only results dedup only at exact-duplicate-range
+/// granularity (no vector to trim); a partial overlap among them is an
+/// error.
+pub fn dedup_cover(mut results: Vec<ShardResult>) -> Result<(Vec<ShardResult>, usize)> {
+    let first = results.first().ok_or_else(|| Error::msg("no shard results to dedup"))?;
+    let config = first.config.clone();
+    for r in &results {
+        if r.config != config {
+            return Err(Error::msg(format!(
+                "shard config mismatch: [{}, {}) was run as {:?}, expected {config:?}",
+                r.lo, r.hi, r.config
+            )));
+        }
+    }
+    // degenerate 0-trial sweep: every honest result is the empty shard
+    // [0, 0); keep one so merge still sees full coverage
+    if config.trials == 0 {
+        let dropped = results.len() - 1;
+        return Ok((vec![results.swap_remove(0)], dropped));
+    }
+    // longest cover first at each start, so trims are rare
+    results.sort_by(|a, b| a.lo.cmp(&b.lo).then(b.hi.cmp(&a.hi)));
+    let mut cover = Vec::new();
+    let mut deduped = 0usize;
+    let mut covered = 0usize;
+    for r in results {
+        if r.hi <= covered {
+            deduped += 1; // fully redundant (duplicate cover or empty shard)
+            continue;
+        }
+        if r.lo > covered {
+            return Err(Error::msg(format!(
+                "trial coverage gap: [{covered}, {}) missing before result [{}, {})",
+                r.lo, r.lo, r.hi
+            )));
+        }
+        if r.lo < covered {
+            deduped += 1;
+            cover.push(r.slice(covered, r.hi).map_err(|e| {
+                Error::msg(format!(
+                    "result [{}, {}) partially re-covers trials below {covered}: {e}",
+                    r.lo, r.hi
+                ))
+            })?);
+        } else {
+            cover.push(r);
+        }
+        covered = cover.last().map(|c| c.hi).unwrap_or(covered);
+    }
+    if covered != config.trials {
+        return Err(Error::msg(format!(
+            "trial coverage incomplete: results cover [0, {covered}) of {} trials",
+            config.trials
+        )));
+    }
+    Ok((cover, deduped))
 }
 
 // ---------------------------------------------------------------------
@@ -552,6 +763,7 @@ fn render_doc(
     range: Option<(usize, usize)>,
     values: &[f64],
     stats: &Stats,
+    stats_only: bool,
 ) -> String {
     let mut out = String::with_capacity(256 + 32 * values.len());
     out.push_str("{\n");
@@ -576,6 +788,7 @@ fn render_doc(
         out.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
     }
     out.push_str("},\n");
+    out.push_str(&format!("  \"stats_only\": {stats_only},\n"));
     if let Some((lo, hi)) = range {
         out.push_str(&format!("  \"lo\": {lo},\n  \"hi\": {hi},\n"));
     }
@@ -591,6 +804,11 @@ fn render_doc(
         ));
     }
     out.push_str(&format!("    \"std\": {}\n", json_f64_display(stats.std())));
+    if stats_only {
+        out.push_str("  }\n");
+        out.push_str("}\n");
+        return out;
+    }
     out.push_str("  },\n");
     out.push_str("  \"values_bits\": [");
     for (i, v) in values.iter().enumerate() {
@@ -619,8 +837,11 @@ struct ParsedDoc {
     json: Json,
     config: SweepConfig,
     values: Vec<f64>,
-    /// refold of `values` — validated against the recorded partial
+    /// full manifests: refold of `values`, validated against the
+    /// recorded partial; stats-only manifests: the recorded partial
+    /// itself
     stats: Stats,
+    stats_only: bool,
 }
 
 fn get<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
@@ -686,6 +907,29 @@ fn parse_doc(text: &str, expect_kind: &str) -> Result<ParsedDoc> {
     }
     let config = SweepConfig { sweep, scheme, decoder, p, seed, trials, chunk, params };
 
+    let stats_only = get(&json, "stats_only")?
+        .as_bool()
+        .ok_or_else(|| Error::msg("manifest field 'stats_only' is not a boolean"))?;
+    if stats_only {
+        if json.get("values_bits").is_some() {
+            return Err(Error::msg(
+                "stats-only manifest must not carry 'values_bits' (corrupt or hand-edited)",
+            ));
+        }
+        // no vector to refold against: the recorded partial is taken
+        // verbatim (internal count/range consistency is checked by the
+        // callers)
+        let rec = get(&json, "stats")?;
+        let stats = Stats::from_raw(
+            get_usize(rec, "count")? as u64,
+            get_f64_bits(rec, "mean")?,
+            get_f64_bits(rec, "m2")?,
+            get_f64_bits(rec, "min")?,
+            get_f64_bits(rec, "max")?,
+        );
+        return Ok(ParsedDoc { json, config, values: Vec::new(), stats, stats_only: true });
+    }
+
     let raw = get(&json, "values_bits")?
         .as_arr()
         .ok_or_else(|| Error::msg("manifest field 'values_bits' is not an array"))?;
@@ -715,7 +959,7 @@ fn parse_doc(text: &str, expect_kind: &str) -> Result<ParsedDoc> {
         ));
     }
 
-    Ok(ParsedDoc { json, config, values, stats })
+    Ok(ParsedDoc { json, config, values, stats, stats_only: false })
 }
 
 #[cfg(test)]
@@ -787,7 +1031,7 @@ mod tests {
     #[test]
     fn parse_rejects_schema_and_kind_mismatch() {
         let text = ShardResult::from_values(cfg(2), 0, 2, vec![1.0, 2.0]).render();
-        let bad_schema = text.replace("\"schema\": 1", "\"schema\": 99");
+        let bad_schema = text.replace("\"schema\": 2", "\"schema\": 99");
         let err = ShardResult::parse(&bad_schema).unwrap_err();
         assert!(format!("{err}").contains("schema version 99"), "{err}");
         let bad_kind = text.replace(SHARD_KIND, "gcod-other");
@@ -895,6 +1139,107 @@ mod tests {
         let mut c = cfg(4);
         c.sweep = SweepKind::Fig4Cluster;
         assert!(run_range(&c, 1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn parse_range_forms() {
+        assert_eq!(parse_range("0..256").unwrap(), (0, 256));
+        assert_eq!(parse_range(" 7 .. 7 ").unwrap(), (7, 7));
+        assert!(parse_range("5..3").is_err());
+        assert!(parse_range("5").is_err());
+        assert!(parse_range("a..b").is_err());
+    }
+
+    #[test]
+    fn slice_matches_direct_range() {
+        let c = cfg(10);
+        let vals: Vec<f64> = (0..10).map(|t| (t as f64).sqrt()).collect();
+        let full = ShardResult::from_values(c.clone(), 0, 10, vals.clone());
+        let s = full.slice(3, 7).unwrap();
+        assert_eq!((s.lo, s.hi), (3, 7));
+        for (i, v) in s.values.iter().enumerate() {
+            assert_eq!(v.to_bits(), vals[3 + i].to_bits());
+        }
+        // stats are refolded for the slice, not inherited
+        assert_eq!(s.stats.count(), 4);
+        // out-of-bounds and inverted slices rejected
+        assert!(full.slice(3, 11).is_err());
+        assert!(full.slice(7, 3).is_err());
+        // stats-only shards cannot be sliced
+        assert!(full.into_stats_only().slice(3, 7).is_err());
+    }
+
+    #[test]
+    fn dedup_cover_trims_speculative_duplicates() {
+        let c = cfg(10);
+        let vals: Vec<f64> = (0..10).map(|t| t as f64 * 1.5).collect();
+        let mk = |lo: usize, hi: usize| {
+            ShardResult::from_values(c.clone(), lo, hi, vals[lo..hi].to_vec())
+        };
+        // exact duplicate + partial overlap + containment, out of order
+        let (cover, deduped) = dedup_cover(vec![
+            mk(6, 10),
+            mk(0, 4),
+            mk(0, 4), // exact duplicate
+            mk(2, 8), // partial overlap on both sides
+            mk(7, 9), // contained in [6, 10)
+        ])
+        .unwrap();
+        assert!(deduped >= 2, "deduped={deduped}");
+        let merged = merge(cover).unwrap();
+        for (i, v) in merged.values.iter().enumerate() {
+            assert_eq!(v.to_bits(), vals[i].to_bits(), "trial {i}");
+        }
+        // the merged bits equal the single-shard fold
+        let single = merge(vec![mk(0, 10)]).unwrap();
+        assert_eq!(merged.render(), single.render());
+        // gaps and incompleteness still fail loudly
+        let err = dedup_cover(vec![mk(0, 3), mk(5, 10)]).unwrap_err();
+        assert!(format!("{err}").contains("gap"), "{err}");
+        let err = dedup_cover(vec![mk(0, 9)]).unwrap_err();
+        assert!(format!("{err}").contains("incomplete"), "{err}");
+        assert!(dedup_cover(vec![]).is_err());
+    }
+
+    #[test]
+    fn stats_only_round_trip_and_merge() {
+        let c = cfg(6);
+        let vals: Vec<f64> = (0..6).map(|t| ((t * t) as f64 * 0.11).cos()).collect();
+        let a = ShardResult::from_values(c.clone(), 0, 3, vals[0..3].to_vec()).into_stats_only();
+        let b = ShardResult::from_values(c.clone(), 3, 6, vals[3..6].to_vec()).into_stats_only();
+        // manifest round trip preserves the partial bit-for-bit and
+        // carries no per-trial vector
+        let text = a.render();
+        assert!(text.contains("\"stats_only\": true"));
+        assert!(!text.contains("values_bits"));
+        let back = ShardResult::parse(&text).unwrap();
+        assert!(back.stats_only && back.values.is_empty());
+        assert_eq!(back.stats.mean().to_bits(), a.stats.mean().to_bits());
+        assert_eq!(back.stats.m2().to_bits(), a.stats.m2().to_bits());
+        // merge combines partials via Chan: count/min/max exact
+        let merged = merge(vec![back, b.clone()]).unwrap();
+        assert!(merged.stats_only && merged.values.is_empty());
+        let refold = Stats::from_values(&vals);
+        assert_eq!(merged.stats.count(), refold.count());
+        assert_eq!(merged.stats.min().to_bits(), refold.min().to_bits());
+        assert_eq!(merged.stats.max().to_bits(), refold.max().to_bits());
+        assert!((merged.stats.mean() - refold.mean()).abs() < 1e-12);
+        // merged stats-only manifest parses back
+        let m2 = MergedSweep::parse(&merged.render()).unwrap();
+        assert!(m2.stats_only);
+        assert_eq!(m2.stats.count(), 6);
+        // count inconsistent with the range is rejected
+        let bad = a.render().replace("\"count\": 3", "\"count\": 4");
+        assert!(ShardResult::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_mixed_stats_only_and_full() {
+        let c = cfg(4);
+        let full = ShardResult::from_values(c.clone(), 0, 2, vec![1.0, 2.0]);
+        let so = ShardResult::from_values(c.clone(), 2, 4, vec![3.0, 4.0]).into_stats_only();
+        let err = merge(vec![full, so]).unwrap_err();
+        assert!(format!("{err}").contains("stats-only"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,339 @@
+//! Fault-tolerance suite for the elastic dispatch subsystem
+//! (`dispatch::Dispatcher` + `LocalProcess` over real `gcod` worker
+//! subprocesses). The contracts pinned here:
+//!
+//! * killing a worker mid-shard loses nothing: the lease is
+//!   re-dispatched and the merged JSON is **byte-identical** to the
+//!   single-process run — for all three standard sweep kinds
+//!   (`decode-error`, `gd-final`, `attack`);
+//! * a worker that never heartbeats (hangs before doing any work) is
+//!   reaped by the lease deadline and its range re-dispatched, with the
+//!   same byte-identity guarantee;
+//! * the `gcod sweep-launch` CLI end-to-end — 3 local workers, one
+//!   injected kill — produces a merged file byte-identical to the
+//!   `sweep-shard 0/1` + `sweep-merge` single-process path (the CI
+//!   smoke step mirrors this);
+//! * stats-only manifests round-trip through the CLI and refuse to mix
+//!   with full manifests.
+//!
+//! (Duplicate-cover dedup and retry exhaustion are pinned
+//! deterministically by the in-crate scripted-transport tests in
+//! `src/dispatch/mod.rs`; here everything crosses real process
+//! boundaries.)
+
+use gcod::dispatch::{DispatchConfig, Dispatcher, LocalProcess, WorkerId};
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gcod_dispatch_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn decode_error_cfg() -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 9,
+        trials: 120,
+        chunk: 8,
+        params: BTreeMap::new(),
+    }
+}
+
+fn dcfg(tag: &str) -> DispatchConfig {
+    DispatchConfig {
+        grain: 16,
+        poll_interval: Duration::from_millis(5),
+        out_dir: tmp_dir(tag),
+        ..DispatchConfig::default()
+    }
+}
+
+/// Dispatch `cfg` over `workers` subprocesses with worker 0 slowed and
+/// then killed mid-range; assert the merged JSON is byte-identical to
+/// the in-process single run.
+fn assert_faulted_dispatch_bit_exact(cfg: &SweepConfig, tag: &str, kill: Option<WorkerId>) {
+    let single = shard::run_full(cfg, 2).unwrap();
+    let mut d = dcfg(tag);
+    if kill.is_some() {
+        // slow worker 0's first job so the injected kill reliably lands
+        // mid-range (the job sleeps 150ms, the kill fires at 30ms)
+        d.fault_delay_ms.push((0, 150));
+    }
+    let mut transport = LocalProcess::new(gcod_bin(), 2);
+    if let Some(w) = kill {
+        transport.inject_kill(w, Duration::from_millis(30));
+    }
+    let out = Dispatcher::new(d).run(cfg, &mut transport).unwrap();
+    assert_eq!(
+        out.merged.render(),
+        single.render(),
+        "{tag}: merged JSON bytes diverged from the single-process run \
+         ({})",
+        out.report.summary()
+    );
+    if kill.is_some() {
+        assert!(out.report.retried >= 1, "{tag}: kill never re-dispatched a lease: {}",
+                out.report.summary());
+        assert!(!out.report.failure_log.is_empty(), "{tag}: empty failure log");
+    }
+}
+
+/// The headline acceptance contract: a worker killed mid-range, lease
+/// re-dispatched, merged bits identical — for every standard sweep kind.
+#[test]
+fn kill_mid_shard_is_bit_exact_for_all_sweep_kinds() {
+    // decode-error (Fig. 3)
+    assert_faulted_dispatch_bit_exact(&decode_error_cfg(), "kill_decode", Some(0));
+
+    // gd-final (Fig. 4/5 on deterministic substreams)
+    let mut gd = SweepConfig {
+        sweep: SweepKind::GdFinal,
+        scheme: "graph-rr:8,3".into(),
+        decoder: "optimal".into(),
+        p: 0.25,
+        seed: 3,
+        trials: 12,
+        chunk: 4,
+        params: BTreeMap::new(),
+    };
+    gd.params.insert("n-points".into(), "64".into());
+    gd.params.insert("dim".into(), "8".into());
+    gd.params.insert("iters".into(), "10".into());
+    assert_faulted_dispatch_bit_exact(&gd, "kill_gd", Some(0));
+
+    // attack (budget axis, nested greedy trace)
+    let attack = SweepConfig {
+        sweep: SweepKind::Attack,
+        scheme: "graph-rr:12,3".into(),
+        decoder: "optimal".into(),
+        p: 0.25,
+        seed: 0,
+        trials: 10,
+        chunk: 4,
+        params: BTreeMap::new(),
+    };
+    assert_faulted_dispatch_bit_exact(&attack, "kill_attack", Some(0));
+}
+
+/// A worker that never heartbeats: its first job sleeps far past the
+/// lease deadline, the dispatcher reaps the lease and re-dispatches.
+#[test]
+fn hung_worker_is_reaped_by_lease_deadline() {
+    let cfg = decode_error_cfg();
+    let single = shard::run_full(&cfg, 2).unwrap();
+    let mut d = dcfg("hang");
+    d.fault_delay_ms.push((0, 60_000)); // effectively never
+    d.lease_timeout = Duration::from_millis(400);
+    d.speculate = false; // force the rescue through the timeout path
+    let mut transport = LocalProcess::new(gcod_bin(), 2);
+    let out = Dispatcher::new(d).run(&cfg, &mut transport).unwrap();
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+    assert!(out.report.timeouts >= 1, "no lease timed out: {}", out.report.summary());
+}
+
+/// Straggler simulation end-to-end: Bernoulli-delayed workers change
+/// wall-clock behavior only, never the merged bits.
+#[test]
+fn simulated_stragglers_do_not_change_bits() {
+    let cfg = decode_error_cfg();
+    let single = shard::run_full(&cfg, 2).unwrap();
+    let mut d = dcfg("sim");
+    d.straggler_sim = Some(gcod::dispatch::StragglerSimCfg {
+        p: 0.4,
+        delay: Duration::from_millis(40),
+        seed: 77,
+    });
+    let mut transport = LocalProcess::new(gcod_bin(), 3);
+    let out = Dispatcher::new(d).run(&cfg, &mut transport).unwrap();
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+}
+
+// ---------------------------------------------------------------------
+// CLI end-to-end
+// ---------------------------------------------------------------------
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawn gcod");
+    assert!(
+        out.status.success(),
+        "gcod failed: {:?}\nstdout: {}\nstderr: {}",
+        cmd,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+const CLI_SWEEP_ARGS: &[&str] = &[
+    "--sweep",
+    "decode-error",
+    "--scheme",
+    "graph-rr:16,3",
+    "--decoder",
+    "optimal",
+    "--p",
+    "0.2",
+    "--trials",
+    "200",
+    "--seed",
+    "7",
+    "--chunk",
+    "16",
+];
+
+/// `gcod sweep-launch` with 3 workers and one injected kill produces a
+/// merged file byte-identical to the `sweep-shard 0/1` + `sweep-merge`
+/// single-process path (mirrors the CI smoke step).
+#[test]
+fn cli_sweep_launch_with_kill_matches_single_process_file() {
+    let dir = tmp_dir("cli_launch");
+    let shard_path = dir.join("single_shard.json");
+    let single_path = dir.join("single_merged.json");
+    let launched_path = dir.join("launched.json");
+
+    run_ok(Command::new(gcod_bin()).arg("sweep-shard").args(CLI_SWEEP_ARGS).args([
+        "--threads",
+        "2",
+        "--shard",
+        "0/1",
+        "--out",
+        shard_path.to_str().unwrap(),
+    ]));
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        shard_path.to_str().unwrap(),
+        "--out",
+        single_path.to_str().unwrap(),
+    ]));
+    let stdout = run_ok(Command::new(gcod_bin()).arg("sweep-launch").args(CLI_SWEEP_ARGS).args([
+        "--workers",
+        "3",
+        "--grain",
+        "32",
+        "--hang-worker",
+        "0",
+        "--hang-ms",
+        "150",
+        "--kill-worker",
+        "0",
+        "--kill-after-ms",
+        "30",
+        "--out",
+        launched_path.to_str().unwrap(),
+    ]));
+    assert!(stdout.contains("dispatched"), "missing report summary: {stdout}");
+
+    let single = std::fs::read_to_string(&single_path).unwrap();
+    let launched = std::fs::read_to_string(&launched_path).unwrap();
+    assert_eq!(single, launched, "sweep-launch output != single-process merge");
+    // sanity: it is a merged manifest of the full sweep
+    let merged = shard::MergedSweep::parse(&launched).unwrap();
+    assert_eq!(merged.values.len(), 200);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `--range` shards merge exactly like `--shard` splits, and
+/// stats-only manifests work through the CLI but refuse to mix with
+/// full ones.
+#[test]
+fn cli_range_and_stats_only_modes() {
+    let dir = tmp_dir("cli_range");
+    let mk = |extra: &[&str], name: &str| {
+        let p = dir.join(name);
+        run_ok(
+            Command::new(gcod_bin())
+                .arg("sweep-shard")
+                .args(CLI_SWEEP_ARGS)
+                .args(["--threads", "1", "--out", p.to_str().unwrap()])
+                .args(extra),
+        );
+        p
+    };
+    // ragged --range split == --shard 0/1 after merge
+    let a = mk(&["--range", "0..37"], "r0.json");
+    let b = mk(&["--range", "37..200"], "r1.json");
+    let full = mk(&["--shard", "0/1"], "full.json");
+    let merged_ranges = dir.join("m_ranges.json");
+    let merged_full = dir.join("m_full.json");
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        a.to_str().unwrap(),
+        "--input",
+        b.to_str().unwrap(),
+        "--out",
+        merged_ranges.to_str().unwrap(),
+    ]));
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        full.to_str().unwrap(),
+        "--out",
+        merged_full.to_str().unwrap(),
+    ]));
+    assert_eq!(
+        std::fs::read_to_string(&merged_ranges).unwrap(),
+        std::fs::read_to_string(&merged_full).unwrap(),
+        "ragged --range merge != single-shard merge"
+    );
+
+    // stats-only: small manifests, Chan-merged result
+    let so0 = mk(&["--range", "0..100", "--stats-only"], "so0.json");
+    let so1 = mk(&["--range", "100..200", "--stats-only"], "so1.json");
+    assert!(
+        std::fs::metadata(&so0).unwrap().len() < std::fs::metadata(&full).unwrap().len() / 4,
+        "stats-only manifest is not materially smaller"
+    );
+    let merged_so = dir.join("m_so.json");
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        so0.to_str().unwrap(),
+        "--input",
+        so1.to_str().unwrap(),
+        "--out",
+        merged_so.to_str().unwrap(),
+    ]));
+    let so = shard::MergedSweep::parse(&std::fs::read_to_string(&merged_so).unwrap()).unwrap();
+    let full_merged =
+        shard::MergedSweep::parse(&std::fs::read_to_string(&merged_full).unwrap()).unwrap();
+    assert!(so.stats_only && so.values.is_empty());
+    assert_eq!(so.stats.count(), 200);
+    assert_eq!(so.stats.min().to_bits(), full_merged.stats.min().to_bits());
+    assert_eq!(so.stats.max().to_bits(), full_merged.stats.max().to_bits());
+    assert!((so.stats.mean() - full_merged.stats.mean()).abs() < 1e-12);
+
+    // mixing stats-only and full manifests is rejected
+    let out = Command::new(gcod_bin())
+        .args([
+            "sweep-merge",
+            "--input",
+            so0.to_str().unwrap(),
+            "--input",
+            b.to_str().unwrap(),
+            "--out",
+            dir.join("m_mixed.json").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "mixed stats-only/full merge must fail");
+    assert!(
+        String::from_utf8_lossy(&out.stderr).contains("stats-only"),
+        "stderr: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

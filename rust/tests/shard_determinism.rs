@@ -316,7 +316,7 @@ fn cli_merge_rejects_bad_shard_sets() {
     // schema mismatch: doctor one manifest's schema version
     let doctored = std::fs::read_to_string(&s0)
         .unwrap()
-        .replace("\"schema\": 1", "\"schema\": 99");
+        .replace("\"schema\": 2", "\"schema\": 99");
     let s0_bad = dir.join("s0_bad.json");
     std::fs::write(&s0_bad, doctored).unwrap();
     let out = gcod_bin()
