@@ -192,9 +192,7 @@ fn main() {
     });
     // force cold restarts on a long-lived decoder so only the solver
     // path differs (CSR mirror + scratch are built once on both sides)
-    let mut cold_dec = GenericOptimalDecoder::new(a);
-    cold_dec.restart_fraction = -1.0;
-    let cold_dec = cold_dec;
+    let cold_dec = GenericOptimalDecoder::new(a).with_restart_fraction(-1.0);
     let mut j = 0;
     let r_cold = bench("lsqr cold-start", 2, budget, 10_000, || {
         cold_dec.decode_into(&wmasks[j % 16], &mut out);
@@ -209,6 +207,35 @@ fn main() {
         fmt_dur(r_warm.mean),
         fmt_dur(r_cold.mean)
     );
+
+    // ---- restart-fraction tuning sweep (the named tunable) ----
+    // Independent Bernoulli(p) masks flip ~2p(1-p) of the machines, so
+    // sweeping p exercises guards on both sides of the default
+    // DEFAULT_RESTART_FRACTION = 0.25: the tuned value is the smallest
+    // fraction whose timing matches "always warm" on the workloads that
+    // benefit, without regressing the high-churn ones.
+    println!("\n== restart-fraction sweep (expander n=2048 d=6) ==");
+    let mut t4 = Table::new(&["p", "restart-fraction", "mean/decode"]);
+    for p in [0.05, 0.1, 0.2] {
+        let pmasks: Vec<Vec<bool>> =
+            (0..16).map(|i| Rng::new(700 + i).bernoulli_mask(a.cols, p)).collect();
+        for f in [-1.0, 0.1, 0.25, 0.5, 1.0] {
+            let dec = GenericOptimalDecoder::new(a).with_restart_fraction(f);
+            let mut i = 0;
+            let r = bench(&format!("lsqr p={p} restart-fraction={f}"), 2, budget, 10_000, || {
+                dec.decode_into(&pmasks[i % 16], &mut out);
+                black_box(out.alpha[0]);
+                i += 1;
+            });
+            report.push_result(&r, Some(a.cols), 1);
+            t4.row(vec![
+                format!("{p:.2}"),
+                if f < 0.0 { "always-cold".into() } else { format!("{f:.2}") },
+                fmt_dur(r.mean),
+            ]);
+        }
+    }
+    t4.print();
 
     // --baseline writes the tracked baseline (diffed by CI and across
     // commits) instead of the working directory; an explicit --json

@@ -58,10 +58,35 @@ impl LstsqData {
         }
     }
 
+    /// Zero-copy view of block `blk`'s rows, packed row-major (b x k) —
+    /// blocks are contiguous row ranges, so the slice feeds the
+    /// [`crate::linalg::syrk_into`] Gram kernel directly.
+    pub fn block_x(&self, blk: usize) -> &[f64] {
+        let row0 = blk * self.b;
+        &self.x.data[row0 * self.k..(row0 + self.b) * self.k]
+    }
+
+    /// Zero-copy view of block `blk`'s targets (length b).
+    pub fn block_y(&self, blk: usize) -> &[f64] {
+        let row0 = blk * self.b;
+        &self.y[row0..row0 + self.b]
+    }
+
     /// Per-block gradients G (n x k): G[i] = X_i^T (X_i theta - y_i),
     /// the same quantity the Pallas `block_grad` kernel computes.
+    /// Allocating wrapper around [`LstsqData::block_grads_into`].
     pub fn block_grads(&self, theta: &[f64]) -> Mat {
         let mut g = Mat::zeros(self.n_blocks, self.k);
+        self.block_grads_into(theta, &mut g);
+        g
+    }
+
+    /// Allocation-free streaming gradient: one pass over the data
+    /// matrix, writing into a caller-owned `g` (reset to shape, so a
+    /// warm scratch never reallocates). Accumulation order is identical
+    /// to the historical allocating path — results are bit-identical.
+    pub fn block_grads_into(&self, theta: &[f64], g: &mut Mat) {
+        g.reset(self.n_blocks, self.k);
         for blk in 0..self.n_blocks {
             let row0 = blk * self.b;
             for r in 0..self.b {
@@ -70,7 +95,6 @@ impl LstsqData {
                 crate::linalg::axpy(resid, xr, g.row_mut(blk));
             }
         }
-        g
     }
 
     /// Full-batch gradient = sum of block gradients.
@@ -229,6 +253,37 @@ mod tests {
             crate::linalg::axpy(-0.05, &g, &mut theta);
         }
         assert!(d.dist_to_opt(&theta) < e0 * 1e-3);
+    }
+
+    #[test]
+    fn block_views_match_indexing() {
+        let d = small();
+        for blk in 0..8 {
+            let bx = d.block_x(blk);
+            let by = d.block_y(blk);
+            assert_eq!(bx.len(), 5 * 5);
+            assert_eq!(by.len(), 5);
+            for r in 0..5 {
+                assert_eq!(&bx[r * 5..(r + 1) * 5], d.x.row(blk * 5 + r));
+                assert_eq!(by[r], d.y[blk * 5 + r]);
+            }
+        }
+    }
+
+    #[test]
+    fn block_grads_into_reuses_scratch_bitwise() {
+        let d = small();
+        let mut rng = Rng::new(9);
+        let mut g = Mat::zeros(0, 0);
+        for _ in 0..3 {
+            let theta = rng.gaussian_vec(5, 1.0);
+            let want = d.block_grads(&theta);
+            d.block_grads_into(&theta, &mut g); // dirty scratch reused
+            assert_eq!(g.data.len(), want.data.len());
+            for (a, b) in g.data.iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

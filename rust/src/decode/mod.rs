@@ -232,6 +232,15 @@ impl Decoder for OptimalGraphDecoder<'_> {
 // Generic optimal decoder (Eq. 3 via LSQR)
 // ---------------------------------------------------------------------
 
+/// Default [`GenericOptimalDecoder::restart_fraction`]: restart LSQR
+/// cold when more than this fraction of machines flipped straggler
+/// state since the previous decode. Exposed as a named tunable so the
+/// `bench_decode_perf` restart-fraction sweep can set it from
+/// measurements (a Bernoulli(p) mask pair flips ~2p(1-p) of the
+/// machines in expectation, so 0.25 keeps warm starts active through
+/// roughly p <= 0.15 of independent masks and any stagnant model).
+pub const DEFAULT_RESTART_FRACTION: f64 = 0.25;
+
 pub struct GenericOptimalDecoder<'a> {
     pub a: &'a Csc,
     pub atol: f64,
@@ -239,6 +248,8 @@ pub struct GenericOptimalDecoder<'a> {
     /// Warm-start guard: if more than this fraction of machines flipped
     /// straggler state since the previous decode, restart LSQR cold
     /// (the previous w is then a poor and potentially misleading guess).
+    /// Defaults to [`DEFAULT_RESTART_FRACTION`]; negative forces every
+    /// decode cold, >= 1.0 always warm-starts.
     pub restart_fraction: f64,
     scratch: std::cell::RefCell<GenericScratch>,
 }
@@ -262,9 +273,16 @@ impl<'a> GenericOptimalDecoder<'a> {
             a,
             atol: 1e-12,
             max_iter: 4 * (a.rows + a.cols),
-            restart_fraction: 0.25,
+            restart_fraction: DEFAULT_RESTART_FRACTION,
             scratch: std::cell::RefCell::new(GenericScratch::default()),
         }
+    }
+
+    /// Builder-style override of the warm-start restart guard (the
+    /// `bench_decode_perf` tuning sweep's knob).
+    pub fn with_restart_fraction(mut self, fraction: f64) -> Self {
+        self.restart_fraction = fraction;
+        self
     }
 }
 

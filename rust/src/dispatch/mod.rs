@@ -56,6 +56,14 @@ pub struct DispatchConfig {
     /// initial lease size in trials (0 = auto: `trials / (4 * workers)`,
     /// clamped to the chunk grid)
     pub grain: usize,
+    /// shrink lease sizes geometrically as the frontier drains (tail
+    /// latency: the last leases are small, so the sweep never waits on
+    /// one straggler holding a full-grain range). `grain` stays the
+    /// cap, `min_grain` the floor. Bit-neutral: lease boundaries stay
+    /// chunk-aligned and per-trial values are split-invariant.
+    pub adaptive_grain: bool,
+    /// floor for adaptive carves (0 = one engine chunk)
+    pub min_grain: usize,
     /// engine threads inside each worker
     pub threads_per_worker: usize,
     /// a lease older than this is presumed lost: its worker is killed
@@ -85,6 +93,8 @@ impl Default for DispatchConfig {
     fn default() -> Self {
         Self {
             grain: 0,
+            adaptive_grain: false,
+            min_grain: 0,
             threads_per_worker: 1,
             lease_timeout: Duration::from_secs(300),
             max_retries: 3,
@@ -187,7 +197,15 @@ impl Dispatcher {
             0 => (sweep.trials.div_ceil(4 * n)).max(sweep.chunk),
             g => g,
         };
-        let mut queue = WorkQueue::new(sweep.trials, grain, sweep.chunk, self.cfg.max_retries)?;
+        let mut queue = if self.cfg.adaptive_grain {
+            let min = match self.cfg.min_grain {
+                0 => sweep.chunk,
+                m => m,
+            };
+            WorkQueue::new_adaptive(sweep.trials, grain, min, sweep.chunk, self.cfg.max_retries)?
+        } else {
+            WorkQueue::new(sweep.trials, grain, sweep.chunk, self.cfg.max_retries)?
+        };
         std::fs::create_dir_all(&self.cfg.out_dir)
             .map_err(|e| Error::msg(format!("create {}: {e}", self.cfg.out_dir.display())))?;
 
@@ -589,6 +607,38 @@ mod tests {
             "expected a deduped duplicate or a cancelled loser: {}",
             out.report.summary()
         );
+    }
+
+    /// Adaptive grain is pure scheduling: shrinking tail leases must
+    /// leave the merged JSON byte-identical to the single-process run,
+    /// with or without worker faults in the mix.
+    #[test]
+    fn adaptive_grain_matches_single_process_bits() {
+        let c = sweep_cfg(96);
+        let single = shard::run_full(&c, 2).unwrap();
+        // healthy pool
+        let mut t = Scripted::new(vec![WorkerScript::default(); 3]);
+        let dcfg = DispatchConfig {
+            grain: 32,
+            adaptive_grain: true,
+            min_grain: 8,
+            ..fast_dispatch()
+        };
+        let out = Dispatcher::new(dcfg.clone()).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "adaptive healthy merged JSON bytes");
+        // adaptive carving hands out more, smaller leases than the
+        // fixed 96/32 = 3-range split would
+        assert!(out.report.leases_issued > 3, "{}", out.report.summary());
+        // with a faulty worker: failed ranges re-lease whole and the
+        // bits still match
+        let scripts = vec![
+            WorkerScript { fail_first: 2, ..WorkerScript::default() },
+            WorkerScript::default(),
+        ];
+        let mut t = Scripted::new(scripts);
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "adaptive faulted merged JSON bytes");
+        assert!(out.report.retried >= 2, "{}", out.report.summary());
     }
 
     #[test]

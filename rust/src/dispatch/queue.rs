@@ -1,16 +1,24 @@
 //! Lease-based work queue over a trial range.
 //!
-//! [`WorkQueue`] partitions `[0, N)` into contiguous ranges of roughly
+//! [`WorkQueue`] carves `[0, N)` into contiguous ranges of up to
 //! `grain` trials, aligned to the engine's chunk grid (split points are
 //! multiples of `chunk`, so `TrialEngine::run_range_map` never has to
-//! warm-replay a partial leading chunk). Ranges are handed out as
-//! [`Lease`]s with issue timestamps; the dispatcher re-enqueues the
-//! range of a lease whose worker died or exceeded its deadline, with a
-//! bounded per-range retry budget. Completion is tracked as a set of
-//! coalesced done-intervals, which makes duplicate covers (speculative
-//! re-execution) harmless bookkeeping: a range can complete twice, and
-//! leases whose range is already fully covered are reported by
-//! [`WorkQueue::redundant`] so the dispatcher can cancel them.
+//! warm-replay a partial leading chunk). Ranges are carved lazily from
+//! a frontier as workers ask for work; with
+//! [`WorkQueue::new_adaptive`], the carve size **shrinks as the
+//! frontier drains** (geometrically, down to `min_grain`), so the last
+//! leases are small and the sweep's tail is spread across workers
+//! instead of waiting on one straggler holding a full-grain lease.
+//! Ranges are handed out as [`Lease`]s with issue timestamps; the
+//! dispatcher re-enqueues the range of a lease whose worker died or
+//! exceeded its deadline, with a bounded per-range retry budget
+//! (failed ranges are re-leased whole, never re-carved, so the
+//! per-range retry key stays stable). Completion is tracked as a set
+//! of coalesced done-intervals, which makes duplicate covers
+//! (speculative re-execution) harmless bookkeeping: a range can
+//! complete twice, and leases whose range is already fully covered are
+//! reported by [`WorkQueue::redundant`] so the dispatcher can cancel
+//! them.
 
 use crate::error::{Error, Result};
 use std::collections::{BTreeMap, VecDeque};
@@ -34,12 +42,39 @@ pub struct Lease {
     pub speculative: bool,
 }
 
-/// Elastic range queue: pending ranges, outstanding leases, coalesced
+/// How lease sizes are carved from the frontier. Fresh leases shrink
+/// toward the tail under `Adaptive`; re-enqueued (failed) ranges are
+/// always handed out whole regardless of policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum GrainPolicy {
+    /// every carve is exactly `grain` (the last is ragged)
+    Fixed,
+    /// carve `clamp(remaining / ADAPTIVE_SHRINK, min_grain, grain)`,
+    /// chunk-rounded: full-grain leases while the frontier is deep,
+    /// geometrically shrinking ones (tail-latency) as it drains
+    Adaptive { min_grain: usize },
+}
+
+/// Adaptive carves target this many remaining leases' worth of frontier
+/// (~4 outstanding tails keeps every worker busy through the drain
+/// without collapsing to per-chunk dispatch overhead too early).
+const ADAPTIVE_SHRINK: usize = 4;
+
+/// Elastic range queue: an un-leased frontier (carved on demand),
+/// failed ranges awaiting re-lease, outstanding leases, coalesced
 /// done-intervals and per-range retry counts.
 #[derive(Debug)]
 pub struct WorkQueue {
     trials: usize,
-    pending: VecDeque<(usize, usize)>,
+    chunk: usize,
+    /// max carve size, rounded up to the chunk grid
+    grain: usize,
+    policy: GrainPolicy,
+    /// first never-leased trial: fresh leases carve `[frontier, ...)`
+    frontier: usize,
+    /// failed ranges awaiting re-lease (whole, so the retry key below
+    /// stays stable)
+    requeued: VecDeque<(usize, usize)>,
     active: BTreeMap<LeaseId, Lease>,
     /// sorted, disjoint, coalesced completed intervals
     done: Vec<(usize, usize)>,
@@ -51,9 +86,39 @@ pub struct WorkQueue {
 }
 
 impl WorkQueue {
-    /// Partition `[0, trials)` into lease-able ranges of `grain` trials
-    /// rounded up to a multiple of `chunk` (the last range is ragged).
+    /// Fixed-grain queue: `[0, trials)` is carved into ranges of
+    /// `grain` trials rounded up to a multiple of `chunk` (the last
+    /// range is ragged).
     pub fn new(trials: usize, grain: usize, chunk: usize, max_retries: usize) -> Result<Self> {
+        Self::with_policy(trials, grain, chunk, max_retries, GrainPolicy::Fixed)
+    }
+
+    /// Adaptive-grain queue: carve sizes start at `grain` and shrink
+    /// geometrically toward `min_grain` (chunk-rounded) as the frontier
+    /// drains, cutting the tail latency of the final leases. The merged
+    /// sweep bits are unaffected — lease boundaries stay on the chunk
+    /// grid, and per-trial values are split-invariant.
+    pub fn new_adaptive(
+        trials: usize,
+        grain: usize,
+        min_grain: usize,
+        chunk: usize,
+        max_retries: usize,
+    ) -> Result<Self> {
+        if min_grain == 0 {
+            return Err(Error::msg("work queue min grain must be >= 1"));
+        }
+        let min_grain = min_grain.min(trials.max(1)).div_ceil(chunk.max(1)) * chunk.max(1);
+        Self::with_policy(trials, grain, chunk, max_retries, GrainPolicy::Adaptive { min_grain })
+    }
+
+    fn with_policy(
+        trials: usize,
+        grain: usize,
+        chunk: usize,
+        max_retries: usize,
+        policy: GrainPolicy,
+    ) -> Result<Self> {
         if trials == 0 {
             return Err(Error::msg("work queue needs at least one trial"));
         }
@@ -64,16 +129,19 @@ impl WorkQueue {
         // the sweep is just "one lease", and the clamp keeps the
         // round-up multiply from overflowing on absurd inputs
         let grain = grain.min(trials).div_ceil(chunk) * chunk;
-        let mut pending = VecDeque::new();
-        let mut lo = 0usize;
-        while lo < trials {
-            let hi = (lo + grain).min(trials);
-            pending.push_back((lo, hi));
-            lo = hi;
-        }
+        let policy = match policy {
+            GrainPolicy::Adaptive { min_grain } => {
+                GrainPolicy::Adaptive { min_grain: min_grain.min(grain) }
+            }
+            GrainPolicy::Fixed => GrainPolicy::Fixed,
+        };
         Ok(Self {
             trials,
-            pending,
+            chunk,
+            grain,
+            policy,
+            frontier: 0,
+            requeued: VecDeque::new(),
             active: BTreeMap::new(),
             done: Vec::new(),
             retries: BTreeMap::new(),
@@ -86,17 +154,44 @@ impl WorkQueue {
         self.trials
     }
 
+    /// Lease-able ranges left: re-enqueued failures plus the frontier
+    /// at the current carve size (an estimate under the adaptive
+    /// policy, where later carves may be smaller).
     pub fn pending_ranges(&self) -> usize {
-        self.pending.len()
+        let rem = self.trials - self.frontier;
+        self.requeued.len() + if rem == 0 { 0 } else { rem.div_ceil(self.next_carve().max(1)) }
     }
 
     pub fn active_leases(&self) -> usize {
         self.active.len()
     }
 
-    /// Claim the next pending range for `worker`.
+    /// Size of the next fresh carve from the frontier.
+    fn next_carve(&self) -> usize {
+        let remaining = self.trials - self.frontier;
+        let size = match self.policy {
+            GrainPolicy::Fixed => self.grain,
+            GrainPolicy::Adaptive { min_grain } => {
+                let target = remaining.div_ceil(ADAPTIVE_SHRINK).div_ceil(self.chunk) * self.chunk;
+                target.clamp(min_grain, self.grain)
+            }
+        };
+        size.min(remaining)
+    }
+
+    /// Claim the next pending range for `worker`: a failed range
+    /// awaiting re-lease first (whole, retry-key stability), else a
+    /// fresh carve from the frontier.
     pub fn lease(&mut self, worker: WorkerId) -> Option<Lease> {
-        let (lo, hi) = self.pending.pop_front()?;
+        if let Some((lo, hi)) = self.requeued.pop_front() {
+            return Some(self.issue(lo, hi, worker, false));
+        }
+        if self.frontier >= self.trials {
+            return None;
+        }
+        let lo = self.frontier;
+        let hi = lo + self.next_carve();
+        self.frontier = hi;
         Some(self.issue(lo, hi, worker, false))
     }
 
@@ -106,7 +201,7 @@ impl WorkQueue {
     /// duplicate covers before the merge). At most one duplicate per
     /// range is issued.
     pub fn speculative_lease(&mut self, worker: WorkerId) -> Option<Lease> {
-        if !self.pending.is_empty() {
+        if !self.requeued.is_empty() || self.frontier < self.trials {
             return None;
         }
         let candidate = self
@@ -170,7 +265,7 @@ impl WorkQueue {
                 lease.lo, lease.hi, *tries, self.max_retries
             )));
         }
-        self.pending.push_back((lease.lo, lease.hi));
+        self.requeued.push_back((lease.lo, lease.hi));
         Ok((lease, true))
     }
 
@@ -329,6 +424,56 @@ mod tests {
         assert!(q.expired(Duration::from_secs(60)).is_empty());
         std::thread::sleep(Duration::from_millis(5));
         assert_eq!(q.expired(Duration::ZERO), vec![l.id]);
+    }
+
+    #[test]
+    fn adaptive_grain_shrinks_toward_the_tail() {
+        // 256 trials, grain 64, min 8, chunk 8: early carves are
+        // full-grain, later ones shrink geometrically to the floor
+        let mut q = WorkQueue::new_adaptive(256, 64, 8, 8, 3).unwrap();
+        let mut sizes = Vec::new();
+        let mut lo = 0usize;
+        while let Some(l) = q.lease(0) {
+            assert_eq!(l.lo, lo, "carves stay contiguous");
+            assert!(l.lo % 8 == 0, "chunk-aligned start");
+            assert!(l.hi == 256 || l.hi % 8 == 0, "chunk-aligned end");
+            sizes.push(l.hi - l.lo);
+            lo = l.hi;
+        }
+        assert_eq!(lo, 256, "carves cover the sweep");
+        assert_eq!(sizes[0], 64, "deep frontier carves at full grain");
+        assert!(sizes.last().unwrap() <= &8, "tail carve at the floor: {sizes:?}");
+        // monotone non-increasing carve sizes
+        assert!(sizes.windows(2).all(|w| w[0] >= w[1]), "{sizes:?}");
+        // strictly more ranges than fixed-grain would produce
+        assert!(sizes.len() > 256 / 64, "{sizes:?}");
+    }
+
+    #[test]
+    fn adaptive_failed_ranges_release_whole() {
+        let mut q = WorkQueue::new_adaptive(256, 32, 8, 8, 2).unwrap();
+        let a = q.lease(0).unwrap(); // [0, 32): deep frontier, full grain
+        let (lease, requeued) = q.fail(a.id).unwrap();
+        assert!(requeued);
+        // the re-lease hands back the exact failed bounds even though a
+        // fresh carve at this frontier depth would be smaller — the
+        // retry budget stays keyed to stable bounds
+        let b = q.lease(1).unwrap();
+        assert_eq!((b.lo, b.hi), (lease.lo, lease.hi));
+        let (_, requeued) = q.fail(b.id).unwrap();
+        assert!(requeued);
+        let c = q.lease(0).unwrap();
+        let err = q.fail(c.id).unwrap_err();
+        assert!(format!("{err}").contains("giving up"), "{err}");
+    }
+
+    #[test]
+    fn adaptive_validates_min_grain() {
+        assert!(WorkQueue::new_adaptive(64, 32, 0, 8, 3).is_err());
+        // min above grain clamps rather than erroring
+        let mut q = WorkQueue::new_adaptive(64, 16, 1000, 8, 3).unwrap();
+        let l = q.lease(0).unwrap();
+        assert!(l.hi - l.lo <= 16);
     }
 
     #[test]

@@ -10,11 +10,14 @@
 
 pub mod analysis;
 pub mod bounds;
+pub mod gram;
 pub mod grid;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use crate::decode::Decoder;
+pub use gram::GramCache;
+
+use crate::decode::{Decoder, Decoding};
 use crate::linalg::Mat;
 use crate::straggler::StragglerModel;
 
@@ -23,8 +26,18 @@ pub trait GradSource {
     fn n_blocks(&self) -> usize;
     /// parameter dimension
     fn dim(&self) -> usize;
-    /// G (n_blocks x dim) at theta
-    fn block_grads(&mut self, theta: &[f64]) -> Mat;
+    /// Write G (n_blocks x dim) at theta into `out` (reset to shape —
+    /// a warm buffer is reused). Implementations must not allocate per
+    /// call beyond growing `out` on first use: this is the GD loop's
+    /// per-iteration path.
+    fn block_grads_into(&mut self, theta: &[f64], out: &mut Mat);
+    /// Allocating convenience wrapper around
+    /// [`GradSource::block_grads_into`].
+    fn block_grads(&mut self, theta: &[f64]) -> Mat {
+        let mut out = Mat::zeros(self.n_blocks(), self.dim());
+        self.block_grads_into(theta, &mut out);
+        out
+    }
     /// progress metric: |theta - theta*|^2 for least squares, loss for
     /// models without a closed-form optimum
     fn progress(&mut self, theta: &[f64]) -> f64;
@@ -37,8 +50,8 @@ impl GradSource for &crate::data::LstsqData {
     fn dim(&self) -> usize {
         self.k
     }
-    fn block_grads(&mut self, theta: &[f64]) -> Mat {
-        crate::data::LstsqData::block_grads(self, theta)
+    fn block_grads_into(&mut self, theta: &[f64], out: &mut Mat) {
+        crate::data::LstsqData::block_grads_into(self, theta, out)
     }
     fn progress(&mut self, theta: &[f64]) -> f64 {
         self.dist_to_opt(theta)
@@ -103,25 +116,70 @@ pub struct SimulatedGcod<'a> {
     pub alpha_scale: f64,
 }
 
+/// Reusable buffers for [`SimulatedGcod::run_with`]: the straggler
+/// mask, the decoded coefficients, the gradient matrix and the iterate.
+/// After the first iteration on a given problem shape, the GD loop
+/// performs **zero heap allocations per iteration** — and a warm
+/// scratch carried across trials (e.g. the sweep engine's chunk-scoped
+/// context) skips even the first-iteration growth. Scratch contents are
+/// fully overwritten each run, so reuse never changes results.
+pub struct GdScratch {
+    mask: Vec<bool>,
+    dec: Decoding,
+    g: Mat,
+    theta: Vec<f64>,
+}
+
+impl GdScratch {
+    pub fn new() -> Self {
+        Self { mask: Vec::new(), dec: Decoding::empty(), g: Mat::zeros(0, 0), theta: Vec::new() }
+    }
+}
+
+impl Default for GdScratch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl SimulatedGcod<'_> {
     /// Run `iters` steps from `theta0`, recording progress every
-    /// iteration.
+    /// iteration. Allocating wrapper around [`SimulatedGcod::run_with`]
+    /// (fresh scratch per call) — results are identical.
     pub fn run<S: GradSource>(&mut self, src: &mut S, theta0: &[f64], iters: usize) -> RunHistory {
+        let mut scratch = GdScratch::new();
+        self.run_with(src, theta0, iters, &mut scratch)
+    }
+
+    /// [`SimulatedGcod::run`] on caller-owned scratch: after setup (the
+    /// history vectors, sized once up front) the iteration loop is
+    /// allocation-free — decode, mask sampling and gradients all write
+    /// into `scratch`, and the sweep engine reuses one scratch across
+    /// every trial of a chunk.
+    pub fn run_with<S: GradSource>(
+        &mut self,
+        src: &mut S,
+        theta0: &[f64],
+        iters: usize,
+        scratch: &mut GdScratch,
+    ) -> RunHistory {
         let n = src.n_blocks();
         let dim = src.dim();
         assert_eq!(theta0.len(), dim);
         if let Some(rho) = &self.rho {
             assert_eq!(rho.len(), n);
         }
-        let mut theta = theta0.to_vec();
+        let GdScratch { mask, dec, g, theta } = scratch;
+        theta.clear();
+        theta.extend_from_slice(theta0);
         let mut progress = Vec::with_capacity(iters + 1);
         let mut decode_errors = Vec::with_capacity(iters);
-        progress.push(src.progress(&theta));
+        progress.push(src.progress(theta));
         for t in 0..iters {
-            let mask = self.stragglers.sample(self.m);
-            let dec = self.decoder.decode(&mask);
+            self.stragglers.sample_into(self.m, mask);
+            self.decoder.decode_into(mask, dec);
             decode_errors.push(dec.error_sq());
-            let g = src.block_grads(&theta);
+            src.block_grads_into(theta, g);
             let gamma = self.step.at(t);
             // theta -= gamma * sum_i alpha_{rho(i)} * G_i
             for i in 0..n {
@@ -130,10 +188,10 @@ impl SimulatedGcod<'_> {
                     None => dec.alpha[i],
                 } * self.alpha_scale;
                 if a != 0.0 {
-                    crate::linalg::axpy(-gamma * a, g.row(i), &mut theta);
+                    crate::linalg::axpy(-gamma * a, g.row(i), theta);
                 }
             }
-            progress.push(src.progress(&theta));
+            progress.push(src.progress(theta));
         }
         RunHistory { progress, decode_errors }
     }
@@ -242,6 +300,51 @@ mod tests {
             opt_sum / 5.0,
             fix_sum / 5.0
         );
+    }
+
+    #[test]
+    fn run_with_reused_scratch_is_bit_identical() {
+        let (data, code) = setup();
+        let dec = OptimalGraphDecoder::new(&code.graph);
+        let run = |scratch: &mut GdScratch| {
+            let mut strag = BernoulliStragglers::new(0.2, 5);
+            let mut engine = SimulatedGcod {
+                decoder: &dec,
+                stragglers: &mut strag,
+                step: StepSize::Const(0.04),
+                rho: None,
+                m: code.n_machines(),
+                alpha_scale: 1.0,
+            };
+            let mut src = &data;
+            engine.run_with(&mut src, &vec![0.0; 8], 40, scratch)
+        };
+        let fresh = run(&mut GdScratch::new());
+        let mut warm = GdScratch::new();
+        let _ = run(&mut warm); // dirty every buffer
+        let reused = run(&mut warm);
+        assert_eq!(fresh.progress.len(), reused.progress.len());
+        for (a, b) in fresh.progress.iter().zip(&reused.progress) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in fresh.decode_errors.iter().zip(&reused.decode_errors) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and run() (fresh scratch wrapper) agrees bit-for-bit
+        let via_run = {
+            let mut strag = BernoulliStragglers::new(0.2, 5);
+            let mut engine = SimulatedGcod {
+                decoder: &dec,
+                stragglers: &mut strag,
+                step: StepSize::Const(0.04),
+                rho: None,
+                m: code.n_machines(),
+                alpha_scale: 1.0,
+            };
+            let mut src = &data;
+            engine.run(&mut src, &vec![0.0; 8], 40)
+        };
+        assert_eq!(via_run.final_progress().to_bits(), fresh.final_progress().to_bits());
     }
 
     #[test]

@@ -56,6 +56,14 @@
 //!    [`sweep::shard`] layer extends the same contract across process
 //!    boundaries: any contiguous split of a trial range, run anywhere,
 //!    merges back to the single-process bits.
+//! 4. **Gram-cached, allocation-free GD.** The simulated-GD loop
+//!    ([`gd::SimulatedGcod::run_with`]) runs on blocked `*_into`
+//!    kernels ([`linalg::gemv_slice_into`], [`linalg::syrk_into`]) and
+//!    a reusable [`gd::GdScratch`] — zero heap allocations per
+//!    iteration — and [`gd::GramCache`] precomputes per-block
+//!    `(XᵀX, Xᵀy)` so each iteration costs n d×d gemvs instead of a
+//!    full data pass when blocks are tall (`grad=auto` in the
+//!    `gd-final` sweep picks the winning kernel per config).
 
 pub mod bench_util;
 pub mod cli;

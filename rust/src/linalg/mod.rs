@@ -4,7 +4,25 @@
 //! analysis and the GD engines need. Heavy compute on the request path
 //! goes through the PJRT artifacts (runtime/); this module exists for
 //! the coordinator-side math the paper does on the parameter server —
-//! covariance spectral norms, exact least-squares references, bounds.
+//! covariance spectral norms, exact least-squares references, bounds —
+//! and for the simulated-GD hot loop, which runs entirely on the
+//! CPU kernels below.
+//!
+//! ## Kernel contract ( §Perf)
+//!
+//! The GD hot path ([`crate::gd::SimulatedGcod::run_with`]) is built on
+//! the `*_into` variants here — [`matvec_into`], [`matvec_t_into`],
+//! [`gemv_into`]/[`gemv_slice_into`] and the [`syrk_into`] Gram kernel
+//! — all of which write caller-owned buffers and allocate nothing.
+//! [`matvec_into`]/[`matvec_t_into`] keep the exact accumulation order
+//! of the legacy allocating wrappers (which now delegate to them), so
+//! swapping a call site to the `_into` form never changes bits.
+//! [`gemv_slice_into`] and [`syrk_into`] are the cache-blocked fast
+//! path: their inner loops run 4-wide independent accumulators over
+//! `chunks_exact(4)` so LLVM autovectorizes the reduction (see
+//! [`dot_unrolled`]); they are used by the Gram-cached gradient path
+//! ([`crate::gd::GramCache`]), whose outputs are compared against the
+//! streaming kernels by tolerance, not bits.
 
 pub mod chol;
 pub mod power;
@@ -23,6 +41,16 @@ pub struct Mat {
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Resize to (rows, cols) and zero-fill. Keeps capacity, so
+    /// repeated resets on the same shape never reallocate (the scratch
+    /// idiom [`crate::decode::Decoding::reset`] uses).
+    pub fn reset(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
     }
 
     pub fn from_rows(rows: Vec<Vec<f64>>) -> Self {
@@ -54,41 +82,25 @@ impl Mat {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
-    /// y = A x
+    /// y = A x (allocating wrapper around [`matvec_into`])
     pub fn mul_vec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.cols);
-        (0..self.rows).map(|i| dot(self.row(i), x)).collect()
-    }
-
-    /// y = A^T x
-    pub fn t_mul_vec(&self, x: &[f64]) -> Vec<f64> {
-        assert_eq!(x.len(), self.rows);
-        let mut y = vec![0.0; self.cols];
-        for i in 0..self.rows {
-            let xi = x[i];
-            if xi != 0.0 {
-                axpy(xi, self.row(i), &mut y);
-            }
-        }
+        let mut y = vec![0.0; self.rows];
+        matvec_into(self, x, &mut y);
         y
     }
 
-    /// C = A^T A (Gram matrix), symmetric (cols x cols).
+    /// y = A^T x (allocating wrapper around [`matvec_t_into`])
+    pub fn t_mul_vec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = vec![0.0; self.cols];
+        matvec_t_into(self, x, &mut y);
+        y
+    }
+
+    /// C = A^T A (Gram matrix), symmetric (cols x cols). Allocating
+    /// wrapper around the [`syrk_into`] kernel.
     pub fn gram(&self) -> Mat {
-        let k = self.cols;
-        let mut g = Mat::zeros(k, k);
-        for i in 0..self.rows {
-            let r = self.row(i);
-            for a in 0..k {
-                let ra = r[a];
-                if ra != 0.0 {
-                    let grow = g.row_mut(a);
-                    for b in 0..k {
-                        grow[b] += ra * r[b];
-                    }
-                }
-            }
-        }
+        let mut g = Mat::zeros(self.cols, self.cols);
+        syrk_into(&self.data, self.cols, &mut g);
         g
     }
 
@@ -147,6 +159,125 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
 pub fn scale(alpha: f64, x: &mut [f64]) {
     for v in x.iter_mut() {
         *v *= alpha;
+    }
+}
+
+/// Dot product over four independent accumulators (`chunks_exact(4)`
+/// unrolling, so LLVM autovectorizes the reduction). NOTE: the
+/// accumulation order differs from [`dot`] — use this in the blocked
+/// fast-path kernels ([`gemv_slice_into`], [`syrk_into`]), not as a
+/// drop-in for call sites whose bits are pinned.
+#[inline]
+pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f64; 4];
+    let ca = a.chunks_exact(4);
+    let cb = b.chunks_exact(4);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (xa, xb) in ra.iter().zip(rb) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// y = A x, allocation-free. Same accumulation order as
+/// [`Mat::mul_vec`] (which delegates here), so results are
+/// bit-identical to the allocating path.
+pub fn matvec_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.cols);
+    assert_eq!(y.len(), a.rows);
+    for (i, yi) in y.iter_mut().enumerate() {
+        *yi = dot(a.row(i), x);
+    }
+}
+
+/// y = A^T x, allocation-free. Same accumulation order as
+/// [`Mat::t_mul_vec`] (which delegates here).
+pub fn matvec_t_into(a: &Mat, x: &[f64], y: &mut [f64]) {
+    assert_eq!(x.len(), a.rows);
+    assert_eq!(y.len(), a.cols);
+    y.fill(0.0);
+    for i in 0..a.rows {
+        let xi = x[i];
+        if xi != 0.0 {
+            axpy(xi, a.row(i), y);
+        }
+    }
+}
+
+/// y = alpha * A x + beta * y (row-major dgemv) on the unrolled dot
+/// kernel. `beta == 0.0` overwrites (BLAS semantics: stale `y`
+/// contents, including NaN, never propagate).
+pub fn gemv_into(alpha: f64, a: &Mat, x: &[f64], beta: f64, y: &mut [f64]) {
+    assert_eq!(y.len(), a.rows);
+    gemv_slice_into(alpha, &a.data, a.cols, x, beta, y);
+}
+
+/// [`gemv_into`] over a packed row-major slice of `y.len()` rows by
+/// `cols` columns — block views into a larger buffer (the per-block
+/// Gram matrices of [`crate::gd::GramCache`]) avoid a copy into a
+/// temporary [`Mat`].
+pub fn gemv_slice_into(alpha: f64, a: &[f64], cols: usize, x: &[f64], beta: f64, y: &mut [f64]) {
+    assert_eq!(a.len(), y.len() * cols);
+    assert_eq!(x.len(), cols);
+    if cols == 0 {
+        for yi in y.iter_mut() {
+            *yi = if beta == 0.0 { 0.0 } else { beta * *yi };
+        }
+        return;
+    }
+    for (yi, row) in y.iter_mut().zip(a.chunks_exact(cols)) {
+        let s = alpha * dot_unrolled(row, x);
+        *yi = if beta == 0.0 { s } else { s + beta * *yi };
+    }
+}
+
+/// G = A^T A for a packed row-major slice of `a.len() / cols` rows —
+/// the SYRK kernel behind [`Mat::gram`] and the per-block Gram caches.
+/// Accumulates the upper triangle by rank-1 row updates whose inner
+/// loop is 4-wide unrolled via `chunks_exact` (independent elementwise
+/// FMAs, so unrolling does not change the per-entry accumulation
+/// order), then mirrors. `g` is reset to (cols x cols) and overwritten.
+pub fn syrk_into(a: &[f64], cols: usize, g: &mut Mat) {
+    assert!(cols == 0 || a.len() % cols == 0, "packed slice is not a whole number of rows");
+    g.reset(cols, cols);
+    if cols == 0 {
+        return;
+    }
+    for r in a.chunks_exact(cols) {
+        for j in 0..cols {
+            let rj = r[j];
+            if rj != 0.0 {
+                // g[j][j..] += rj * r[j..]
+                let grow = &mut g.data[j * cols + j..(j + 1) * cols];
+                let src = &r[j..];
+                let gc = grow.chunks_exact_mut(4);
+                let sc = src.chunks_exact(4);
+                let tail = gc.len() * 4;
+                for (gd, sd) in gc.zip(sc) {
+                    gd[0] += rj * sd[0];
+                    gd[1] += rj * sd[1];
+                    gd[2] += rj * sd[2];
+                    gd[3] += rj * sd[3];
+                }
+                for (gd, sd) in grow[tail..].iter_mut().zip(&src[tail..]) {
+                    *gd += rj * sd;
+                }
+            }
+        }
+    }
+    // mirror the strict upper triangle
+    for i in 0..cols {
+        for j in i + 1..cols {
+            g.data[j * cols + i] = g.data[i * cols + j];
+        }
     }
 }
 
@@ -216,5 +347,94 @@ mod tests {
         let i = Mat::eye(4);
         let x = vec![1.0, 2.0, 3.0, 4.0];
         assert_eq!(i.mul_vec(&x), x);
+    }
+
+    #[test]
+    fn into_kernels_match_allocating_paths_bitwise() {
+        let mut rng = crate::prng::Rng::new(7);
+        for (r, c) in [(1usize, 1usize), (3, 5), (8, 8), (17, 6), (5, 19)] {
+            let a = Mat { rows: r, cols: c, data: rng.gaussian_vec(r * c, 1.0) };
+            let x = rng.gaussian_vec(c, 1.0);
+            let xt = rng.gaussian_vec(r, 1.0);
+            let mut y = vec![f64::NAN; r];
+            matvec_into(&a, &x, &mut y);
+            for (u, v) in y.iter().zip(a.mul_vec(&x)) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+            let mut yt = vec![f64::NAN; c];
+            matvec_t_into(&a, &xt, &mut yt);
+            for (u, v) in yt.iter().zip(a.t_mul_vec(&xt)) {
+                assert_eq!(u.to_bits(), v.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn dot_unrolled_matches_dot_to_tolerance() {
+        let mut rng = crate::prng::Rng::new(3);
+        for n in [0usize, 1, 3, 4, 7, 8, 33, 100] {
+            let a = rng.gaussian_vec(n, 1.0);
+            let b = rng.gaussian_vec(n, 1.0);
+            let (s, u) = (dot(&a, &b), dot_unrolled(&a, &b));
+            assert!((s - u).abs() <= 1e-12 * (1.0 + s.abs()), "n={n}: {s} vs {u}");
+        }
+    }
+
+    #[test]
+    fn gemv_semantics_and_beta_zero_overwrites() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]]);
+        let x = vec![1.0, -1.0];
+        // beta = 0 overwrites even NaN-poisoned output
+        let mut y = vec![f64::NAN; 3];
+        gemv_into(2.0, &a, &x, 0.0, &mut y);
+        assert_eq!(y, vec![-2.0, -2.0, -2.0]);
+        // beta != 0 blends
+        gemv_into(1.0, &a, &x, 0.5, &mut y);
+        assert_eq!(y, vec![-2.0, -2.0, -2.0]);
+        // zero-width matrix scales y only
+        let e = Mat::zeros(2, 0);
+        let mut z = vec![3.0, f64::NAN];
+        gemv_slice_into(1.0, &e.data, 0, &[], 0.0, &mut z);
+        assert_eq!(z, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn syrk_matches_transpose_product() {
+        let mut rng = crate::prng::Rng::new(11);
+        for (r, c) in [(1usize, 1usize), (6, 4), (9, 7), (4, 12)] {
+            let a = Mat { rows: r, cols: c, data: rng.gaussian_vec(r * c, 1.0) };
+            let g = a.gram();
+            let want = {
+                let t = a.transpose();
+                let mut w = Mat::zeros(c, c);
+                for i in 0..c {
+                    for j in 0..c {
+                        w[(i, j)] = dot(t.row(i), t.row(j));
+                    }
+                }
+                w
+            };
+            for i in 0..c {
+                for j in 0..c {
+                    let (x, y) = (g[(i, j)], want[(i, j)]);
+                    assert!((x - y).abs() <= 1e-10 * (1.0 + y.abs()), "({i},{j}): {x} vs {y}");
+                    // symmetry is exact by construction
+                    assert_eq!(g[(i, j)].to_bits(), g[(j, i)].to_bits());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mat_reset_keeps_capacity() {
+        let mut m = Mat::zeros(4, 4);
+        m.data[5] = 7.0;
+        m.reset(2, 3);
+        assert_eq!((m.rows, m.cols), (2, 3));
+        assert!(m.data.iter().all(|&v| v == 0.0));
+        // shrinking keeps the old capacity: growing back is alloc-free
+        assert!(m.data.capacity() >= 16);
+        m.reset(4, 4);
+        assert!(m.data.iter().all(|&v| v == 0.0));
     }
 }

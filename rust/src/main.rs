@@ -127,6 +127,11 @@ fn app() -> App {
                         "initial lease size in trials (0 = auto, chunk-aligned)",
                         Some("0"),
                     ),
+                    switch(
+                        "adaptive-grain",
+                        "shrink lease sizes as the queue drains (tail latency; bit-neutral)",
+                    ),
+                    flag("min-grain", "adaptive carve floor in trials (0 = one chunk)", Some("0")),
                     flag("threads", "engine threads per worker", Some("1")),
                     flag("lease-timeout-ms", "presume a lease lost after this long", Some("30000")),
                     flag("max-retries", "re-enqueues per range before failing", Some("3")),
@@ -428,6 +433,8 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
     let out_dir = std::env::temp_dir().join(format!("gcod_launch_{}", std::process::id()));
     let mut dcfg = DispatchConfig {
         grain: inv.usize_or("grain", 0),
+        adaptive_grain: inv.switch("adaptive-grain"),
+        min_grain: inv.usize_or("min-grain", 0),
         threads_per_worker: inv.usize_or("threads", 1),
         lease_timeout: Duration::from_millis(inv.u64_or("lease-timeout-ms", 30_000)),
         max_retries: inv.usize_or("max-retries", 3),

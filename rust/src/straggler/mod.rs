@@ -9,6 +9,14 @@ use crate::prng::Rng;
 
 pub trait StragglerModel {
     fn sample(&mut self, m: usize) -> Vec<bool>;
+
+    /// Allocation-free [`StragglerModel::sample`]: refill a caller-owned
+    /// mask (the GD hot loop's per-iteration path). Implementations must
+    /// be draw-for-draw identical to `sample`; the default allocates.
+    fn sample_into(&mut self, m: usize, mask: &mut Vec<bool>) {
+        *mask = self.sample(m);
+    }
+
     fn name(&self) -> String;
 }
 
@@ -28,6 +36,9 @@ impl BernoulliStragglers {
 impl StragglerModel for BernoulliStragglers {
     fn sample(&mut self, m: usize) -> Vec<bool> {
         self.rng.bernoulli_mask(m, self.p)
+    }
+    fn sample_into(&mut self, m: usize, mask: &mut Vec<bool>) {
+        self.rng.bernoulli_mask_into(m, self.p, mask);
     }
     fn name(&self) -> String {
         format!("bernoulli(p={})", self.p)
@@ -79,8 +90,9 @@ impl StagnantStragglers {
     }
 }
 
-impl StragglerModel for StagnantStragglers {
-    fn sample(&mut self, m: usize) -> Vec<bool> {
+impl StagnantStragglers {
+    /// Advance the sticky state one round (shared by both sample paths).
+    fn advance(&mut self, m: usize) {
         if self.current.len() != m {
             self.current = self.rng.bernoulli_mask(m, self.p);
         } else {
@@ -90,7 +102,18 @@ impl StragglerModel for StagnantStragglers {
                 }
             }
         }
+    }
+}
+
+impl StragglerModel for StagnantStragglers {
+    fn sample(&mut self, m: usize) -> Vec<bool> {
+        self.advance(m);
         self.current.clone()
+    }
+    fn sample_into(&mut self, m: usize, mask: &mut Vec<bool>) {
+        self.advance(m);
+        mask.clear();
+        mask.extend_from_slice(&self.current);
     }
     fn name(&self) -> String {
         format!("stagnant(p={},churn={})", self.p, self.churn)

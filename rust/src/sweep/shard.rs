@@ -57,7 +57,7 @@ use crate::codes::zoo::{build, make_decoder, BuiltScheme, DecoderSpec, SchemeSpe
 use crate::config::json::Json;
 use crate::data::LstsqData;
 use crate::error::{Error, Result};
-use crate::gd::{SimulatedGcod, StepSize};
+use crate::gd::{GramCache, SimulatedGcod, StepSize};
 use crate::metrics::Stats;
 use crate::prng::Rng;
 use crate::straggler::{greedy_decode_attack_trace, BernoulliStragglers};
@@ -69,8 +69,12 @@ use std::path::Path;
 /// Version stamped into every shard/merged manifest. [`merge`] (and so
 /// `gcod sweep-merge`) rejects manifests written by a different schema.
 /// Schema 2 added the `stats_only` flag (schema-1 manifests, which
-/// predate it, are rejected rather than guessed at).
-pub const SHARD_SCHEMA: u64 = 2;
+/// predate it, are rejected rather than guessed at). Schema 3 changed
+/// `gd-final` per-trial values for identical configs (Gram-cached
+/// gradient kernel with `grad` auto-selection, chunk-scoped
+/// warm-started decoder state), so schema-2 manifests must not be
+/// mixed into post-PR4 merges.
+pub const SHARD_SCHEMA: u64 = 3;
 
 /// `"kind"` of a per-shard manifest.
 pub const SHARD_KIND: &str = "gcod-sweep-shard";
@@ -177,7 +181,11 @@ pub enum SweepKind {
     /// Figure-4/5-style simulated coded GD: trial `t` runs one full
     /// deterministic trajectory (straggler seed, block permutation and
     /// step grid from substream `t`) and records the final
-    /// |theta - theta*|^2.
+    /// |theta - theta*|^2. The gradient kernel is selected by the
+    /// `grad` param (`gram` | `streaming` | default `auto`, which
+    /// applies the [`crate::gd::GramCache::pays_off`] flop cut); the
+    /// decoder and GD scratch are chunk-scoped, so `chunk` re-seats
+    /// warm-start state exactly like the decode-error sweep.
     GdFinal,
     /// Greedy adversarial curve: trial `t` records the per-block error
     /// after `t + 1` greedily-chosen stragglers (the trial axis is the
@@ -661,6 +669,15 @@ pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Res
              worker-thread cluster)",
         ));
     }
+    // `grad` is an enum-valued selector like `sweep`/`decoder`: reject
+    // unknown values instead of silently falling through to auto
+    if let Some(g) = cfg.params.get("grad") {
+        if !matches!(g.as_str(), "auto" | "gram" | "streaming") {
+            return Err(Error::msg(format!(
+                "unknown grad kernel '{g}' (auto|gram|streaming)"
+            )));
+        }
+    }
     let spec = SchemeSpec::parse(&cfg.scheme).map_err(Error::msg)?;
     let dspec = DecoderSpec::parse(&cfg.decoder).map_err(Error::msg)?;
     // every shard rebuilds the identical scheme from the salted seed
@@ -695,6 +712,18 @@ pub fn run_full(cfg: &SweepConfig, threads: usize) -> Result<MergedSweep> {
     merge(vec![run_range(cfg, threads, 0, cfg.trials)?])
 }
 
+/// Per-chunk mutable state for the `gd-final` sweep: the decoder (its
+/// scratch and warm-start state carry across the chunk's trials and are
+/// replayed at partial leading chunks, like every other chunk-scoped
+/// sweep) plus the GD scratch and the zero start vector. The Gram/data
+/// sources stay outside: they are immutable pure functions of the
+/// config, so sharing one build across chunks cannot affect bits.
+struct GdChunkCtx<'a> {
+    dec: Box<dyn crate::decode::Decoder + 'a>,
+    scratch: crate::gd::GdScratch,
+    theta0: Vec<f64>,
+}
+
 fn gd_final_values(
     cfg: &SweepConfig,
     scheme: &BuiltScheme,
@@ -723,20 +752,32 @@ fn gd_final_values(
         sigma,
         &mut Rng::new(cfg.seed ^ DATA_SALT),
     );
-    // the per-chunk context is stateless (every trial is self-contained),
-    // so trial values are provably independent of the chunk grid — run
-    // with chunk 1 to avoid replaying full GD trajectories below `lo`;
-    // the manifest still records cfg.chunk as part of the identity
-    let engine = engine.clone().with_chunk(1);
+    // gradient source: `grad` param = gram | streaming | auto (default).
+    // Auto applies the k <= b flop cut (see GramCache::pays_off) — a
+    // pure function of the config, hence identical in every shard and
+    // thread. The cache itself is immutable and deterministic, so one
+    // build is shared by all chunks/workers without touching the
+    // bit-exactness contract.
+    let use_gram = match cfg.params.get("grad").map(String::as_str) {
+        Some("gram") => true,
+        Some("streaming") => false,
+        _ => GramCache::pays_off(n_points, dim, scheme.n_blocks()),
+    };
+    let cache = if use_gram { Some(GramCache::new(&data)) } else { None };
     engine.run_range_map(
         lo,
         hi,
-        |_chunk| (),
-        |_ctx, _t, rng| {
-            // one self-contained trajectory per trial: everything below
-            // derives from the trial substream, so the value is a pure
-            // function of (config, t)
-            let dec = make_decoder(scheme, dspec, cfg.p);
+        |_chunk| GdChunkCtx {
+            dec: make_decoder(scheme, dspec, cfg.p),
+            scratch: crate::gd::GdScratch::new(),
+            theta0: vec![0.0; dim],
+        },
+        |ctx, _t, rng| {
+            // the trial's randomness (straggler seed, block shuffle)
+            // derives from the trial substream; the decoder and scratch
+            // are chunk-scoped, so values are split-invariant via the
+            // engine's partial-chunk replay
+            let GdChunkCtx { dec, scratch, theta0 } = ctx;
             let mut strag = BernoulliStragglers::new(cfg.p, rng.next_u64());
             let rho = rng.permutation(scheme.n_blocks());
             let mut gd = SimulatedGcod {
@@ -747,8 +788,17 @@ fn gd_final_values(
                 m: scheme.n_machines(),
                 alpha_scale: 1.0,
             };
-            let mut src = &data;
-            gd.run(&mut src, &vec![0.0; dim], iters).final_progress()
+            match &cache {
+                Some(c) => {
+                    let mut src = c;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+                None => {
+                    let mut src = &data;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+            }
+            .final_progress()
         },
     )
 }
@@ -1031,7 +1081,7 @@ mod tests {
     #[test]
     fn parse_rejects_schema_and_kind_mismatch() {
         let text = ShardResult::from_values(cfg(2), 0, 2, vec![1.0, 2.0]).render();
-        let bad_schema = text.replace("\"schema\": 2", "\"schema\": 99");
+        let bad_schema = text.replace("\"schema\": 3", "\"schema\": 99");
         let err = ShardResult::parse(&bad_schema).unwrap_err();
         assert!(format!("{err}").contains("schema version 99"), "{err}");
         let bad_kind = text.replace(SHARD_KIND, "gcod-other");
@@ -1240,6 +1290,20 @@ mod tests {
         let so = ShardResult::from_values(c.clone(), 2, 4, vec![3.0, 4.0]).into_stats_only();
         let err = merge(vec![full, so]).unwrap_err();
         assert!(format!("{err}").contains("stats-only"), "{err}");
+    }
+
+    #[test]
+    fn run_range_rejects_unknown_grad_kernel() {
+        let mut c = cfg(4);
+        c.sweep = SweepKind::GdFinal;
+        c.params.insert("grad".into(), "graam".into());
+        let err = run_range(&c, 1, 0, 4).unwrap_err();
+        assert!(format!("{err}").contains("grad kernel"), "{err}");
+        // the three valid spellings pass validation
+        for ok in ["auto", "gram", "streaming"] {
+            c.params.insert("grad".into(), ok.into());
+            assert!(run_range(&c, 1, 0, 4).is_ok(), "grad={ok}");
+        }
     }
 
     #[test]

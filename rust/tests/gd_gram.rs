@@ -1,0 +1,171 @@
+//! Gram-cached gradient path: conformance + determinism suite.
+//!
+//! * property test: Gram-cached block gradients match the streaming
+//!   computation within tolerance at random problem shapes;
+//! * the `gd-final` sweep on the new kernel stays **bit-identical**
+//!   across thread counts (1 ≡ 8) and shard splits (1 ≡ 4), for both
+//!   the Gram and streaming kernels and for the warm-started LSQR
+//!   decoder whose state is chunk-scoped;
+//! * `grad=auto` selection is a pure function of the config (explicit
+//!   `gram` at an auto-gram shape produces the same bits);
+//! * scratch reuse across trials never changes results.
+
+use gcod::data::LstsqData;
+use gcod::gd::{GdScratch, GradSource, GramCache};
+use gcod::prng::Rng;
+use gcod::sweep::shard::{self, MergedSweep, ShardSpec, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+
+fn rel_close(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+}
+
+/// Random-shape property test: for any (n_points, dim, blocks) and any
+/// theta, the Gram form G_i θ − c_i equals the streaming form
+/// X_iᵀ(X_i θ − y_i) to rounding.
+#[test]
+fn gram_matches_streaming_at_random_shapes() {
+    let mut rng = Rng::new(0xA11CE);
+    for case in 0..25 {
+        let blocks = 1 + rng.below(12);
+        let b = 1 + rng.below(24);
+        let n_points = blocks * b;
+        // keep N comfortably above dim so theta* is well-conditioned
+        let dim = 1 + rng.below(n_points.min(20));
+        if 2 * dim > n_points {
+            continue;
+        }
+        let data = LstsqData::generate(n_points, dim, blocks, 0.7, &mut rng);
+        let cache = GramCache::new(&data);
+        let theta = rng.gaussian_vec(dim, 2.0);
+        let mut s = &data;
+        let mut g = &cache;
+        let gs = GradSource::block_grads(&mut s, &theta);
+        let gg = GradSource::block_grads(&mut g, &theta);
+        assert_eq!(gs.data.len(), gg.data.len());
+        for (i, (a, b)) in gs.data.iter().zip(&gg.data).enumerate() {
+            assert!(
+                rel_close(*a, *b, 1e-8),
+                "case {case} (N={n_points} d={dim} n={blocks}) entry {i}: {a} vs {b}"
+            );
+        }
+    }
+}
+
+fn gd_cfg(decoder: &str, trials: usize, chunk: usize, grad: Option<&str>) -> SweepConfig {
+    let mut params = BTreeMap::new();
+    // 256 points over 8 blocks: b = 32 >= dim = 8, so `auto` picks gram
+    params.insert("n-points".into(), "256".into());
+    params.insert("dim".into(), "8".into());
+    params.insert("iters".into(), "10".into());
+    if let Some(g) = grad {
+        params.insert("grad".into(), g.into());
+    }
+    SweepConfig {
+        sweep: SweepKind::GdFinal,
+        scheme: "graph-rr:8,3".into(),
+        decoder: decoder.into(),
+        p: 0.25,
+        seed: 17,
+        trials,
+        chunk,
+        params,
+    }
+}
+
+fn assert_same_bits(a: &MergedSweep, b: &MergedSweep, what: &str) {
+    assert_eq!(a.render(), b.render(), "{what}: merged JSON bytes differ");
+}
+
+/// 1-thread ≡ 8-thread gd-final sweeps, exact to the merged JSON byte,
+/// on both kernels and with the stateful (chunk-scoped, warm-started)
+/// LSQR decoder.
+#[test]
+fn gd_final_threads_bit_exact_on_both_kernels() {
+    for grad in [None, Some("gram"), Some("streaming")] {
+        for decoder in ["optimal", "optimal-lsqr"] {
+            let c = gd_cfg(decoder, 24, 4, grad);
+            let t1 = shard::run_full(&c, 1).unwrap();
+            let t8 = shard::run_full(&c, 8).unwrap();
+            assert_same_bits(&t1, &t8, &format!("threads 1 vs 8 ({decoder}, grad={grad:?})"));
+        }
+    }
+}
+
+/// 1-shard ≡ 4-shard gd-final merges, exact to the byte — the balanced
+/// split lands mid-chunk (24 trials / chunk 4 / 4 shards = 6-trial
+/// shards), exercising the warm-state replay of partial leading chunks
+/// on the new chunk-scoped GD context.
+#[test]
+fn gd_final_shards_bit_exact_on_gram_kernel() {
+    for grad in [None, Some("streaming")] {
+        let c = gd_cfg("optimal-lsqr", 24, 4, grad);
+        let single = shard::run_full(&c, 2).unwrap();
+        let shards: Vec<_> = (0..4)
+            .map(|i| shard::run_shard(&c, 2, ShardSpec::new(i, 4).unwrap()).unwrap())
+            .collect();
+        let merged = shard::merge(shards).unwrap();
+        assert_same_bits(&single, &merged, &format!("1 vs 4 shards (grad={grad:?})"));
+    }
+}
+
+/// `auto` at a tall-block shape is literally the gram kernel (and both
+/// differ from streaming only within tolerance, never wildly).
+#[test]
+fn auto_grad_selection_is_deterministic() {
+    let auto_cfg = gd_cfg("optimal", 8, 4, None);
+    let gram_cfg = gd_cfg("optimal", 8, 4, Some("gram"));
+    let stream_cfg = gd_cfg("optimal", 8, 4, Some("streaming"));
+    let auto = shard::run_full(&auto_cfg, 2).unwrap();
+    let gram = shard::run_full(&gram_cfg, 2).unwrap();
+    let stream = shard::run_full(&stream_cfg, 2).unwrap();
+    // the `grad` param is part of the sweep identity, so only the
+    // values (not the manifests) can be compared across configs
+    assert_eq!(auto.values.len(), gram.values.len());
+    for (i, (a, g)) in auto.values.iter().zip(&gram.values).enumerate() {
+        assert_eq!(a.to_bits(), g.to_bits(), "trial {i}: auto != gram at a tall-block shape");
+    }
+    for (i, (g, s)) in gram.values.iter().zip(&stream.values).enumerate() {
+        assert!(
+            rel_close(*g, *s, 1e-5),
+            "trial {i}: gram {g} vs streaming {s} diverged beyond rounding"
+        );
+    }
+}
+
+/// Reusing one scratch across many trials (the chunk-scoped sweep
+/// context) is value-neutral: a dirty scratch reproduces the fresh
+/// result bit-for-bit.
+#[test]
+fn scratch_reuse_across_trials_is_value_neutral() {
+    use gcod::codes::{GradientCode, GraphCode};
+    use gcod::decode::OptimalGraphDecoder;
+    use gcod::gd::{SimulatedGcod, StepSize};
+    use gcod::straggler::BernoulliStragglers;
+    let mut rng = Rng::new(2);
+    let code = GraphCode::random_regular(16, 4, &mut rng);
+    let data = LstsqData::generate(192, 6, 16, 0.5, &mut rng);
+    let cache = GramCache::new(&data);
+    let dec = OptimalGraphDecoder::new(&code.graph);
+    let mut run = |seed: u64, scratch: &mut GdScratch| {
+        let mut strag = BernoulliStragglers::new(0.2, seed);
+        let mut gd = SimulatedGcod {
+            decoder: &dec,
+            stragglers: &mut strag,
+            step: StepSize::Const(0.02),
+            rho: None,
+            m: code.n_machines(),
+            alpha_scale: 1.0,
+        };
+        let mut src = &cache;
+        gd.run_with(&mut src, &[0.0; 6], 12, scratch).final_progress()
+    };
+    // fresh scratch per trial
+    let fresh: Vec<f64> = (0..6).map(|s| run(s, &mut GdScratch::new())).collect();
+    // one shared scratch across all trials
+    let mut shared = GdScratch::new();
+    let reused: Vec<f64> = (0..6).map(|s| run(s, &mut shared)).collect();
+    for (i, (a, b)) in fresh.iter().zip(&reused).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "trial {i}");
+    }
+}
