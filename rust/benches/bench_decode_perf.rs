@@ -15,8 +15,10 @@
 //! --baseline (write the tracked rust/benches/baselines/ file instead).
 
 use gcod::bench_util::{bench, black_box, fmt_dur, BenchArgs, JsonReport};
+use gcod::codes::zoo::{self, SchemeSpec};
 use gcod::codes::{GradientCode, GraphCode};
 use gcod::decode::{Decoder, Decoding, GenericOptimalDecoder, OptimalGraphDecoder};
+use gcod::linalg::dist2_sq;
 use gcod::metrics::{Stopwatch, Table};
 use gcod::prng::Rng;
 use gcod::sweep::{bernoulli_masks, decoding_error_sweep, TrialEngine};
@@ -236,6 +238,61 @@ fn main() {
         }
     }
     t4.print();
+
+    // ---- degree-diagonal preconditioning (ROADMAP PR 1 follow-up) ----
+    // LSQR on A_S D with D = diag(1/|a_j|_2) equalizes the column
+    // norms that slow Golub-Kahan on heterogeneous-degree codes (rBGC
+    // columns are binomial). Gated off by default (`with_precond` /
+    // the sweeps' `precond` param) so existing manifests stay
+    // bit-exact; this arm measures what turning it on buys — iteration
+    // counts and wall time — next to a regular graph scheme whose
+    // columns are already uniform (expected: no win there).
+    println!("\n== LSQR degree-diagonal preconditioning (cold starts, p=0.2) ==");
+    let mut t5 = Table::new(&["scheme", "precond", "GK iters (16 masks)", "mean/decode"]);
+    for spec in ["rbgc:256,384,6", "graph-rr:256,6"] {
+        let scheme = zoo::build(&SchemeSpec::parse(spec).unwrap(), &mut rng);
+        let a = &scheme.a;
+        let pmasks: Vec<Vec<bool>> =
+            (0..16).map(|i| Rng::new(900 + i).bernoulli_mask(a.cols, 0.2)).collect();
+        let mut alphas: Vec<Vec<f64>> = Vec::new();
+        for precond in [false, true] {
+            // cold restarts isolate the solver path, so the iteration
+            // totals compare decode for decode
+            let dec = GenericOptimalDecoder::new(a)
+                .with_restart_fraction(-1.0)
+                .with_precond(precond);
+            let mut gk_iters = 0usize;
+            for mask in &pmasks {
+                dec.decode_into(mask, &mut out);
+                gk_iters += dec.last_lsqr_iterations();
+            }
+            alphas.push(out.alpha.clone());
+            let mut i = 0;
+            let r = bench(&format!("{spec} lsqr precond={precond}"), 1, budget, 10_000, || {
+                dec.decode_into(&pmasks[i % 16], &mut out);
+                black_box(out.alpha[0]);
+                i += 1;
+            });
+            report.push(gcod::bench_util::JsonRecord {
+                name: format!("{spec} lsqr precond={precond}"),
+                mean_ns: r.mean.as_nanos() as f64,
+                ns_per_edge: Some(r.mean.as_nanos() as f64 / a.cols as f64),
+                threads: 1,
+                iters: gk_iters as u64,
+            });
+            t5.row(vec![
+                spec.into(),
+                if precond { "on" } else { "off" }.into(),
+                gk_iters.to_string(),
+                fmt_dur(r.mean),
+            ]);
+        }
+        // preconditioning must not move the optimum: the last mask's
+        // alpha agrees across the two solvers to LSQR tolerance
+        let d = dist2_sq(&alphas[0], &alphas[1]);
+        assert!(d < 1e-8, "{spec}: precond changed the optimum, |dalpha|^2 = {d:e}");
+    }
+    t5.print();
 
     // --baseline writes the tracked baseline (diffed by CI and across
     // commits) instead of the working directory; an explicit --json

@@ -198,10 +198,24 @@ impl DecoderSpec {
 }
 
 /// Build the decoder for a scheme. `p` calibrates fixed coefficients.
+/// Equivalent to [`make_decoder_opts`] with preconditioning off.
 pub fn make_decoder<'a>(
     scheme: &'a BuiltScheme,
     spec: DecoderSpec,
     p: f64,
+) -> Box<dyn Decoder + 'a> {
+    make_decoder_opts(scheme, spec, p, false)
+}
+
+/// [`make_decoder`] with decoder options: `precond` enables the
+/// degree-diagonal LSQR preconditioner on the generic optimal decoder
+/// (see [`GenericOptimalDecoder::with_precond`]); it is ignored by the
+/// closed-form decoders, whose solutions involve no iteration.
+pub fn make_decoder_opts<'a>(
+    scheme: &'a BuiltScheme,
+    spec: DecoderSpec,
+    p: f64,
+    precond: bool,
 ) -> Box<dyn Decoder + 'a> {
     match spec {
         DecoderSpec::Optimal => {
@@ -210,10 +224,12 @@ pub fn make_decoder<'a>(
             } else if let Some(frc) = &scheme.frc {
                 Box::new(FrcOptimalDecoder::new(frc))
             } else {
-                Box::new(GenericOptimalDecoder::new(&scheme.a))
+                Box::new(GenericOptimalDecoder::new(&scheme.a).with_precond(precond))
             }
         }
-        DecoderSpec::OptimalLsqr => Box::new(GenericOptimalDecoder::new(&scheme.a)),
+        DecoderSpec::OptimalLsqr => {
+            Box::new(GenericOptimalDecoder::new(&scheme.a).with_precond(precond))
+        }
         DecoderSpec::Fixed => Box::new(FixedDecoder::new(&scheme.a, p)),
         DecoderSpec::Ignore => Box::new(IgnoreStragglersDecoder { a: &scheme.a, weight: 1.0 }),
     }

@@ -29,7 +29,7 @@
 
 use crate::codes::{FrcCode, GradientCode};
 use crate::graphs::Graph;
-use crate::sparse::{lsqr_into, Csc, Csr, LsqrScratch, MaskedColumnsOp};
+use crate::sparse::{lsqr_into, Csc, Csr, DiagScaledMaskedOp, LsqrScratch, MaskedColumnsOp};
 
 /// A decoded coefficient pair: per-machine weights w (zero on
 /// stragglers) and the induced per-block alpha = A w.
@@ -251,6 +251,14 @@ pub struct GenericOptimalDecoder<'a> {
     /// Defaults to [`DEFAULT_RESTART_FRACTION`]; negative forces every
     /// decode cold, >= 1.0 always warm-starts.
     pub restart_fraction: f64,
+    /// Degree-diagonal (column-equilibration) preconditioning: LSQR
+    /// runs on `A_S D` with `D = diag(1/|a_j|_2)` and the solution is
+    /// un-scaled afterwards (`w = D z`). Off by default — the
+    /// preconditioned iteration rounds differently, so existing sweep
+    /// manifests stay bit-exact; turn on for heterogeneous-degree codes
+    /// where raw column norms vary (see `bench_decode_perf`'s
+    /// preconditioning arm for iteration counts).
+    pub precond: bool,
     scratch: std::cell::RefCell<GenericScratch>,
 }
 
@@ -264,6 +272,11 @@ struct GenericScratch {
     prev_mask: Vec<bool>,
     prev_w: Vec<f64>,
     has_prev: bool,
+    /// per-column right preconditioner 1/|a_j|_2 (0 for empty columns);
+    /// built on first preconditioned decode, empty otherwise
+    col_scale: Vec<f64>,
+    /// Golub-Kahan steps of the most recent decode (perf telemetry)
+    last_iters: usize,
     lsqr: LsqrScratch,
 }
 
@@ -274,6 +287,7 @@ impl<'a> GenericOptimalDecoder<'a> {
             atol: 1e-12,
             max_iter: 4 * (a.rows + a.cols),
             restart_fraction: DEFAULT_RESTART_FRACTION,
+            precond: false,
             scratch: std::cell::RefCell::new(GenericScratch::default()),
         }
     }
@@ -283,6 +297,21 @@ impl<'a> GenericOptimalDecoder<'a> {
     pub fn with_restart_fraction(mut self, fraction: f64) -> Self {
         self.restart_fraction = fraction;
         self
+    }
+
+    /// Builder-style toggle for degree-diagonal preconditioning (see
+    /// the `precond` field).
+    pub fn with_precond(mut self, on: bool) -> Self {
+        self.precond = on;
+        self
+    }
+
+    /// Golub-Kahan iterations spent by the most recent
+    /// [`Decoder::decode_into`] call (0 before any decode, or when the
+    /// last mask had no survivors). Perf telemetry for the
+    /// preconditioning comparison in `bench_decode_perf`.
+    pub fn last_lsqr_iterations(&self) -> usize {
+        self.scratch.borrow().last_iters
     }
 }
 
@@ -299,17 +328,37 @@ impl Decoder for GenericOptimalDecoder<'_> {
         if s.csr.is_none() {
             s.csr = Some(self.a.to_csr());
         }
+        if self.precond && s.col_scale.is_empty() {
+            // 1/|a_j|_2 per column, built once (pure function of A)
+            s.col_scale = (0..m)
+                .map(|j| {
+                    let n2: f64 = self.a.col(j).1.iter().map(|v| v * v).sum();
+                    if n2 > 0.0 { 1.0 / n2.sqrt() } else { 0.0 }
+                })
+                .collect();
+        }
         if straggler.iter().all(|&d| d) {
             // no survivors: w = 0, alpha = 0, and nothing to warm-start
             // the next trial from
             s.has_prev = false;
+            s.last_iters = 0;
             return;
         }
-        let GenericScratch { csr, rhs, prev_mask, prev_w, has_prev, lsqr: ls } = &mut *s;
+        let GenericScratch {
+            csr,
+            rhs,
+            prev_mask,
+            prev_w,
+            has_prev,
+            col_scale,
+            last_iters,
+            lsqr: ls,
+        } = &mut *s;
 
         // warm start from the previous trial's w when the mask is close
         // enough; newly-dead columns are zeroed (LSQR keeps them at
-        // exactly 0.0 through MaskedColumnsOp::apply_t)
+        // exactly 0.0 through the masked op's apply_t). Preconditioned
+        // solves run in z-space (w = D z), so the warm guess converts.
         let warm = *has_prev && prev_mask.len() == m && {
             let flips = prev_mask.iter().zip(straggler).filter(|(a, b)| a != b).count();
             flips as f64 <= self.restart_fraction * m as f64
@@ -317,19 +366,36 @@ impl Decoder for GenericOptimalDecoder<'_> {
         if warm {
             for j in 0..m {
                 if !straggler[j] {
-                    out.w[j] = prev_w[j];
+                    out.w[j] = if self.precond {
+                        let d = col_scale[j];
+                        if d > 0.0 { prev_w[j] / d } else { 0.0 }
+                    } else {
+                        prev_w[j]
+                    };
                 }
             }
         }
 
         rhs.clear();
         rhs.resize(n, 1.0);
-        let op = MaskedColumnsOp {
+        let masked = MaskedColumnsOp {
             csc: self.a,
             csr: csr.as_ref().expect("csr built above"),
             straggler,
         };
-        lsqr_into(&op, rhs, self.atol, self.max_iter, &mut out.w, ls);
+        let summary = if self.precond {
+            let op = DiagScaledMaskedOp { inner: masked, scale: col_scale };
+            lsqr_into(&op, rhs, self.atol, self.max_iter, &mut out.w, ls)
+        } else {
+            lsqr_into(&masked, rhs, self.atol, self.max_iter, &mut out.w, ls)
+        };
+        *last_iters = summary.iterations;
+        if self.precond {
+            // back to w-space: w = D z (stragglers stay exactly 0.0)
+            for (wj, &dj) in out.w.iter_mut().zip(col_scale.iter()) {
+                *wj *= dj;
+            }
+        }
         self.a.mul_vec_into(&out.w, &mut out.alpha);
 
         prev_mask.clear();
@@ -609,6 +675,67 @@ mod tests {
                 if mask[j] {
                     assert_eq!(out.w[j], 0.0, "trial {trial}: straggler {j} got weight");
                 }
+            }
+        }
+    }
+
+    /// Degree-diagonal preconditioning must not change the minimizer:
+    /// preconditioned and plain decodes agree on alpha (unique at the
+    /// optimum) to LSQR tolerance, on a heterogeneous-degree code where
+    /// the preconditioner actually rescales, warm-started or not.
+    #[test]
+    fn preconditioned_lsqr_matches_plain_alpha() {
+        let mut rng = Rng::new(31);
+        // rBGC columns have binomial (non-uniform) degrees
+        let code = crate::codes::RbgcCode::new(16, 24, 4, &mut rng);
+        let a = code.assignment();
+        let plain = GenericOptimalDecoder::new(a);
+        let pre = GenericOptimalDecoder::new(a).with_precond(true);
+        let mut po = Decoding::empty();
+        let mut qo = Decoding::empty();
+        for trial in 0..25 {
+            // small p keeps the warm path live on both decoders
+            let mask = rng.bernoulli_mask(a.cols, 0.15);
+            plain.decode_into(&mask, &mut po);
+            pre.decode_into(&mask, &mut qo);
+            assert!(
+                dist2_sq(&po.alpha, &qo.alpha) < 1e-10,
+                "trial {trial}: precond vs plain alpha {:e}",
+                dist2_sq(&po.alpha, &qo.alpha)
+            );
+            for j in 0..a.cols {
+                if mask[j] {
+                    assert_eq!(qo.w[j], 0.0, "trial {trial}: straggler {j} got weight");
+                }
+            }
+        }
+        // all-straggler masks still short-circuit cleanly
+        pre.decode_into(&vec![true; a.cols], &mut qo);
+        assert!(qo.alpha.iter().all(|&x| x == 0.0));
+        assert_eq!(pre.last_lsqr_iterations(), 0);
+    }
+
+    /// `precond = false` is the default and must leave the historical
+    /// behavior untouched: a toggled-off decoder decodes bit-identically
+    /// to one built before the option existed (same struct defaults).
+    #[test]
+    fn precond_off_is_bitwise_default_path() {
+        let mut rng = Rng::new(32);
+        let code = GraphCode::random_regular(12, 3, &mut rng);
+        let a = code.assignment();
+        let d1 = GenericOptimalDecoder::new(a);
+        let d2 = GenericOptimalDecoder::new(a).with_precond(false);
+        let mut o1 = Decoding::empty();
+        let mut o2 = Decoding::empty();
+        for _ in 0..10 {
+            let mask = rng.bernoulli_mask(a.cols, 0.2);
+            d1.decode_into(&mask, &mut o1);
+            d2.decode_into(&mask, &mut o2);
+            for (x, y) in o1.w.iter().zip(&o2.w) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            for (x, y) in o1.alpha.iter().zip(&o2.alpha) {
+                assert_eq!(x.to_bits(), y.to_bits());
             }
         }
     }

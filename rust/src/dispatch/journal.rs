@@ -1,0 +1,225 @@
+//! Dispatch checkpoint journal: crash/interrupt recovery for
+//! `gcod sweep-launch`.
+//!
+//! The dispatcher's fault tolerance (re-lease, speculate, retry) covers
+//! *worker* failures; this module covers **dispatcher** failures — an
+//! interrupted or retry-exhausted launch. With a journal configured
+//! ([`super::DispatchConfig::journal`]), every successfully collected
+//! lease is persisted as it completes:
+//!
+//! * the shard manifest is written to the journal's sidecar directory
+//!   `<journal>.d/` (the same versioned JSON `gcod sweep-shard`
+//!   emits), and
+//! * a `done lo hi <file>` line is appended to the journal file, under
+//!   a header that fingerprints the sweep identity + manifest mode.
+//!
+//! `gcod sweep-launch --resume <journal>` replays the journal: entries
+//! whose manifests still parse and match the sweep are pre-marked done
+//! in the [`super::queue::WorkQueue`] (see [`WorkQueue::resume`]), so
+//! the relaunch recomputes **only the uncovered ranges** — and because
+//! per-trial values are split-invariant, the merged output is still
+//! byte-identical to a single uninterrupted run. Unreadable or
+//! mismatched entries are dropped (their ranges simply recompute);
+//! resuming against a *different* sweep is a hard error. On a
+//! successful merge the journal and its sidecar directory are removed.
+//!
+//! [`WorkQueue::resume`]: super::queue::WorkQueue::resume
+
+use crate::bench_util::f64_to_hex_bits;
+use crate::error::{Error, Result};
+use crate::sweep::shard::{ShardResult, SweepConfig};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// First journal line; bumped if the entry format ever changes.
+pub const JOURNAL_HEADER: &str = "gcod-sweep-journal v1";
+
+/// One line identifying the sweep a journal belongs to. Compared for
+/// whole-line equality on resume — a journal must never silently seed
+/// a different sweep's merge.
+pub fn fingerprint(cfg: &SweepConfig, stats_only: bool) -> String {
+    format!(
+        "{}|{}|{}|{}|{}|{}|{}|{:?}|{}",
+        cfg.sweep.as_str(),
+        cfg.scheme,
+        cfg.decoder,
+        f64_to_hex_bits(cfg.p),
+        cfg.seed,
+        cfg.trials,
+        cfg.chunk,
+        cfg.params,
+        stats_only
+    )
+    .replace('\n', "\\n")
+}
+
+/// An open dispatch journal. See the module docs.
+pub struct Journal {
+    path: PathBuf,
+    dir: PathBuf,
+    file: std::fs::File,
+    preloaded: Vec<ShardResult>,
+    /// entries dropped during resume (stale/corrupt manifests) — the
+    /// dispatcher surfaces these in its failure log
+    pub notes: Vec<String>,
+}
+
+impl Journal {
+    /// Sidecar manifest directory for a journal path.
+    pub fn sidecar_dir(journal: &Path) -> PathBuf {
+        PathBuf::from(format!("{}.d", journal.display()))
+    }
+
+    /// Open (and on `resume`, replay) the journal for one dispatch. The
+    /// journal file is rewritten — atomically, via a temp file + rename
+    /// — with the header plus the entries that survived validation, so
+    /// it never references dropped manifests and a crash mid-open
+    /// cannot lose banked entries. Guard rails: `resume` against a
+    /// missing journal is a hard error (a typo'd path must not silently
+    /// recompute everything), and a fresh open (`resume = false`)
+    /// refuses to destroy an existing non-empty journal.
+    pub fn open(
+        path: &Path,
+        cfg: &SweepConfig,
+        stats_only: bool,
+        resume: bool,
+    ) -> Result<Journal> {
+        if resume && !path.is_file() {
+            return Err(Error::msg(format!(
+                "resume journal {} not found — nothing to resume (start a checkpointed \
+                 launch with --journal instead)",
+                path.display()
+            )));
+        }
+        if !resume
+            && path.is_file()
+            && std::fs::metadata(path).map(|m| m.len() > 0).unwrap_or(false)
+        {
+            return Err(Error::msg(format!(
+                "journal {} already exists — pass --resume to continue it, or remove it to \
+                 start over (refusing to overwrite a checkpoint)",
+                path.display()
+            )));
+        }
+        let dir = Self::sidecar_dir(path);
+        std::fs::create_dir_all(&dir)
+            .map_err(|e| Error::msg(format!("create journal dir {}: {e}", dir.display())))?;
+        let fp = fingerprint(cfg, stats_only);
+
+        let mut preloaded: Vec<ShardResult> = Vec::new();
+        let mut notes = Vec::new();
+        if resume {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| Error::msg(format!("read journal {}: {e}", path.display())))?;
+            let mut lines = text.lines();
+            if lines.next() != Some(JOURNAL_HEADER) {
+                return Err(Error::msg(format!(
+                    "{} is not a {JOURNAL_HEADER} file",
+                    path.display()
+                )));
+            }
+            match lines.next() {
+                Some(have) if have == fp => {}
+                _ => {
+                    return Err(Error::msg(format!(
+                        "journal {} was written for a different sweep (identity fingerprint \
+                         mismatch) — refusing to seed this dispatch with its results",
+                        path.display()
+                    )));
+                }
+            }
+            for line in lines {
+                let line = line.trim();
+                if line.is_empty() {
+                    continue;
+                }
+                match parse_entry(line, &dir, cfg, stats_only) {
+                    Ok(res) => preloaded.push(res),
+                    Err(e) => notes.push(format!("journal entry '{line}' dropped: {e}")),
+                }
+            }
+        }
+
+        // atomic rewrite: header + surviving entries land via rename, so
+        // the old journal stays intact until the new one is complete
+        let mut text = format!("{JOURNAL_HEADER}\n{fp}\n");
+        for res in &preloaded {
+            text.push_str(&format!("done {} {} {}\n", res.lo, res.hi, entry_file(res.lo, res.hi)));
+        }
+        let tmp = PathBuf::from(format!("{}.tmp", path.display()));
+        std::fs::write(&tmp, &text)
+            .map_err(|e| Error::msg(format!("write journal {}: {e}", tmp.display())))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| Error::msg(format!("rename journal into {}: {e}", path.display())))?;
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(path)
+            .map_err(|e| Error::msg(format!("open journal {}: {e}", path.display())))?;
+        Ok(Journal { path: path.to_path_buf(), dir, file, preloaded, notes })
+    }
+
+    /// Completed leases replayed from a prior run (drained by the
+    /// dispatcher into its result set before the event loop starts).
+    pub fn take_preloaded(&mut self) -> Vec<ShardResult> {
+        std::mem::take(&mut self.preloaded)
+    }
+
+    /// Persist one freshly collected lease result. Duplicate covers of
+    /// the same range (speculation) overwrite with identical bytes —
+    /// per-trial values are split-invariant — and the duplicate line is
+    /// deduplicated on resume by `dedup_cover`.
+    pub fn record(&mut self, res: &ShardResult) -> Result<()> {
+        res.write(&self.dir.join(entry_file(res.lo, res.hi)))?;
+        self.append_line(res.lo, res.hi)
+    }
+
+    fn append_line(&mut self, lo: usize, hi: usize) -> Result<()> {
+        writeln!(self.file, "done {lo} {hi} {}", entry_file(lo, hi))
+            .and_then(|()| self.file.flush())
+            .map_err(|e| Error::msg(format!("write journal {}: {e}", self.path.display())))
+    }
+
+    /// The dispatch merged successfully: the journal has served its
+    /// purpose, remove it and its sidecar manifests.
+    pub fn finish(self) {
+        drop(self.file);
+        let _ = std::fs::remove_file(&self.path);
+        let _ = std::fs::remove_dir_all(&self.dir);
+    }
+}
+
+fn entry_file(lo: usize, hi: usize) -> String {
+    format!("done_{lo}_{hi}.json")
+}
+
+fn parse_entry(
+    line: &str,
+    dir: &Path,
+    cfg: &SweepConfig,
+    stats_only: bool,
+) -> Result<ShardResult> {
+    let mut parts = line.splitn(4, ' ');
+    let (tag, lo, hi, file) = (parts.next(), parts.next(), parts.next(), parts.next());
+    if tag != Some("done") {
+        return Err(Error::msg("unknown journal entry tag"));
+    }
+    let lo: usize =
+        lo.and_then(|s| s.parse().ok()).ok_or_else(|| Error::msg("bad journal entry lo"))?;
+    let hi: usize =
+        hi.and_then(|s| s.parse().ok()).ok_or_else(|| Error::msg("bad journal entry hi"))?;
+    let file = file.ok_or_else(|| Error::msg("journal entry missing manifest file"))?;
+    let res = ShardResult::read(&dir.join(file))?;
+    if res.config != *cfg {
+        return Err(Error::msg("manifest config differs from the dispatched sweep"));
+    }
+    if (res.lo, res.hi) != (lo, hi) {
+        return Err(Error::msg(format!(
+            "manifest covers [{}, {}), journal claims [{lo}, {hi})",
+            res.lo, res.hi
+        )));
+    }
+    if res.stats_only != stats_only {
+        return Err(Error::msg("manifest stats-only mode differs from the dispatch"));
+    }
+    Ok(res)
+}

@@ -112,6 +112,45 @@ impl WorkQueue {
         Self::with_policy(trials, grain, chunk, max_retries, GrainPolicy::Adaptive { min_grain })
     }
 
+    /// Fixed-grain queue resuming from a checkpoint: `completed` ranges
+    /// (from a dispatch journal) are pre-marked done and never
+    /// re-leased; the uncovered gaps are carved into grain-sized,
+    /// chunk-aligned ranges up front and handed out like re-enqueued
+    /// work. A queue resumed with full coverage reports
+    /// [`WorkQueue::is_complete`] immediately.
+    pub fn resume(
+        trials: usize,
+        grain: usize,
+        chunk: usize,
+        max_retries: usize,
+        completed: &[(usize, usize)],
+    ) -> Result<Self> {
+        let mut q = Self::new(trials, grain, chunk, max_retries)?;
+        for &(lo, hi) in completed {
+            if lo > hi || hi > trials {
+                return Err(Error::msg(format!(
+                    "journalled range [{lo}, {hi}) outside sweep of {trials} trials"
+                )));
+            }
+            q.mark_done(lo, hi);
+        }
+        // carve the complement of the (coalesced) done set; nothing is
+        // left on the frontier
+        let done = q.done.clone();
+        let mut cursor = 0usize;
+        for &(dlo, dhi) in done.iter().chain(std::iter::once(&(trials, trials))) {
+            let mut lo = cursor;
+            while lo < dlo {
+                let hi = (lo + q.grain).min(dlo);
+                q.requeued.push_back((lo, hi));
+                lo = hi;
+            }
+            cursor = cursor.max(dhi);
+        }
+        q.frontier = trials;
+        Ok(q)
+    }
+
     fn with_policy(
         trials: usize,
         grain: usize,
@@ -474,6 +513,52 @@ mod tests {
         let mut q = WorkQueue::new_adaptive(64, 16, 1000, 8, 3).unwrap();
         let l = q.lease(0).unwrap();
         assert!(l.hi - l.lo <= 16);
+    }
+
+    #[test]
+    fn resume_releases_only_uncovered_gaps() {
+        // 80 trials, chunk 8, grain 16; [16,32) and [48,64) already done
+        let mut q = WorkQueue::resume(80, 16, 8, 3, &[(16, 32), (48, 64)]).unwrap();
+        assert!(!q.is_complete());
+        let mut got = Vec::new();
+        let mut ids = Vec::new();
+        while let Some(l) = q.lease(0) {
+            got.push((l.lo, l.hi));
+            ids.push(l.id);
+        }
+        assert_eq!(got, vec![(0, 16), (32, 48), (64, 80)]);
+        for id in ids {
+            q.complete(id).unwrap();
+        }
+        assert!(q.is_complete());
+        // overlapping/adjacent journal entries coalesce; failed resumed
+        // ranges still charge the retry budget normally
+        let mut q = WorkQueue::resume(32, 32, 8, 1, &[(0, 8), (8, 16), (4, 12)]).unwrap();
+        let l = q.lease(0).unwrap();
+        assert_eq!((l.lo, l.hi), (16, 32));
+        let (_, requeued) = q.fail(l.id).unwrap();
+        assert!(requeued);
+        let l = q.lease(0).unwrap();
+        assert_eq!((l.lo, l.hi), (16, 32));
+        assert!(q.fail(l.id).is_err());
+    }
+
+    #[test]
+    fn resume_with_full_coverage_is_immediately_complete() {
+        let q = WorkQueue::resume(40, 16, 8, 3, &[(0, 24), (24, 40)]).unwrap();
+        assert!(q.is_complete());
+        assert_eq!(q.pending_ranges(), 0);
+        // ranges outside the sweep are rejected
+        assert!(WorkQueue::resume(40, 16, 8, 3, &[(0, 48)]).is_err());
+        assert!(WorkQueue::resume(40, 16, 8, 3, &[(8, 4)]).is_err());
+        // an empty journal degenerates to... everything requeued
+        let mut q = WorkQueue::resume(40, 16, 8, 3, &[]).unwrap();
+        let mut covered = 0;
+        while let Some(l) = q.lease(0) {
+            assert_eq!(l.lo, covered);
+            covered = l.hi;
+        }
+        assert_eq!(covered, 40);
     }
 
     #[test]

@@ -62,6 +62,60 @@ impl GramCache {
         Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone() }
     }
 
+    /// [`GramCache::new`] with the per-block SYRK builds fanned across
+    /// `threads` scoped workers (the same `std::thread::scope` model as
+    /// the sweep engine's workers — `gd-final`/`adv-gd` pass
+    /// `engine.threads()`). **Byte-identical to the serial build**:
+    /// blocks are partitioned contiguously, each worker owns a disjoint
+    /// slice of the output arrays, and every block's `(G_i, c_i)` is
+    /// the same sequence of float operations regardless of which worker
+    /// computes it — scheduling can reorder nothing that reaches the
+    /// output. `rust/tests/gd_gram.rs` pins the bit-equality.
+    pub fn new_parallel(data: &LstsqData, threads: usize) -> Self {
+        let (n, k) = (data.n_blocks, data.k);
+        let threads = threads.clamp(1, n.max(1));
+        if threads <= 1 || n < 2 {
+            return Self::new(data);
+        }
+        let mut gram = vec![0.0; n * k * k];
+        let mut c = Mat::zeros(n, k);
+        std::thread::scope(|s| {
+            let mut gram_rest: &mut [f64] = &mut gram;
+            let mut c_rest: &mut [f64] = &mut c.data;
+            let base = n / threads;
+            let rem = n % threads;
+            let mut first = 0usize;
+            for w in 0..threads {
+                let cnt = base + usize::from(w < rem);
+                if cnt == 0 {
+                    continue;
+                }
+                let (gchunk, grest) =
+                    std::mem::take(&mut gram_rest).split_at_mut(cnt * k * k);
+                gram_rest = grest;
+                let (cchunk, crest) = std::mem::take(&mut c_rest).split_at_mut(cnt * k);
+                c_rest = crest;
+                let blk0 = first;
+                first += cnt;
+                s.spawn(move || {
+                    let mut gblk = Mat::zeros(k, k);
+                    for i in 0..cnt {
+                        let bx = data.block_x(blk0 + i);
+                        syrk_into(bx, k, &mut gblk);
+                        gchunk[i * k * k..(i + 1) * k * k].copy_from_slice(&gblk.data);
+                        let ci = &mut cchunk[i * k..(i + 1) * k];
+                        for (r, &yr) in data.block_y(blk0 + i).iter().enumerate() {
+                            if yr != 0.0 {
+                                crate::linalg::axpy(yr, &bx[r * k..(r + 1) * k], ci);
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone() }
+    }
+
     /// Whether the Gram path beats streaming for a (n_points, dim,
     /// n_blocks) shape: per-iteration it trades ~2·N·k streaming flops
     /// for ~n·k², i.e. wins iff k < 2b. `k <= b` is the conservative
@@ -171,6 +225,30 @@ mod tests {
                 let want: f64 =
                     (0..4).map(|r| bx[r * 4 + a] * data.block_y(i)[r]).sum();
                 assert!(rel_close(ci[a], want, 1e-12), "block {i} c[{a}]: {} vs {want}", ci[a]);
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_build_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(33);
+        // shapes straddling the worker count: fewer blocks than
+        // workers, ragged split, and an even split
+        for (n_points, k, blocks) in [(12usize, 3usize, 2usize), (70, 5, 7), (96, 8, 8)] {
+            let data = LstsqData::generate(n_points, k, blocks, 0.4, &mut rng);
+            let serial = GramCache::new(&data);
+            for threads in [1usize, 3, 4, 16] {
+                let par = GramCache::new_parallel(&data, threads);
+                assert_eq!(par.n_blocks(), serial.n_blocks());
+                assert_eq!(par.dim(), serial.dim());
+                for i in 0..blocks {
+                    for (a, b) in par.block_gram(i).iter().zip(serial.block_gram(i)) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "gram block {i} threads={threads}");
+                    }
+                    for (a, b) in par.block_c(i).iter().zip(serial.block_c(i)) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "c block {i} threads={threads}");
+                    }
+                }
             }
         }
     }

@@ -17,7 +17,10 @@
 //! * [`straggler`] — random & adversarial straggler models
 //! * [`sweep`] — parallel deterministic Monte-Carlo trial engine;
 //!   [`sweep::shard`] splits sweeps across processes with bit-exact
-//!   JSON-manifest merging (`gcod sweep-shard` / `gcod sweep-merge`)
+//!   JSON-manifest merging (`gcod sweep-shard` / `gcod sweep-merge`);
+//!   [`sweep::kernels`] is the open sweep-kernel registry behind
+//!   `SweepKind` (register a [`sweep::kernels::SweepKernel`] and it is
+//!   immediately shardable, mergeable and dispatchable)
 //! * [`dispatch`] — elastic fault-tolerant work-queue coordinator:
 //!   leases trial ranges to a worker-process pool, re-dispatches lost
 //!   ranges, dedups speculative covers, merges to the single-process

@@ -89,7 +89,11 @@ fn app() -> App {
                 name: "sweep-shard",
                 help: "run one shard of a Monte-Carlo sweep, write a JSON manifest",
                 flags: vec![
-                    flag("sweep", "decode-error|gd-final|attack", Some("decode-error")),
+                    flag(
+                        "sweep",
+                        "sweep kernel: decode-error|gd-final|attack|adv-gd (open registry)",
+                        Some("decode-error"),
+                    ),
                     flag("scheme", "scheme spec", Some("graph-rr:16,3")),
                     flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
                     flag("p", "straggler probability", Some("0.2")),
@@ -114,7 +118,11 @@ fn app() -> App {
                 name: "sweep-launch",
                 help: "elastic fault-tolerant sweep across a pool of local worker processes",
                 flags: vec![
-                    flag("sweep", "decode-error|gd-final|attack", Some("decode-error")),
+                    flag(
+                        "sweep",
+                        "sweep kernel: decode-error|gd-final|attack|adv-gd (open registry)",
+                        Some("decode-error"),
+                    ),
                     flag("scheme", "scheme spec", Some("graph-rr:16,3")),
                     flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
                     flag("p", "straggler probability", Some("0.2")),
@@ -137,6 +145,16 @@ fn app() -> App {
                     flag("max-retries", "re-enqueues per range before failing", Some("3")),
                     flag("poll-ms", "dispatcher poll interval", Some("10")),
                     flag("out", "merged result path", Some("sweep_launched.json")),
+                    flag(
+                        "journal",
+                        "checkpoint journal path: completed leases persist for --resume",
+                        None,
+                    ),
+                    flag(
+                        "resume",
+                        "resume an interrupted launch from its journal (implies --journal)",
+                        None,
+                    ),
                     switch("stats-only", "stats-only manifests (relaxed Chan-merge contract)"),
                     switch("no-speculate", "disable speculative re-execution of slow ranges"),
                     flag("kill-worker", "fault injection: kill this worker id mid-shard", None),
@@ -444,7 +462,19 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
         out_dir: out_dir.clone(),
         straggler_sim: None,
         fault_delay_ms: Vec::new(),
+        journal: None,
+        resume: false,
     };
+    // --resume PATH replays (and keeps checkpointing to) an existing
+    // journal; --journal PATH checkpoints a fresh launch
+    match (inv.get("resume"), inv.get("journal")) {
+        (Some(r), _) if !r.is_empty() => {
+            dcfg.journal = Some(r.into());
+            dcfg.resume = true;
+        }
+        (_, Some(j)) if !j.is_empty() => dcfg.journal = Some(j.into()),
+        _ => {}
+    }
     if let Some(p) = inv.get("sim-stragglers") {
         let p = p.parse::<f64>().map_err(|e| Error::msg(format!("bad --sim-stragglers: {e}")))?;
         dcfg.straggler_sim = Some(StragglerSimCfg {
@@ -486,8 +516,22 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
         cfg.seed,
         cfg.trials
     );
+    let journal_path = dcfg.journal.clone();
     let result = Dispatcher::new(dcfg).run(&cfg, &mut transport);
     let _ = std::fs::remove_dir_all(&out_dir);
+    if let (Err(e), Some(j)) = (&result, &journal_path) {
+        // only when there is actually a checkpoint to resume, and the
+        // failure isn't the journal machinery itself (resuming the
+        // command that just failed to open its journal would loop)
+        if j.is_file() && !format!("{e}").contains("journal") {
+            eprintln!(
+                "checkpoint journal kept at {} — re-run with `--resume {}` to recompute \
+                 only the uncovered ranges",
+                j.display(),
+                j.display()
+            );
+        }
+    }
     let outcome = result?;
     let out = inv.str_or("out", "sweep_launched.json");
     outcome.merged.write(Path::new(&out))?;

@@ -348,6 +348,55 @@ impl LinearOp for MaskedColumnsOp<'_> {
     }
 }
 
+/// Right-preconditioned masked operator `A_S D`, `D = diag(scale)`.
+/// LSQR solves `min_z |A_S D z - b|`; the caller recovers `w = D z`.
+/// With `scale[j] = 1 / |a_j|_2` every surviving column has unit norm —
+/// degree-diagonal (column-equilibration) preconditioning, which
+/// tightens the singular-value spread for heterogeneous-degree codes
+/// (rBGC, BRC, pairwise-balanced) where raw column norms vary and slow
+/// the Golub-Kahan iteration. Straggler columns behave exactly like
+/// [`MaskedColumnsOp`]'s: `apply_t` writes exactly 0.0 there, so dead
+/// components never move off zero.
+pub struct DiagScaledMaskedOp<'a> {
+    pub inner: MaskedColumnsOp<'a>,
+    /// per-column right scale, length m; 0.0 for empty columns
+    pub scale: &'a [f64],
+}
+
+impl LinearOp for DiagScaledMaskedOp<'_> {
+    fn rows(&self) -> usize {
+        self.inner.rows()
+    }
+    fn cols(&self) -> usize {
+        self.inner.cols()
+    }
+    #[inline]
+    fn apply(&self, x: &[f64], y: &mut [f64]) {
+        // y = A_S (D x): fold the scale into the CSR gather
+        let csr = self.inner.csr;
+        for i in 0..csr.rows {
+            let (cj, vals) = csr.row(i);
+            let mut s = 0.0;
+            for k in 0..cj.len() {
+                let j = cj[k];
+                if !self.inner.straggler[j] {
+                    s += vals[k] * self.scale[j] * x[j];
+                }
+            }
+            y[i] = s;
+        }
+    }
+    #[inline]
+    fn apply_t(&self, x: &[f64], y: &mut [f64]) {
+        // y = D^T A_S^T x; the inner op leaves exact zeros on
+        // stragglers, which the scale preserves
+        self.inner.apply_t(x, y);
+        for (yj, &dj) in y.iter_mut().zip(self.scale) {
+            *yj *= dj;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -471,6 +520,53 @@ mod tests {
         let mut yt = vec![-5.0, -5.0, -5.0];
         a.t_mul_vec_into(&[1.0, 1.0], &mut yt);
         assert_eq!(yt, vec![1.0, 3.0, 2.0]);
+    }
+
+    #[test]
+    fn diag_scaled_op_matches_explicit_scaling() {
+        let mut rng = crate::prng::Rng::new(17);
+        let mut t = Vec::new();
+        for _ in 0..45 {
+            t.push((rng.below(7), rng.below(9), rng.gaussian()));
+        }
+        let a = Csc::from_triplets(7, 9, t);
+        let csr = a.to_csr();
+        let straggler = rng.bernoulli_mask(9, 0.3);
+        // unit-column scale (0 for empty columns)
+        let scale: Vec<f64> = (0..9)
+            .map(|j| {
+                let n2: f64 = a.col(j).1.iter().map(|v| v * v).sum();
+                if n2 > 0.0 { 1.0 / n2.sqrt() } else { 0.0 }
+            })
+            .collect();
+        let inner = MaskedColumnsOp { csc: &a, csr: &csr, straggler: &straggler };
+        let op = DiagScaledMaskedOp {
+            inner: MaskedColumnsOp { csc: &a, csr: &csr, straggler: &straggler },
+            scale: &scale,
+        };
+        // forward: A_S (D x) == inner.apply(D x)
+        let x: Vec<f64> = (0..9).map(|_| rng.gaussian()).collect();
+        let dx: Vec<f64> = x.iter().zip(&scale).map(|(xi, di)| xi * di).collect();
+        let mut y1 = vec![0.0; 7];
+        op.apply(&x, &mut y1);
+        let mut y2 = vec![0.0; 7];
+        inner.apply(&dx, &mut y2);
+        for i in 0..7 {
+            assert!((y1[i] - y2[i]).abs() < 1e-12, "row {i}: {} vs {}", y1[i], y2[i]);
+        }
+        // transpose: D (A_S^T r) == scale .* inner.apply_t(r), exact
+        // zeros on stragglers
+        let r: Vec<f64> = (0..7).map(|_| rng.gaussian()).collect();
+        let mut t1 = vec![9.0; 9]; // stale buffer must be overwritten
+        op.apply_t(&r, &mut t1);
+        let mut t2 = vec![0.0; 9];
+        inner.apply_t(&r, &mut t2);
+        for j in 0..9 {
+            assert!((t1[j] - scale[j] * t2[j]).abs() < 1e-12, "col {j}");
+            if straggler[j] {
+                assert_eq!(t1[j], 0.0, "dead column {j} must read exactly 0");
+            }
+        }
     }
 
     #[test]

@@ -120,6 +120,42 @@ impl StragglerModel for StagnantStragglers {
     }
 }
 
+/// A committed adversarial straggler pattern, replayed every round
+/// (Definition I.3 once the adversary has spent its budget). The
+/// decoding error — the quantity a greedy decode adversary maximizes —
+/// depends only on the mask, never on the iterate or the block
+/// shuffle, so a per-iteration greedy adversary loses nothing by
+/// committing once per run; this model is how the `adv-gd` sweep
+/// kernel replays that committed mask through [`StragglerModel`]
+/// consumers like [`crate::gd::SimulatedGcod`]. Borrows the mask, so
+/// per-trial construction allocates nothing.
+pub struct FixedMaskStragglers<'a> {
+    mask: &'a [bool],
+}
+
+impl<'a> FixedMaskStragglers<'a> {
+    pub fn new(mask: &'a [bool]) -> Self {
+        Self { mask }
+    }
+}
+
+impl StragglerModel for FixedMaskStragglers<'_> {
+    fn sample(&mut self, m: usize) -> Vec<bool> {
+        assert_eq!(m, self.mask.len(), "fixed mask covers {} machines, asked for {m}",
+                   self.mask.len());
+        self.mask.to_vec()
+    }
+    fn sample_into(&mut self, m: usize, out: &mut Vec<bool>) {
+        assert_eq!(m, self.mask.len(), "fixed mask covers {} machines, asked for {m}",
+                   self.mask.len());
+        out.clear();
+        out.extend_from_slice(self.mask);
+    }
+    fn name(&self) -> String {
+        format!("fixed-mask({} stragglers)", self.mask.iter().filter(|&&s| s).count())
+    }
+}
+
 /// Adapter from a [`StragglerModel`] to per-worker startup *delays*,
 /// for the dispatch layer's straggler simulation: each call samples a
 /// mask over the worker pool and maps straggling workers to `delay`,
@@ -426,6 +462,19 @@ mod tests {
         let slow = d.iter().filter(|x| !x.is_zero()).count();
         assert!((300..700).contains(&slow), "slow={slow}");
         assert!(s.name().contains("bernoulli"));
+    }
+
+    #[test]
+    fn fixed_mask_replays_exactly() {
+        let mask = vec![true, false, true, false, false];
+        let mut s = FixedMaskStragglers::new(&mask);
+        assert_eq!(s.sample(5), mask);
+        let mut out = vec![false; 99]; // stale, wrong-sized buffer
+        s.sample_into(5, &mut out);
+        assert_eq!(out, mask);
+        // repeated draws never drift
+        assert_eq!(s.sample(5), mask);
+        assert!(s.name().contains("2 stragglers"), "{}", s.name());
     }
 
     #[test]

@@ -1,0 +1,109 @@
+//! `adv-gd`: gradient descent under a greedy adversarial straggler
+//! budget — the paper's *second* convergence regime, made sweepable.
+//!
+//! The paper's central claim spans two straggler regimes: random
+//! stragglers (where the optimal decoder's error decays exponentially
+//! in the replication factor, the `gd-final` sweep) and **adversarial**
+//! stragglers, where Corollaries V.2/V.3 bound the decoding error an
+//! adversary with budget `pm` can force, and GD correspondingly
+//! converges down to a **noise floor that scales with that adversarial
+//! error** rather than to the optimum. This kernel makes the second
+//! regime empirically checkable across every scheme in
+//! [`crate::codes::zoo`]:
+//!
+//! * Each run the adversary spends a budget of `budget` machines
+//!   (param; default `floor(p * m)`, Definition I.3) using the generic
+//!   greedy attack [`crate::straggler::greedy_decode_attack`] — the
+//!   machine whose loss most increases the optimal decoding error,
+//!   repeatedly. The greedy choice maximizes decoding error, which is
+//!   independent of the iterate θ and of the block shuffle ρ, so the
+//!   per-iteration greedy adversary commits to one mask per run WLOG;
+//!   the mask is a pure function of `(scheme, decoder, budget)` and is
+//!   computed once, identically in every shard.
+//! * Trial `t` then runs one full deterministic coded-GD trajectory
+//!   ([`crate::gd::SimulatedGcod`] with [`FixedMaskStragglers`]
+//!   replaying the
+//!   adversarial mask every iteration; block permutation ρ and the step
+//!   grid drawn from substream `t`) and records the final optimality
+//!   gap |θ − θ*|² — the empirical noise floor. Monte-Carlo spread
+//!   comes from ρ: which data blocks land on the attacked coordinates
+//!   varies per trial.
+//! * Gradients use the Gram-cached `gd` kernels from PR 4 (`grad`
+//!   param: `gram` | `streaming` | `auto`), with the cache built once
+//!   across the engine's workers and shared by all chunks.
+//!
+//! Params: `n-points`, `dim`, `iters`, `sigma`, `step-c` as `gd-final`;
+//! plus `budget` (attacked machines, default `floor(p*m)`), `grad`,
+//! `precond`.
+
+use super::gd_final::GdProblem;
+use super::{grad_param, precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use crate::error::{Error, Result};
+use crate::straggler::{greedy_decode_attack, FixedMaskStragglers};
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::TrialEngine;
+
+pub const NAME: &str = "adv-gd";
+
+pub struct AdvGdKernel;
+
+impl SweepKernel for AdvGdKernel {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn validate(&self, cfg: &SweepConfig) -> Result<()> {
+        grad_param(cfg)?;
+        precond_param(cfg)?;
+        if let Some(b) = cfg.params.get("budget") {
+            b.parse::<usize>().map_err(|e| {
+                Error::msg(format!("bad budget '{b}' (want a machine count): {e}"))
+            })?;
+        }
+        Ok(())
+    }
+
+    fn run_range(
+        &self,
+        cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        dspec: DecoderSpec,
+        engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let m = scheme.n_machines();
+        let precond = precond_param(cfg)?;
+        let budget = match cfg.params.get("budget") {
+            Some(b) => b.parse::<usize>().map_err(|e| {
+                Error::msg(format!("bad budget '{b}' (want a machine count): {e}"))
+            })?,
+            None => (cfg.p * m as f64).floor() as usize,
+        };
+        let prob = GdProblem::build(cfg, scheme);
+        // the adversarial mask: deterministic, serial, shared by every
+        // trial/chunk/shard (the greedy search threads one decoder
+        // through all its candidate evaluations, so warm-start state
+        // sees the identical sequence in every process)
+        let atk_dec = make_decoder_opts(scheme, dspec, cfg.p, precond);
+        let mask = greedy_decode_attack(atk_dec.as_ref(), &scheme.a, budget.min(m));
+        drop(atk_dec);
+        let cache = prob.gram_cache(grad_param(cfg)?, engine);
+        Ok(engine.run_range_map(
+            lo,
+            hi,
+            // chunk-scoped state, exactly as gd-final: decoder warm
+            // starts and GD scratch replay at partial leading chunks
+            |_chunk| prob.chunk_ctx(scheme, dspec, cfg.p, precond),
+            // same shared trajectory as gd-final; the adversary replays
+            // its committed mask every iteration, so the block shuffle
+            // is the only trial randomness
+            |ctx, _t, rng| {
+                let mut strag = FixedMaskStragglers::new(&mask);
+                let rho = rng.permutation(scheme.n_blocks());
+                prob.run_trial(ctx, &mut strag, rho, m, &cache)
+            },
+        ))
+    }
+}

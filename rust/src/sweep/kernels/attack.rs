@@ -1,0 +1,48 @@
+//! `attack`: the greedy adversarial error-vs-budget curve.
+//!
+//! Trial `t` records the per-block decoding error after `t + 1`
+//! greedily-chosen stragglers (the trial axis is the attack budget).
+//! NOTE: the greedy search is inherently sequential — a shard
+//! recomputes the nested trace from budget 0 up to its own `hi`
+//! (serially; the engine's `threads` is unused), so sharding the
+//! budget axis only saves the *trailing* budgets' steps, not the
+//! prefix. The trace is a pure function of `(decoder, assignment)`,
+//! which is what makes the budget-axis slices bit-exact across shards.
+
+use super::{precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use crate::error::Result;
+use crate::straggler::greedy_decode_attack_trace;
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::TrialEngine;
+
+pub const NAME: &str = "attack";
+
+pub struct AttackKernel;
+
+impl SweepKernel for AttackKernel {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn validate(&self, cfg: &SweepConfig) -> Result<()> {
+        precond_param(cfg)?;
+        Ok(())
+    }
+
+    fn run_range(
+        &self,
+        cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        dspec: DecoderSpec,
+        _engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let precond = precond_param(cfg)?;
+        let dec = make_decoder_opts(scheme, dspec, cfg.p, precond);
+        let (_, trace) = greedy_decode_attack_trace(dec.as_ref(), &scheme.a, hi);
+        let n = scheme.n_blocks() as f64;
+        Ok(trace[lo..hi].iter().map(|e| e / n).collect())
+    }
+}

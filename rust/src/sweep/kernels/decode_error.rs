@@ -1,0 +1,53 @@
+//! `decode-error`: Figure-3-style Monte-Carlo decoding error.
+//!
+//! Trial `t` draws a Bernoulli(p) straggler mask from substream `t` and
+//! records the decoding error |alpha* - 1|^2. The decoder is the
+//! chunk-scoped state (its scratch and — for the LSQR decoder — its
+//! warm-start `(mask, w)` pair carry across a chunk's trials and are
+//! replayed at partial leading chunks), the mask filler is the
+//! per-trial value function; both plug into
+//! [`decoding_error_values`]'s engine loop.
+
+use super::{precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use crate::error::Result;
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::{bernoulli_masks, decoding_error_values, TrialEngine};
+
+pub const NAME: &str = "decode-error";
+
+pub struct DecodeErrorKernel;
+
+impl SweepKernel for DecodeErrorKernel {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn validate(&self, cfg: &SweepConfig) -> Result<()> {
+        precond_param(cfg)?;
+        Ok(())
+    }
+
+    fn run_range(
+        &self,
+        cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        dspec: DecoderSpec,
+        engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let m = scheme.n_machines();
+        let precond = precond_param(cfg)?;
+        // chunk-scoped decoder factory + Bernoulli(p) trial masks; the
+        // engine's replay contract makes the warm-started LSQR decoder
+        // split-invariant
+        Ok(decoding_error_values(
+            engine,
+            |_chunk| make_decoder_opts(scheme, dspec, cfg.p, precond),
+            bernoulli_masks(m, cfg.p),
+            lo,
+            hi,
+        ))
+    }
+}

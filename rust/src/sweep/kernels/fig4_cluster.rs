@@ -1,0 +1,48 @@
+//! `fig4-cluster`: Figure 4 on the real worker-thread cluster.
+//!
+//! Trial `t` is one wall-clock-budgeted distributed GD run. Manifests
+//! of this kind are produced by `bench_fig4_cluster` (the trial values
+//! depend on real scheduling, so they are *not* bit-reproducible —
+//! merge validation still applies, the bit-exactness contract does
+//! not). The kernel exists in the registry so the manifest pipeline
+//! (parse/merge/validate) knows the kind; the standard runner and the
+//! dispatcher both refuse it via [`SweepKernel::external_producer`].
+
+use super::SweepKernel;
+use crate::codes::zoo::{BuiltScheme, DecoderSpec};
+use crate::error::{Error, Result};
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::TrialEngine;
+
+pub const NAME: &str = "fig4-cluster";
+
+const PRODUCER_MSG: &str =
+    "fig4-cluster shards are produced by `cargo bench --bench bench_fig4_cluster -- \
+     --shard i/k --out-dir DIR`, not by the standard runner (they need the \
+     worker-thread cluster)";
+
+pub struct Fig4ClusterKernel;
+
+impl SweepKernel for Fig4ClusterKernel {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn external_producer(&self) -> Option<&'static str> {
+        Some(PRODUCER_MSG)
+    }
+
+    fn run_range(
+        &self,
+        _cfg: &SweepConfig,
+        _scheme: &BuiltScheme,
+        _dspec: DecoderSpec,
+        _engine: &TrialEngine,
+        _lo: usize,
+        _hi: usize,
+    ) -> Result<Vec<f64>> {
+        // unreachable through `shard::run_range` (it checks
+        // external_producer first); kept loud for direct callers
+        Err(Error::msg(PRODUCER_MSG))
+    }
+}

@@ -1,0 +1,182 @@
+//! `gd-final`: Figure-4/5-style simulated coded GD.
+//!
+//! Trial `t` runs one full deterministic trajectory (straggler seed,
+//! block permutation and step grid from substream `t`) and records the
+//! final optimality gap |theta - theta*|^2. The gradient kernel is
+//! selected by the `grad` param (`gram` | `streaming` | default `auto`,
+//! which applies the [`GramCache::pays_off`] flop cut); the decoder and
+//! GD scratch are chunk-scoped, so `chunk` re-seats warm-start state
+//! exactly like the decode-error sweep.
+
+use super::{grad_param, precond_param, SweepKernel, DATA_SALT};
+use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use crate::data::LstsqData;
+use crate::error::Result;
+use crate::gd::{GdScratch, GramCache, SimulatedGcod, StepSize};
+use crate::prng::Rng;
+use crate::straggler::{BernoulliStragglers, StragglerModel};
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::TrialEngine;
+
+pub const NAME: &str = "gd-final";
+
+pub struct GdFinalKernel;
+
+/// Per-chunk mutable state for the `gd-final` sweep: the decoder (its
+/// scratch and warm-start state carry across the chunk's trials and are
+/// replayed at partial leading chunks, like every other chunk-scoped
+/// sweep) plus the GD scratch and the zero start vector. The Gram/data
+/// sources stay outside: they are immutable pure functions of the
+/// config, so sharing one build across chunks cannot affect bits.
+pub(crate) struct GdChunkCtx<'a> {
+    pub(crate) dec: Box<dyn crate::decode::Decoder + 'a>,
+    pub(crate) scratch: GdScratch,
+    pub(crate) theta0: Vec<f64>,
+}
+
+/// The shared `gd-final`/`adv-gd` least-squares problem: point count
+/// rounded up to a block multiple (LstsqData requires n_blocks | N) and
+/// kept above dim so theta* stays well-defined, dataset derived from
+/// the salted sweep seed — identical in every shard.
+pub(crate) struct GdProblem {
+    pub(crate) data: LstsqData,
+    pub(crate) dim: usize,
+    pub(crate) iters: usize,
+    pub(crate) step_c: u32,
+}
+
+impl GdProblem {
+    pub(crate) fn build(cfg: &SweepConfig, scheme: &BuiltScheme) -> Self {
+        let dim = cfg.param_usize("dim", 32);
+        let n_points = cfg
+            .param_usize("n-points", 512)
+            .max(dim + 1)
+            .div_ceil(scheme.n_blocks())
+            * scheme.n_blocks();
+        let iters = cfg.param_usize("iters", 30);
+        let sigma = cfg.param_f64("sigma", 1.0);
+        let step_c = cfg.param_usize("step-c", 9) as u32;
+        // the dataset is part of the sweep identity: same seed, same
+        // data in every shard
+        let data = LstsqData::generate(
+            n_points,
+            dim,
+            scheme.n_blocks(),
+            sigma,
+            &mut Rng::new(cfg.seed ^ DATA_SALT),
+        );
+        Self { data, dim, iters, step_c }
+    }
+
+    /// Gradient source per the (already validated) `grad` param;
+    /// `None` = auto applies the `k <= b` flop cut — a pure function of
+    /// the config, hence identical in every shard and thread. The cache
+    /// itself is immutable and deterministic (the parallel build is
+    /// bit-identical to the serial one, block by block), so one build
+    /// is shared by all chunks/workers without touching the
+    /// bit-exactness contract.
+    pub(crate) fn gram_cache(
+        &self,
+        explicit: Option<bool>,
+        engine: &TrialEngine,
+    ) -> Option<GramCache> {
+        let use_gram = explicit.unwrap_or_else(|| {
+            GramCache::pays_off(self.data.n_points(), self.dim, self.data.n_blocks)
+        });
+        use_gram.then(|| GramCache::new_parallel(&self.data, engine.threads()))
+    }
+
+    /// The chunk-scoped state factory shared by `gd-final` and
+    /// `adv-gd`: decoder (warm starts carry across the chunk, replayed
+    /// at partial leading chunks), GD scratch, zero start vector.
+    pub(crate) fn chunk_ctx<'a>(
+        &self,
+        scheme: &'a BuiltScheme,
+        dspec: DecoderSpec,
+        p: f64,
+        precond: bool,
+    ) -> GdChunkCtx<'a> {
+        GdChunkCtx {
+            dec: make_decoder_opts(scheme, dspec, p, precond),
+            scratch: GdScratch::new(),
+            theta0: vec![0.0; self.dim],
+        }
+    }
+
+    /// One full deterministic coded-GD trajectory on a chunk-scoped
+    /// context, returning the final optimality gap |theta - theta*|^2.
+    /// Shared by `gd-final` (Bernoulli stragglers) and `adv-gd`
+    /// (committed adversarial mask), so the two kernels' numerics can
+    /// never drift apart.
+    pub(crate) fn run_trial(
+        &self,
+        ctx: &mut GdChunkCtx<'_>,
+        stragglers: &mut dyn StragglerModel,
+        rho: Vec<usize>,
+        m: usize,
+        cache: &Option<GramCache>,
+    ) -> f64 {
+        let GdChunkCtx { dec, scratch, theta0 } = ctx;
+        let mut gd = SimulatedGcod {
+            decoder: dec.as_ref(),
+            stragglers,
+            step: StepSize::simulated_grid(self.step_c),
+            rho: Some(rho),
+            m,
+            alpha_scale: 1.0,
+        };
+        match cache {
+            Some(c) => {
+                let mut src = c;
+                gd.run_with(&mut src, theta0, self.iters, scratch)
+            }
+            None => {
+                let mut src = &self.data;
+                gd.run_with(&mut src, theta0, self.iters, scratch)
+            }
+        }
+        .final_progress()
+    }
+}
+
+impl SweepKernel for GdFinalKernel {
+    fn name(&self) -> &'static str {
+        NAME
+    }
+
+    fn validate(&self, cfg: &SweepConfig) -> Result<()> {
+        grad_param(cfg)?;
+        precond_param(cfg)?;
+        Ok(())
+    }
+
+    fn run_range(
+        &self,
+        cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        dspec: DecoderSpec,
+        engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let prob = GdProblem::build(cfg, scheme);
+        let precond = precond_param(cfg)?;
+        let cache = prob.gram_cache(grad_param(cfg)?, engine);
+        Ok(engine.run_range_map(
+            lo,
+            hi,
+            // the chunk-scoped state factory (warm-state replay contract)
+            |_chunk| prob.chunk_ctx(scheme, dspec, cfg.p, precond),
+            // trial_value: one full deterministic GD trajectory. The
+            // trial's randomness (straggler seed, block shuffle) derives
+            // from the trial substream; the decoder and scratch are
+            // chunk-scoped, so values are split-invariant via the
+            // engine's partial-chunk replay
+            |ctx, _t, rng| {
+                let mut strag = BernoulliStragglers::new(cfg.p, rng.next_u64());
+                let rho = rng.permutation(scheme.n_blocks());
+                prob.run_trial(ctx, &mut strag, rho, scheme.n_machines(), &cache)
+            },
+        ))
+    }
+}

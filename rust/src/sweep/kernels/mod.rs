@@ -1,0 +1,337 @@
+//! Pluggable sweep kernels: the open registry behind [`SweepKind`].
+//!
+//! PR 2–4 grew the sharded sweep layer around a closed enum of four
+//! standard sweeps, with a `match` in `shard::run_range` fanning out to
+//! hard-coded runner functions. This module replaces that closed core
+//! with an **open kernel architecture**:
+//!
+//! * [`SweepKernel`] — one pluggable sweep implementation: a registry
+//!   `name()` (the manifest `sweep` field), up-front param validation,
+//!   and `run_range`, which computes the per-trial metric values for a
+//!   trial subrange on a [`TrialEngine`].
+//! * the **registry** — a process-global name → kernel table.
+//!   The built-in kernels ([`decode_error`], [`gd_final`], [`attack`],
+//!   [`fig4_cluster`], [`adv_gd`]) are installed on first use;
+//!   [`register_kernel`] adds user kernels at runtime (duplicate names
+//!   are rejected). Everything downstream — `gcod sweep-shard`,
+//!   `sweep-merge`, the elastic dispatcher and `sweep-launch` — routes
+//!   through [`SweepKind`], so a newly registered kernel is immediately
+//!   shardable, mergeable and dispatchable with **zero changes** to the
+//!   CLI or dispatch layers.
+//! * [`SweepKind`] — the open replacement for the old enum: a copyable
+//!   interned kernel name. The old variant spellings survive as
+//!   associated constants (`SweepKind::DecodeError`, ...), so existing
+//!   configs, benches and tests read unchanged.
+//!
+//! ## The kernel contract
+//!
+//! `run_range(cfg, scheme, dspec, engine, lo, hi)` must return exactly
+//! `hi - lo` values, and the value recorded for trial `t` must be a
+//! **pure function of `(cfg, t)`** — bit-identical for any split of
+//! `[0, N)` across threads, shards and processes. The standard recipe
+//! (see any built-in kernel) is:
+//!
+//! 1. *Immutable run state* (datasets, Gram caches, attack masks) is
+//!    derived deterministically from the config — typically from
+//!    `Rng::new(cfg.seed ^ SALT)` — so every shard rebuilds identical
+//!    state. Sharing it across chunks cannot affect bits.
+//! 2. *Mutable trial state* (decoder warm starts, GD scratch) lives in
+//!    a **chunk-scoped state factory** passed to
+//!    [`TrialEngine::run_range_map`]: the factory rebuilds the state at
+//!    every chunk boundary, and the engine replays the leading trials
+//!    of a partially-covered chunk to warm it (the warm-state replay
+//!    contract), so per-trial values never depend on where a shard
+//!    boundary fell.
+//! 3. *Per-trial randomness* comes only from the trial's `rng`
+//!    argument — the `(seed, t)`-keyed substream — never from shared
+//!    sequential state.
+//!
+//! A kernel that cannot be produced by the standard runner at all
+//! (`fig4-cluster` needs the real worker-thread cluster) says so via
+//! [`SweepKernel::external_producer`]; the runner and the dispatcher
+//! both refuse it with the kernel's own message.
+
+pub mod adv_gd;
+pub mod attack;
+pub mod decode_error;
+pub mod fig4_cluster;
+pub mod gd_final;
+
+use crate::codes::zoo::{BuiltScheme, DecoderSpec};
+use crate::error::{Error, Result};
+use crate::sweep::shard::SweepConfig;
+use crate::sweep::TrialEngine;
+use std::fmt;
+use std::sync::{Mutex, Once};
+
+/// Salt for the `gd-final`/`adv-gd` data-generation RNG: every shard
+/// derives the identical dataset from `cfg.seed ^ DATA_SALT`. Public
+/// because the dataset is part of the sweep-identity contract (the
+/// byte-identity oracle tests rebuild it independently).
+pub const DATA_SALT: u64 = 0xDA7A_6E4E;
+
+/// One pluggable standard sweep. See the module docs for the
+/// determinism contract `run_range` implementations must uphold.
+pub trait SweepKernel: Sync + Send {
+    /// Registry key; travels as the manifest `sweep` field. Must be
+    /// non-empty and unique across the registry.
+    fn name(&self) -> &'static str;
+
+    /// Reject malformed `cfg.params` before any work happens (unknown
+    /// enum-valued selectors, unparseable numbers). Params this kernel
+    /// does not know are ignored, not rejected — they are still part of
+    /// the sweep identity, so merges stay safe.
+    fn validate(&self, cfg: &SweepConfig) -> Result<()> {
+        let _ = cfg;
+        Ok(())
+    }
+
+    /// `Some(msg)` when this kind's manifests are produced outside the
+    /// standard runner (e.g. by a bench driving real hardware); the
+    /// runner and the dispatcher refuse such kinds with `msg`.
+    fn external_producer(&self) -> Option<&'static str> {
+        None
+    }
+
+    /// Per-trial metric values for trials `[lo, hi)` of the `[0, N)`
+    /// sweep. Must return exactly `hi - lo` values, bit-identical to
+    /// the corresponding slice of any other split (module docs).
+    fn run_range(
+        &self,
+        cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        dspec: DecoderSpec,
+        engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>>;
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// Process-global kernel table. Built-ins are installed once on first
+/// access; user kernels are appended by [`register_kernel`]. Entries
+/// are `&'static` (user kernels are leaked on registration — a handful
+/// of small objects over a process lifetime).
+static REGISTRY: Mutex<Vec<&'static dyn SweepKernel>> = Mutex::new(Vec::new());
+static BUILTINS: Once = Once::new();
+
+fn with_registry<T>(f: impl FnOnce(&mut Vec<&'static dyn SweepKernel>) -> T) -> T {
+    BUILTINS.call_once(|| {
+        let mut reg = REGISTRY.lock().expect("kernel registry poisoned");
+        reg.push(&decode_error::DecodeErrorKernel);
+        reg.push(&gd_final::GdFinalKernel);
+        reg.push(&attack::AttackKernel);
+        reg.push(&fig4_cluster::Fig4ClusterKernel);
+        reg.push(&adv_gd::AdvGdKernel);
+    });
+    f(&mut REGISTRY.lock().expect("kernel registry poisoned"))
+}
+
+/// The kernel registered under `name`, if any.
+pub fn lookup(name: &str) -> Option<&'static dyn SweepKernel> {
+    with_registry(|reg| reg.iter().copied().find(|k| k.name() == name))
+}
+
+/// Registered kernel names, in registration order (built-ins first).
+pub fn kernel_names() -> Vec<&'static str> {
+    with_registry(|reg| reg.iter().map(|k| k.name()).collect())
+}
+
+/// Register a user sweep kernel, making its name parseable by
+/// [`SweepKind::parse`] and runnable through `shard::run_range`, the
+/// `gcod sweep-shard`/`sweep-merge` manifest pipeline and the elastic
+/// dispatcher. The kernel is leaked to `'static`. Fails on an empty or
+/// already-taken name — the manifest `sweep` field must stay
+/// unambiguous.
+pub fn register_kernel(kernel: Box<dyn SweepKernel>) -> Result<SweepKind> {
+    let name = kernel.name();
+    if name.is_empty() || name.chars().any(char::is_whitespace) {
+        return Err(Error::msg(format!(
+            "invalid sweep kernel name '{name}': must be non-empty, no whitespace"
+        )));
+    }
+    with_registry(|reg| {
+        if reg.iter().any(|k| k.name() == name) {
+            return Err(Error::msg(format!(
+                "sweep kernel '{name}' is already registered — kernel names must be unique"
+            )));
+        }
+        reg.push(Box::leak(kernel));
+        Ok(SweepKind(name))
+    })
+}
+
+// ---------------------------------------------------------------------
+// SweepKind: an interned kernel name
+// ---------------------------------------------------------------------
+
+/// Which sweep kernel a config/manifest refers to — an interned
+/// registry name. Replaces the old closed enum: the old variant
+/// spellings survive as associated constants, and [`SweepKind::parse`]
+/// accepts any registered kernel (built-in or user-registered), so new
+/// workloads plug in without touching this type, the CLI, or the
+/// dispatcher.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct SweepKind(&'static str);
+
+#[allow(non_upper_case_globals)] // the old enum variants' spellings, kept for source compatibility
+impl SweepKind {
+    /// Figure-3-style Monte-Carlo decoding error ([`decode_error`]).
+    pub const DecodeError: SweepKind = SweepKind(decode_error::NAME);
+    /// Figure-4/5-style simulated coded GD ([`gd_final`]).
+    pub const GdFinal: SweepKind = SweepKind(gd_final::NAME);
+    /// Greedy adversarial error-vs-budget curve ([`attack`]).
+    pub const Attack: SweepKind = SweepKind(attack::NAME);
+    /// Real worker-thread-cluster Figure 4 ([`fig4_cluster`];
+    /// bench-produced, not runnable by the standard runner).
+    pub const Fig4Cluster: SweepKind = SweepKind(fig4_cluster::NAME);
+    /// GD under a greedy adversarial straggler budget ([`adv_gd`]).
+    pub const AdvGd: SweepKind = SweepKind(adv_gd::NAME);
+
+    /// Resolve a kernel name against the registry. Unknown names are
+    /// rejected (a manifest naming an unregistered kernel cannot be
+    /// validated, let alone re-run).
+    pub fn parse(s: &str) -> Result<Self> {
+        match lookup(s) {
+            Some(k) => Ok(SweepKind(k.name())),
+            None => Err(Error::msg(format!(
+                "unknown sweep kind '{s}' ({})",
+                kernel_names().join("|")
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        self.0
+    }
+
+    /// The registered kernel. Every `SweepKind` in circulation came
+    /// from [`SweepKind::parse`], [`register_kernel`] or a built-in
+    /// constant, so the lookup cannot fail.
+    pub fn kernel(&self) -> &'static dyn SweepKernel {
+        lookup(self.0).expect("SweepKind name is always interned in the registry")
+    }
+
+    /// `Some(msg)` when this kind cannot be executed by the standard
+    /// runner (see [`SweepKernel::external_producer`]). The dispatcher
+    /// keys off this instead of naming kinds.
+    pub fn external_producer(&self) -> Option<&'static str> {
+        self.kernel().external_producer()
+    }
+}
+
+impl fmt::Debug for SweepKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SweepKind({})", self.0)
+    }
+}
+
+impl fmt::Display for SweepKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.0)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared param helpers
+// ---------------------------------------------------------------------
+
+/// Parse the shared enum-valued `precond` param (`on` | `off`, default
+/// off): degree-diagonal LSQR preconditioning in the generic optimal
+/// decoder. Part of the sweep identity via `params`, so existing
+/// manifests (param absent) stay bit-exact.
+pub(crate) fn precond_param(cfg: &SweepConfig) -> Result<bool> {
+    match cfg.params.get("precond").map(String::as_str) {
+        None | Some("off") => Ok(false),
+        Some("on") => Ok(true),
+        Some(v) => Err(Error::msg(format!("unknown precond setting '{v}' (on|off)"))),
+    }
+}
+
+/// Parse the shared enum-valued `grad` param (`gram` | `streaming` |
+/// default `auto`): reject unknown spellings instead of silently
+/// falling through to auto. Returns the explicit choice, `None` = auto.
+pub(crate) fn grad_param(cfg: &SweepConfig) -> Result<Option<bool>> {
+    match cfg.params.get("grad").map(String::as_str) {
+        None | Some("auto") => Ok(None),
+        Some("gram") => Ok(Some(true)),
+        Some("streaming") => Ok(Some(false)),
+        Some(g) => Err(Error::msg(format!("unknown grad kernel '{g}' (auto|gram|streaming)"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_registered_in_order() {
+        let names = kernel_names();
+        for want in ["decode-error", "gd-final", "attack", "fig4-cluster", "adv-gd"] {
+            assert!(names.contains(&want), "missing builtin '{want}' in {names:?}");
+        }
+        // the first four keep the legacy enum order (error messages,
+        // help strings)
+        assert_eq!(&names[..4], &["decode-error", "gd-final", "attack", "fig4-cluster"]);
+    }
+
+    #[test]
+    fn sweep_kind_constants_round_trip() {
+        for k in [
+            SweepKind::DecodeError,
+            SweepKind::GdFinal,
+            SweepKind::Attack,
+            SweepKind::Fig4Cluster,
+            SweepKind::AdvGd,
+        ] {
+            assert_eq!(SweepKind::parse(k.as_str()).unwrap(), k);
+            assert_eq!(k.kernel().name(), k.as_str());
+        }
+        let err = SweepKind::parse("nope").unwrap_err();
+        assert!(format!("{err}").contains("unknown sweep kind"), "{err}");
+        assert!(format!("{err}").contains("adv-gd"), "{err}");
+    }
+
+    #[test]
+    fn only_fig4_cluster_is_externally_produced() {
+        assert!(SweepKind::Fig4Cluster.external_producer().is_some());
+        let runnable =
+            [SweepKind::DecodeError, SweepKind::GdFinal, SweepKind::Attack, SweepKind::AdvGd];
+        for k in runnable {
+            assert!(k.external_producer().is_none(), "{k}");
+        }
+    }
+
+    #[test]
+    fn register_rejects_bad_and_duplicate_names() {
+        struct Bad(&'static str);
+        impl SweepKernel for Bad {
+            fn name(&self) -> &'static str {
+                self.0
+            }
+            fn run_range(
+                &self,
+                _cfg: &SweepConfig,
+                _scheme: &BuiltScheme,
+                _dspec: DecoderSpec,
+                _engine: &TrialEngine,
+                lo: usize,
+                hi: usize,
+            ) -> Result<Vec<f64>> {
+                Ok(vec![0.0; hi - lo])
+            }
+        }
+        assert!(register_kernel(Box::new(Bad(""))).is_err());
+        assert!(register_kernel(Box::new(Bad("has space"))).is_err());
+        let err = register_kernel(Box::new(Bad("decode-error"))).unwrap_err();
+        assert!(format!("{err}").contains("already registered"), "{err}");
+        // a fresh name registers exactly once
+        let kind = register_kernel(Box::new(Bad("kernels-mod-test"))).unwrap();
+        assert_eq!(kind.as_str(), "kernels-mod-test");
+        assert!(register_kernel(Box::new(Bad("kernels-mod-test"))).is_err());
+        assert_eq!(SweepKind::parse("kernels-mod-test").unwrap(), kind);
+    }
+}

@@ -37,6 +37,7 @@ use crate::metrics::Stats;
 use crate::prng::Rng;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+pub mod kernels;
 pub mod shard;
 
 /// Default trials per chunk: big enough to amortize context

@@ -29,13 +29,19 @@
 //!   [`Stats::merge`] (Chan) combination of the shard partials
 //!   (`count`/`min`/`max` exactly, the float moments to 1e-9).
 //!
-//! The standard sweeps ([`SweepKind`]) cover the paper's three
-//! experiment families: `decode-error` (Figure 3 style Monte-Carlo
-//! decoding error), `gd-final` (Figure 4/5 style simulated coded-GD
-//! final error, one full deterministic trajectory per trial), and
-//! `attack` (the greedy adversarial error-vs-budget curve, sliced along
-//! the budget axis via the nested
-//! [`crate::straggler::greedy_decode_attack_trace`]).
+//! The sweeps themselves are **pluggable kernels**
+//! ([`crate::sweep::kernels`]): [`SweepKind`] is an open registry name,
+//! and [`run_range`] dispatches to whatever [`SweepKernel`] is
+//! registered under it. The built-ins cover the paper's experiment
+//! families — `decode-error` (Figure 3 style Monte-Carlo decoding
+//! error), `gd-final` (Figure 4/5 style simulated coded-GD final
+//! error), `attack` (the greedy adversarial error-vs-budget curve,
+//! sliced along the budget axis via the nested
+//! [`crate::straggler::greedy_decode_attack_trace`]), `adv-gd` (GD
+//! convergence under a greedy adversarial straggler budget — the noise
+//! floor regime) and the bench-produced `fig4-cluster` — and
+//! [`register_kernel`] adds new ones that immediately work through
+//! every layer here (manifests, merge, CLI, dispatcher).
 //!
 //! Two extensions serve the elastic dispatcher ([`crate::dispatch`]):
 //!
@@ -53,18 +59,19 @@
 //!   manifests.
 
 use crate::bench_util::{f64_from_hex_bits, f64_to_hex_bits, json_escape, json_f64_display};
-use crate::codes::zoo::{build, make_decoder, BuiltScheme, DecoderSpec, SchemeSpec};
+use crate::codes::zoo::{build, DecoderSpec, SchemeSpec};
 use crate::config::json::Json;
-use crate::data::LstsqData;
 use crate::error::{Error, Result};
-use crate::gd::{GramCache, SimulatedGcod, StepSize};
 use crate::metrics::Stats;
 use crate::prng::Rng;
-use crate::straggler::{greedy_decode_attack_trace, BernoulliStragglers};
-use crate::sweep::{bernoulli_masks, decoding_error_values, TrialEngine};
+use crate::sweep::TrialEngine;
 use std::collections::BTreeMap;
 use std::fmt;
 use std::path::Path;
+
+// The kernel layer is the extension point; re-exported here because a
+// sweep's identity (`SweepConfig.sweep`) and its runner live together.
+pub use crate::sweep::kernels::{register_kernel, SweepKernel, SweepKind};
 
 /// Version stamped into every shard/merged manifest. [`merge`] (and so
 /// `gcod sweep-merge`) rejects manifests written by a different schema.
@@ -83,11 +90,11 @@ pub const SHARD_KIND: &str = "gcod-sweep-shard";
 pub const MERGED_KIND: &str = "gcod-sweep-merged";
 
 /// Salt for the scheme-construction RNG so the (shared) scheme build
-/// never draws from a trial substream.
-const SCHEME_SALT: u64 = 0x5C4E_4D45_B11D;
-
-/// Salt for the `gd-final` data-generation RNG (shared by all shards).
-const DATA_SALT: u64 = 0xDA7A_6E4E;
+/// never draws from a trial substream. Public because the scheme is
+/// part of the sweep-identity contract (byte-identity oracle tests
+/// rebuild it independently); the data-generation counterpart is
+/// [`crate::sweep::kernels::DATA_SALT`].
+pub const SCHEME_SALT: u64 = 0x5C4E_4D45_B11D;
 
 // ---------------------------------------------------------------------
 // Shard ranges
@@ -170,62 +177,6 @@ pub fn parse_range(s: &str) -> Result<(usize, usize)> {
 // ---------------------------------------------------------------------
 // Sweep identity
 // ---------------------------------------------------------------------
-
-/// Which standard sweep a manifest holds.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum SweepKind {
-    /// Figure-3-style Monte-Carlo decoding error: trial `t` draws a
-    /// Bernoulli(p) straggler mask from substream `t` and records
-    /// |alpha* - 1|^2.
-    DecodeError,
-    /// Figure-4/5-style simulated coded GD: trial `t` runs one full
-    /// deterministic trajectory (straggler seed, block permutation and
-    /// step grid from substream `t`) and records the final
-    /// |theta - theta*|^2. The gradient kernel is selected by the
-    /// `grad` param (`gram` | `streaming` | default `auto`, which
-    /// applies the [`crate::gd::GramCache::pays_off`] flop cut); the
-    /// decoder and GD scratch are chunk-scoped, so `chunk` re-seats
-    /// warm-start state exactly like the decode-error sweep.
-    GdFinal,
-    /// Greedy adversarial curve: trial `t` records the per-block error
-    /// after `t + 1` greedily-chosen stragglers (the trial axis is the
-    /// attack budget). NOTE: the greedy search is inherently sequential
-    /// — a shard recomputes the nested trace from budget 0 up to its
-    /// own `hi` (serially; `threads` is unused), so sharding the budget
-    /// axis only saves the *trailing* budgets' steps, not the prefix.
-    Attack,
-    /// Figure 4 on the real worker-thread cluster: trial `t` is one
-    /// wall-clock-budgeted distributed GD run. Manifests of this kind
-    /// are produced by `bench_fig4_cluster` (the trial values depend on
-    /// real scheduling, so they are *not* bit-reproducible — merge
-    /// validation still applies, the bit-exactness contract does not).
-    Fig4Cluster,
-}
-
-impl SweepKind {
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s {
-            "decode-error" => SweepKind::DecodeError,
-            "gd-final" => SweepKind::GdFinal,
-            "attack" => SweepKind::Attack,
-            "fig4-cluster" => SweepKind::Fig4Cluster,
-            _ => {
-                return Err(Error::msg(format!(
-                    "unknown sweep kind '{s}' (decode-error|gd-final|attack|fig4-cluster)"
-                )))
-            }
-        })
-    }
-
-    pub fn as_str(&self) -> &'static str {
-        match self {
-            SweepKind::DecodeError => "decode-error",
-            SweepKind::GdFinal => "gd-final",
-            SweepKind::Attack => "attack",
-            SweepKind::Fig4Cluster => "fig4-cluster",
-        }
-    }
-}
 
 /// Everything that identifies a sweep — two manifests merge only if all
 /// of this matches (with `p` compared bit-for-bit). `chunk` is part of
@@ -647,9 +598,10 @@ pub fn run_shard(cfg: &SweepConfig, threads: usize, shard: ShardSpec) -> Result<
     run_range(cfg, threads, lo, hi)
 }
 
-/// Run an explicit trial range `[lo, hi)` of a standard sweep. Values
-/// are bit-identical to the corresponding slice of the full `[0, N)`
-/// run for any range, thread count and process placement.
+/// Run an explicit trial range `[lo, hi)` of a standard sweep through
+/// the kernel registered for `cfg.sweep`. Values are bit-identical to
+/// the corresponding slice of the full `[0, N)` run for any range,
+/// thread count and process placement (the [`SweepKernel`] contract).
 pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Result<ShardResult> {
     if lo > hi || hi > cfg.trials {
         return Err(Error::msg(format!(
@@ -662,47 +614,24 @@ pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Res
     if cfg.chunk == 0 {
         return Err(Error::msg("sweep chunk must be >= 1 (it is part of the sweep identity)"));
     }
-    if cfg.sweep == SweepKind::Fig4Cluster {
-        return Err(Error::msg(
-            "fig4-cluster shards are produced by `cargo bench --bench bench_fig4_cluster -- \
-             --shard i/k --out-dir DIR`, not by the standard runner (they need the \
-             worker-thread cluster)",
-        ));
+    let kernel = cfg.sweep.kernel();
+    if let Some(msg) = kernel.external_producer() {
+        return Err(Error::msg(msg));
     }
-    // `grad` is an enum-valued selector like `sweep`/`decoder`: reject
-    // unknown values instead of silently falling through to auto
-    if let Some(g) = cfg.params.get("grad") {
-        if !matches!(g.as_str(), "auto" | "gram" | "streaming") {
-            return Err(Error::msg(format!(
-                "unknown grad kernel '{g}' (auto|gram|streaming)"
-            )));
-        }
-    }
+    kernel.validate(cfg)?;
     let spec = SchemeSpec::parse(&cfg.scheme).map_err(Error::msg)?;
     let dspec = DecoderSpec::parse(&cfg.decoder).map_err(Error::msg)?;
     // every shard rebuilds the identical scheme from the salted seed
     let scheme = build(&spec, &mut Rng::new(cfg.seed ^ SCHEME_SALT));
     let engine = TrialEngine::new(threads, cfg.seed).with_chunk(cfg.chunk);
-    let values = match cfg.sweep {
-        SweepKind::DecodeError => {
-            let m = scheme.n_machines();
-            decoding_error_values(
-                &engine,
-                |_chunk| make_decoder(&scheme, dspec, cfg.p),
-                bernoulli_masks(m, cfg.p),
-                lo,
-                hi,
-            )
-        }
-        SweepKind::GdFinal => gd_final_values(cfg, &scheme, dspec, &engine, lo, hi),
-        SweepKind::Fig4Cluster => unreachable!("rejected above"),
-        SweepKind::Attack => {
-            let dec = make_decoder(&scheme, dspec, cfg.p);
-            let (_, trace) = greedy_decode_attack_trace(dec.as_ref(), &scheme.a, hi);
-            let n = scheme.n_blocks() as f64;
-            trace[lo..hi].iter().map(|e| e / n).collect()
-        }
-    };
+    let values = kernel.run_range(cfg, &scheme, dspec, &engine, lo, hi)?;
+    if values.len() != hi - lo {
+        return Err(Error::msg(format!(
+            "sweep kernel '{}' returned {} values for trial range [{lo}, {hi})",
+            kernel.name(),
+            values.len()
+        )));
+    }
     Ok(ShardResult::from_values(cfg.clone(), lo, hi, values))
 }
 
@@ -710,97 +639,6 @@ pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Res
 /// multi-shard merge must reproduce byte-for-byte).
 pub fn run_full(cfg: &SweepConfig, threads: usize) -> Result<MergedSweep> {
     merge(vec![run_range(cfg, threads, 0, cfg.trials)?])
-}
-
-/// Per-chunk mutable state for the `gd-final` sweep: the decoder (its
-/// scratch and warm-start state carry across the chunk's trials and are
-/// replayed at partial leading chunks, like every other chunk-scoped
-/// sweep) plus the GD scratch and the zero start vector. The Gram/data
-/// sources stay outside: they are immutable pure functions of the
-/// config, so sharing one build across chunks cannot affect bits.
-struct GdChunkCtx<'a> {
-    dec: Box<dyn crate::decode::Decoder + 'a>,
-    scratch: crate::gd::GdScratch,
-    theta0: Vec<f64>,
-}
-
-fn gd_final_values(
-    cfg: &SweepConfig,
-    scheme: &BuiltScheme,
-    dspec: DecoderSpec,
-    engine: &TrialEngine,
-    lo: usize,
-    hi: usize,
-) -> Vec<f64> {
-    // round the point count up to a block multiple (LstsqData requires
-    // n_blocks | N); keep it above dim so theta* stays well-defined
-    let n_points = cfg
-        .param_usize("n-points", 512)
-        .max(cfg.param_usize("dim", 32) + 1)
-        .div_ceil(scheme.n_blocks())
-        * scheme.n_blocks();
-    let dim = cfg.param_usize("dim", 32);
-    let iters = cfg.param_usize("iters", 30);
-    let sigma = cfg.param_f64("sigma", 1.0);
-    let step_c = cfg.param_usize("step-c", 9) as u32;
-    // the dataset is part of the sweep identity: same seed, same data
-    // in every shard
-    let data = LstsqData::generate(
-        n_points,
-        dim,
-        scheme.n_blocks(),
-        sigma,
-        &mut Rng::new(cfg.seed ^ DATA_SALT),
-    );
-    // gradient source: `grad` param = gram | streaming | auto (default).
-    // Auto applies the k <= b flop cut (see GramCache::pays_off) — a
-    // pure function of the config, hence identical in every shard and
-    // thread. The cache itself is immutable and deterministic, so one
-    // build is shared by all chunks/workers without touching the
-    // bit-exactness contract.
-    let use_gram = match cfg.params.get("grad").map(String::as_str) {
-        Some("gram") => true,
-        Some("streaming") => false,
-        _ => GramCache::pays_off(n_points, dim, scheme.n_blocks()),
-    };
-    let cache = if use_gram { Some(GramCache::new(&data)) } else { None };
-    engine.run_range_map(
-        lo,
-        hi,
-        |_chunk| GdChunkCtx {
-            dec: make_decoder(scheme, dspec, cfg.p),
-            scratch: crate::gd::GdScratch::new(),
-            theta0: vec![0.0; dim],
-        },
-        |ctx, _t, rng| {
-            // the trial's randomness (straggler seed, block shuffle)
-            // derives from the trial substream; the decoder and scratch
-            // are chunk-scoped, so values are split-invariant via the
-            // engine's partial-chunk replay
-            let GdChunkCtx { dec, scratch, theta0 } = ctx;
-            let mut strag = BernoulliStragglers::new(cfg.p, rng.next_u64());
-            let rho = rng.permutation(scheme.n_blocks());
-            let mut gd = SimulatedGcod {
-                decoder: dec.as_ref(),
-                stragglers: &mut strag,
-                step: StepSize::simulated_grid(step_c),
-                rho: Some(rho),
-                m: scheme.n_machines(),
-                alpha_scale: 1.0,
-            };
-            match &cache {
-                Some(c) => {
-                    let mut src = c;
-                    gd.run_with(&mut src, theta0, iters, scratch)
-                }
-                None => {
-                    let mut src = &data;
-                    gd.run_with(&mut src, theta0, iters, scratch)
-                }
-            }
-            .final_progress()
-        },
-    )
 }
 
 // ---------------------------------------------------------------------
@@ -1181,14 +1019,17 @@ mod tests {
             SweepKind::GdFinal,
             SweepKind::Attack,
             SweepKind::Fig4Cluster,
+            SweepKind::AdvGd,
         ] {
             assert_eq!(SweepKind::parse(k.as_str()).unwrap(), k);
         }
         assert!(SweepKind::parse("nope").is_err());
         // fig4-cluster is bench-produced: the standard runner refuses it
+        // with the kernel's own message
         let mut c = cfg(4);
         c.sweep = SweepKind::Fig4Cluster;
-        assert!(run_range(&c, 1, 0, 4).is_err());
+        let err = run_range(&c, 1, 0, 4).unwrap_err();
+        assert!(format!("{err}").contains("bench_fig4_cluster"), "{err}");
     }
 
     #[test]

@@ -125,6 +125,22 @@ fn kill_mid_shard_is_bit_exact_for_all_sweep_kinds() {
         params: BTreeMap::new(),
     };
     assert_faulted_dispatch_bit_exact(&attack, "kill_attack", Some(0));
+
+    // adv-gd (greedy adversarial noise floor; new kernel, same contract)
+    let mut adv = SweepConfig {
+        sweep: SweepKind::AdvGd,
+        scheme: "graph-rr:8,3".into(),
+        decoder: "optimal".into(),
+        p: 0.25,
+        seed: 3,
+        trials: 12,
+        chunk: 4,
+        params: BTreeMap::new(),
+    };
+    adv.params.insert("n-points".into(), "64".into());
+    adv.params.insert("dim".into(), "8".into());
+    adv.params.insert("iters".into(), "8".into());
+    assert_faulted_dispatch_bit_exact(&adv, "kill_adv_gd", Some(0));
 }
 
 /// A worker that never heartbeats: its first job sleeps far past the
@@ -242,6 +258,92 @@ fn cli_sweep_launch_with_kill_matches_single_process_file() {
     // sanity: it is a merged manifest of the full sweep
     let merged = shard::MergedSweep::parse(&launched).unwrap();
     assert_eq!(merged.values.len(), 200);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Checkpoint/resume through the CLI: a launch that dies of retry
+/// exhaustion (injected kill, zero retry budget) leaves its journal
+/// behind; `--resume` recomputes only the uncovered ranges and the
+/// merged file is byte-identical to the single-process path.
+#[test]
+fn cli_journal_resume_after_failed_launch() {
+    let dir = tmp_dir("cli_resume");
+    let shard_path = dir.join("single_shard.json");
+    let single_path = dir.join("single_merged.json");
+    let resumed_path = dir.join("resumed.json");
+    let journal = dir.join("launch.journal");
+
+    run_ok(Command::new(gcod_bin()).arg("sweep-shard").args(CLI_SWEEP_ARGS).args([
+        "--threads",
+        "2",
+        "--shard",
+        "0/1",
+        "--out",
+        shard_path.to_str().unwrap(),
+    ]));
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        shard_path.to_str().unwrap(),
+        "--out",
+        single_path.to_str().unwrap(),
+    ]));
+
+    // first launch: worker 0 slowed then killed mid-range with a zero
+    // retry budget — the launch must fail, banking whatever the healthy
+    // worker completed in the journal
+    let out = Command::new(gcod_bin())
+        .arg("sweep-launch")
+        .args(CLI_SWEEP_ARGS)
+        .args([
+            "--workers",
+            "2",
+            "--grain",
+            "32",
+            "--hang-worker",
+            "0",
+            "--hang-ms",
+            "300",
+            "--kill-worker",
+            "0",
+            "--kill-after-ms",
+            "50",
+            "--max-retries",
+            "0",
+            "--journal",
+            journal.to_str().unwrap(),
+            "--out",
+            dir.join("failed.json").to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "launch with max-retries 0 and an injected kill must fail\nstdout: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--resume"), "missing resume hint in stderr: {stderr}");
+    assert!(journal.is_file(), "journal must survive the failed launch");
+
+    // resume with a healthy pool: completes and matches the
+    // single-process bytes; the journal is consumed
+    run_ok(Command::new(gcod_bin()).arg("sweep-launch").args(CLI_SWEEP_ARGS).args([
+        "--workers",
+        "2",
+        "--grain",
+        "32",
+        "--resume",
+        journal.to_str().unwrap(),
+        "--out",
+        resumed_path.to_str().unwrap(),
+    ]));
+    assert_eq!(
+        std::fs::read_to_string(&single_path).unwrap(),
+        std::fs::read_to_string(&resumed_path).unwrap(),
+        "resumed launch output != single-process merge"
+    );
+    assert!(!journal.is_file(), "journal must be cleaned up after a successful resume");
     let _ = std::fs::remove_dir_all(&dir);
 }
 

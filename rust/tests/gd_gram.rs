@@ -52,6 +52,33 @@ fn gram_matches_streaming_at_random_shapes() {
     }
 }
 
+/// The engine-parallel Gram build (PR 4 follow-up: per-block SYRKs
+/// fanned across scoped workers) is byte-identical to the serial build
+/// for any thread count — blocks are independent and each worker owns a
+/// disjoint output slice, so scheduling cannot reorder any float op.
+#[test]
+fn parallel_gram_build_matches_serial_bitwise() {
+    let mut rng = Rng::new(0xBEE);
+    for case in 0..10 {
+        let blocks = 1 + rng.below(10);
+        let b = 2 + rng.below(16);
+        let dim = 1 + rng.below(12);
+        let data = LstsqData::generate(blocks * b, dim, blocks, 0.6, &mut rng);
+        let serial = GramCache::new(&data);
+        for threads in [2usize, 5, 8] {
+            let par = GramCache::new_parallel(&data, threads);
+            for i in 0..blocks {
+                for (x, y) in par.block_gram(i).iter().zip(serial.block_gram(i)) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "case {case} gram blk {i} t={threads}");
+                }
+                for (x, y) in par.block_c(i).iter().zip(serial.block_c(i)) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "case {case} c blk {i} t={threads}");
+                }
+            }
+        }
+    }
+}
+
 fn gd_cfg(decoder: &str, trials: usize, chunk: usize, grad: Option<&str>) -> SweepConfig {
     let mut params = BTreeMap::new();
     // 256 points over 8 blocks: b = 32 >= dim = 8, so `auto` picks gram

@@ -1,0 +1,454 @@
+//! Refactor-safety suite for the pluggable sweep-kernel architecture.
+//!
+//! The `SweepKind` enum + match-driven runner became an open kernel
+//! registry; the contracts pinned here:
+//!
+//! * **Legacy oracle byte-identity.** For each legacy kind
+//!   (`decode-error`, `gd-final`, `attack`) an *inline replica of the
+//!   pre-refactor closed-form runner* — written against the public
+//!   engine/zoo/gd/straggler APIs, with no sweep-kernel involvement —
+//!   must produce manifests byte-identical to `shard::run_range`
+//!   through the registry, on full ranges and mid-chunk subranges.
+//!   This is the strongest check available in-tree: the old code path,
+//!   resurrected independently, arbitrates the new one.
+//! * **Golden fixtures.** Rendered manifests are pinned under
+//!   `tests/fixtures/golden/`; once blessed (first run, or
+//!   `GCOD_BLESS_GOLDEN=1`), any byte drift across commits fails — the
+//!   cross-commit complement to the in-commit oracles. `SHARD_SCHEMA`
+//!   is asserted unbumped.
+//! * **Registry hygiene.** Unknown kinds are rejected at parse;
+//!   duplicate registrations are refused; a custom kernel registered at
+//!   runtime shards and merges bit-exactly with zero changes to any
+//!   other layer. (Dispatching a custom kernel over subprocesses
+//!   additionally requires it to be registered in the worker binary —
+//!   see the README's worked example.)
+//! * **`adv-gd` determinism + physics.** 1 ≡ 8 threads and 1 ≡ 4
+//!   shards to the merged JSON byte (including the warm-started LSQR
+//!   decoder), and the empirical noise floor grows with the adversarial
+//!   budget (the paper's adversarial-regime claim).
+
+use gcod::codes::zoo::{build, make_decoder, BuiltScheme, DecoderSpec, SchemeSpec};
+use gcod::data::LstsqData;
+use gcod::error::Result;
+use gcod::gd::{GdScratch, GramCache, SimulatedGcod, StepSize};
+use gcod::prng::Rng;
+use gcod::straggler::{greedy_decode_attack_trace, BernoulliStragglers};
+use gcod::sweep::kernels::{register_kernel, SweepKernel, DATA_SALT};
+use gcod::sweep::shard::{
+    self, ShardResult, ShardSpec, SweepConfig, SweepKind, SCHEME_SALT, SHARD_SCHEMA,
+};
+use gcod::sweep::{bernoulli_masks, decoding_error_values, TrialEngine};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn cfg(kind: SweepKind, scheme: &str, decoder: &str, trials: usize, chunk: usize) -> SweepConfig {
+    SweepConfig {
+        sweep: kind,
+        scheme: scheme.into(),
+        decoder: decoder.into(),
+        p: 0.25,
+        seed: 7,
+        trials,
+        chunk,
+        params: BTreeMap::new(),
+    }
+}
+
+/// Rebuild the scheme + engine exactly as the runner does (public
+/// salts: the sweep-identity contract).
+fn setup(cfg: &SweepConfig, threads: usize) -> (BuiltScheme, DecoderSpec, TrialEngine) {
+    let spec = SchemeSpec::parse(&cfg.scheme).unwrap();
+    let dspec = DecoderSpec::parse(&cfg.decoder).unwrap();
+    let scheme = build(&spec, &mut Rng::new(cfg.seed ^ SCHEME_SALT));
+    let engine = TrialEngine::new(threads, cfg.seed).with_chunk(cfg.chunk);
+    (scheme, dspec, engine)
+}
+
+// ---------------------------------------------------------------------
+// Inline replicas of the pre-refactor `shard::run_range` match arms
+// ---------------------------------------------------------------------
+
+fn oracle_decode_error(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Vec<f64> {
+    let (scheme, dspec, engine) = setup(cfg, threads);
+    let m = scheme.n_machines();
+    decoding_error_values(
+        &engine,
+        |_chunk| make_decoder(&scheme, dspec, cfg.p),
+        bernoulli_masks(m, cfg.p),
+        lo,
+        hi,
+    )
+}
+
+fn oracle_gd_final(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Vec<f64> {
+    let (scheme, dspec, engine) = setup(cfg, threads);
+    let n_points = cfg
+        .param_usize("n-points", 512)
+        .max(cfg.param_usize("dim", 32) + 1)
+        .div_ceil(scheme.n_blocks())
+        * scheme.n_blocks();
+    let dim = cfg.param_usize("dim", 32);
+    let iters = cfg.param_usize("iters", 30);
+    let sigma = cfg.param_f64("sigma", 1.0);
+    let step_c = cfg.param_usize("step-c", 9) as u32;
+    let data = LstsqData::generate(
+        n_points,
+        dim,
+        scheme.n_blocks(),
+        sigma,
+        &mut Rng::new(cfg.seed ^ DATA_SALT),
+    );
+    let use_gram = match cfg.params.get("grad").map(String::as_str) {
+        Some("gram") => true,
+        Some("streaming") => false,
+        _ => GramCache::pays_off(n_points, dim, scheme.n_blocks()),
+    };
+    // the pre-refactor build was serial; the kernel now builds in
+    // parallel, so this doubles as a serial ≡ parallel cross-check
+    let cache = use_gram.then(|| GramCache::new(&data));
+    struct Ctx<'a> {
+        dec: Box<dyn gcod::decode::Decoder + 'a>,
+        scratch: GdScratch,
+        theta0: Vec<f64>,
+    }
+    engine.run_range_map(
+        lo,
+        hi,
+        |_chunk| Ctx {
+            dec: make_decoder(&scheme, dspec, cfg.p),
+            scratch: GdScratch::new(),
+            theta0: vec![0.0; dim],
+        },
+        |ctx, _t, rng| {
+            let Ctx { dec, scratch, theta0 } = ctx;
+            let mut strag = BernoulliStragglers::new(cfg.p, rng.next_u64());
+            let rho = rng.permutation(scheme.n_blocks());
+            let mut gd = SimulatedGcod {
+                decoder: dec.as_ref(),
+                stragglers: &mut strag,
+                step: StepSize::simulated_grid(step_c),
+                rho: Some(rho),
+                m: scheme.n_machines(),
+                alpha_scale: 1.0,
+            };
+            match &cache {
+                Some(c) => {
+                    let mut src = c;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+                None => {
+                    let mut src = &data;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+            }
+            .final_progress()
+        },
+    )
+}
+
+fn oracle_attack(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Vec<f64> {
+    let (scheme, dspec, _engine) = setup(cfg, threads);
+    let dec = make_decoder(&scheme, dspec, cfg.p);
+    let (_, trace) = greedy_decode_attack_trace(dec.as_ref(), &scheme.a, hi);
+    let n = scheme.n_blocks() as f64;
+    trace[lo..hi].iter().map(|e| e / n).collect()
+}
+
+fn assert_oracle_matches(
+    cfg: &SweepConfig,
+    oracle: impl Fn(&SweepConfig, usize, usize, usize) -> Vec<f64>,
+    label: &str,
+) {
+    // full range and a mid-chunk subrange, serial and threaded
+    let mid = (cfg.chunk / 2).max(1);
+    for (threads, lo, hi) in
+        [(1usize, 0usize, cfg.trials), (4, 0, cfg.trials), (2, mid, cfg.trials - 1)]
+    {
+        let via_registry = shard::run_range(cfg, threads, lo, hi).unwrap();
+        let via_oracle =
+            ShardResult::from_values(cfg.clone(), lo, hi, oracle(cfg, threads, lo, hi));
+        assert_eq!(
+            via_registry.render(),
+            via_oracle.render(),
+            "{label}: registry kernel diverged from the pre-refactor oracle \
+             (threads={threads}, range [{lo}, {hi}))"
+        );
+    }
+}
+
+#[test]
+fn decode_error_kernel_matches_legacy_oracle() {
+    // stateless linear-time graph decoder
+    assert_oracle_matches(
+        &cfg(SweepKind::DecodeError, "graph-rr:16,3", "optimal", 40, 8),
+        oracle_decode_error,
+        "decode-error/optimal",
+    );
+    // stateful warm-started LSQR decoder (chunk-scoped warm state)
+    assert_oracle_matches(
+        &cfg(SweepKind::DecodeError, "expander:12,3", "optimal-lsqr", 30, 8),
+        oracle_decode_error,
+        "decode-error/optimal-lsqr",
+    );
+}
+
+#[test]
+fn gd_final_kernel_matches_legacy_oracle() {
+    let mut gram = cfg(SweepKind::GdFinal, "graph-rr:8,3", "optimal", 12, 4);
+    gram.params.insert("n-points".into(), "64".into());
+    gram.params.insert("dim".into(), "8".into());
+    gram.params.insert("iters".into(), "8".into());
+    assert_oracle_matches(&gram, oracle_gd_final, "gd-final/gram(auto)");
+
+    let mut streaming = gram.clone();
+    streaming.params.insert("grad".into(), "streaming".into());
+    streaming.decoder = "optimal-lsqr".into();
+    assert_oracle_matches(&streaming, oracle_gd_final, "gd-final/streaming+lsqr");
+}
+
+#[test]
+fn attack_kernel_matches_legacy_oracle() {
+    assert_oracle_matches(
+        &cfg(SweepKind::Attack, "graph-rr:12,3", "optimal", 8, 4),
+        oracle_attack,
+        "attack/optimal",
+    );
+}
+
+// ---------------------------------------------------------------------
+// Golden fixtures
+// ---------------------------------------------------------------------
+
+/// Compare `rendered` against the committed fixture, blessing it on
+/// first run (or under `GCOD_BLESS_GOLDEN=1`). See
+/// `tests/fixtures/golden/README.md`.
+fn assert_golden(name: &str, rendered: &str) {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/golden");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(name);
+    if std::env::var("GCOD_BLESS_GOLDEN").is_ok() || !path.is_file() {
+        std::fs::write(&path, rendered).unwrap();
+        eprintln!("blessed golden fixture {} ({} bytes)", path.display(), rendered.len());
+        return;
+    }
+    let want = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(
+        want,
+        rendered,
+        "golden fixture {} diverged — per-trial sweep bytes are a cross-commit \
+         contract; if the change is intentional, bump SHARD_SCHEMA and re-bless \
+         with GCOD_BLESS_GOLDEN=1",
+        path.display()
+    );
+}
+
+#[test]
+fn schema_version_is_frozen() {
+    // the refactor must not bump the manifest schema: all four legacy
+    // kinds render schema-3 manifests through the registry
+    assert_eq!(SHARD_SCHEMA, 3, "SHARD_SCHEMA changed — golden fixtures are now stale");
+}
+
+#[test]
+fn golden_manifests_for_all_legacy_kinds() {
+    // decode-error
+    let de = cfg(SweepKind::DecodeError, "graph-rr:16,3", "optimal", 40, 8);
+    // gd-final (gram-auto shape)
+    let mut gd = cfg(SweepKind::GdFinal, "graph-rr:8,3", "optimal", 12, 4);
+    gd.params.insert("n-points".into(), "64".into());
+    gd.params.insert("dim".into(), "8".into());
+    gd.params.insert("iters".into(), "8".into());
+    // attack
+    let atk = cfg(SweepKind::Attack, "graph-rr:12,3", "optimal", 8, 4);
+    for (c, name) in [
+        (&de, "sweep_decode_error.json"),
+        (&gd, "sweep_gd_final.json"),
+        (&atk, "sweep_attack.json"),
+    ] {
+        let full = shard::run_range(c, 2, 0, c.trials).unwrap();
+        assert_golden(name, &full.render());
+        // the merged rendering of a 3-shard split re-merges to the
+        // same golden bytes as the single-shard merge
+        let shards: Vec<_> = (0..3)
+            .map(|i| shard::run_shard(c, 2, ShardSpec::new(i, 3).unwrap()).unwrap())
+            .collect();
+        let merged = shard::merge(shards).unwrap();
+        let single = shard::merge(vec![full]).unwrap();
+        assert_eq!(merged.render(), single.render(), "{name}: 3-shard merge bytes");
+        assert_golden(&name.replace("sweep_", "merged_"), &merged.render());
+    }
+
+    // fig4-cluster manifests come from the bench; pin the rendering on
+    // a synthetic (deterministic) result so the format is golden too
+    let f4 = cfg(SweepKind::Fig4Cluster, "graph-rr:16,3", "optimal", 4, 2);
+    let synth = ShardResult::from_values(f4, 0, 4, vec![0.5, 0.25, 0.125, 1.0 / 3.0]);
+    assert_golden("sweep_fig4_cluster.json", &synth.render());
+
+    // adv-gd: new in this schema, golden from birth
+    let mut adv = cfg(SweepKind::AdvGd, "graph-rr:8,3", "optimal", 8, 4);
+    adv.params.insert("n-points".into(), "64".into());
+    adv.params.insert("dim".into(), "8".into());
+    adv.params.insert("iters".into(), "8".into());
+    let full = shard::run_range(&adv, 2, 0, 8).unwrap();
+    assert_golden("sweep_adv_gd.json", &full.render());
+}
+
+// ---------------------------------------------------------------------
+// Registry hygiene + the "add your own sweep kind" contract
+// ---------------------------------------------------------------------
+
+/// The README's worked example, verbatim in spirit: a custom kernel
+/// whose chunk-scoped state is a running checksum (so warm-state replay
+/// is load-bearing), registered at runtime, sharded and merged
+/// bit-exactly with no changes to any other layer.
+struct ParityKernel;
+
+impl SweepKernel for ParityKernel {
+    fn name(&self) -> &'static str {
+        "golden-parity"
+    }
+
+    fn run_range(
+        &self,
+        _cfg: &SweepConfig,
+        scheme: &BuiltScheme,
+        _dspec: DecoderSpec,
+        engine: &TrialEngine,
+        lo: usize,
+        hi: usize,
+    ) -> Result<Vec<f64>> {
+        let m = scheme.n_machines() as f64;
+        Ok(engine.run_range_map(
+            lo,
+            hi,
+            // chunk-scoped state: a checksum that carries across the
+            // chunk's trials — split-invariance requires the engine's
+            // partial-chunk replay
+            |_chunk| 0u64,
+            |acc, t, rng| {
+                *acc = acc.wrapping_add(rng.next_u64()).wrapping_add(t as u64);
+                (*acc % 4096) as f64 / m
+            },
+        ))
+    }
+}
+
+#[test]
+fn registered_kernel_shards_and_merges_bit_exact() {
+    let kind = register_kernel(Box::new(ParityKernel)).unwrap();
+    assert_eq!(kind, SweepKind::parse("golden-parity").unwrap());
+    // duplicate registration is refused
+    assert!(register_kernel(Box::new(ParityKernel)).is_err());
+
+    let c = cfg(kind, "graph-rr:12,3", "optimal", 50, 8);
+    let single = shard::run_full(&c, 1).unwrap();
+    // thread count is free
+    assert_eq!(shard::run_full(&c, 8).unwrap().render(), single.render());
+    // mid-chunk shard splits replay warm state and merge to the byte
+    let shards: Vec<_> = (0..4)
+        .map(|i| shard::run_shard(&c, 2, ShardSpec::new(i, 4).unwrap()).unwrap())
+        .collect();
+    assert_eq!(shard::merge(shards).unwrap().render(), single.render());
+    // manifests of the custom kind round-trip
+    let rt = ShardResult::parse(&shard::run_range(&c, 1, 3, 17).unwrap().render()).unwrap();
+    assert_eq!((rt.lo, rt.hi), (3, 17));
+    assert_eq!(rt.config.sweep, kind);
+}
+
+#[test]
+fn unknown_kind_is_rejected_everywhere() {
+    assert!(SweepKind::parse("no-such-kernel").is_err());
+    // a manifest naming an unregistered kernel fails to parse
+    let c = cfg(SweepKind::DecodeError, "graph-rr:12,3", "optimal", 4, 2);
+    let text = shard::run_range(&c, 1, 0, 4).unwrap().render();
+    let forged = text.replace("\"sweep\": \"decode-error\"", "\"sweep\": \"no-such-kernel\"");
+    let err = ShardResult::parse(&forged).unwrap_err();
+    assert!(format!("{err}").contains("unknown sweep kind"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// adv-gd: determinism + the noise-floor claim
+// ---------------------------------------------------------------------
+
+fn adv_cfg(decoder: &str, budget: Option<usize>) -> SweepConfig {
+    let mut c = cfg(SweepKind::AdvGd, "graph-rr:8,3", decoder, 24, 4);
+    c.params.insert("n-points".into(), "64".into());
+    c.params.insert("dim".into(), "8".into());
+    c.params.insert("iters".into(), "10".into());
+    // conservative step grid: lambda_max(X^T X) ~ N/k = 8 here, so the
+    // default c = 9 can overshoot; c = 0 keeps every trajectory stable
+    // (bit-exactness tests don't care, the noise-floor physics does)
+    c.params.insert("step-c".into(), "0".into());
+    if let Some(b) = budget {
+        c.params.insert("budget".into(), b.to_string());
+    }
+    c
+}
+
+/// 1 ≡ 8 threads and 1 ≡ 4 shards to the merged JSON byte, on both the
+/// stateless graph decoder and the warm-started LSQR decoder (whose
+/// chunk-scoped state exercises the replay contract), with the 24/4/4
+/// split landing mid-chunk.
+#[test]
+fn adv_gd_threads_and_shards_bit_exact() {
+    for decoder in ["optimal", "optimal-lsqr"] {
+        let c = adv_cfg(decoder, None);
+        let t1 = shard::run_full(&c, 1).unwrap();
+        let t8 = shard::run_full(&c, 8).unwrap();
+        assert_eq!(t1.render(), t8.render(), "adv-gd threads 1 vs 8 ({decoder})");
+        let shards: Vec<_> = (0..4)
+            .map(|i| shard::run_shard(&c, 2, ShardSpec::new(i, 4).unwrap()).unwrap())
+            .collect();
+        let merged = shard::merge(shards).unwrap();
+        assert_eq!(t1.render(), merged.render(), "adv-gd 1 vs 4 shards ({decoder})");
+    }
+}
+
+/// The paper's adversarial-regime claim, empirically: GD under a
+/// committed greedy adversarial mask converges down to a noise floor
+/// that grows with the adversarial budget. Budget 0 is plain coded GD
+/// (no stragglers — near-exact convergence); a large budget leaves a
+/// markedly higher floor.
+#[test]
+fn adv_gd_noise_floor_grows_with_budget() {
+    let run = |budget: usize| {
+        let mut c = adv_cfg("optimal", Some(budget));
+        c.params.insert("iters".into(), "40".into());
+        let merged = shard::run_full(&c, 2).unwrap();
+        assert!(
+            merged.values.iter().all(|v| v.is_finite() && *v >= 0.0),
+            "budget {budget}: non-finite optimality gap"
+        );
+        merged.stats.mean()
+    };
+    let none = run(0); // plain coded GD: converges toward theta*
+    let mild = run(3); // the default floor(p*m) = floor(0.25 * 12)
+    let heavy = run(6); // half the machines
+    assert!(
+        heavy > none * 10.0,
+        "adversarial floor did not rise: none={none:e} mild={mild:e} heavy={heavy:e}"
+    );
+    assert!(mild > none, "budget 3 left no floor: none={none:e} mild={mild:e}");
+    assert!(
+        heavy >= mild * 0.5,
+        "floor collapsed with budget: mild={mild:e} heavy={heavy:e}"
+    );
+}
+
+/// adv-gd param validation: garbage budgets and grad spellings are
+/// rejected before any work happens.
+#[test]
+fn adv_gd_validates_params() {
+    let mut c = adv_cfg("optimal", None);
+    c.params.insert("budget".into(), "many".into());
+    let err = shard::run_range(&c, 1, 0, 4).unwrap_err();
+    assert!(format!("{err}").contains("bad budget"), "{err}");
+    let mut c = adv_cfg("optimal", Some(3));
+    c.params.insert("grad".into(), "graam".into());
+    let err = shard::run_range(&c, 1, 0, 4).unwrap_err();
+    assert!(format!("{err}").contains("grad kernel"), "{err}");
+    c.params.insert("grad".into(), "streaming".into());
+    c.params.insert("precond".into(), "maybe".into());
+    let err = shard::run_range(&c, 1, 0, 4).unwrap_err();
+    assert!(format!("{err}").contains("precond"), "{err}");
+}
