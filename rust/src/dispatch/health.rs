@@ -1,0 +1,355 @@
+//! Per-worker health scoring, respawn backoff and quarantine.
+//!
+//! The dispatcher's retry machinery treats every failure as transient
+//! and every worker as interchangeable; this module adds the memory
+//! that turns repeated offenses into policy:
+//!
+//! * every worker accumulates a scorecard ([`WorkerHealth`]) —
+//!   completions, failures, timeouts, audit verdicts, lease latency
+//!   (Welford [`Stats`] + a recency-weighted [`Ewma`]);
+//! * a failed worker is not immediately rescheduled: it backs off
+//!   exponentially (`base * 2^(consecutive-1)`, capped, with
+//!   deterministic seeded jitter so a pool of crashed workers doesn't
+//!   thunder back in lockstep);
+//! * a worker condemned by the result audit [`HealthConfig::quarantine_after`]
+//!   times is **quarantined as byzantine**: never scheduled again, and
+//!   the dispatcher invalidates + recomputes everything it banked.
+//!   Optionally ([`HealthConfig::quarantine_after_failures`]) a
+//!   crash-looping worker is quarantined as unreliable — its banked
+//!   results stand (they passed structural validation; crashing loses
+//!   work, it doesn't forge it);
+//! * when the quarantined pool can no longer cover the sweep, the
+//!   dispatcher fails loudly with [`HealthTracker::post_mortem`] — a
+//!   per-worker table of what happened — instead of burning the global
+//!   retry budget on workers that can only fail.
+
+use crate::metrics::{Ewma, Stats, Table};
+use crate::prng;
+use std::time::{Duration, Instant};
+
+use super::queue::WorkerId;
+
+/// Why a worker was removed from scheduling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuarantineReason {
+    /// condemned by the result audit: its manifests cannot be trusted,
+    /// banked contributions are invalidated and recomputed
+    Byzantine,
+    /// crash/timeout loop: banked results stand, but no new leases
+    Unreliable,
+}
+
+impl QuarantineReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            QuarantineReason::Byzantine => "byzantine",
+            QuarantineReason::Unreliable => "unreliable",
+        }
+    }
+}
+
+/// Health policy knobs (part of [`super::DispatchConfig`]).
+#[derive(Clone, Debug)]
+pub struct HealthConfig {
+    /// audit condemnations before a worker is quarantined as byzantine
+    pub quarantine_after: usize,
+    /// consecutive failures/timeouts before a worker is quarantined as
+    /// unreliable (0 = never; the per-range retry budget governs alone)
+    pub quarantine_after_failures: usize,
+    /// first respawn backoff after a failure (ZERO disables backoff)
+    pub backoff_base: Duration,
+    /// cap on the exponential backoff
+    pub backoff_max: Duration,
+    /// seed for the deterministic backoff jitter
+    pub jitter_seed: u64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        Self {
+            quarantine_after: 2,
+            quarantine_after_failures: 0,
+            backoff_base: Duration::ZERO,
+            backoff_max: Duration::from_secs(5),
+            jitter_seed: 0xBAC0_FF,
+        }
+    }
+}
+
+/// One worker's scorecard.
+#[derive(Clone, Debug)]
+pub struct WorkerHealth {
+    pub completions: u64,
+    pub failures: u64,
+    pub timeouts: u64,
+    pub audit_passes: u64,
+    /// audit condemnations (this worker was the guilty side of a
+    /// mismatch, per tiebreak attribution)
+    pub audit_failures: u64,
+    pub consecutive_failures: u32,
+    pub quarantined: Option<QuarantineReason>,
+    /// completed-lease wall time (seconds)
+    pub lease_secs: Stats,
+    /// recency-weighted lease seconds (a formerly-slow worker that
+    /// recovered scores well again)
+    pub lease_secs_ewma: Ewma,
+    pub last_error: Option<String>,
+    backoff_until: Option<Instant>,
+}
+
+impl WorkerHealth {
+    fn new() -> Self {
+        Self {
+            completions: 0,
+            failures: 0,
+            timeouts: 0,
+            audit_passes: 0,
+            audit_failures: 0,
+            consecutive_failures: 0,
+            quarantined: None,
+            lease_secs: Stats::new(),
+            lease_secs_ewma: Ewma::new(0.3),
+            last_error: None,
+            backoff_until: None,
+        }
+    }
+}
+
+/// Scorecards plus the policy that acts on them. The dispatcher calls
+/// the `record_*` methods from its event loop and consults
+/// [`HealthTracker::available`] before handing out work.
+#[derive(Debug)]
+pub struct HealthTracker {
+    cfg: HealthConfig,
+    workers: Vec<WorkerHealth>,
+}
+
+impl HealthTracker {
+    pub fn new(n: usize, cfg: HealthConfig) -> Self {
+        Self { cfg, workers: (0..n).map(|_| WorkerHealth::new()).collect() }
+    }
+
+    pub fn worker(&self, w: WorkerId) -> &WorkerHealth {
+        &self.workers[w]
+    }
+
+    /// Ready for new work: not quarantined, backoff elapsed.
+    pub fn available(&self, w: WorkerId, now: Instant) -> bool {
+        let h = &self.workers[w];
+        h.quarantined.is_none() && h.backoff_until.is_none_or(|t| now >= t)
+    }
+
+    /// Not quarantined (may still be backing off — i.e. will become
+    /// available again without intervention).
+    pub fn eligible(&self, w: WorkerId) -> bool {
+        self.workers[w].quarantined.is_none()
+    }
+
+    pub fn all_quarantined(&self) -> bool {
+        self.workers.iter().all(|h| h.quarantined.is_some())
+    }
+
+    pub fn record_completion(&mut self, w: WorkerId, lease_wall: Duration) {
+        let h = &mut self.workers[w];
+        h.completions += 1;
+        h.consecutive_failures = 0;
+        h.backoff_until = None;
+        h.lease_secs.push(lease_wall.as_secs_f64());
+        h.lease_secs_ewma.observe(lease_wall.as_secs_f64());
+    }
+
+    pub fn record_audit_pass(&mut self, w: WorkerId) {
+        self.workers[w].audit_passes += 1;
+    }
+
+    /// An audit condemned this worker. Returns `Some(Byzantine)` when
+    /// this tips it over the quarantine threshold (first time only).
+    pub fn record_audit_failure(&mut self, w: WorkerId, msg: &str) -> Option<QuarantineReason> {
+        let threshold = self.cfg.quarantine_after;
+        let h = &mut self.workers[w];
+        h.audit_failures += 1;
+        h.last_error = Some(msg.to_string());
+        if h.quarantined.is_none() && threshold > 0 && h.audit_failures as usize >= threshold {
+            h.quarantined = Some(QuarantineReason::Byzantine);
+            return Some(QuarantineReason::Byzantine);
+        }
+        None
+    }
+
+    pub fn record_failure(&mut self, w: WorkerId, now: Instant, msg: &str) -> Option<QuarantineReason> {
+        self.workers[w].failures += 1;
+        self.offense(w, now, msg)
+    }
+
+    pub fn record_timeout(&mut self, w: WorkerId, now: Instant, msg: &str) -> Option<QuarantineReason> {
+        self.workers[w].timeouts += 1;
+        self.offense(w, now, msg)
+    }
+
+    /// Shared crash/timeout bookkeeping: exponential backoff with
+    /// deterministic jitter, and the optional unreliable-quarantine.
+    fn offense(&mut self, w: WorkerId, now: Instant, msg: &str) -> Option<QuarantineReason> {
+        let cfg = self.cfg.clone();
+        let h = &mut self.workers[w];
+        h.consecutive_failures += 1;
+        h.last_error = Some(msg.to_string());
+        if cfg.quarantine_after_failures > 0
+            && h.quarantined.is_none()
+            && h.consecutive_failures as usize >= cfg.quarantine_after_failures
+        {
+            h.quarantined = Some(QuarantineReason::Unreliable);
+            return Some(QuarantineReason::Unreliable);
+        }
+        if cfg.backoff_base > Duration::ZERO {
+            let shift = (h.consecutive_failures - 1).min(16);
+            let raw = cfg.backoff_base.saturating_mul(1u32 << shift).min(cfg.backoff_max);
+            // jitter in [1.0, 1.5): deterministic in (seed, worker,
+            // offense count) so replayed runs back off identically
+            let key = (w as u64) << 32 | u64::from(h.consecutive_failures);
+            let jitter = 1.0 + 0.5 * prng::substream(cfg.jitter_seed, key).f64();
+            h.backoff_until = Some(now + raw.mul_f64(jitter));
+        }
+        None
+    }
+
+    /// How long until `w` leaves backoff (None = available now or
+    /// quarantined). Lets the dispatcher's idle sleep stay short.
+    pub fn backoff_remaining(&self, w: WorkerId, now: Instant) -> Option<Duration> {
+        let h = &self.workers[w];
+        match (h.quarantined, h.backoff_until) {
+            (None, Some(t)) if t > now => Some(t - now),
+            _ => None,
+        }
+    }
+
+    /// Final scorecards for the dispatch report.
+    pub fn into_workers(self) -> Vec<WorkerHealth> {
+        self.workers
+    }
+
+    /// Per-worker post-mortem table — rendered into the loud failure
+    /// when the surviving pool can no longer cover the sweep.
+    pub fn post_mortem(&self) -> String {
+        let mut t = Table::new(&[
+            "worker", "state", "done", "fail", "timeout", "audit+", "audit-", "mean lease(s)",
+            "last error",
+        ]);
+        for (w, h) in self.workers.iter().enumerate() {
+            t.row(vec![
+                w.to_string(),
+                h.quarantined.map_or("active", QuarantineReason::as_str).to_string(),
+                h.completions.to_string(),
+                h.failures.to_string(),
+                h.timeouts.to_string(),
+                h.audit_passes.to_string(),
+                h.audit_failures.to_string(),
+                if h.lease_secs.count() == 0 {
+                    "-".into()
+                } else {
+                    format!("{:.3}", h.lease_secs.mean())
+                },
+                h.last_error.clone().unwrap_or_default(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(base_ms: u64) -> HealthConfig {
+        HealthConfig {
+            quarantine_after: 2,
+            quarantine_after_failures: 0,
+            backoff_base: Duration::from_millis(base_ms),
+            backoff_max: Duration::from_millis(800),
+            jitter_seed: 7,
+        }
+    }
+
+    #[test]
+    fn backoff_grows_exponentially_with_bounded_jitter() {
+        let mut t = HealthTracker::new(1, cfg(100));
+        let now = Instant::now();
+        let mut prev = Duration::ZERO;
+        for k in 0..3u32 {
+            assert!(t.record_failure(0, now, "boom").is_none());
+            let left = t.backoff_remaining(0, now).expect("backoff armed");
+            let raw = Duration::from_millis(100 * (1 << k));
+            assert!(left >= raw, "offense {k}: {left:?} < base {raw:?}");
+            assert!(left < raw.mul_f64(1.5), "offense {k}: jitter out of range: {left:?}");
+            assert!(left > prev, "backoff must grow: {left:?} <= {prev:?}");
+            assert!(!t.available(0, now));
+            assert!(t.available(0, now + Duration::from_secs(2)));
+            prev = left;
+        }
+        // the cap holds even deep into a crash loop
+        for _ in 0..20 {
+            t.record_failure(0, now, "boom");
+        }
+        let left = t.backoff_remaining(0, now).unwrap();
+        assert!(left <= Duration::from_millis(800).mul_f64(1.5), "{left:?}");
+        // a completion resets the streak and clears the backoff
+        t.record_completion(0, Duration::from_millis(10));
+        assert!(t.available(0, now));
+        assert_eq!(t.worker(0).consecutive_failures, 0);
+    }
+
+    #[test]
+    fn backoff_jitter_is_deterministic() {
+        let now = Instant::now();
+        let run = || {
+            let mut t = HealthTracker::new(2, cfg(100));
+            t.record_failure(0, now, "x");
+            t.record_failure(1, now, "x");
+            (t.backoff_remaining(0, now).unwrap(), t.backoff_remaining(1, now).unwrap())
+        };
+        let (a0, a1) = run();
+        let (b0, b1) = run();
+        assert_eq!(a0, b0);
+        assert_eq!(a1, b1);
+        assert_ne!(a0, a1, "per-worker jitter must decorrelate the pool");
+    }
+
+    #[test]
+    fn audit_failures_quarantine_as_byzantine_once() {
+        let mut t = HealthTracker::new(2, cfg(0));
+        assert!(t.record_audit_failure(1, "forged bits").is_none());
+        assert_eq!(
+            t.record_audit_failure(1, "forged bits again"),
+            Some(QuarantineReason::Byzantine)
+        );
+        // already quarantined: no second trigger
+        assert!(t.record_audit_failure(1, "still bad").is_none());
+        assert!(!t.eligible(1));
+        assert!(!t.available(1, Instant::now()));
+        assert!(t.eligible(0));
+        assert!(!t.all_quarantined());
+        assert!(t.post_mortem().contains("byzantine"));
+    }
+
+    #[test]
+    fn crash_loop_quarantines_as_unreliable_when_enabled() {
+        let mut c = cfg(0);
+        c.quarantine_after_failures = 3;
+        let mut t = HealthTracker::new(1, c);
+        let now = Instant::now();
+        assert!(t.record_failure(0, now, "x").is_none());
+        assert!(t.record_timeout(0, now, "y").is_none());
+        assert_eq!(t.record_failure(0, now, "z"), Some(QuarantineReason::Unreliable));
+        assert!(t.all_quarantined());
+        let pm = t.post_mortem();
+        assert!(pm.contains("unreliable") && pm.contains('z'), "{pm}");
+    }
+
+    #[test]
+    fn zero_base_disables_backoff() {
+        let mut t = HealthTracker::new(1, cfg(0));
+        let now = Instant::now();
+        t.record_failure(0, now, "x");
+        assert!(t.available(0, now), "no backoff when base is ZERO");
+        assert!(t.backoff_remaining(0, now).is_none());
+    }
+}

@@ -9,9 +9,18 @@
 //!
 //! * the shard manifest is written to the journal's sidecar directory
 //!   `<journal>.d/` (the same versioned JSON `gcod sweep-shard`
-//!   emits), and
-//! * a `done lo hi <file>` line is appended to the journal file, under
-//!   a header that fingerprints the sweep identity + manifest mode.
+//!   emits) and fsynced, and only **then**
+//! * a `done lo hi <file>` line is appended (and fsynced) to the
+//!   journal file, under a header that fingerprints the sweep identity
+//!   + manifest mode. A crash between the two leaves an unreferenced
+//!   manifest (harmless) — never a journal line pointing at a hole.
+//!
+//! When the result audit condemns a worker, the ranges it banked are
+//! retracted with `undo lo hi` entries: on resume an `undo` drops the
+//! matching `done` entries that precede it (a later honest
+//! re-completion appends a fresh `done` line, which stands). A torn
+//! final line (append interrupted mid-write) is dropped with a note,
+//! not a parse error.
 //!
 //! `gcod sweep-launch --resume <journal>` replays the journal: entries
 //! whose manifests still parse and match the sweep are pre-marked done
@@ -111,7 +120,18 @@ impl Journal {
         if resume {
             let text = std::fs::read_to_string(path)
                 .map_err(|e| Error::msg(format!("read journal {}: {e}", path.display())))?;
-            let mut lines = text.lines();
+            // every healthy append ends with a newline; a missing one
+            // means the final line was torn mid-write — drop it with a
+            // note instead of failing the whole resume on garbage
+            let mut raw: Vec<&str> = text.lines().collect();
+            if !text.is_empty() && !text.ends_with('\n') {
+                if let Some(torn) = raw.pop() {
+                    notes.push(format!(
+                        "torn journal tail '{torn}' dropped (append interrupted mid-write)"
+                    ));
+                }
+            }
+            let mut lines = raw.into_iter();
             if lines.next() != Some(JOURNAL_HEADER) {
                 return Err(Error::msg(format!(
                     "{} is not a {JOURNAL_HEADER} file",
@@ -128,14 +148,35 @@ impl Journal {
                     )));
                 }
             }
+            // pass 1: tokenize, letting each `undo` retract the
+            // `done` entries (exact bounds) that precede it
+            let mut kept: Vec<(usize, usize, String)> = Vec::new();
             for line in lines {
                 let line = line.trim();
                 if line.is_empty() {
                     continue;
                 }
-                match parse_entry(line, &dir, cfg, stats_only) {
-                    Ok(res) => preloaded.push(res),
+                match parse_line(line) {
+                    Ok(Entry::Done { lo, hi, file }) => kept.push((lo, hi, file.to_string())),
+                    Ok(Entry::Undo { lo, hi }) => {
+                        let before = kept.len();
+                        kept.retain(|&(a, b, _)| (a, b) != (lo, hi));
+                        if kept.len() == before {
+                            notes.push(format!(
+                                "journal undo [{lo}, {hi}) matched no banked entry"
+                            ));
+                        }
+                    }
                     Err(e) => notes.push(format!("journal entry '{line}' dropped: {e}")),
+                }
+            }
+            // pass 2: load + validate the surviving manifests
+            for (lo, hi, file) in kept {
+                match load_entry(lo, hi, &file, &dir, cfg, stats_only) {
+                    Ok(res) => preloaded.push(res),
+                    Err(e) => {
+                        notes.push(format!("journal entry 'done {lo} {hi} {file}' dropped: {e}"));
+                    }
                 }
             }
         }
@@ -167,15 +208,30 @@ impl Journal {
     /// Persist one freshly collected lease result. Duplicate covers of
     /// the same range (speculation) overwrite with identical bytes —
     /// per-trial values are split-invariant — and the duplicate line is
-    /// deduplicated on resume by `dedup_cover`.
+    /// deduplicated on resume by `dedup_cover`. Durability order:
+    /// sidecar bytes are fsynced *before* the journal line that
+    /// references them is appended and fsynced.
     pub fn record(&mut self, res: &ShardResult) -> Result<()> {
-        res.write(&self.dir.join(entry_file(res.lo, res.hi)))?;
-        self.append_line(res.lo, res.hi)
+        let sidecar = self.dir.join(entry_file(res.lo, res.hi));
+        std::fs::File::create(&sidecar)
+            .and_then(|mut f| f.write_all(res.render().as_bytes()).and_then(|()| f.sync_all()))
+            .map_err(|e| Error::msg(format!("write manifest {}: {e}", sidecar.display())))?;
+        self.append_line(&format!("done {} {} {}", res.lo, res.hi, entry_file(res.lo, res.hi)))
     }
 
-    fn append_line(&mut self, lo: usize, hi: usize) -> Result<()> {
-        writeln!(self.file, "done {lo} {hi} {}", entry_file(lo, hi))
-            .and_then(|()| self.file.flush())
+    /// The result audit condemned the worker that banked `[lo, hi)`:
+    /// retract the entry so an interrupted launch cannot resume from a
+    /// forged manifest. The sidecar removal is best-effort — the
+    /// `undo` line alone already excludes the entry on resume.
+    pub fn invalidate(&mut self, lo: usize, hi: usize) -> Result<()> {
+        self.append_line(&format!("undo {lo} {hi}"))?;
+        let _ = std::fs::remove_file(self.dir.join(entry_file(lo, hi)));
+        Ok(())
+    }
+
+    fn append_line(&mut self, line: &str) -> Result<()> {
+        writeln!(self.file, "{line}")
+            .and_then(|()| self.file.sync_data())
             .map_err(|e| Error::msg(format!("write journal {}: {e}", self.path.display())))
     }
 
@@ -192,22 +248,37 @@ fn entry_file(lo: usize, hi: usize) -> String {
     format!("done_{lo}_{hi}.json")
 }
 
-fn parse_entry(
-    line: &str,
-    dir: &Path,
-    cfg: &SweepConfig,
-    stats_only: bool,
-) -> Result<ShardResult> {
+/// One tokenized journal line.
+enum Entry<'a> {
+    Done { lo: usize, hi: usize, file: &'a str },
+    Undo { lo: usize, hi: usize },
+}
+
+fn parse_line(line: &str) -> Result<Entry<'_>> {
     let mut parts = line.splitn(4, ' ');
     let (tag, lo, hi, file) = (parts.next(), parts.next(), parts.next(), parts.next());
-    if tag != Some("done") {
-        return Err(Error::msg("unknown journal entry tag"));
-    }
     let lo: usize =
         lo.and_then(|s| s.parse().ok()).ok_or_else(|| Error::msg("bad journal entry lo"))?;
     let hi: usize =
         hi.and_then(|s| s.parse().ok()).ok_or_else(|| Error::msg("bad journal entry hi"))?;
-    let file = file.ok_or_else(|| Error::msg("journal entry missing manifest file"))?;
+    match tag {
+        Some("done") => {
+            let file = file.ok_or_else(|| Error::msg("journal entry missing manifest file"))?;
+            Ok(Entry::Done { lo, hi, file })
+        }
+        Some("undo") if file.is_none() => Ok(Entry::Undo { lo, hi }),
+        _ => Err(Error::msg("unknown journal entry tag")),
+    }
+}
+
+fn load_entry(
+    lo: usize,
+    hi: usize,
+    file: &str,
+    dir: &Path,
+    cfg: &SweepConfig,
+    stats_only: bool,
+) -> Result<ShardResult> {
     let res = ShardResult::read(&dir.join(file))?;
     if res.config != *cfg {
         return Err(Error::msg("manifest config differs from the dispatched sweep"));

@@ -29,18 +29,52 @@
 //! [`journal`]: completed leases persist as they arrive, and a resumed
 //! launch recomputes only the uncovered remainder (byte-identity
 //! preserved, since per-trial values are split-invariant).
+//!
+//! Crash-class faults (the above) are only half the paper's threat
+//! model; the **adversarial** half is covered by three more layers:
+//!
+//! * [`chaos`] — a deterministic fault-injection wrapper
+//!   ([`chaos::ChaosTransport`]) that turns any transport into a
+//!   seeded adversary for tests and soaks (kills, hangs, delays,
+//!   truncated manifests, flipped bits, wrong ranges, stale replays),
+//!   replayable exactly from `--chaos-seed`;
+//! * **result audit** — every collected manifest is structurally
+//!   validated (range, config, stats-refold integrity), and with
+//!   [`DispatchConfig::audit_fraction`] `> 0` a sampled sub-range of a
+//!   completed lease is re-executed on a *different* worker and
+//!   byte-compared ([`ShardResult::slice`] is bit-neutral, so honest
+//!   workers always agree). A mismatch is arbitrated by a third worker
+//!   (tiebreak); the condemned side has **all** of its banked
+//!   contributions invalidated and re-queued (without charging the
+//!   retry budget) and is flagged in [`health`];
+//! * [`health`] — per-worker scorecards, exponential backoff with
+//!   deterministic jitter on respawn, and quarantine: a worker
+//!   condemned by the audit [`health::HealthConfig::quarantine_after`]
+//!   times is never scheduled again. If quarantine shrinks the pool to
+//!   nothing with work remaining, the dispatch fails loudly with a
+//!   per-worker post-mortem instead of burning the retry budget.
+//!
+//! The invariant throughout is unchanged: under any replayed fault
+//! plan that leaves enough honest workers, the merged output is
+//! byte-identical to a single-process run.
 
+pub mod chaos;
+pub mod health;
 pub mod journal;
 pub mod queue;
 pub mod transport;
 
 use crate::error::{Error, Result};
+use crate::metrics::Stats;
+use crate::prng;
 use crate::straggler::{BernoulliStragglers, DelaySampler};
 use crate::sweep::shard::{self, MergedSweep, ShardResult, SweepConfig};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+pub use chaos::{ChaosProfile, ChaosTransport, Fault, FaultPlan};
+pub use health::{HealthConfig, HealthTracker, QuarantineReason, WorkerHealth};
 pub use journal::Journal;
 pub use queue::{Lease, LeaseId, WorkQueue, WorkerId};
 pub use transport::{LocalProcess, WorkerJob, WorkerPoll, WorkerTransport};
@@ -72,10 +106,15 @@ pub struct DispatchConfig {
     pub min_grain: usize,
     /// engine threads inside each worker
     pub threads_per_worker: usize,
-    /// a lease older than this is presumed lost: its worker is killed
-    /// and the range re-enqueued (catches hung workers that never
-    /// complete — for a local transport, "never heartbeats")
+    /// base lease deadline: a lease older than `lease_timeout +
+    /// lease_timeout_per_trial * range_len` is presumed lost — its
+    /// worker is killed and the range re-enqueued (catches hung workers
+    /// that never complete — for a local transport, "never heartbeats")
     pub lease_timeout: Duration,
+    /// per-trial deadline scaling, so a flat base tuned for small tail
+    /// leases doesn't reap healthy workers holding large adaptive-grain
+    /// head leases (ZERO = flat deadline)
+    pub lease_timeout_per_trial: Duration,
     /// re-enqueues allowed per range before the dispatch fails loudly
     pub max_retries: usize,
     /// event-loop pause between polls
@@ -89,10 +128,18 @@ pub struct DispatchConfig {
     pub out_dir: PathBuf,
     /// straggler simulation (tests/benches)
     pub straggler_sim: Option<StragglerSimCfg>,
-    /// fault injection: delay worker w's *first* job by this many ms —
-    /// with a delay past `lease_timeout` this simulates a worker that
-    /// never heartbeats
-    pub fault_delay_ms: Vec<(WorkerId, u64)>,
+    /// fraction of completed leases whose result is audited: a sampled
+    /// chunk-aligned sub-range is re-executed on a different worker and
+    /// byte-compared. 0 disables auditing; 1 audits every lease. Full
+    /// manifests only — stats-only results have no per-trial vector to
+    /// slice and compare
+    pub audit_fraction: f64,
+    /// seed for the deterministic audit sampling (which leases, which
+    /// sub-range)
+    pub audit_seed: u64,
+    /// per-worker health policy: backoff on failure, quarantine
+    /// thresholds (see [`health::HealthConfig`])
+    pub health: HealthConfig,
     /// checkpoint journal path: every collected lease persists here as
     /// it completes, so an interrupted/failed dispatch can be resumed
     /// (see [`journal`]). `None` = no checkpointing
@@ -112,13 +159,16 @@ impl Default for DispatchConfig {
             min_grain: 0,
             threads_per_worker: 1,
             lease_timeout: Duration::from_secs(300),
+            lease_timeout_per_trial: Duration::ZERO,
             max_retries: 3,
             poll_interval: Duration::from_millis(10),
             speculate: true,
             stats_only: false,
             out_dir: std::env::temp_dir().join(format!("gcod_dispatch_{}", std::process::id())),
             straggler_sim: None,
-            fault_delay_ms: Vec::new(),
+            audit_fraction: 0.0,
+            audit_seed: 0xA0D1_75EE_D001,
+            health: HealthConfig::default(),
             journal: None,
             resume: false,
         }
@@ -139,6 +189,18 @@ pub struct DispatchReport {
     pub cancelled: u64,
     /// redundant results dropped/trimmed by `dedup_cover`
     pub duplicates_dropped: usize,
+    /// audit jobs dispatched (probes, tiebreaks and retries)
+    pub audits_issued: u64,
+    /// probe audits whose re-execution byte-matched the banked slice
+    pub audits_passed: u64,
+    /// probe audits that disagreed with the banked slice
+    pub audit_mismatches: u64,
+    /// banked ranges invalidated because their worker was condemned
+    pub invalidated_ranges: u64,
+    /// workers removed from scheduling, with the reason
+    pub quarantined: Vec<(WorkerId, String)>,
+    /// final per-worker scorecards
+    pub worker_health: Vec<WorkerHealth>,
     pub per_worker_completed: Vec<u64>,
     pub failure_log: Vec<String>,
     pub elapsed: Duration,
@@ -147,10 +209,31 @@ pub struct DispatchReport {
 impl DispatchReport {
     /// One-paragraph operator summary.
     pub fn summary(&self) -> String {
+        let audit = if self.audits_issued > 0 || self.audit_mismatches > 0 {
+            format!(
+                ", {} audit(s) ({} passed, {} mismatch(es), {} range(s) invalidated)",
+                self.audits_issued, self.audits_passed, self.audit_mismatches,
+                self.invalidated_ranges
+            )
+        } else {
+            String::new()
+        };
+        let quarantine = if self.quarantined.is_empty() {
+            String::new()
+        } else {
+            format!(
+                ", quarantined: {}",
+                self.quarantined
+                    .iter()
+                    .map(|(w, why)| format!("worker {w} ({why})"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        };
         format!(
             "dispatched {} lease(s) ({} speculative): {} completed, {} retried, \
-             {} timeout(s), {} cancelled, {} duplicate result(s) deduped, {:.2}s \
-             [per-worker completions: {}]",
+             {} timeout(s), {} cancelled, {} duplicate result(s) deduped{audit}{quarantine}, \
+             {:.2}s [per-worker completions: {}]",
             self.leases_issued,
             self.speculative_issued,
             self.completed,
@@ -227,10 +310,10 @@ impl Dispatcher {
         if let Some(path) = &self.cfg.journal {
             journal = Some(Journal::open(path, sweep, self.cfg.stats_only, self.cfg.resume)?);
         }
-        let mut results: Vec<ShardResult> =
+        let results: Vec<ShardResult> =
             journal.as_mut().map(Journal::take_preloaded).unwrap_or_default();
         let done_ranges: Vec<(usize, usize)> = results.iter().map(|r| (r.lo, r.hi)).collect();
-        let mut queue = if !done_ranges.is_empty() {
+        let queue = if !done_ranges.is_empty() {
             WorkQueue::resume(sweep.trials, grain, sweep.chunk, self.cfg.max_retries, &done_ranges)?
         } else if self.cfg.adaptive_grain {
             let min = match self.cfg.min_grain {
@@ -249,182 +332,73 @@ impl Dispatcher {
             .straggler_sim
             .as_ref()
             .map(|s| DelaySampler::new(BernoulliStragglers::new(s.p, s.seed), s.delay));
-        let mut fault_delay: BTreeMap<WorkerId, u64> =
-            self.cfg.fault_delay_ms.iter().copied().collect();
 
-        let mut busy: Vec<Option<LeaseId>> = vec![None; n];
-        let mut report =
-            DispatchReport { per_worker_completed: vec![0; n], ..DispatchReport::default() };
-        if let Some(j) = &mut journal {
+        let mut state = RunState {
+            cfg: &self.cfg,
+            sweep,
+            n,
+            queue,
+            health: HealthTracker::new(n, self.cfg.health.clone()),
+            report: DispatchReport {
+                per_worker_completed: vec![0; n],
+                ..DispatchReport::default()
+            },
+            banked: results.into_iter().map(|res| Banked { worker: None, res }).collect(),
+            audits: BTreeMap::new(),
+            next_audit_id: 0,
+            bank_counts: BTreeMap::new(),
+            journal,
+            busy: vec![None; n],
+        };
+        if let Some(j) = &mut state.journal {
             // dropped/stale entries recompute; say so in the report
-            report.failure_log.append(&mut j.notes);
+            state.report.failure_log.append(&mut j.notes);
         }
         let started = Instant::now();
 
-        // wraps a queue error (retry budget blown) with the failure log
-        // so the loud failure explains itself
-        let with_log = |e: Error, log: &[String]| {
-            Error::msg(if log.is_empty() {
-                e.to_string()
-            } else {
-                format!("{e}\nworker failure log:\n  {}", log.join("\n  "))
-            })
-        };
-
         loop {
-            // 1. poll busy workers (redundancy computed once per tick —
-            // a lease turning redundant mid-sweep is caught next tick)
-            let redundant = queue.redundant();
-            for w in 0..n {
-                let Some(id) = busy[w] else { continue };
-                match transport.poll(w) {
-                    WorkerPoll::Running => {
-                        // speculation loser: a duplicate already
-                        // finished this range
-                        if redundant.contains(&id) {
-                            transport.kill(w);
-                            queue.cancel(id);
-                            busy[w] = None;
-                            report.cancelled += 1;
-                        }
-                    }
-                    WorkerPoll::Done => {
-                        busy[w] = None;
-                        let lease = queue.get(id).cloned().expect("busy lease is active");
-                        match transport.collect(w).and_then(|r| {
-                            validate_result(r, sweep, &lease, self.cfg.stats_only)
-                        }) {
-                            Ok(res) => {
-                                queue.complete(id)?;
-                                if let Some(j) = &mut journal {
-                                    // checkpoint loss is not worth
-                                    // failing a healthy dispatch over
-                                    if let Err(e) = j.record(&res) {
-                                        report.failure_log.push(format!(
-                                            "checkpoint of lease [{}, {}) failed: {e}",
-                                            res.lo, res.hi
-                                        ));
-                                    }
-                                }
-                                results.push(res);
-                                report.completed += 1;
-                                report.per_worker_completed[w] += 1;
-                            }
-                            Err(e) => {
-                                report.failure_log.push(format!(
-                                    "worker {w} lease [{}, {}): bad result: {e}",
-                                    lease.lo, lease.hi
-                                ));
-                                let (_, requeued) = queue
-                                    .fail(id)
-                                    .map_err(|e| with_log(e, &report.failure_log))?;
-                                report.retried += u64::from(requeued);
-                            }
-                        }
-                    }
-                    WorkerPoll::Failed(msg) => {
-                        busy[w] = None;
-                        report.failure_log.push(msg);
-                        let (_, requeued) =
-                            queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
-                        report.retried += u64::from(requeued);
-                    }
-                    WorkerPoll::Idle => {
-                        busy[w] = None;
-                        report.failure_log.push(format!(
-                            "worker {w} lost its job for lease {id} (transport reported idle)"
-                        ));
-                        let (_, requeued) =
-                            queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
-                        report.retried += u64::from(requeued);
-                    }
-                }
-            }
+            let now = Instant::now();
+            // 1. poll busy workers (leases and audit jobs)
+            state.poll_workers(transport)?;
+            // 2. reap leases and audit jobs past their (length-scaled)
+            // deadline — dead-but-undetected or hung workers
+            state.reap_expired(transport, now)?;
+            // 3. audits nobody eligible can ever run must not deadlock
+            // termination
+            state.drop_unassignable_audits();
+            // 4. hand audits, then ranges, to idle available workers
+            state.assign(transport, &mut sim, now)?;
 
-            // 2. reap leases past their deadline (dead-but-undetected or
-            // hung workers — the "never heartbeats" case)
-            for id in queue.expired(self.cfg.lease_timeout) {
-                let lease = queue.get(id).cloned().expect("expired lease is active");
-                transport.kill(lease.worker);
-                busy[lease.worker] = None;
-                report.timeouts += 1;
-                report.failure_log.push(format!(
-                    "worker {} lease [{}, {}): deadline {:?} exceeded, re-enqueueing",
-                    lease.worker, lease.lo, lease.hi, self.cfg.lease_timeout
-                ));
-                let (_, requeued) =
-                    queue.fail(id).map_err(|e| with_log(e, &report.failure_log))?;
-                report.retried += u64::from(requeued);
-            }
-
-            // 3. hand ranges to idle workers
-            let delays: Option<Vec<Duration>> = if busy.iter().any(Option::is_none) {
-                sim.as_mut().map(|s| s.sample_delays(n))
-            } else {
-                None
-            };
-            for w in 0..n {
-                if busy[w].is_some() {
-                    continue;
-                }
-                let lease = match queue.lease(w) {
-                    Some(l) => l,
-                    None if self.cfg.speculate => match queue.speculative_lease(w) {
-                        Some(l) => l,
-                        None => continue,
-                    },
-                    None => continue,
-                };
-                let mut delay_ms = delays.as_ref().map(|d| d[w].as_millis() as u64).unwrap_or(0);
-                if let Some(ms) = fault_delay.remove(&w) {
-                    delay_ms = ms;
-                }
-                let job = WorkerJob {
-                    config: sweep.clone(),
-                    lo: lease.lo,
-                    hi: lease.hi,
-                    threads: self.cfg.threads_per_worker.max(1),
-                    stats_only: self.cfg.stats_only,
-                    out_path: self
-                        .cfg
-                        .out_dir
-                        .join(format!("lease_{}_{}_{}.json", lease.id, lease.lo, lease.hi)),
-                    delay_ms,
-                };
-                report.leases_issued += 1;
-                report.speculative_issued += u64::from(lease.speculative);
-                match transport.start(w, &job) {
-                    Ok(()) => busy[w] = Some(lease.id),
-                    Err(e) => {
-                        report.failure_log.push(format!(
-                            "worker {w} lease [{}, {}): start failed: {e}",
-                            lease.lo, lease.hi
-                        ));
-                        let (_, requeued) = queue
-                            .fail(lease.id)
-                            .map_err(|e| with_log(e, &report.failure_log))?;
-                        report.retried += u64::from(requeued);
-                    }
-                }
-            }
-
-            // 4. termination
-            let all_idle = busy.iter().all(Option::is_none);
-            if queue.is_complete() && all_idle {
+            // 5. termination
+            let all_idle = state.busy.iter().all(Option::is_none);
+            if state.queue.is_complete() && all_idle && state.audits.is_empty() {
                 break;
             }
-            if all_idle && queue.active_leases() == 0 && queue.pending_ranges() == 0 {
+            if state.health.all_quarantined() {
+                // graceful degradation has run out of pool: explain
+                // per-worker instead of burning the retry budget
+                return Err(state.err_with_log(Error::msg(format!(
+                    "dispatch halted: every worker is quarantined with work remaining\n\
+                     per-worker post-mortem:\n{}",
+                    state.health.post_mortem()
+                ))));
+            }
+            if all_idle
+                && state.queue.active_leases() == 0
+                && state.queue.pending_ranges() == 0
+                && state.audits.is_empty()
+            {
                 // unreachable by construction (fail() either requeues or
                 // errors), but never spin silently
-                return Err(with_log(
-                    Error::msg("dispatcher stalled: no pending work, no active leases, sweep \
-                                incomplete"),
-                    &report.failure_log,
-                ));
+                return Err(state.err_with_log(Error::msg(
+                    "dispatcher stalled: no pending work, no active leases, sweep incomplete",
+                )));
             }
             std::thread::sleep(self.cfg.poll_interval);
         }
 
+        let RunState { mut report, banked, health, journal, .. } = state;
+        let results: Vec<ShardResult> = banked.into_iter().map(|b| b.res).collect();
         let (cover, deduped) =
             shard::dedup_cover(results).map_err(|e| with_log(e, &report.failure_log))?;
         report.duplicates_dropped = deduped;
@@ -434,31 +408,705 @@ impl Dispatcher {
         if let Some(j) = journal {
             j.finish();
         }
+        report.worker_health = health.into_workers();
         report.elapsed = started.elapsed();
         Ok(DispatchOutcome { merged, report })
     }
 }
 
-/// A collected result must be exactly the leased range of the requested
-/// sweep — anything else is treated as a worker failure (and the range
-/// re-leased), never silently merged.
+/// Re-dispatch attempts for one audit job before the audit is abandoned
+/// and the banked result gets the benefit of the doubt — an audit must
+/// never be able to stall an otherwise healthy dispatch.
+const AUDIT_MAX_ATTEMPTS: usize = 3;
+
+/// What a busy worker slot is running.
+#[derive(Clone, Copy)]
+enum SlotJob {
+    Lease(LeaseId),
+    Audit(u64),
+}
+
+/// Where an in-flight audit stands.
+enum AuditPhase {
+    /// first re-execution of the sampled slice on a non-source worker
+    Probe,
+    /// the probe disagreed with the bank: a third worker arbitrates
+    Tiebreak { challenger: WorkerId, challenger_bytes: String },
+}
+
+/// One audit of a banked result: re-execute `[lo, hi)` (a sampled
+/// sub-range of `src_range`) on a worker other than `src_worker` and
+/// byte-compare against `expected` (the banked slice's manifest).
+struct AuditTask {
+    src_worker: WorkerId,
+    /// full banked range — the invalidation granularity on condemnation
+    src_range: (usize, usize),
+    lo: usize,
+    hi: usize,
+    expected: String,
+    phase: AuditPhase,
+    /// dispatch attempts burned (worker deaths/timeouts, not verdicts)
+    attempts: usize,
+    running_on: Option<WorkerId>,
+    issued: Instant,
+}
+
+/// A collected shard result plus who produced it (`None` = journal
+/// preload — no live worker to attribute or condemn).
+struct Banked {
+    worker: Option<WorkerId>,
+    res: ShardResult,
+}
+
+fn with_log(e: Error, log: &[String]) -> Error {
+    Error::msg(if log.is_empty() {
+        e.to_string()
+    } else {
+        format!("{e}\nworker failure log:\n  {}", log.join("\n  "))
+    })
+}
+
+/// Deterministic per-(range, occurrence) audit substream key — the same
+/// mixing idea as [`chaos`]'s fault keying, in the opposite role: this
+/// stream decides *checks*, not faults, and is worker/timing-independent
+/// so a given banked range draws the same audit verdict under any
+/// scheduling interleaving.
+fn audit_key(lo: usize, hi: usize, occurrence: u64) -> u64 {
+    let mut x = (lo as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (hi as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+        ^ occurrence.wrapping_mul(0x1656_67B1_9E37_79F9);
+    x ^= x >> 31;
+    x
+}
+
+/// May worker `x` run this audit job? Never the audited source, and in
+/// the tiebreak phase never the original challenger either.
+fn audit_allows(t: &AuditTask, x: WorkerId) -> bool {
+    match &t.phase {
+        AuditPhase::Probe => x != t.src_worker,
+        AuditPhase::Tiebreak { challenger, .. } => x != t.src_worker && x != *challenger,
+    }
+}
+
+/// The dispatcher event loop's mutable state, factored out so the
+/// poll/reap/audit/assign stages can be separate methods instead of one
+/// monolithic loop body.
+struct RunState<'a> {
+    cfg: &'a DispatchConfig,
+    sweep: &'a SweepConfig,
+    n: usize,
+    queue: WorkQueue,
+    health: HealthTracker,
+    report: DispatchReport,
+    banked: Vec<Banked>,
+    audits: BTreeMap<u64, AuditTask>,
+    next_audit_id: u64,
+    /// completions banked per range — the occurrence index keys the
+    /// audit-sampling substream so duplicate covers draw independently
+    bank_counts: BTreeMap<(usize, usize), u64>,
+    journal: Option<Journal>,
+    busy: Vec<Option<SlotJob>>,
+}
+
+impl RunState<'_> {
+    fn err_with_log(&self, e: Error) -> Error {
+        with_log(e, &self.report.failure_log)
+    }
+
+    /// `queue.fail` plus retry bookkeeping.
+    fn fail_lease(&mut self, id: LeaseId) -> Result<()> {
+        let (_, requeued) =
+            self.queue.fail(id).map_err(|e| with_log(e, &self.report.failure_log))?;
+        self.report.retried += u64::from(requeued);
+        Ok(())
+    }
+
+    fn note_quarantine(&mut self, w: WorkerId, q: Option<QuarantineReason>) {
+        if let Some(reason) = q {
+            self.report.quarantined.push((w, reason.as_str().to_string()));
+            self.report
+                .failure_log
+                .push(format!("worker {w} quarantined ({})", reason.as_str()));
+        }
+    }
+
+    /// Stage 1: poll every busy slot (lease and audit jobs alike).
+    fn poll_workers(&mut self, transport: &mut dyn WorkerTransport) -> Result<()> {
+        // redundancy computed once per tick — a lease turning redundant
+        // mid-sweep is caught next tick
+        let redundant = self.queue.redundant();
+        for w in 0..self.n {
+            match self.busy[w] {
+                None => {}
+                Some(SlotJob::Lease(id)) => self.poll_lease(transport, w, id, &redundant)?,
+                Some(SlotJob::Audit(aid)) => self.poll_audit(transport, w, aid),
+            }
+        }
+        Ok(())
+    }
+
+    fn poll_lease(
+        &mut self,
+        transport: &mut dyn WorkerTransport,
+        w: WorkerId,
+        id: LeaseId,
+        redundant: &[LeaseId],
+    ) -> Result<()> {
+        match transport.poll(w) {
+            WorkerPoll::Running => {
+                // speculation loser: a duplicate already finished this
+                // range
+                if redundant.contains(&id) {
+                    transport.kill(w);
+                    self.queue.cancel(id);
+                    self.busy[w] = None;
+                    self.report.cancelled += 1;
+                }
+            }
+            WorkerPoll::Done => {
+                self.busy[w] = None;
+                let lease = self.queue.get(id).cloned().expect("busy lease is active");
+                match transport.collect(w).and_then(|r| {
+                    validate_result(r, self.sweep, lease.lo, lease.hi, self.cfg.stats_only)
+                }) {
+                    Ok(res) => {
+                        self.queue.complete(id)?;
+                        self.health.record_completion(w, lease.issued.elapsed());
+                        self.report.completed += 1;
+                        self.report.per_worker_completed[w] += 1;
+                        self.bank(res, w);
+                    }
+                    Err(e) => {
+                        let msg = format!(
+                            "worker {w} lease [{}, {}): bad result: {e}",
+                            lease.lo, lease.hi
+                        );
+                        self.report.failure_log.push(msg.clone());
+                        let q = self.health.record_failure(w, Instant::now(), &msg);
+                        self.note_quarantine(w, q);
+                        self.fail_lease(id)?;
+                    }
+                }
+            }
+            WorkerPoll::Failed(msg) => {
+                self.busy[w] = None;
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(w, Instant::now(), &msg);
+                self.note_quarantine(w, q);
+                self.fail_lease(id)?;
+            }
+            WorkerPoll::Idle => {
+                self.busy[w] = None;
+                let msg = format!(
+                    "worker {w} lost its job for lease {id} (transport reported idle)"
+                );
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(w, Instant::now(), &msg);
+                self.note_quarantine(w, q);
+                self.fail_lease(id)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// A validated lease result enters the bank: checkpoint it, maybe
+    /// sample an audit of it, then hold it for the merge.
+    fn bank(&mut self, res: ShardResult, worker: WorkerId) {
+        if let Some(j) = &mut self.journal {
+            // checkpoint loss is not worth failing a healthy dispatch
+            // over
+            if let Err(e) = j.record(&res) {
+                self.report.failure_log.push(format!(
+                    "checkpoint of lease [{}, {}) failed: {e}",
+                    res.lo, res.hi
+                ));
+            }
+        }
+        self.maybe_audit(&res, worker);
+        self.banked.push(Banked { worker: Some(worker), res });
+    }
+
+    /// Deterministically decide whether (and on which sub-range) to
+    /// audit this freshly banked result.
+    fn maybe_audit(&mut self, res: &ShardResult, worker: WorkerId) {
+        // stats-only manifests have no per-trial vector to slice and
+        // byte-compare
+        if self.cfg.audit_fraction <= 0.0 || res.stats_only {
+            return;
+        }
+        // an audit needs a worker other than the source to ever run it
+        if !(0..self.n).any(|x| x != worker && self.health.eligible(x)) {
+            return;
+        }
+        let occurrence = {
+            let c = self.bank_counts.entry((res.lo, res.hi)).or_insert(0);
+            let occ = *c;
+            *c += 1;
+            occ
+        };
+        let mut rng =
+            prng::substream(self.cfg.audit_seed, audit_key(res.lo, res.hi, occurrence));
+        if rng.f64() >= self.cfg.audit_fraction {
+            return;
+        }
+        // one chunk-aligned window of the banked range: cheap relative
+        // to the lease, and a forger can't predict which window
+        let chunk = self.sweep.chunk.max(1);
+        let windows = (res.hi - res.lo).div_ceil(chunk);
+        let pick = if windows > 1 { rng.below(windows) } else { 0 };
+        let s_lo = res.lo + pick * chunk;
+        let s_hi = (s_lo + chunk).min(res.hi);
+        let expected = match res.slice(s_lo, s_hi) {
+            Ok(s) => s.render(),
+            Err(e) => {
+                self.report.failure_log.push(format!(
+                    "audit of [{}, {}) skipped: slice failed: {e}",
+                    res.lo, res.hi
+                ));
+                return;
+            }
+        };
+        let aid = self.next_audit_id;
+        self.next_audit_id += 1;
+        self.audits.insert(
+            aid,
+            AuditTask {
+                src_worker: worker,
+                src_range: (res.lo, res.hi),
+                lo: s_lo,
+                hi: s_hi,
+                expected,
+                phase: AuditPhase::Probe,
+                attempts: 0,
+                running_on: None,
+                issued: Instant::now(),
+            },
+        );
+    }
+
+    fn poll_audit(&mut self, transport: &mut dyn WorkerTransport, w: WorkerId, aid: u64) {
+        match transport.poll(w) {
+            WorkerPoll::Running => {}
+            WorkerPoll::Done => {
+                self.busy[w] = None;
+                let collected = transport.collect(w);
+                self.resolve_audit(transport, aid, w, collected);
+            }
+            WorkerPoll::Failed(msg) => {
+                self.busy[w] = None;
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(w, Instant::now(), &msg);
+                self.note_quarantine(w, q);
+                self.audit_attempt_failed(aid, &format!("auditor worker {w} died: {msg}"));
+            }
+            WorkerPoll::Idle => {
+                self.busy[w] = None;
+                let msg =
+                    format!("worker {w} lost its audit job {aid} (transport reported idle)");
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(w, Instant::now(), &msg);
+                self.note_quarantine(w, q);
+                self.audit_attempt_failed(aid, &msg);
+            }
+        }
+    }
+
+    /// An audit job's dispatch attempt failed with no verdict (worker
+    /// death, timeout, start failure). Bounded retries; on exhaustion
+    /// the audit is dropped and the banked result stands.
+    fn audit_attempt_failed(&mut self, aid: u64, why: &str) {
+        let Some(task) = self.audits.get_mut(&aid) else { return };
+        task.running_on = None;
+        task.attempts += 1;
+        if task.attempts >= AUDIT_MAX_ATTEMPTS {
+            let (lo, hi) = task.src_range;
+            self.audits.remove(&aid);
+            self.report.failure_log.push(format!(
+                "audit of [{lo}, {hi}) abandoned after {AUDIT_MAX_ATTEMPTS} attempts ({why}) \
+                 — giving the banked result the benefit of the doubt"
+            ));
+        }
+    }
+
+    /// An auditor delivered a manifest: compare bytes and judge.
+    fn resolve_audit(
+        &mut self,
+        transport: &mut dyn WorkerTransport,
+        aid: u64,
+        auditor: WorkerId,
+        collected: Result<ShardResult>,
+    ) {
+        let Some(mut task) = self.audits.remove(&aid) else { return };
+        task.running_on = None;
+        let bytes = match collected
+            .and_then(|r| validate_result(r, self.sweep, task.lo, task.hi, false))
+        {
+            Ok(r) => r.render(),
+            Err(e) => {
+                // the audit *job* failed structurally — that's on the
+                // auditor, not on the audited result
+                let msg = format!(
+                    "worker {auditor} audit of [{}, {}): bad result: {e}",
+                    task.lo, task.hi
+                );
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(auditor, Instant::now(), &msg);
+                self.note_quarantine(auditor, q);
+                self.audits.insert(aid, task);
+                self.audit_attempt_failed(aid, &msg);
+                return;
+            }
+        };
+        match std::mem::replace(&mut task.phase, AuditPhase::Probe) {
+            AuditPhase::Probe => {
+                if bytes == task.expected {
+                    self.health.record_audit_pass(task.src_worker);
+                    self.report.audits_passed += 1;
+                    return;
+                }
+                self.report.audit_mismatches += 1;
+                self.report.failure_log.push(format!(
+                    "audit mismatch on [{}, {}): worker {} (banked) vs worker {auditor} \
+                     (probe re-run)",
+                    task.lo, task.hi, task.src_worker
+                ));
+                // someone forged bits — but which side? a third worker
+                // arbitrates when one exists
+                let src = task.src_worker;
+                let has_third =
+                    (0..self.n).any(|x| x != src && x != auditor && self.health.eligible(x));
+                if has_third {
+                    task.phase =
+                        AuditPhase::Tiebreak { challenger: auditor, challenger_bytes: bytes };
+                    task.attempts = 0;
+                    self.audits.insert(aid, task);
+                } else {
+                    // degenerate pool: condemn both sides — bit-exactness
+                    // beats progress when the forger can't be identified
+                    self.condemn(transport, src, "audit mismatch with no tiebreaker available");
+                    self.condemn(
+                        transport,
+                        auditor,
+                        "audit mismatch with no tiebreaker available",
+                    );
+                }
+            }
+            AuditPhase::Tiebreak { challenger, challenger_bytes } => {
+                if bytes == task.expected {
+                    // the arbiter sides with the bank: the challenger
+                    // forged its probe
+                    self.health.record_audit_pass(task.src_worker);
+                    self.report.audits_passed += 1;
+                    self.condemn(transport, challenger, "tiebreak contradicted its probe re-run");
+                } else if bytes == challenger_bytes {
+                    self.condemn(
+                        transport,
+                        task.src_worker,
+                        "tiebreak confirmed the probe mismatch: banked result is forged",
+                    );
+                } else {
+                    self.condemn(transport, task.src_worker, "three-way audit disagreement");
+                    self.condemn(transport, challenger, "three-way audit disagreement");
+                }
+            }
+        }
+    }
+
+    /// The audit found `w` guilty: strike everything it banked, count
+    /// the offense, and past the quarantine threshold remove it from
+    /// the pool — killing and re-routing whatever it was running.
+    fn condemn(&mut self, transport: &mut dyn WorkerTransport, w: WorkerId, why: &str) {
+        self.report
+            .failure_log
+            .push(format!("worker {w} condemned by result audit: {why}"));
+        let q = self.health.record_audit_failure(w, why);
+        self.invalidate_banked(transport, w);
+        if q.is_some() {
+            self.note_quarantine(w, q);
+            if let Some(job) = self.busy[w].take() {
+                transport.kill(w);
+                match job {
+                    SlotJob::Lease(id) => {
+                        // reopen, not fail: quarantine shouldn't charge
+                        // the range's retry budget
+                        if let Some(lease) = self.queue.cancel(id) {
+                            self.queue.reopen(lease.lo, lease.hi);
+                        }
+                    }
+                    SlotJob::Audit(aid) => {
+                        self.audit_attempt_failed(
+                            aid,
+                            &format!("auditor worker {w} was quarantined mid-run"),
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    /// Remove every banked contribution of `w` from the merge set and
+    /// re-queue the ranges — without charging the per-range retry
+    /// budget, because honest progress shouldn't pay for an adversary's
+    /// forgeries. Journal entries are retracted so an interrupted
+    /// launch cannot resume from a forged manifest, and in-flight
+    /// audits *of* `w`'s results become moot.
+    fn invalidate_banked(&mut self, transport: &mut dyn WorkerTransport, w: WorkerId) {
+        let banked = std::mem::take(&mut self.banked);
+        for b in banked {
+            if b.worker != Some(w) {
+                self.banked.push(b);
+                continue;
+            }
+            let (lo, hi) = (b.res.lo, b.res.hi);
+            self.report.invalidated_ranges += 1;
+            self.queue.reopen(lo, hi);
+            if let Some(j) = &mut self.journal {
+                if let Err(e) = j.invalidate(lo, hi) {
+                    self.report
+                        .failure_log
+                        .push(format!("journal retraction of [{lo}, {hi}) failed: {e}"));
+                }
+            }
+            self.report.failure_log.push(format!(
+                "invalidated banked range [{lo}, {hi}) from worker {w} — re-queued for \
+                 recomputation"
+            ));
+        }
+        let moot: Vec<u64> = self
+            .audits
+            .iter()
+            .filter(|(_, t)| t.src_worker == w)
+            .map(|(aid, _)| *aid)
+            .collect();
+        for aid in moot {
+            let task = self.audits.remove(&aid).expect("listed audit exists");
+            if let Some(x) = task.running_on {
+                transport.kill(x);
+                self.busy[x] = None;
+            }
+        }
+    }
+
+    /// Stage 2: reap lease and audit jobs past their length-scaled
+    /// deadline (`base + per_trial * range_len`).
+    fn reap_expired(&mut self, transport: &mut dyn WorkerTransport, now: Instant) -> Result<()> {
+        let base = self.cfg.lease_timeout;
+        let per = self.cfg.lease_timeout_per_trial;
+        for id in self.queue.expired(base, per) {
+            let lease = self.queue.get(id).cloned().expect("expired lease is active");
+            transport.kill(lease.worker);
+            self.busy[lease.worker] = None;
+            self.report.timeouts += 1;
+            let msg = format!(
+                "worker {} lease [{}, {}): deadline exceeded, re-enqueueing",
+                lease.worker, lease.lo, lease.hi
+            );
+            self.report.failure_log.push(msg.clone());
+            let q = self.health.record_timeout(lease.worker, now, &msg);
+            self.note_quarantine(lease.worker, q);
+            self.fail_lease(id)?;
+        }
+        let overdue: Vec<(u64, WorkerId)> = self
+            .audits
+            .iter()
+            .filter_map(|(aid, t)| {
+                let len = u32::try_from(t.hi - t.lo).unwrap_or(u32::MAX);
+                match t.running_on {
+                    Some(x) if t.issued.elapsed() > base + per.saturating_mul(len) => {
+                        Some((*aid, x))
+                    }
+                    _ => None,
+                }
+            })
+            .collect();
+        for (aid, x) in overdue {
+            transport.kill(x);
+            self.busy[x] = None;
+            self.report.timeouts += 1;
+            let msg = format!("worker {x} audit job {aid}: deadline exceeded");
+            self.report.failure_log.push(msg.clone());
+            let q = self.health.record_timeout(x, now, &msg);
+            self.note_quarantine(x, q);
+            self.audit_attempt_failed(aid, &msg);
+        }
+        Ok(())
+    }
+
+    /// Stage 3: an audit whose remaining eligible pool can never run it
+    /// (all allowed workers quarantined) must not deadlock termination.
+    fn drop_unassignable_audits(&mut self) {
+        let doomed: Vec<u64> = self
+            .audits
+            .iter()
+            .filter(|(_, t)| {
+                t.running_on.is_none()
+                    && !(0..self.n).any(|x| audit_allows(t, x) && self.health.eligible(x))
+            })
+            .map(|(aid, _)| *aid)
+            .collect();
+        for aid in doomed {
+            let t = self.audits.remove(&aid).expect("listed audit exists");
+            self.report.failure_log.push(format!(
+                "audit of [{}, {}) dropped: no eligible worker left to run it",
+                t.lo, t.hi
+            ));
+        }
+    }
+
+    /// Hand the oldest assignable audit job to idle worker `w`. Returns
+    /// whether `w` was consumed by an audit this round.
+    fn try_assign_audit(
+        &mut self,
+        transport: &mut dyn WorkerTransport,
+        w: WorkerId,
+        now: Instant,
+    ) -> bool {
+        let Some(aid) = self
+            .audits
+            .iter()
+            .find(|(_, t)| t.running_on.is_none() && audit_allows(t, w))
+            .map(|(aid, _)| *aid)
+        else {
+            return false;
+        };
+        let task = self.audits.get_mut(&aid).expect("audit id just found");
+        let job = WorkerJob {
+            config: self.sweep.clone(),
+            lo: task.lo,
+            hi: task.hi,
+            threads: self.cfg.threads_per_worker.max(1),
+            stats_only: false,
+            out_path: self
+                .cfg
+                .out_dir
+                .join(format!("audit_{aid}_{}_{}.json", task.lo, task.hi)),
+            delay_ms: 0,
+        };
+        self.report.audits_issued += 1;
+        match transport.start(w, &job) {
+            Ok(()) => {
+                task.running_on = Some(w);
+                task.issued = now;
+                self.busy[w] = Some(SlotJob::Audit(aid));
+            }
+            Err(e) => {
+                let msg = format!("worker {w} audit job {aid}: start failed: {e}");
+                self.report.failure_log.push(msg.clone());
+                let q = self.health.record_failure(w, now, &msg);
+                self.note_quarantine(w, q);
+                self.audit_attempt_failed(aid, &msg);
+            }
+        }
+        true
+    }
+
+    /// Stage 4: hand audits, then leases, to idle available workers
+    /// (quarantined and backing-off workers are skipped).
+    fn assign(
+        &mut self,
+        transport: &mut dyn WorkerTransport,
+        sim: &mut Option<DelaySampler<BernoulliStragglers>>,
+        now: Instant,
+    ) -> Result<()> {
+        let delays: Option<Vec<Duration>> = if self.busy.iter().any(Option::is_none) {
+            sim.as_mut().map(|s| s.sample_delays(self.n))
+        } else {
+            None
+        };
+        for w in 0..self.n {
+            if self.busy[w].is_some() || !self.health.available(w, now) {
+                continue;
+            }
+            // audits first: a pending verdict gates trust in banked work
+            if self.try_assign_audit(transport, w, now) {
+                continue;
+            }
+            let lease = match self.queue.lease(w) {
+                Some(l) => l,
+                None if self.cfg.speculate => match self.queue.speculative_lease(w) {
+                    Some(l) => l,
+                    None => continue,
+                },
+                None => continue,
+            };
+            let delay_ms = delays.as_ref().map(|d| d[w].as_millis() as u64).unwrap_or(0);
+            let job = WorkerJob {
+                config: self.sweep.clone(),
+                lo: lease.lo,
+                hi: lease.hi,
+                threads: self.cfg.threads_per_worker.max(1),
+                stats_only: self.cfg.stats_only,
+                out_path: self
+                    .cfg
+                    .out_dir
+                    .join(format!("lease_{}_{}_{}.json", lease.id, lease.lo, lease.hi)),
+                delay_ms,
+            };
+            self.report.leases_issued += 1;
+            self.report.speculative_issued += u64::from(lease.speculative);
+            match transport.start(w, &job) {
+                Ok(()) => self.busy[w] = Some(SlotJob::Lease(lease.id)),
+                Err(e) => {
+                    let msg = format!(
+                        "worker {w} lease [{}, {}): start failed: {e}",
+                        lease.lo, lease.hi
+                    );
+                    self.report.failure_log.push(msg.clone());
+                    let q = self.health.record_failure(w, now, &msg);
+                    self.note_quarantine(w, q);
+                    self.fail_lease(lease.id)?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A collected manifest must be exactly the requested range of the
+/// requested sweep, and its summary stats must refold bit-for-bit from
+/// its per-trial values — anything else is treated as a worker failure
+/// (and the range re-leased), never silently merged.
 fn validate_result(
     res: ShardResult,
     sweep: &SweepConfig,
-    lease: &Lease,
+    lo: usize,
+    hi: usize,
     stats_only: bool,
 ) -> Result<ShardResult> {
     if res.config != *sweep {
         return Err(Error::msg("worker manifest config differs from the dispatched sweep"));
     }
-    if (res.lo, res.hi) != (lease.lo, lease.hi) {
+    if (res.lo, res.hi) != (lo, hi) {
         return Err(Error::msg(format!(
-            "worker manifest covers [{}, {}), lease was [{}, {})",
-            res.lo, res.hi, lease.lo, lease.hi
+            "worker manifest covers [{}, {}), lease was [{lo}, {hi})",
+            res.lo, res.hi
         )));
     }
     if res.stats_only != stats_only {
         return Err(Error::msg("worker manifest stats-only mode differs from the dispatch"));
+    }
+    if !stats_only {
+        if res.values.len() != hi - lo {
+            return Err(Error::msg(format!(
+                "worker manifest carries {} value(s) for a {}-trial range",
+                res.values.len(),
+                hi - lo
+            )));
+        }
+        // a manifest whose summary disagrees with its own per-trial
+        // vector is corrupt (truncated, spliced or hand-edited) even
+        // when each half looks sane on its own
+        let refold = Stats::from_values(&res.values);
+        let same = refold.count() == res.stats.count()
+            && refold.mean().to_bits() == res.stats.mean().to_bits()
+            && refold.m2().to_bits() == res.stats.m2().to_bits()
+            && refold.min().to_bits() == res.stats.min().to_bits()
+            && refold.max().to_bits() == res.stats.max().to_bits();
+        if !same {
+            return Err(Error::msg(
+                "worker manifest stats do not refold from its per-trial values",
+            ));
+        }
     }
     Ok(res)
 }
@@ -865,5 +1513,171 @@ mod tests {
         let mut empty = Scripted::new(vec![]);
         let err = d.run(&sweep_cfg(8), &mut empty).unwrap_err();
         assert!(format!("{err}").contains("no workers"), "{err}");
+    }
+
+    // -----------------------------------------------------------------
+    // result audit + chaos + quarantine
+    // -----------------------------------------------------------------
+
+    /// Structural validation: a manifest whose stats don't refold from
+    /// its per-trial values, or whose vector length disagrees with the
+    /// range, is rejected before it can reach the bank.
+    #[test]
+    fn validate_result_rejects_inconsistent_manifests() {
+        let c = sweep_cfg(16);
+        let honest = shard::run_range(&c, 1, 0, 16).unwrap();
+        assert!(validate_result(honest.clone(), &c, 0, 16, false).is_ok());
+
+        // naive corruption: a value changed without refolding the stats
+        let mut forged = honest.clone();
+        forged.values[3] += 1.0;
+        let err = validate_result(forged, &c, 0, 16, false).unwrap_err();
+        assert!(format!("{err}").contains("refold"), "{err}");
+
+        // short vector
+        let mut short = honest.clone();
+        short.values.pop();
+        let err = validate_result(short, &c, 0, 16, false).unwrap_err();
+        assert!(format!("{err}").contains("value(s)"), "{err}");
+
+        // wrong range
+        let err = validate_result(honest, &c, 0, 8, false).unwrap_err();
+        assert!(format!("{err}").contains("lease was"), "{err}");
+    }
+
+    /// The flagship byzantine contract end-to-end: a pinned adversary
+    /// whose forgeries are structurally self-consistent (refolded
+    /// stats) is caught by the re-execution audit, condemned by
+    /// tiebreak, quarantined, its banked work invalidated and
+    /// recomputed — and the merged bytes still exactly match the
+    /// single-process run.
+    #[test]
+    fn byzantine_worker_is_audited_quarantined_and_bits_stay_exact() {
+        let c = sweep_cfg(48);
+        let single = shard::run_full(&c, 1).unwrap();
+        let profile = ChaosProfile { byzantine_worker: Some(1), ..ChaosProfile::none() };
+        let mut t =
+            ChaosTransport::new(Scripted::new(vec![WorkerScript::default(); 3]), 5, profile);
+        let dcfg = DispatchConfig { audit_fraction: 1.0, ..fast_dispatch() };
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "byzantine merged JSON bytes");
+        assert!(
+            out.report.quarantined.iter().any(|(w, why)| *w == 1 && why == "byzantine"),
+            "adversary not quarantined: {}",
+            out.report.summary()
+        );
+        assert!(out.report.audit_mismatches >= 1, "{}", out.report.summary());
+        assert!(out.report.invalidated_ranges >= 1, "{}", out.report.summary());
+        assert!(
+            out.report.worker_health[1].audit_failures >= 2,
+            "scorecard missed the condemnations: {:?}",
+            out.report.worker_health[1]
+        );
+        // the forgeries are in the failure log for the operator
+        assert!(
+            out.report.failure_log.iter().any(|l| l.contains("condemned by result audit")),
+            "{:?}",
+            out.report.failure_log
+        );
+    }
+
+    /// Byzantine faults that are *not* self-consistent — wrong-range
+    /// manifests, stale replays, truncated text — die in structural
+    /// validation (no audit configured at all) and the range re-leases.
+    #[test]
+    fn structural_validation_catches_wrong_range_stale_and_truncated() {
+        let c = sweep_cfg(32);
+        let single = shard::run_full(&c, 1).unwrap();
+        let mut t = ChaosTransport::new(
+            Scripted::new(vec![WorkerScript::default(); 2]),
+            0,
+            ChaosProfile::none(),
+        );
+        t.preset(0, Fault::Truncate);
+        t.preset(0, Fault::WrongRange);
+        t.preset(0, Fault::StaleReplay);
+        let out = Dispatcher::new(fast_dispatch()).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "merged JSON bytes");
+        assert!(out.report.retried >= 2, "{}", out.report.summary());
+        assert!(!out.report.failure_log.is_empty());
+        assert!(out.report.quarantined.is_empty(), "{}", out.report.summary());
+    }
+
+    /// Honest pool under a 100% audit regime: every audit passes, no
+    /// mismatch, no quarantine, bytes exact — auditing is pure overhead,
+    /// never a behavior change.
+    #[test]
+    fn honest_pool_passes_full_audit_bit_exact() {
+        let c = sweep_cfg(32);
+        let single = shard::run_full(&c, 1).unwrap();
+        let mut t = Scripted::new(vec![WorkerScript::default(); 2]);
+        let dcfg = DispatchConfig { audit_fraction: 1.0, ..fast_dispatch() };
+        let out = Dispatcher::new(dcfg).run(&c, &mut t).unwrap();
+        assert_eq!(out.merged.render(), single.render(), "audited merged JSON bytes");
+        assert!(out.report.audits_issued >= 1, "{}", out.report.summary());
+        assert!(out.report.audits_passed >= 1, "{}", out.report.summary());
+        assert_eq!(out.report.audit_mismatches, 0, "{}", out.report.summary());
+        assert!(out.report.quarantined.is_empty());
+        assert!(out.report.worker_health.iter().any(|h| h.audit_passes >= 1));
+    }
+
+    /// Degenerate pool: with 2 workers and one pinned adversary there is
+    /// no tiebreaker, so a mismatch condemns both sides — and once the
+    /// whole pool is quarantined the dispatch fails loudly with the
+    /// per-worker post-mortem instead of spinning or merging bad bits.
+    #[test]
+    fn all_quarantined_pool_fails_with_post_mortem() {
+        let c = sweep_cfg(32);
+        let profile = ChaosProfile { byzantine_worker: Some(1), ..ChaosProfile::none() };
+        let mut t =
+            ChaosTransport::new(Scripted::new(vec![WorkerScript::default(); 2]), 3, profile);
+        let dcfg = DispatchConfig {
+            audit_fraction: 1.0,
+            health: HealthConfig { quarantine_after: 1, ..HealthConfig::default() },
+            ..fast_dispatch()
+        };
+        let err = Dispatcher::new(dcfg).run(&c, &mut t).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("every worker is quarantined"), "{msg}");
+        assert!(msg.contains("post-mortem"), "{msg}");
+        assert!(msg.contains("byzantine"), "{msg}");
+    }
+
+    /// Journal hardening: an `undo` retracts its `done` entry and a torn
+    /// final line (append interrupted mid-write) is dropped with a note,
+    /// never a parse error.
+    #[test]
+    fn journal_undo_and_torn_tail_recovery() {
+        let c = sweep_cfg(32);
+        let jdir = std::env::temp_dir()
+            .join(format!("gcod_journal_torn_{}", std::process::id()));
+        std::fs::create_dir_all(&jdir).unwrap();
+        let jpath = jdir.join("torn.journal");
+
+        let mut j = Journal::open(&jpath, &c, false, false).unwrap();
+        j.record(&shard::run_range(&c, 1, 0, 16).unwrap()).unwrap();
+        j.record(&shard::run_range(&c, 1, 16, 32).unwrap()).unwrap();
+        j.invalidate(0, 16).unwrap();
+        drop(j);
+        // simulate a crash mid-append: a final line with no newline
+        {
+            use std::io::Write;
+            let mut f = std::fs::OpenOptions::new()
+                .append(true)
+                .open(&jpath)
+                .unwrap();
+            write!(f, "done 16 32 torn_garbage").unwrap();
+        }
+
+        let mut j = Journal::open(&jpath, &c, false, true).unwrap();
+        let pre = j.take_preloaded();
+        assert_eq!(
+            pre.iter().map(|r| (r.lo, r.hi)).collect::<Vec<_>>(),
+            vec![(16, 32)],
+            "undo must retract [0, 16) and the torn tail must not resurrect anything"
+        );
+        assert!(j.notes.iter().any(|n| n.contains("torn")), "{:?}", j.notes);
+        drop(j);
+        let _ = std::fs::remove_dir_all(&jdir);
     }
 }

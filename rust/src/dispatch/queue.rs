@@ -314,13 +314,57 @@ impl WorkQueue {
         self.active.remove(&id)
     }
 
-    /// Active leases whose issue time predates `now - timeout`.
-    pub fn expired(&self, timeout: Duration) -> Vec<LeaseId> {
+    /// Active leases past their deadline. The effective deadline scales
+    /// with lease length — `base + per_trial * (hi - lo)` — because a
+    /// flat timeout tuned for tail leases wrongly reaps healthy workers
+    /// holding full-grain head leases under the adaptive policy. Pass
+    /// `per_trial = ZERO` for the old flat behaviour.
+    pub fn expired(&self, base: Duration, per_trial: Duration) -> Vec<LeaseId> {
         self.active
             .values()
-            .filter(|l| l.issued.elapsed() > timeout)
+            .filter(|l| {
+                let len = u32::try_from(l.hi - l.lo).unwrap_or(u32::MAX);
+                l.issued.elapsed() > base + per_trial.saturating_mul(len)
+            })
             .map(|l| l.id)
             .collect()
+    }
+
+    /// Invalidate a previously-completed cover of `[lo, hi)` (the
+    /// result audit condemned the worker that banked it): carve the
+    /// interval back out of the done set and re-enqueue it — *without*
+    /// charging the per-range retry budget, because honest progress
+    /// shouldn't pay for an adversary's forgeries. The bounds are
+    /// always original lease bounds, so the retry-key stability
+    /// contract holds. If an active lease or pending requeue already
+    /// covers the range, it is only uncovered, not double-enqueued.
+    /// Returns whether the range was re-enqueued here.
+    pub fn reopen(&mut self, lo: usize, hi: usize) -> bool {
+        if lo >= hi || hi > self.trials {
+            return false;
+        }
+        let mut next = Vec::with_capacity(self.done.len() + 1);
+        for &(a, b) in &self.done {
+            if b <= lo || a >= hi {
+                next.push((a, b));
+                continue;
+            }
+            if a < lo {
+                next.push((a, lo));
+            }
+            if hi < b {
+                next.push((hi, b));
+            }
+        }
+        self.done = next;
+        if self.active.values().any(|l| l.lo <= lo && hi <= l.hi) {
+            return false;
+        }
+        if self.requeued.iter().any(|&(a, b)| a <= lo && hi <= b) {
+            return false;
+        }
+        self.requeued.push_back((lo, hi));
+        true
     }
 
     /// Active leases whose whole range is already covered by completed
@@ -460,9 +504,86 @@ mod tests {
     fn expiry_is_time_based() {
         let mut q = WorkQueue::new(16, 16, 8, 3).unwrap();
         let l = q.lease(0).unwrap();
-        assert!(q.expired(Duration::from_secs(60)).is_empty());
+        assert!(q.expired(Duration::from_secs(60), Duration::ZERO).is_empty());
         std::thread::sleep(Duration::from_millis(5));
-        assert_eq!(q.expired(Duration::ZERO), vec![l.id]);
+        assert_eq!(q.expired(Duration::ZERO, Duration::ZERO), vec![l.id]);
+    }
+
+    #[test]
+    fn expiry_deadline_scales_with_lease_length() {
+        // two leases: [0,64) and [64,80) — after a beat, a zero base
+        // with a generous per-trial rate reaps only the short one
+        let mut q = WorkQueue::new(80, 64, 8, 3).unwrap();
+        let big = q.lease(0).unwrap();
+        assert_eq!((big.lo, big.hi), (0, 64));
+        let small = q.lease(1).unwrap();
+        assert_eq!((small.lo, small.hi), (64, 80));
+        std::thread::sleep(Duration::from_millis(20));
+        let per_trial = Duration::from_millis(1); // big: 64ms, small: 16ms
+        assert_eq!(q.expired(Duration::ZERO, per_trial), vec![small.id]);
+        // a long enough base keeps both alive regardless of length
+        assert!(q.expired(Duration::from_secs(60), Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn reopen_uncovers_and_requeues_without_retry_charge() {
+        let mut q = WorkQueue::new(32, 16, 8, 0).unwrap(); // zero retries!
+        let a = q.lease(0).unwrap(); // [0,16)
+        let b = q.lease(1).unwrap(); // [16,32)
+        q.complete(a.id).unwrap();
+        q.complete(b.id).unwrap();
+        assert!(q.is_complete());
+        // audit condemns the worker that banked [0,16)
+        assert!(q.reopen(0, 16));
+        assert!(!q.is_complete());
+        // double-reopen is idempotent: requeue already covers it
+        assert!(!q.reopen(0, 16));
+        let r = q.lease(2).unwrap();
+        assert_eq!((r.lo, r.hi), (0, 16));
+        // even with max_retries = 0 the reopened range carried no
+        // retry charge; its first real failure still gets a requeue
+        // denied only by the budget (0 here -> error), proving reopen
+        // itself never touched the counter
+        q.complete(r.id).unwrap();
+        assert!(q.is_complete());
+    }
+
+    #[test]
+    fn reopen_with_live_cover_only_uncovers() {
+        let mut q = WorkQueue::new(16, 16, 8, 3).unwrap();
+        let a = q.lease(0).unwrap();
+        q.complete(a.id).unwrap();
+        // a speculative duplicate issued before the audit verdict is
+        // still running: reopen must not double-enqueue the range
+        let mut q2 = WorkQueue::new(16, 16, 8, 3).unwrap();
+        let x = q2.lease(0).unwrap();
+        let s = q2.speculative_lease(1).unwrap();
+        q2.complete(x.id).unwrap();
+        assert!(q2.is_complete());
+        assert!(!q2.reopen(0, 16), "live lease covers the range");
+        assert!(!q2.is_complete());
+        q2.complete(s.id).unwrap();
+        assert!(q2.is_complete(), "the live cover re-banks the range");
+        // out-of-range / empty reopens are rejected
+        assert!(!q.reopen(8, 8));
+        assert!(!q.reopen(0, 999));
+    }
+
+    #[test]
+    fn reopen_splits_coalesced_done_intervals() {
+        let mut q = WorkQueue::new(48, 16, 16, 3).unwrap();
+        let ids: Vec<_> = std::iter::from_fn(|| q.lease(0)).map(|l| l.id).collect();
+        for id in ids {
+            q.complete(id).unwrap();
+        }
+        assert!(q.is_complete());
+        // reopening the middle lease splits [0,48) into [0,16)+[32,48)
+        assert!(q.reopen(16, 32));
+        assert!(!q.is_complete());
+        let r = q.lease(1).unwrap();
+        assert_eq!((r.lo, r.hi), (16, 32));
+        q.complete(r.id).unwrap();
+        assert!(q.is_complete());
     }
 
     #[test]

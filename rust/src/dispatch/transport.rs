@@ -14,18 +14,19 @@
 //! still alive"; a *hung* worker stays `Running` forever and is caught
 //! by the dispatcher's lease deadline instead.
 //!
-//! Fault injection for tests lives here too: [`LocalProcess::inject_kill`]
-//! arms a one-shot kill of a worker's next job mid-run (simulating a
-//! machine death), and [`WorkerJob::delay_ms`] is forwarded to the
-//! subprocess via the `GCOD_SWEEP_TEST_DELAY_MS` hook so straggling and
-//! never-completing workers can be simulated with the crate's own
-//! straggler models.
+//! Fault injection does **not** live here: wrap any transport in
+//! [`super::chaos::ChaosTransport`] to inject seeded kills, hangs,
+//! delays and byzantine corruption (one-shot presets included — see
+//! [`super::chaos::ChaosTransport::preset_kill`]). The only simulation
+//! hook a transport itself carries is [`WorkerJob::delay_ms`],
+//! forwarded to the subprocess via the `GCOD_SWEEP_TEST_DELAY_MS`
+//! startup-delay env var so straggling workers can be driven by the
+//! crate's own straggler models.
 
 use crate::error::{Error, Result};
 use crate::sweep::shard::{ShardResult, SweepConfig};
 use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::time::{Duration, Instant};
 
 pub use super::queue::WorkerId;
 
@@ -91,10 +92,6 @@ struct Slot {
     /// worker stderr sidecar file — a file, not a pipe, so a chatty or
     /// panicking worker can never block on a full pipe buffer
     err_path: PathBuf,
-    started: Instant,
-    /// one-shot fault injection: kill the current/next job after this
-    /// long
-    kill_after: Option<Duration>,
 }
 
 /// Runs each leased range as a `gcod sweep-shard --range lo..hi`
@@ -118,17 +115,9 @@ impl LocalProcess {
                 child: None,
                 out_path: PathBuf::new(),
                 err_path: PathBuf::new(),
-                started: Instant::now(),
-                kill_after: None,
             })
             .collect();
         Self { gcod_bin, slots }
-    }
-
-    /// Fault injection: kill `worker`'s next job this long after it
-    /// starts (one-shot). Simulates a machine dying mid-shard.
-    pub fn inject_kill(&mut self, worker: WorkerId, after: Duration) {
-        self.slots[worker].kill_after = Some(after);
     }
 
     fn args_for(job: &WorkerJob) -> Vec<String> {
@@ -193,20 +182,12 @@ impl WorkerTransport for LocalProcess {
         slot.child = Some(child);
         slot.out_path = job.out_path.clone();
         slot.err_path = err_path;
-        slot.started = Instant::now();
         Ok(())
     }
 
     fn poll(&mut self, worker: WorkerId) -> WorkerPoll {
         let slot = &mut self.slots[worker];
         let Some(child) = slot.child.as_mut() else { return WorkerPoll::Idle };
-        // armed fault: simulate the machine dying mid-shard
-        if let Some(after) = slot.kill_after {
-            if slot.started.elapsed() >= after {
-                let _ = child.kill();
-                slot.kill_after = None;
-            }
-        }
         match child.try_wait() {
             Ok(None) => WorkerPoll::Running,
             Ok(Some(status)) => {
@@ -240,7 +221,6 @@ impl WorkerTransport for LocalProcess {
             // just-finished-then-killed worker leave a stale file
             let _ = std::fs::remove_file(&slot.out_path);
         }
-        slot.kill_after = None;
     }
 
     fn collect(&mut self, worker: WorkerId) -> Result<ShardResult> {

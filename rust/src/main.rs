@@ -6,7 +6,10 @@
 use gcod::cli::{flag, switch, App, CommandSpec};
 use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
-use gcod::dispatch::{DispatchConfig, Dispatcher, LocalProcess, StragglerSimCfg};
+use gcod::dispatch::{
+    ChaosProfile, ChaosTransport, DispatchConfig, Dispatcher, HealthConfig, LocalProcess,
+    StragglerSimCfg,
+};
 use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Table};
@@ -142,6 +145,11 @@ fn app() -> App {
                     flag("min-grain", "adaptive carve floor in trials (0 = one chunk)", Some("0")),
                     flag("threads", "engine threads per worker", Some("1")),
                     flag("lease-timeout-ms", "presume a lease lost after this long", Some("30000")),
+                    flag(
+                        "lease-timeout-per-trial-ms",
+                        "per-trial addition to the lease deadline (scales with range length)",
+                        Some("5"),
+                    ),
                     flag("max-retries", "re-enqueues per range before failing", Some("3")),
                     flag("poll-ms", "dispatcher poll interval", Some("10")),
                     flag("out", "merged result path", Some("sweep_launched.json")),
@@ -157,14 +165,45 @@ fn app() -> App {
                     ),
                     switch("stats-only", "stats-only manifests (relaxed Chan-merge contract)"),
                     switch("no-speculate", "disable speculative re-execution of slow ranges"),
-                    flag("kill-worker", "fault injection: kill this worker id mid-shard", None),
+                    flag(
+                        "audit-fraction",
+                        "fraction of leases re-executed on another worker and byte-compared",
+                        Some("0"),
+                    ),
+                    flag(
+                        "quarantine-after",
+                        "audit condemnations before a worker is quarantined as byzantine",
+                        Some("2"),
+                    ),
+                    flag(
+                        "quarantine-after-failures",
+                        "consecutive crash/timeouts before quarantine (0 = never)",
+                        Some("0"),
+                    ),
+                    flag(
+                        "backoff-base-ms",
+                        "base respawn backoff after a worker failure (0 = none)",
+                        Some("100"),
+                    ),
+                    flag(
+                        "chaos-seed",
+                        "deterministic chaos harness seed (replays the same fault plan)",
+                        Some("0"),
+                    ),
+                    flag(
+                        "chaos-profile",
+                        "chaos preset none|kills|flaky|byzantine or k=v list \
+                         (kill=0.1,delay=0.2,byz-worker=1,...)",
+                        Some("none"),
+                    ),
+                    flag("kill-worker", "chaos preset: kill this worker id mid-shard", None),
                     flag(
                         "kill-after-ms",
-                        "fault injection: kill this long after job start",
+                        "chaos preset: kill this long after job start",
                         Some("50"),
                     ),
-                    flag("hang-worker", "fault injection: this worker id never heartbeats", None),
-                    flag("hang-ms", "fault injection: hang duration (ms)", Some("120000")),
+                    flag("hang-worker", "chaos preset: this worker id stalls its next job", None),
+                    flag("hang-ms", "chaos preset: stall duration (ms)", Some("120000")),
                     flag("sim-stragglers", "simulate Bernoulli(p) straggling workers", None),
                     flag("sim-delay-ms", "simulated straggler delay (ms)", Some("200")),
                 ],
@@ -449,19 +488,40 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
     let cfg = sweep_config_from(inv)?;
     let workers = inv.usize_or("workers", 4).max(1);
     let out_dir = std::env::temp_dir().join(format!("gcod_launch_{}", std::process::id()));
+    let audit_fraction = inv
+        .str_or("audit-fraction", "0")
+        .parse::<f64>()
+        .map_err(|e| Error::msg(format!("bad --audit-fraction: {e}")))?;
+    if !(0.0..=1.0).contains(&audit_fraction) {
+        return Err(Error::msg(format!(
+            "bad --audit-fraction: {audit_fraction} is not in [0, 1]"
+        )));
+    }
     let mut dcfg = DispatchConfig {
         grain: inv.usize_or("grain", 0),
         adaptive_grain: inv.switch("adaptive-grain"),
         min_grain: inv.usize_or("min-grain", 0),
         threads_per_worker: inv.usize_or("threads", 1),
         lease_timeout: Duration::from_millis(inv.u64_or("lease-timeout-ms", 30_000)),
+        lease_timeout_per_trial: Duration::from_millis(
+            inv.u64_or("lease-timeout-per-trial-ms", 5),
+        ),
         max_retries: inv.usize_or("max-retries", 3),
         poll_interval: Duration::from_millis(inv.u64_or("poll-ms", 10)),
         speculate: !inv.switch("no-speculate"),
         stats_only: inv.switch("stats-only"),
         out_dir: out_dir.clone(),
         straggler_sim: None,
-        fault_delay_ms: Vec::new(),
+        audit_fraction,
+        // derived from the sweep seed so a replayed launch audits the
+        // same leases on the same sub-ranges
+        audit_seed: cfg.seed ^ 0xA0D1_75EE,
+        health: HealthConfig {
+            quarantine_after: inv.usize_or("quarantine-after", 2),
+            quarantine_after_failures: inv.usize_or("quarantine-after-failures", 0),
+            backoff_base: Duration::from_millis(inv.u64_or("backoff-base-ms", 100)),
+            ..HealthConfig::default()
+        },
         journal: None,
         resume: false,
     };
@@ -499,13 +559,16 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
             }
         }
     };
-    if let Some(w) = worker_id("hang-worker")? {
-        dcfg.fault_delay_ms.push((w, inv.u64_or("hang-ms", 120_000)));
-    }
+    let chaos_profile = ChaosProfile::parse(&inv.str_or("chaos-profile", "none"))?;
+    let chaos_seed = inv.u64_or("chaos-seed", 0);
     let exe = std::env::current_exe()?;
-    let mut transport = LocalProcess::new(exe, workers);
+    let mut transport =
+        ChaosTransport::new(LocalProcess::new(exe, workers), chaos_seed, chaos_profile);
+    if let Some(w) = worker_id("hang-worker")? {
+        transport.preset_delay(w, inv.u64_or("hang-ms", 120_000));
+    }
     if let Some(w) = worker_id("kill-worker")? {
-        transport.inject_kill(w, Duration::from_millis(inv.u64_or("kill-after-ms", 50)));
+        transport.preset_kill(w, Duration::from_millis(inv.u64_or("kill-after-ms", 50)));
     }
     println!(
         "launching sweep '{}' ({} {} p={} seed={}, {} trials) on {workers} local worker(s)...",
@@ -530,6 +593,13 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
                 j.display(),
                 j.display()
             );
+        }
+    }
+    if transport.is_active() {
+        // the replayable fault sequence: re-running with the same
+        // --chaos-seed and --chaos-profile reproduces it exactly
+        for line in &transport.plan.log {
+            println!("  [chaos] {line}");
         }
     }
     let outcome = result?;

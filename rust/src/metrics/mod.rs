@@ -152,6 +152,38 @@ impl Stats {
     }
 }
 
+/// Exponentially weighted moving average — recency-weighted companion
+/// to [`Stats`] for signals where the *current* level matters more than
+/// the all-time aggregate (e.g. a worker's lease latency after it
+/// recovers from a slow patch). The first observation seeds the value;
+/// later ones fold in with weight `alpha`.
+#[derive(Clone, Debug)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// `alpha` in (0, 1]: weight of each new observation (1 = track the
+    /// latest sample exactly, small = long memory).
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "ewma alpha must be in (0, 1]");
+        Self { alpha, value: None }
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => v + self.alpha * (x - v),
+        });
+    }
+
+    /// Current level; `None` before the first observation.
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
 /// Fixed-bucket latency histogram (log-spaced), for dispatch timings.
 #[derive(Clone, Debug)]
 pub struct LatencyHistogram {
@@ -328,6 +360,26 @@ mod tests {
         let before = merged.mean();
         merged.merge(&Stats::new());
         assert_eq!(merged.mean(), before);
+    }
+
+    #[test]
+    fn ewma_seeds_then_converges() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        e.observe(10.0);
+        assert_eq!(e.get(), Some(10.0), "first observation seeds the level");
+        e.observe(0.0);
+        assert_eq!(e.get(), Some(5.0));
+        for _ in 0..60 {
+            e.observe(2.0);
+        }
+        assert!((e.get().unwrap() - 2.0).abs() < 1e-9, "converges to a held level");
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn ewma_rejects_zero_alpha() {
+        let _ = Ewma::new(0.0);
     }
 
     #[test]

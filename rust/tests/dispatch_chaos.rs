@@ -1,0 +1,189 @@
+//! Chaos-harness integration suite: the seeded fault injector
+//! (`dispatch::chaos`), the result audit and the health/quarantine
+//! policy, end to end over real `gcod sweep-shard` subprocess
+//! boundaries.
+//!
+//! * a profile-drawn storm of kills and delays (crash-class only) is
+//!   absorbed by the retry/reap machinery: merged bytes identical to
+//!   the single-process run;
+//! * a pinned byzantine worker forging self-consistent manifests is
+//!   caught by the re-execution audit, quarantined, and every range it
+//!   banked is invalidated and recomputed — bytes still identical;
+//! * the `gcod sweep-launch --chaos-*` CLI round trip mirrors the CI
+//!   chaos-soak step: fault plan logged, adversary quarantined, merged
+//!   file byte-identical to the `sweep-shard 0/1` + `sweep-merge` path.
+//!
+//! (Fault-plan replay determinism — same seed, same decision sequence —
+//! is pinned by the unit tests in `src/dispatch/chaos.rs`; audit
+//! attribution corner cases by the scripted tests in
+//! `src/dispatch/mod.rs`.)
+
+use gcod::dispatch::{ChaosProfile, ChaosTransport, DispatchConfig, Dispatcher, LocalProcess};
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gcod_chaos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn sweep_cfg(trials: usize) -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 9,
+        trials,
+        chunk: 8,
+        params: BTreeMap::new(),
+    }
+}
+
+fn dcfg(tag: &str) -> DispatchConfig {
+    DispatchConfig {
+        grain: 16,
+        poll_interval: Duration::from_millis(2),
+        out_dir: tmp_dir(tag),
+        ..DispatchConfig::default()
+    }
+}
+
+/// Crash-class storm: seeded kills and delays across the pool. Retry +
+/// reap machinery absorbs everything and the bits never move.
+#[test]
+fn seeded_fault_storm_stays_bit_exact() {
+    let c = sweep_cfg(160);
+    let single = shard::run_full(&c, 2).unwrap();
+    let profile = ChaosProfile::parse("kill=0.25,delay=0.45").unwrap();
+    let mut t = ChaosTransport::new(LocalProcess::new(gcod_bin(), 3), 1234, profile);
+    let mut d = dcfg("storm");
+    d.max_retries = 10;
+    let out = Dispatcher::new(d).run(&c, &mut t).unwrap();
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+    assert!(!t.plan.log.is_empty(), "seeded profile never drew a fault");
+}
+
+/// The acceptance contract over real process boundaries: a pinned
+/// byzantine worker whose forged manifests pass structural validation
+/// is condemned by the re-execution audit, quarantined, and all of its
+/// banked ranges recomputed by the honest pool — merged bytes exact.
+/// `grain == chunk` makes the audit window the whole lease, so every
+/// forgery is deterministically caught.
+#[test]
+fn byzantine_worker_quarantined_over_subprocesses() {
+    let c = sweep_cfg(96);
+    let single = shard::run_full(&c, 2).unwrap();
+    let profile = ChaosProfile::parse("byz-worker=1").unwrap();
+    let mut t = ChaosTransport::new(LocalProcess::new(gcod_bin(), 3), 7, profile);
+    let mut d = dcfg("byz");
+    d.grain = 8;
+    d.audit_fraction = 1.0;
+    let out = Dispatcher::new(d).run(&c, &mut t).unwrap();
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+    assert!(
+        out.report.quarantined.iter().any(|(w, why)| *w == 1 && why == "byzantine"),
+        "adversary not quarantined: {}",
+        out.report.summary()
+    );
+    assert!(out.report.audit_mismatches >= 1, "{}", out.report.summary());
+    assert!(out.report.invalidated_ranges >= 1, "{}", out.report.summary());
+}
+
+// ---------------------------------------------------------------------
+// CLI end-to-end
+// ---------------------------------------------------------------------
+
+fn run_ok(cmd: &mut Command) -> String {
+    let out = cmd.output().expect("spawn gcod");
+    assert!(
+        out.status.success(),
+        "gcod failed: {:?}\nstdout: {}\nstderr: {}",
+        cmd,
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    String::from_utf8_lossy(&out.stdout).into_owned()
+}
+
+const CLI_SWEEP_ARGS: &[&str] = &[
+    "--sweep",
+    "decode-error",
+    "--scheme",
+    "graph-rr:16,3",
+    "--decoder",
+    "optimal",
+    "--p",
+    "0.2",
+    "--trials",
+    "120",
+    "--seed",
+    "9",
+    "--chunk",
+    "8",
+];
+
+/// The CI chaos-soak step in miniature: `sweep-launch` under a seeded
+/// byzantine fault plan must log the plan, quarantine the adversary and
+/// produce a merged file byte-identical to the single-process path.
+#[test]
+fn cli_chaos_byzantine_round_trip() {
+    let dir = tmp_dir("cli");
+    let shard_path = dir.join("single_shard.json");
+    let single_path = dir.join("single_merged.json");
+    let launched_path = dir.join("launched.json");
+
+    run_ok(Command::new(gcod_bin()).arg("sweep-shard").args(CLI_SWEEP_ARGS).args([
+        "--threads",
+        "2",
+        "--shard",
+        "0/1",
+        "--out",
+        shard_path.to_str().unwrap(),
+    ]));
+    run_ok(Command::new(gcod_bin()).args([
+        "sweep-merge",
+        "--input",
+        shard_path.to_str().unwrap(),
+        "--out",
+        single_path.to_str().unwrap(),
+    ]));
+    let stdout = run_ok(Command::new(gcod_bin()).arg("sweep-launch").args(CLI_SWEEP_ARGS).args([
+        "--workers",
+        "3",
+        "--grain",
+        "8",
+        "--max-retries",
+        "10",
+        "--chaos-seed",
+        "42",
+        "--chaos-profile",
+        "byz-worker=1",
+        "--audit-fraction",
+        "1",
+        "--quarantine-after",
+        "2",
+        "--out",
+        launched_path.to_str().unwrap(),
+    ]));
+    assert!(stdout.contains("[chaos]"), "missing fault-plan log: {stdout}");
+    assert!(
+        stdout.contains("worker 1 (byzantine)"),
+        "adversary not quarantined in report: {stdout}"
+    );
+
+    let single = std::fs::read_to_string(&single_path).unwrap();
+    let launched = std::fs::read_to_string(&launched_path).unwrap();
+    assert_eq!(single, launched, "chaos sweep-launch output != single-process merge");
+    let merged = shard::MergedSweep::parse(&launched).unwrap();
+    assert_eq!(merged.values.len(), 120);
+    let _ = std::fs::remove_dir_all(&dir);
+}

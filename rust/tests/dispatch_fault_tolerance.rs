@@ -21,7 +21,9 @@
 //! `src/dispatch/mod.rs`; here everything crosses real process
 //! boundaries.)
 
-use gcod::dispatch::{DispatchConfig, Dispatcher, LocalProcess, WorkerId};
+use gcod::dispatch::{
+    ChaosProfile, ChaosTransport, DispatchConfig, Dispatcher, LocalProcess, WorkerId,
+};
 use gcod::sweep::shard::{self, SweepConfig, SweepKind};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -60,20 +62,18 @@ fn dcfg(tag: &str) -> DispatchConfig {
     }
 }
 
-/// Dispatch `cfg` over `workers` subprocesses with worker 0 slowed and
-/// then killed mid-range; assert the merged JSON is byte-identical to
-/// the in-process single run.
+/// Dispatch `cfg` over 2 subprocesses with one worker chaos-killed
+/// mid-range; assert the merged JSON is byte-identical to the
+/// in-process single run.
 fn assert_faulted_dispatch_bit_exact(cfg: &SweepConfig, tag: &str, kill: Option<WorkerId>) {
     let single = shard::run_full(cfg, 2).unwrap();
-    let mut d = dcfg(tag);
-    if kill.is_some() {
-        // slow worker 0's first job so the injected kill reliably lands
-        // mid-range (the job sleeps 150ms, the kill fires at 30ms)
-        d.fault_delay_ms.push((0, 150));
-    }
-    let mut transport = LocalProcess::new(gcod_bin(), 2);
+    let d = dcfg(tag);
+    let mut transport =
+        ChaosTransport::new(LocalProcess::new(gcod_bin(), 2), 0, ChaosProfile::none());
     if let Some(w) = kill {
-        transport.inject_kill(w, Duration::from_millis(30));
+        // the chaos kill hides any early inner completion, so it lands
+        // mid-range no matter how fast the worker finishes
+        transport.preset_kill(w, Duration::from_millis(30));
     }
     let out = Dispatcher::new(d).run(cfg, &mut transport).unwrap();
     assert_eq!(
@@ -150,10 +150,12 @@ fn hung_worker_is_reaped_by_lease_deadline() {
     let cfg = decode_error_cfg();
     let single = shard::run_full(&cfg, 2).unwrap();
     let mut d = dcfg("hang");
-    d.fault_delay_ms.push((0, 60_000)); // effectively never
     d.lease_timeout = Duration::from_millis(400);
+    d.lease_timeout_per_trial = Duration::ZERO; // flat deadline on purpose
     d.speculate = false; // force the rescue through the timeout path
-    let mut transport = LocalProcess::new(gcod_bin(), 2);
+    let mut transport =
+        ChaosTransport::new(LocalProcess::new(gcod_bin(), 2), 0, ChaosProfile::none());
+    transport.preset_delay(0, 60_000); // effectively never heartbeats
     let out = Dispatcher::new(d).run(&cfg, &mut transport).unwrap();
     assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
     assert!(out.report.timeouts >= 1, "no lease timed out: {}", out.report.summary());
