@@ -49,10 +49,10 @@ fn main() {
         }
     }
     let pjrt = args.has("--pjrt");
-    if pjrt && !cfg!(feature = "pjrt") {
+    if pjrt && !cfg!(pjrt_runtime) {
         eprintln!("--pjrt requires building with --features pjrt; falling back to native");
     }
-    let pjrt = pjrt && cfg!(feature = "pjrt");
+    let pjrt = pjrt && cfg!(pjrt_runtime);
     let k = if pjrt { 2000 } else { args.usize_or("--dim", 500) };
     let n_points = 6000;
 
@@ -64,7 +64,7 @@ fn main() {
     println!("m=24 workers, backend={}", if pjrt { "pjrt" } else { "native" });
 
     let backend = || {
-        #[cfg(feature = "pjrt")]
+        #[cfg(pjrt_runtime)]
         if pjrt {
             return ComputeBackend::Pjrt {
                 artifacts_dir: "artifacts".into(),

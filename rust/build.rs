@@ -1,0 +1,25 @@
+//! Feature-gate plumbing for the PJRT runtime.
+//!
+//! The crate is dependency-free by default (offline CI), but the PJRT
+//! request path needs the vendored `xla` + `anyhow` crates. Gating that
+//! code on `feature = "pjrt"` alone made `cargo check --features pjrt`
+//! explode into hundreds of unresolved-import errors in a tree without
+//! the vendored deps. Instead, the code is gated on the `pjrt_runtime`
+//! cfg emitted here, which is set only when the feature is on AND the
+//! deps are actually declared: the dep-free wiring in Cargo.toml makes
+//! `pjrt` expand to the `pjrt-unvendored` marker feature, which
+//! suppresses the cfg and lets `lib.rs` raise one clear
+//! `compile_error!` pointing at the vendoring instructions. Vendoring
+//! (switching the feature to `pjrt = ["dep:xla", "dep:anyhow"]`) drops
+//! the marker and the runtime compiles for real.
+
+fn main() {
+    // declared unconditionally so `-D warnings` builds never trip the
+    // unexpected-cfg lint on targets that mention pjrt_runtime
+    println!("cargo:rustc-check-cfg=cfg(pjrt_runtime)");
+    let pjrt = std::env::var_os("CARGO_FEATURE_PJRT").is_some();
+    let unvendored = std::env::var_os("CARGO_FEATURE_PJRT_UNVENDORED").is_some();
+    if pjrt && !unvendored {
+        println!("cargo:rustc-cfg=pjrt_runtime");
+    }
+}

@@ -19,7 +19,7 @@
 
 use crate::decode::Decoder;
 use crate::error::{Context, Error, Result};
-#[cfg(feature = "pjrt")]
+#[cfg(pjrt_runtime)]
 use crate::runtime::{Runtime, Tensor};
 use crate::sparse::Csc;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -33,7 +33,7 @@ pub enum ComputeBackend {
     /// Execute the AOT `worker_grad_*` artifact via PJRT (the real
     /// three-layer path). `artifact` must match (blocks, b, k).
     /// Only available with the `pjrt` feature.
-    #[cfg(feature = "pjrt")]
+    #[cfg(pjrt_runtime)]
     Pjrt { artifacts_dir: String, artifact: String },
     /// Pure-rust gradient (for very large m where per-thread PJRT
     /// clients are wasteful, and for differential testing).
@@ -312,7 +312,7 @@ fn worker_main(
     ready: Arc<AtomicUsize>,
 ) {
     // per-thread PJRT runtime (PjRtClient is not Send)
-    #[cfg(feature = "pjrt")]
+    #[cfg(pjrt_runtime)]
     let pjrt: Option<(Runtime, String)> = match &backend {
         ComputeBackend::Pjrt { artifacts_dir, artifact } => {
             let rt = Runtime::open(artifacts_dir)
@@ -324,7 +324,7 @@ fn worker_main(
         }
         ComputeBackend::Native => None,
     };
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(pjrt_runtime))]
     let _ = &backend;
     ready.fetch_add(1, Ordering::SeqCst);
 
@@ -348,7 +348,7 @@ fn worker_main(
                 if let Some(delay) = should_straggle(&injection, id, iter) {
                     std::thread::sleep(delay);
                 }
-                #[cfg(feature = "pjrt")]
+                #[cfg(pjrt_runtime)]
                 let grad = match &pjrt {
                     Some((rt, artifact)) => {
                         let inputs = [
@@ -372,7 +372,7 @@ fn worker_main(
                     }
                     None => data.native_grad(&theta),
                 };
-                #[cfg(not(feature = "pjrt"))]
+                #[cfg(not(pjrt_runtime))]
                 let grad = data.native_grad(&theta);
                 let _ = tx.send(GradMsg { worker: id, iter, grad });
             }

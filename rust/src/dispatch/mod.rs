@@ -57,11 +57,23 @@
 //! The invariant throughout is unchanged: under any replayed fault
 //! plan that leaves enough honest workers, the merged output is
 //! byte-identical to a single-process run.
+//!
+//! Dispatch crosses machine boundaries through the same seam:
+//! [`tcp::TcpTransport`] serves leases to remote `gcod worker`
+//! processes over a length-prefixed JSON [`protocol`], and the
+//! persistent [`server`] (`gcod serve`) holds a machine registry with
+//! capability classes plus a job queue that clients (`gcod submit` /
+//! `gcod status`) talk to — all of the machinery above (leases,
+//! journal, chaos, audits, quarantine) composes with TCP workers
+//! unchanged, and the byte-identity invariant holds per job.
 
 pub mod chaos;
 pub mod health;
 pub mod journal;
+pub mod protocol;
 pub mod queue;
+pub mod server;
+pub mod tcp;
 pub mod transport;
 
 use crate::error::{Error, Result};
@@ -76,7 +88,12 @@ use std::time::{Duration, Instant};
 pub use chaos::{ChaosProfile, ChaosTransport, Fault, FaultPlan};
 pub use health::{HealthConfig, HealthTracker, QuarantineReason, WorkerHealth};
 pub use journal::Journal;
+pub use protocol::{JobSpec, LeaseSpec, Msg};
 pub use queue::{Lease, LeaseId, WorkQueue, WorkerId};
+pub use server::{
+    query_status, serve, serve_on, submit_job, submit_job_nowait, ServeConfig, SubmitOutcome,
+};
+pub use tcp::{worker_loop, RegisteredWorker, TcpTransport, WorkerOpts};
 pub use transport::{LocalProcess, WorkerJob, WorkerPoll, WorkerTransport};
 
 /// Simulate straggling workers: each assignment wave samples a

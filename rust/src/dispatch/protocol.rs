@@ -1,0 +1,696 @@
+//! Wire protocol for multi-host dispatch: length-prefixed JSON frames.
+//!
+//! One frame = a 4-byte big-endian length followed by that many bytes
+//! of UTF-8 JSON — a single [`Msg`]. The protocol is deliberately tiny
+//! and debuggable (`nc` + eyeballs suffice): workers **register** with
+//! a capability class, the coordinator **leases** trial ranges to them,
+//! workers **heartbeat** while computing and return the finished shard
+//! **manifest** verbatim (the same bytes `sweep-shard --out` would have
+//! written, so the bit-exact merge contract crosses the wire
+//! untouched), and either side says **goodbye**. Clients speak the same
+//! framing: **submit** a [`JobSpec`], receive **submitted** /
+//! **job-done** / **job-error**, or ask for **status**.
+//!
+//! Numbers that must round-trip exactly ride the same encodings as the
+//! shard manifests: `u64` seeds as decimal strings (JSON numbers are
+//! f64), floats as hex bit patterns (see [`crate::bench_util`]). The
+//! manifest payload itself is embedded as an escaped JSON string and
+//! re-parsed with the full structural validation in
+//! [`ShardResult::parse`](crate::sweep::shard::ShardResult::parse) —
+//! a byzantine worker gains nothing from the transport layer.
+
+use crate::bench_util::{f64_from_hex_bits, f64_to_hex_bits, json_escape, json_f64_display};
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use crate::sweep::shard::{SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// Bumped on any wire-incompatible change; registration carries it so
+/// a version skew fails with a message instead of a parse error.
+pub const PROTO_VERSION: u64 = 1;
+
+/// Upper bound on one frame body. Shard manifests dominate frame size
+/// (~21 bytes/trial full-fidelity); 1 GiB of manifest is far past the
+/// point where `--stats-only` should be in use.
+pub const MAX_FRAME: usize = 1 << 30;
+
+// ---------------------------------------------------------------------
+// Messages
+// ---------------------------------------------------------------------
+
+/// A leased trial range as it travels to a remote worker: everything in
+/// [`WorkerJob`](super::transport::WorkerJob) except the coordinator's
+/// local `out_path` (the worker picks its own scratch path and returns
+/// the manifest *text*, never a filename).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LeaseSpec {
+    pub config: SweepConfig,
+    pub lo: usize,
+    pub hi: usize,
+    pub threads: usize,
+    pub stats_only: bool,
+    pub delay_ms: u64,
+}
+
+/// One sweep job as submitted by a client: the sweep identity plus the
+/// dispatch knobs the coordinator should run it with (mirrors the
+/// `sweep-launch` flag set; chaos fields drive the coordinator-side
+/// [`ChaosTransport`](super::chaos::ChaosTransport) wrap).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobSpec {
+    pub config: SweepConfig,
+    /// capability class this job may run on ("" = any registered worker)
+    pub class: String,
+    pub grain: usize,
+    pub adaptive_grain: bool,
+    pub min_grain: usize,
+    pub threads_per_worker: usize,
+    pub lease_timeout_ms: u64,
+    pub lease_timeout_per_trial_ms: u64,
+    pub max_retries: usize,
+    pub stats_only: bool,
+    pub audit_fraction: f64,
+    pub chaos_seed: u64,
+    /// [`ChaosProfile::parse`](super::chaos::ChaosProfile::parse) spec
+    pub chaos_profile: String,
+    /// chaos preset: kill this worker slot mid-lease (fault-drill jobs)
+    pub kill_worker: Option<usize>,
+    pub kill_after_ms: u64,
+}
+
+impl JobSpec {
+    /// `sweep-launch`'s defaults around a sweep identity.
+    pub fn new(config: SweepConfig) -> Self {
+        Self {
+            config,
+            class: String::new(),
+            grain: 0,
+            adaptive_grain: false,
+            min_grain: 0,
+            threads_per_worker: 1,
+            lease_timeout_ms: 30_000,
+            lease_timeout_per_trial_ms: 5,
+            max_retries: 3,
+            stats_only: false,
+            audit_fraction: 0.0,
+            chaos_seed: 0,
+            chaos_profile: "none".into(),
+            kill_worker: None,
+            kill_after_ms: 50,
+        }
+    }
+}
+
+/// Everything that crosses a dispatch socket, worker side and client
+/// side alike (the first frame a connection sends identifies its role).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// worker → coordinator, once, immediately after connect
+    Register { class: String, threads: usize },
+    /// worker → coordinator, periodic liveness while connected
+    Heartbeat,
+    /// coordinator → worker: run this range; `job` tags the reply
+    Lease { job: u64, spec: LeaseSpec },
+    /// coordinator → worker: abandon job `job` (lease reaped, chaos
+    /// drill, speculation loser); the worker tears its subprocess down
+    Kill { job: u64 },
+    /// worker → coordinator: job finished; `text` is the shard manifest
+    /// verbatim
+    Manifest { job: u64, text: String },
+    /// worker → coordinator: job died without a manifest
+    JobFailed { job: u64, error: String },
+    /// either direction: orderly shutdown of this connection
+    Goodbye,
+    /// client → coordinator: enqueue a sweep
+    Submit { spec: Box<JobSpec> },
+    /// coordinator → client: job accepted under this id
+    Submitted { job: u64 },
+    /// coordinator → client: merged result (byte-identical to a
+    /// single-process run) plus the dispatch report summary
+    JobDone { job: u64, summary: String, manifest: String },
+    /// coordinator → client: the job failed after retries
+    JobError { job: u64, error: String },
+    /// client → coordinator: registry / queue / metrics snapshot
+    Status,
+    /// coordinator → client: rendered status tables
+    StatusReport { text: String },
+}
+
+impl Msg {
+    pub fn render(&self) -> String {
+        match self {
+            Msg::Register { class, threads } => format!(
+                "{{\"msg\": \"register\", \"proto\": {PROTO_VERSION}, \"class\": \"{}\", \
+                 \"threads\": {threads}}}",
+                json_escape(class)
+            ),
+            Msg::Heartbeat => "{\"msg\": \"heartbeat\"}".into(),
+            Msg::Lease { job, spec } => format!(
+                "{{\"msg\": \"lease\", \"job\": {job}, \"lo\": {}, \"hi\": {}, \
+                 \"threads\": {}, \"stats_only\": {}, \"delay_ms\": {}, \"config\": {}}}",
+                spec.lo,
+                spec.hi,
+                spec.threads,
+                spec.stats_only,
+                spec.delay_ms,
+                render_config(&spec.config)
+            ),
+            Msg::Kill { job } => format!("{{\"msg\": \"kill\", \"job\": {job}}}"),
+            Msg::Manifest { job, text } => format!(
+                "{{\"msg\": \"manifest\", \"job\": {job}, \"text\": \"{}\"}}",
+                json_escape(text)
+            ),
+            Msg::JobFailed { job, error } => format!(
+                "{{\"msg\": \"job-failed\", \"job\": {job}, \"error\": \"{}\"}}",
+                json_escape(error)
+            ),
+            Msg::Goodbye => "{\"msg\": \"goodbye\"}".into(),
+            Msg::Submit { spec } => {
+                format!("{{\"msg\": \"submit\", \"spec\": {}}}", render_job_spec(spec))
+            }
+            Msg::Submitted { job } => format!("{{\"msg\": \"submitted\", \"job\": {job}}}"),
+            Msg::JobDone { job, summary, manifest } => format!(
+                "{{\"msg\": \"job-done\", \"job\": {job}, \"summary\": \"{}\", \
+                 \"manifest\": \"{}\"}}",
+                json_escape(summary),
+                json_escape(manifest)
+            ),
+            Msg::JobError { job, error } => format!(
+                "{{\"msg\": \"job-error\", \"job\": {job}, \"error\": \"{}\"}}",
+                json_escape(error)
+            ),
+            Msg::Status => "{\"msg\": \"status\"}".into(),
+            Msg::StatusReport { text } => {
+                format!("{{\"msg\": \"status-report\", \"text\": \"{}\"}}", json_escape(text))
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Msg> {
+        let doc = Json::parse(text).map_err(|e| Error::msg(format!("protocol frame: {e}")))?;
+        let kind = get_str(&doc, "msg")?;
+        match kind.as_str() {
+            "register" => {
+                let proto = get_u64(&doc, "proto")?;
+                if proto != PROTO_VERSION {
+                    return Err(Error::msg(format!(
+                        "protocol version skew: peer speaks v{proto}, this binary v{PROTO_VERSION}"
+                    )));
+                }
+                Ok(Msg::Register {
+                    class: get_str(&doc, "class")?,
+                    threads: get_usize(&doc, "threads")?,
+                })
+            }
+            "heartbeat" => Ok(Msg::Heartbeat),
+            "lease" => Ok(Msg::Lease {
+                job: get_u64(&doc, "job")?,
+                spec: LeaseSpec {
+                    config: parse_config(
+                        doc.get("config").ok_or_else(|| Error::msg("lease: missing 'config'"))?,
+                    )?,
+                    lo: get_usize(&doc, "lo")?,
+                    hi: get_usize(&doc, "hi")?,
+                    threads: get_usize(&doc, "threads")?,
+                    stats_only: get_bool(&doc, "stats_only")?,
+                    delay_ms: get_u64(&doc, "delay_ms")?,
+                },
+            }),
+            "kill" => Ok(Msg::Kill { job: get_u64(&doc, "job")? }),
+            "manifest" => {
+                Ok(Msg::Manifest { job: get_u64(&doc, "job")?, text: get_str(&doc, "text")? })
+            }
+            "job-failed" => {
+                Ok(Msg::JobFailed { job: get_u64(&doc, "job")?, error: get_str(&doc, "error")? })
+            }
+            "goodbye" => Ok(Msg::Goodbye),
+            "submit" => Ok(Msg::Submit {
+                spec: Box::new(parse_job_spec(
+                    doc.get("spec").ok_or_else(|| Error::msg("submit: missing 'spec'"))?,
+                )?),
+            }),
+            "submitted" => Ok(Msg::Submitted { job: get_u64(&doc, "job")? }),
+            "job-done" => Ok(Msg::JobDone {
+                job: get_u64(&doc, "job")?,
+                summary: get_str(&doc, "summary")?,
+                manifest: get_str(&doc, "manifest")?,
+            }),
+            "job-error" => {
+                Ok(Msg::JobError { job: get_u64(&doc, "job")?, error: get_str(&doc, "error")? })
+            }
+            "status" => Ok(Msg::Status),
+            "status-report" => Ok(Msg::StatusReport { text: get_str(&doc, "text")? }),
+            other => Err(Error::msg(format!("unknown protocol message '{other}'"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// SweepConfig / JobSpec wire encodings
+// ---------------------------------------------------------------------
+
+fn render_config(c: &SweepConfig) -> String {
+    let mut params = String::from("{");
+    for (i, (k, v)) in c.params.iter().enumerate() {
+        if i > 0 {
+            params.push_str(", ");
+        }
+        params.push_str(&format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)));
+    }
+    params.push('}');
+    format!(
+        "{{\"chunk\": {}, \"decoder\": \"{}\", \"p\": \"{}\", \"p_bits\": \"{}\", \
+         \"params\": {params}, \"scheme\": \"{}\", \"seed\": \"{}\", \"sweep\": \"{}\", \
+         \"trials\": {}}}",
+        c.chunk,
+        json_escape(&c.decoder),
+        json_f64_display(c.p),
+        f64_to_hex_bits(c.p),
+        json_escape(&c.scheme),
+        c.seed,
+        json_escape(c.sweep.as_str()),
+        c.trials
+    )
+}
+
+fn parse_config(j: &Json) -> Result<SweepConfig> {
+    let mut params = BTreeMap::new();
+    if let Some(Json::Obj(m)) = j.get("params") {
+        for (k, v) in m {
+            params.insert(
+                k.clone(),
+                v.as_str()
+                    .ok_or_else(|| Error::msg(format!("param '{k}' is not a string")))?
+                    .to_string(),
+            );
+        }
+    }
+    Ok(SweepConfig {
+        sweep: SweepKind::parse(&get_str(j, "sweep")?)?,
+        scheme: get_str(j, "scheme")?,
+        decoder: get_str(j, "decoder")?,
+        p: get_f64_bits(j, "p_bits")?,
+        seed: get_u64_str(j, "seed")?,
+        trials: get_usize(j, "trials")?,
+        chunk: get_usize(j, "chunk")?,
+        params,
+    })
+}
+
+fn render_job_spec(s: &JobSpec) -> String {
+    format!(
+        "{{\"adaptive_grain\": {}, \"audit_fraction_bits\": \"{}\", \"chaos_profile\": \"{}\", \
+         \"chaos_seed\": \"{}\", \"class\": \"{}\", \"config\": {}, \"grain\": {}, \
+         \"kill_after_ms\": {}, \"kill_worker\": {}, \"lease_timeout_ms\": {}, \
+         \"lease_timeout_per_trial_ms\": {}, \"max_retries\": {}, \"min_grain\": {}, \
+         \"stats_only\": {}, \"threads_per_worker\": {}}}",
+        s.adaptive_grain,
+        f64_to_hex_bits(s.audit_fraction),
+        json_escape(&s.chaos_profile),
+        s.chaos_seed,
+        json_escape(&s.class),
+        render_config(&s.config),
+        s.grain,
+        s.kill_after_ms,
+        s.kill_worker.map_or("null".to_string(), |w| w.to_string()),
+        s.lease_timeout_ms,
+        s.lease_timeout_per_trial_ms,
+        s.max_retries,
+        s.min_grain,
+        s.stats_only,
+        s.threads_per_worker
+    )
+}
+
+fn parse_job_spec(j: &Json) -> Result<JobSpec> {
+    Ok(JobSpec {
+        config: parse_config(
+            j.get("config").ok_or_else(|| Error::msg("job spec: missing 'config'"))?,
+        )?,
+        class: get_str(j, "class")?,
+        grain: get_usize(j, "grain")?,
+        adaptive_grain: get_bool(j, "adaptive_grain")?,
+        min_grain: get_usize(j, "min_grain")?,
+        threads_per_worker: get_usize(j, "threads_per_worker")?,
+        lease_timeout_ms: get_u64(j, "lease_timeout_ms")?,
+        lease_timeout_per_trial_ms: get_u64(j, "lease_timeout_per_trial_ms")?,
+        max_retries: get_usize(j, "max_retries")?,
+        stats_only: get_bool(j, "stats_only")?,
+        audit_fraction: get_f64_bits(j, "audit_fraction_bits")?,
+        chaos_seed: get_u64_str(j, "chaos_seed")?,
+        chaos_profile: get_str(j, "chaos_profile")?,
+        kill_worker: match j.get("kill_worker") {
+            None | Some(Json::Null) => None,
+            Some(v) => Some(
+                v.as_usize().ok_or_else(|| Error::msg("job spec: bad 'kill_worker'"))?,
+            ),
+        },
+        kill_after_ms: get_u64(j, "kill_after_ms")?,
+    })
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .map(str::to_string)
+        .ok_or_else(|| Error::msg(format!("missing or non-string '{key}'")))
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.get(key)
+        .and_then(Json::as_usize)
+        .ok_or_else(|| Error::msg(format!("missing or non-integer '{key}'")))
+}
+
+/// Small u64s (job ids, timeouts) travel as JSON numbers — fine below
+/// 2^53, which a per-connection job counter never approaches.
+fn get_u64(j: &Json, key: &str) -> Result<u64> {
+    get_usize(j, key).map(|x| x as u64)
+}
+
+/// Full-width u64s (seeds) travel as decimal strings.
+fn get_u64_str(j: &Json, key: &str) -> Result<u64> {
+    get_str(j, key)?
+        .parse()
+        .map_err(|e| Error::msg(format!("bad u64 '{key}': {e}")))
+}
+
+fn get_bool(j: &Json, key: &str) -> Result<bool> {
+    j.get(key)
+        .and_then(Json::as_bool)
+        .ok_or_else(|| Error::msg(format!("missing or non-bool '{key}'")))
+}
+
+fn get_f64_bits(j: &Json, key: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .and_then(f64_from_hex_bits)
+        .ok_or_else(|| Error::msg(format!("missing or invalid hex-bits '{key}'")))
+}
+
+// ---------------------------------------------------------------------
+// Framing
+// ---------------------------------------------------------------------
+
+/// Write one frame: 4-byte big-endian length + UTF-8 JSON body.
+pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
+    let body = msg.render();
+    let bytes = body.as_bytes();
+    if bytes.len() > MAX_FRAME {
+        return Err(Error::msg(format!(
+            "frame of {} bytes exceeds the {MAX_FRAME}-byte protocol cap",
+            bytes.len()
+        )));
+    }
+    w.write_all(&(bytes.len() as u32).to_be_bytes())
+        .and_then(|()| w.write_all(bytes))
+        .and_then(|()| w.flush())
+        .map_err(|e| Error::msg(format!("send frame: {e}")))
+}
+
+/// Incremental frame reassembly over a byte stream that arrives in
+/// arbitrary pieces (non-blocking sockets). Feed bytes in, pop complete
+/// messages out.
+#[derive(Default)]
+pub struct FrameBuf {
+    buf: Vec<u8>,
+}
+
+impl FrameBuf {
+    pub fn feed(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The next complete frame, parsed, or `None` if more bytes are
+    /// needed. Call in a loop to drain back-to-back frames.
+    pub fn next_msg(&mut self) -> Result<Option<Msg>> {
+        if self.buf.len() < 4 {
+            return Ok(None);
+        }
+        let len = u32::from_be_bytes([self.buf[0], self.buf[1], self.buf[2], self.buf[3]]) as usize;
+        if len > MAX_FRAME {
+            return Err(Error::msg(format!(
+                "peer announced a {len}-byte frame (cap {MAX_FRAME}) — corrupt or hostile stream"
+            )));
+        }
+        if self.buf.len() < 4 + len {
+            return Ok(None);
+        }
+        let body = String::from_utf8(self.buf[4..4 + len].to_vec())
+            .map_err(|e| Error::msg(format!("frame is not UTF-8: {e}")))?;
+        self.buf.drain(..4 + len);
+        Msg::parse(&body).map(Some)
+    }
+}
+
+/// One framed, non-blocking protocol connection: a [`TcpStream`] plus
+/// reassembly state. Reads never block ([`Conn::poll_msgs`] drains what
+/// the kernel has); writes spin on `WouldBlock` until the frame is out
+/// (frames are small except manifests, and a manifest sender has
+/// nothing better to do than finish sending it).
+pub struct Conn {
+    stream: TcpStream,
+    frames: FrameBuf,
+    peer: String,
+    eof: bool,
+}
+
+impl Conn {
+    pub fn new(stream: TcpStream) -> Result<Self> {
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_else(|_| "?".into());
+        stream.set_nodelay(true).map_err(|e| Error::msg(format!("set_nodelay: {e}")))?;
+        stream
+            .set_nonblocking(true)
+            .map_err(|e| Error::msg(format!("set_nonblocking: {e}")))?;
+        Ok(Self { stream, frames: FrameBuf::default(), peer, eof: false })
+    }
+
+    /// Peer address for log lines.
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Whether the peer has closed its half of the connection (any
+    /// already-buffered frames stay poppable).
+    pub fn is_eof(&self) -> bool {
+        self.eof
+    }
+
+    pub fn send(&mut self, msg: &Msg) -> Result<()> {
+        let body = msg.render();
+        let bytes = body.as_bytes();
+        if bytes.len() > MAX_FRAME {
+            return Err(Error::msg(format!(
+                "frame of {} bytes exceeds the {MAX_FRAME}-byte protocol cap",
+                bytes.len()
+            )));
+        }
+        let mut framed = Vec::with_capacity(4 + bytes.len());
+        framed.extend_from_slice(&(bytes.len() as u32).to_be_bytes());
+        framed.extend_from_slice(bytes);
+        let mut off = 0;
+        while off < framed.len() {
+            match self.stream.write(&framed[off..]) {
+                Ok(0) => return Err(Error::msg(format!("{}: connection closed", self.peer))),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(Error::msg(format!("{}: send: {e}", self.peer))),
+            }
+        }
+        Ok(())
+    }
+
+    /// Drain every byte the kernel has buffered and return the complete
+    /// messages in arrival order. Never blocks. A closed peer sets
+    /// [`Conn::is_eof`] rather than erroring — whether that is a fault
+    /// depends on whether work was outstanding, which is the caller's
+    /// call.
+    pub fn poll_msgs(&mut self) -> Result<Vec<Msg>> {
+        let mut tmp = [0u8; 16 * 1024];
+        while !self.eof {
+            match self.stream.read(&mut tmp) {
+                Ok(0) => self.eof = true,
+                Ok(n) => self.frames.feed(&tmp[..n]),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => {
+                    self.eof = true;
+                    return Err(Error::msg(format!("{}: recv: {e}", self.peer)));
+                }
+            }
+        }
+        let mut out = Vec::new();
+        while let Some(m) = self.frames.next_msg()? {
+            out.push(m);
+        }
+        Ok(out)
+    }
+
+    /// Block (politely, 1 ms naps) until one message arrives or the
+    /// deadline passes. Handshakes and thin clients use this; the
+    /// coordinator's hot path never does.
+    pub fn recv_timeout(&mut self, timeout: Duration) -> Result<Option<Msg>> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            let mut msgs = self.poll_msgs()?;
+            if !msgs.is_empty() {
+                // frames after the first stay buffered for the next poll
+                let first = msgs.remove(0);
+                for m in msgs.into_iter().rev() {
+                    self.requeue(m);
+                }
+                return Ok(Some(first));
+            }
+            if self.eof {
+                return Err(Error::msg(format!("{}: connection closed", self.peer)));
+            }
+            if Instant::now() >= deadline {
+                return Ok(None);
+            }
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Push an already-popped message back to the front of the queue.
+    fn requeue(&mut self, msg: Msg) {
+        let body = msg.render();
+        let mut framed = Vec::with_capacity(4 + body.len());
+        framed.extend_from_slice(&(body.len() as u32).to_be_bytes());
+        framed.extend_from_slice(body.as_bytes());
+        framed.extend_from_slice(&self.frames.buf);
+        self.frames.buf = framed;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SweepConfig {
+        let mut params = BTreeMap::new();
+        params.insert("budget".into(), "3".into());
+        SweepConfig {
+            sweep: SweepKind::DecodeError,
+            scheme: "graph-rr:16,3".into(),
+            decoder: "optimal".into(),
+            p: 0.2,
+            seed: u64::MAX - 7, // exercises the string encoding
+            trials: 1000,
+            chunk: 32,
+            params,
+        }
+    }
+
+    fn roundtrip(m: Msg) {
+        let text = m.render();
+        assert_eq!(Msg::parse(&text).unwrap(), m, "wire text: {text}");
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip(Msg::Register { class: "cpu-fast".into(), threads: 8 });
+        roundtrip(Msg::Heartbeat);
+        roundtrip(Msg::Lease {
+            job: 42,
+            spec: LeaseSpec {
+                config: cfg(),
+                lo: 96,
+                hi: 128,
+                threads: 2,
+                stats_only: true,
+                delay_ms: 7,
+            },
+        });
+        roundtrip(Msg::Kill { job: 42 });
+        roundtrip(Msg::Manifest { job: 42, text: "{\"kind\": \"x\"}\nline2 \\ \"q\"".into() });
+        roundtrip(Msg::JobFailed { job: 3, error: "exit status 137".into() });
+        roundtrip(Msg::Goodbye);
+        let mut spec = JobSpec::new(cfg());
+        spec.class = "any".into();
+        spec.audit_fraction = 0.1; // not exactly representable: bits must survive
+        spec.chaos_seed = 0xDEAD_BEEF_DEAD_BEEF;
+        spec.kill_worker = Some(1);
+        roundtrip(Msg::Submit { spec: Box::new(spec) });
+        roundtrip(Msg::Submitted { job: 9 });
+        roundtrip(Msg::JobDone { job: 9, summary: "ok".into(), manifest: "{}".into() });
+        roundtrip(Msg::JobError { job: 9, error: "every worker quarantined".into() });
+        roundtrip(Msg::Status);
+        roundtrip(Msg::StatusReport { text: "jobs: 0".into() });
+    }
+
+    #[test]
+    fn config_floats_roundtrip_bitwise() {
+        let mut c = cfg();
+        c.p = 0.1 + 0.2; // 0.30000000000000004
+        let m = Msg::Lease {
+            job: 1,
+            spec: LeaseSpec {
+                config: c.clone(),
+                lo: 0,
+                hi: 1,
+                threads: 1,
+                stats_only: false,
+                delay_ms: 0,
+            },
+        };
+        match Msg::parse(&m.render()).unwrap() {
+            Msg::Lease { spec, .. } => assert_eq!(spec.config.p.to_bits(), c.p.to_bits()),
+            other => panic!("wrong message: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn framebuf_reassembles_split_and_coalesced_frames() {
+        let a = Msg::Heartbeat;
+        let b = Msg::Kill { job: 7 };
+        let mut wire = Vec::new();
+        write_frame(&mut wire, &a).unwrap();
+        write_frame(&mut wire, &b).unwrap();
+        // feed byte-by-byte: every split point must work
+        let mut fb = FrameBuf::default();
+        let mut got = Vec::new();
+        for byte in &wire {
+            fb.feed(std::slice::from_ref(byte));
+            while let Some(m) = fb.next_msg().unwrap() {
+                got.push(m);
+            }
+        }
+        assert_eq!(got, vec![a.clone(), b.clone()]);
+        // and coalesced in one read
+        let mut fb = FrameBuf::default();
+        fb.feed(&wire);
+        assert_eq!(fb.next_msg().unwrap(), Some(a));
+        assert_eq!(fb.next_msg().unwrap(), Some(b));
+        assert_eq!(fb.next_msg().unwrap(), None);
+    }
+
+    #[test]
+    fn framebuf_rejects_oversized_and_non_utf8_frames() {
+        let mut fb = FrameBuf::default();
+        fb.feed(&(MAX_FRAME as u32 + 1).to_be_bytes());
+        assert!(fb.next_msg().is_err());
+        let mut fb = FrameBuf::default();
+        fb.feed(&2u32.to_be_bytes());
+        fb.feed(&[0xFF, 0xFE]);
+        assert!(fb.next_msg().is_err());
+    }
+
+    #[test]
+    fn register_rejects_version_skew() {
+        let text = "{\"msg\": \"register\", \"proto\": 999, \"class\": \"x\", \"threads\": 1}";
+        let err = Msg::parse(text).unwrap_err().to_string();
+        assert!(err.contains("version skew"), "{err}");
+    }
+
+    #[test]
+    fn unknown_message_is_a_clear_error() {
+        let err = Msg::parse("{\"msg\": \"warp-core\"}").unwrap_err().to_string();
+        assert!(err.contains("warp-core"), "{err}");
+    }
+}

@@ -1,0 +1,470 @@
+//! `gcod serve`: a persistent TCP job coordinator.
+//!
+//! One daemon, one port, three kinds of peer (the first frame a
+//! connection sends picks its role — see [`super::protocol`]):
+//!
+//! * **Workers** (`gcod worker`) register with a capability class and
+//!   wait in the machine registry. They survive across jobs: the server
+//!   lends their connections to a [`TcpTransport`] for the duration of
+//!   a job and reclaims the survivors afterwards.
+//! * **Submitters** (`gcod submit`) enqueue a [`JobSpec`] — a sweep
+//!   identity plus dispatch knobs, including an optional chaos plan for
+//!   fault drills — and stream back the merged manifest, which is
+//!   byte-identical to a single-process run of the same sweep.
+//! * **Status clients** (`gcod status`) get a registry/queue/metrics
+//!   snapshot and disconnect.
+//!
+//! Jobs run one at a time through the existing [`Dispatcher`] — leases,
+//! deadlines, retries, speculation, journals, audits, health tracking
+//! and quarantine all apply to TCP workers exactly as to local
+//! subprocesses, because the server composes the same pieces:
+//! `Dispatcher` → [`ChaosTransport`] → [`TcpTransport`]. With
+//! `journal_dir` set, every job checkpoints to
+//! `job_<id>.journal` and a resubmitted identical job resumes from
+//! whatever its crashed predecessor completed.
+
+use super::chaos::{ChaosProfile, ChaosTransport};
+use super::protocol::{Conn, JobSpec, Msg};
+use super::tcp::{RegisteredWorker, TcpTransport, REGISTER_TIMEOUT};
+use super::{DispatchConfig, Dispatcher, HealthConfig, WorkerTransport};
+use crate::error::{Error, Result};
+use crate::metrics::{LatencyHistogram, Stopwatch, Table};
+use std::collections::VecDeque;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+/// Coordinator daemon configuration.
+pub struct ServeConfig {
+    /// listen address, `host:port` (port 0 = ephemeral)
+    pub bind: String,
+    /// hold queued jobs until this many workers are registered
+    pub min_workers: usize,
+    /// event-loop tick
+    pub poll: Duration,
+    /// exit after the first job finishes (CI smokes and tests; a real
+    /// deployment serves forever)
+    pub once: bool,
+    /// checkpoint each job to `<dir>/job_<id>.journal`; a re-submitted
+    /// job with the same id slot resumes from it
+    pub journal_dir: Option<PathBuf>,
+}
+
+impl ServeConfig {
+    pub fn new(bind: impl Into<String>) -> Self {
+        Self {
+            bind: bind.into(),
+            min_workers: 1,
+            poll: Duration::from_millis(10),
+            once: false,
+            journal_dir: None,
+        }
+    }
+}
+
+/// Bind and serve. Blocks for the life of the daemon (forever, unless
+/// [`ServeConfig::once`]).
+pub fn serve(cfg: &ServeConfig) -> Result<()> {
+    let listener = TcpListener::bind(&cfg.bind)
+        .map_err(|e| Error::msg(format!("bind {}: {e}", cfg.bind)))?;
+    println!(
+        "gcod serve: listening on {} (min {} worker(s))",
+        listener.local_addr().map(|a| a.to_string()).unwrap_or_else(|_| cfg.bind.clone()),
+        cfg.min_workers
+    );
+    serve_on(listener, cfg)
+}
+
+/// Serve on an already-bound listener (tests bind to port 0 themselves
+/// to learn the address before spawning workers and clients).
+pub fn serve_on(listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::msg(format!("listener set_nonblocking: {e}")))?;
+    let mut srv = Server {
+        cfg,
+        workers: Vec::new(),
+        handshakes: Vec::new(),
+        queue: VecDeque::new(),
+        next_job: 0,
+        jobs_done: 0,
+        jobs_failed: 0,
+        leases_issued: 0,
+        retried: 0,
+        job_latency: LatencyHistogram::new(0.05, 24),
+        up: Stopwatch::new(),
+    };
+    loop {
+        srv.accept_pending(&listener);
+        srv.advance_handshakes();
+        srv.pump_idle_workers();
+        if let Some(done) = srv.maybe_run_job()? {
+            if cfg.once && done {
+                srv.goodbye_all();
+                return Ok(());
+            }
+        }
+        std::thread::sleep(cfg.poll);
+    }
+}
+
+struct PendingJob {
+    id: u64,
+    spec: Box<JobSpec>,
+    client: Conn,
+}
+
+struct Server<'a> {
+    cfg: &'a ServeConfig,
+    workers: Vec<RegisteredWorker>,
+    /// accepted connections whose first (role-declaring) frame hasn't
+    /// arrived yet, with their handshake deadline
+    handshakes: Vec<(Conn, Instant)>,
+    queue: VecDeque<PendingJob>,
+    next_job: u64,
+    jobs_done: u64,
+    jobs_failed: u64,
+    leases_issued: u64,
+    retried: u64,
+    job_latency: LatencyHistogram,
+    up: Stopwatch,
+}
+
+impl Server<'_> {
+    fn accept_pending(&mut self, listener: &TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => match Conn::new(stream) {
+                    Ok(conn) => {
+                        self.handshakes.push((conn, Instant::now() + REGISTER_TIMEOUT));
+                    }
+                    Err(e) => eprintln!("gcod serve: rejected connection: {e}"),
+                },
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) => {
+                    eprintln!("gcod serve: accept failed: {e}");
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Poll handshaking connections for their first frame and route
+    /// them to a role. Never blocks the loop on a silent peer.
+    fn advance_handshakes(&mut self) {
+        let mut still = Vec::new();
+        for (mut conn, deadline) in std::mem::take(&mut self.handshakes) {
+            let msgs = match conn.poll_msgs() {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("gcod serve: {}: handshake failed: {e}", conn.peer());
+                    continue;
+                }
+            };
+            match msgs.into_iter().next() {
+                Some(Msg::Register { class, threads }) => {
+                    println!(
+                        "gcod serve: worker registered from {} (class '{}', {} thread(s))",
+                        conn.peer(),
+                        class,
+                        threads
+                    );
+                    self.workers.push(RegisteredWorker { conn, class, threads });
+                }
+                Some(Msg::Submit { spec }) => {
+                    let id = self.next_job;
+                    self.next_job += 1;
+                    if let Err(e) = conn.send(&Msg::Submitted { job: id }) {
+                        eprintln!("gcod serve: {}: submit ack failed: {e}", conn.peer());
+                        continue;
+                    }
+                    println!(
+                        "gcod serve: job {id} queued from {}: sweep '{}' ({} trials)",
+                        conn.peer(),
+                        spec.config.sweep.as_str(),
+                        spec.config.trials
+                    );
+                    self.queue.push_back(PendingJob { id, spec, client: conn });
+                }
+                Some(Msg::Status) => {
+                    let report = self.status_text();
+                    if let Err(e) = conn.send(&Msg::StatusReport { text: report }) {
+                        eprintln!("gcod serve: {}: status reply failed: {e}", conn.peer());
+                    }
+                }
+                Some(Msg::Goodbye) => {}
+                Some(other) => {
+                    eprintln!(
+                        "gcod serve: {}: unexpected first frame {other:?} — dropping",
+                        conn.peer()
+                    );
+                }
+                None if conn.is_eof() => {}
+                None => {
+                    if Instant::now() >= deadline {
+                        eprintln!(
+                            "gcod serve: {}: no role frame within {REGISTER_TIMEOUT:?} — dropping",
+                            conn.peer()
+                        );
+                    } else {
+                        still.push((conn, deadline));
+                    }
+                }
+            }
+        }
+        self.handshakes = still;
+    }
+
+    /// Keep idle registry connections honest: consume heartbeats, drop
+    /// the dead.
+    fn pump_idle_workers(&mut self) {
+        self.workers.retain_mut(|w| {
+            let alive = match w.conn.poll_msgs() {
+                Ok(msgs) => !msgs.iter().any(|m| matches!(m, Msg::Goodbye)) && !w.conn.is_eof(),
+                Err(_) => false,
+            };
+            if !alive {
+                println!("gcod serve: worker {} left the registry", w.conn.peer());
+            }
+            alive
+        });
+    }
+
+    /// Workers eligible for a job's capability class ("" accepts any).
+    fn eligible(&self, class: &str) -> usize {
+        self.workers.iter().filter(|w| class.is_empty() || w.class == class).count()
+    }
+
+    /// Run the frontmost runnable job to completion. `Ok(Some(true))` =
+    /// a job finished this tick.
+    fn maybe_run_job(&mut self) -> Result<Option<bool>> {
+        if self.workers.len() < self.cfg.min_workers.max(1) {
+            return Ok(None);
+        }
+        let Some(pos) = self.queue.iter().position(|j| self.eligible(&j.spec.class) > 0)
+        else {
+            return Ok(None);
+        };
+        let mut job = self.queue.remove(pos).expect("position came from this queue");
+        let class = job.spec.class.clone();
+        let lent: Vec<RegisteredWorker> = {
+            let mut lent = Vec::new();
+            let mut kept = Vec::new();
+            for w in self.workers.drain(..) {
+                if class.is_empty() || w.class == class {
+                    lent.push(w);
+                } else {
+                    kept.push(w);
+                }
+            }
+            self.workers = kept;
+            lent
+        };
+        println!(
+            "gcod serve: job {} starting on {} worker(s) (class '{}')",
+            job.id,
+            lent.len(),
+            class
+        );
+        let watch = Stopwatch::new();
+        let outcome = self.execute(job.id, &job.spec, lent);
+        self.job_latency.record(watch.elapsed_secs());
+        let reply = match outcome {
+            Ok((merged, summary)) => {
+                self.jobs_done += 1;
+                println!("gcod serve: job {} done ({summary})", job.id);
+                Msg::JobDone { job: job.id, summary, manifest: merged }
+            }
+            Err(e) => {
+                self.jobs_failed += 1;
+                println!("gcod serve: job {} failed: {e}", job.id);
+                Msg::JobError { job: job.id, error: e.to_string() }
+            }
+        };
+        if let Err(e) = job.client.send(&reply) {
+            eprintln!(
+                "gcod serve: job {}: client {} unreachable for the result: {e}",
+                job.id,
+                job.client.peer()
+            );
+        }
+        Ok(Some(true))
+    }
+
+    /// Dispatch one job over the lent workers; returns the merged
+    /// manifest text and report summary. Surviving workers go back to
+    /// the registry whatever happens.
+    fn execute(
+        &mut self,
+        id: u64,
+        spec: &JobSpec,
+        lent: Vec<RegisteredWorker>,
+    ) -> Result<(String, String)> {
+        let out_dir =
+            std::env::temp_dir().join(format!("gcod_serve_{}_job_{id}", std::process::id()));
+        let journal = self.cfg.journal_dir.as_ref().map(|d| d.join(format!("job_{id}.journal")));
+        let resume = journal.as_ref().is_some_and(|j| j.is_file());
+        let dcfg = DispatchConfig {
+            grain: spec.grain,
+            adaptive_grain: spec.adaptive_grain,
+            min_grain: spec.min_grain,
+            threads_per_worker: spec.threads_per_worker,
+            lease_timeout: Duration::from_millis(spec.lease_timeout_ms),
+            lease_timeout_per_trial: Duration::from_millis(spec.lease_timeout_per_trial_ms),
+            max_retries: spec.max_retries,
+            poll_interval: self.cfg.poll,
+            speculate: true,
+            stats_only: spec.stats_only,
+            out_dir: out_dir.clone(),
+            straggler_sim: None,
+            audit_fraction: spec.audit_fraction,
+            // same derivation as sweep-launch: a resubmitted job audits
+            // the same leases on the same sub-ranges
+            audit_seed: spec.config.seed ^ 0xA0D1_75EE,
+            health: HealthConfig {
+                quarantine_after: 2,
+                // sockets do die; a worker that keeps crashing leases
+                // must leave the pool instead of burning the retry
+                // budget
+                quarantine_after_failures: 3,
+                backoff_base: Duration::from_millis(100),
+                ..HealthConfig::default()
+            },
+            journal,
+            resume,
+        };
+        let profile = ChaosProfile::parse(&spec.chaos_profile)?;
+        let mut transport = ChaosTransport::new(TcpTransport::new(lent), spec.chaos_seed, profile);
+        if let Some(w) = spec.kill_worker {
+            if w >= transport.n_workers() {
+                transport.inner().reclaim().into_iter().for_each(|w| self.workers.push(w));
+                return Err(Error::msg(format!(
+                    "kill_worker {w} out of range for {} lent worker(s)",
+                    transport.n_workers()
+                )));
+            }
+            transport.preset_kill(w, Duration::from_millis(spec.kill_after_ms));
+        }
+        let result = Dispatcher::new(dcfg).run(&spec.config, &mut transport);
+        let _ = std::fs::remove_dir_all(&out_dir);
+        for line in &transport.plan.log {
+            println!("gcod serve: job {id} [chaos] {line}");
+        }
+        let survivors = transport.inner().reclaim();
+        println!(
+            "gcod serve: job {id} returned {} worker(s) to the registry",
+            survivors.len()
+        );
+        self.workers.extend(survivors);
+        let outcome = result?;
+        self.leases_issued += outcome.report.leases_issued;
+        self.retried += outcome.report.retried;
+        Ok((outcome.merged.render(), outcome.report.summary()))
+    }
+
+    fn status_text(&self) -> String {
+        let mut classes: Vec<String> = self
+            .workers
+            .iter()
+            .map(|w| if w.class.is_empty() { "(any)".to_string() } else { w.class.clone() })
+            .collect();
+        classes.sort();
+        classes.dedup();
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["uptime (s)".into(), format!("{:.1}", self.up.elapsed_secs())]);
+        t.row(vec!["workers registered".into(), self.workers.len().to_string()]);
+        t.row(vec!["capability classes".into(), classes.join(",")]);
+        t.row(vec!["jobs queued".into(), self.queue.len().to_string()]);
+        t.row(vec!["jobs done".into(), self.jobs_done.to_string()]);
+        t.row(vec!["jobs failed".into(), self.jobs_failed.to_string()]);
+        t.row(vec!["leases issued".into(), self.leases_issued.to_string()]);
+        t.row(vec!["leases retried".into(), self.retried.to_string()]);
+        if self.job_latency.stats().count() > 0 {
+            t.row(vec![
+                "job latency p50 (s)".into(),
+                format!("{:.3}", self.job_latency.quantile(0.5)),
+            ]);
+            t.row(vec![
+                "job latency p95 (s)".into(),
+                format!("{:.3}", self.job_latency.quantile(0.95)),
+            ]);
+        }
+        t.render()
+    }
+
+    fn goodbye_all(&mut self) {
+        for w in &mut self.workers {
+            let _ = w.conn.send(&Msg::Goodbye);
+        }
+        self.workers.clear();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Clients
+// ---------------------------------------------------------------------
+
+/// A finished job as seen by the submitting client.
+pub struct SubmitOutcome {
+    pub job: u64,
+    pub summary: String,
+    /// merged-manifest text, byte-identical to a single-process run
+    pub manifest: String,
+}
+
+/// Submit a job and block until the coordinator streams the merged
+/// result back (or `timeout` passes).
+pub fn submit_job(addr: &str, spec: JobSpec, timeout: Duration) -> Result<SubmitOutcome> {
+    let mut conn = connect(addr)?;
+    conn.send(&Msg::Submit { spec: Box::new(spec) })?;
+    let deadline = Instant::now() + timeout;
+    let mut id = None;
+    loop {
+        let left = deadline.saturating_duration_since(Instant::now());
+        if left.is_zero() {
+            return Err(Error::msg(match id {
+                Some(id) => format!("job {id} accepted but no result within {timeout:?}"),
+                None => format!("no submit ack from {addr} within {timeout:?}"),
+            }));
+        }
+        match conn.recv_timeout(left)? {
+            Some(Msg::Submitted { job }) => id = Some(job),
+            Some(Msg::JobDone { job, summary, manifest }) => {
+                return Ok(SubmitOutcome { job, summary, manifest });
+            }
+            Some(Msg::JobError { job, error }) => {
+                return Err(Error::msg(format!("job {job} failed: {error}")));
+            }
+            Some(_) | None => {}
+        }
+    }
+}
+
+/// Fire-and-forget submission: returns the accepted job id without
+/// waiting for the sweep to run.
+pub fn submit_job_nowait(addr: &str, spec: JobSpec, timeout: Duration) -> Result<u64> {
+    let mut conn = connect(addr)?;
+    conn.send(&Msg::Submit { spec: Box::new(spec) })?;
+    match conn.recv_timeout(timeout)? {
+        Some(Msg::Submitted { job }) => Ok(job),
+        Some(other) => Err(Error::msg(format!("expected submit ack, got {other:?}"))),
+        None => Err(Error::msg(format!("no submit ack from {addr} within {timeout:?}"))),
+    }
+}
+
+/// Fetch the coordinator's status snapshot.
+pub fn query_status(addr: &str, timeout: Duration) -> Result<String> {
+    let mut conn = connect(addr)?;
+    conn.send(&Msg::Status)?;
+    match conn.recv_timeout(timeout)? {
+        Some(Msg::StatusReport { text }) => Ok(text),
+        Some(other) => Err(Error::msg(format!("expected status report, got {other:?}"))),
+        None => Err(Error::msg(format!("no status report from {addr} within {timeout:?}"))),
+    }
+}
+
+fn connect(addr: &str) -> Result<Conn> {
+    let stream = TcpStream::connect(addr)
+        .map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
+    Conn::new(stream)
+}

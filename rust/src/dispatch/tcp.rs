@@ -1,0 +1,557 @@
+//! TCP transport: leases served to remote `gcod worker` processes.
+//!
+//! Two halves of one socket protocol (see [`super::protocol`]):
+//!
+//! * **Coordinator side** — [`TcpTransport`] implements
+//!   [`WorkerTransport`] over a pool of registered worker connections,
+//!   so the [`Dispatcher`](super::Dispatcher) (and therefore leases,
+//!   deadlines, retries, speculation, journaling, audits, quarantine
+//!   and [`ChaosTransport`](super::chaos::ChaosTransport) wrapping)
+//!   works across hosts unchanged. `kill` really kills: it sends a
+//!   kill frame and the remote worker tears down its shard subprocess,
+//!   which is what makes chaos drills meaningful over TCP.
+//! * **Worker side** — [`worker_loop`] connects out to a coordinator,
+//!   registers with a capability class, and serves leases by spawning
+//!   `gcod sweep-shard --range lo..hi` subprocesses (the same process
+//!   boundary [`LocalProcess`](super::transport::LocalProcess) uses, so
+//!   a remote lease computes byte-identical manifests by construction)
+//!   and returning the manifest text verbatim.
+//!
+//! Stale replies cannot corrupt a sweep: every lease carries a
+//! coordinator-assigned job id, replies tagged with any other id are
+//! dropped on the floor, and every returned manifest still passes the
+//! full structural validation + optional byte-audit pipeline that local
+//! results do.
+
+use super::protocol::{Conn, LeaseSpec, Msg};
+use super::queue::WorkerId;
+use super::transport::{read_tail, shard_args, WorkerJob, WorkerPoll, WorkerTransport, DELAY_ENV};
+use crate::error::{Error, Result};
+use crate::sweep::shard::ShardResult;
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Worker → coordinator liveness cadence.
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
+
+/// A busy worker silent this long is presumed dead even if the kernel
+/// still thinks the connection is up (half-open TCP). Generous relative
+/// to [`HEARTBEAT_INTERVAL`]: the lease deadline, not this timer, is
+/// the scheduling backstop.
+pub const DEAD_AFTER: Duration = Duration::from_secs(10);
+
+/// How long a freshly accepted connection gets to say `register`.
+pub const REGISTER_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Worker main-loop tick (poll sockets + child process this often).
+const TICK: Duration = Duration::from_millis(10);
+
+/// A worker connection that has completed the `register` handshake.
+pub struct RegisteredWorker {
+    pub conn: Conn,
+    /// capability class the worker volunteered ("" = generic)
+    pub class: String,
+    /// engine threads the worker offers per lease
+    pub threads: usize,
+}
+
+/// Accept-side half of the handshake: the first frame must be a
+/// `register` within `timeout`.
+pub fn accept_registration(stream: TcpStream, timeout: Duration) -> Result<RegisteredWorker> {
+    let mut conn = Conn::new(stream)?;
+    match conn.recv_timeout(timeout)? {
+        Some(Msg::Register { class, threads }) => Ok(RegisteredWorker { conn, class, threads }),
+        Some(other) => Err(Error::msg(format!(
+            "{}: expected register, got {other:?}",
+            conn.peer()
+        ))),
+        None => Err(Error::msg(format!(
+            "{}: no register frame within {timeout:?}",
+            conn.peer()
+        ))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator side: TcpTransport
+// ---------------------------------------------------------------------
+
+enum SlotState {
+    Idle,
+    Running,
+    Done(Box<ShardResult>),
+    Failed(String),
+}
+
+struct TcpSlot {
+    worker: RegisteredWorker,
+    state: SlotState,
+    /// job id the slot is waiting on (`None` = no reply expected; any
+    /// manifest/failure tagged otherwise is a stale reply and dropped)
+    expect: Option<u64>,
+    next_job: u64,
+    last_seen: Instant,
+    /// socket gone (EOF, error or goodbye) — the slot can only fail
+    dead: bool,
+}
+
+/// [`WorkerTransport`] over registered TCP worker connections.
+pub struct TcpTransport {
+    slots: Vec<TcpSlot>,
+}
+
+impl TcpTransport {
+    pub fn new(workers: Vec<RegisteredWorker>) -> Self {
+        let now = Instant::now();
+        let slots = workers
+            .into_iter()
+            .map(|worker| TcpSlot {
+                worker,
+                state: SlotState::Idle,
+                expect: None,
+                next_job: 0,
+                last_seen: now,
+                dead: false,
+            })
+            .collect();
+        Self { slots }
+    }
+
+    /// Accept and register exactly `n` workers from `listener`, failing
+    /// if they don't all show up within `timeout`. The listener is left
+    /// in non-blocking mode.
+    pub fn accept(listener: &TcpListener, n: usize, timeout: Duration) -> Result<Self> {
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::msg(format!("listener set_nonblocking: {e}")))?;
+        let deadline = Instant::now() + timeout;
+        let mut workers = Vec::with_capacity(n);
+        while workers.len() < n {
+            match listener.accept() {
+                Ok((stream, _)) => workers.push(accept_registration(stream, REGISTER_TIMEOUT)?),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::msg(format!(
+                            "only {} of {n} workers registered within {timeout:?}",
+                            workers.len()
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(Error::msg(format!("accept: {e}"))),
+            }
+        }
+        Ok(Self::new(workers))
+    }
+
+    /// Capability class of each slot (status displays).
+    pub fn classes(&self) -> Vec<String> {
+        self.slots.iter().map(|s| s.worker.class.clone()).collect()
+    }
+
+    /// Live (non-dead) worker count.
+    pub fn alive(&self) -> usize {
+        self.slots.iter().filter(|s| !s.dead).count()
+    }
+
+    /// Send `goodbye` to every live worker (orderly shutdown — workers
+    /// exit cleanly instead of seeing an EOF mid-session).
+    pub fn shutdown(&mut self) {
+        for slot in &mut self.slots {
+            if !slot.dead {
+                let _ = slot.worker.conn.send(&Msg::Goodbye);
+                slot.dead = true;
+            }
+        }
+    }
+
+    /// Drain the still-alive connections back out (the job server
+    /// returns them to its registry between jobs). Dead slots are
+    /// dropped; no goodbye is sent.
+    pub fn reclaim(&mut self) -> Vec<RegisteredWorker> {
+        std::mem::take(&mut self.slots)
+            .into_iter()
+            .filter(|s| !s.dead && !s.worker.conn.is_eof())
+            .map(|s| s.worker)
+            .collect()
+    }
+
+    /// Drain the socket and fold whatever arrived into the slot state.
+    fn pump(&mut self, w: WorkerId) {
+        let slot = &mut self.slots[w];
+        if slot.dead {
+            Self::fail_if_expecting(slot, format!("worker {w}: connection is gone"));
+            return;
+        }
+        let peer = slot.worker.conn.peer().to_string();
+        match slot.worker.conn.poll_msgs() {
+            Ok(msgs) => {
+                for msg in msgs {
+                    slot.last_seen = Instant::now();
+                    match msg {
+                        Msg::Heartbeat => {}
+                        Msg::Manifest { job, text } if slot.expect == Some(job) => {
+                            slot.expect = None;
+                            slot.state = match ShardResult::parse(&text) {
+                                Ok(res) => SlotState::Done(Box::new(res)),
+                                Err(e) => SlotState::Failed(format!(
+                                    "worker {w} ({peer}): manifest rejected: {e}"
+                                )),
+                            };
+                        }
+                        Msg::JobFailed { job, error } if slot.expect == Some(job) => {
+                            slot.expect = None;
+                            slot.state =
+                                SlotState::Failed(format!("worker {w} ({peer}): {error}"));
+                        }
+                        // stale reply for a killed/expired lease
+                        Msg::Manifest { .. } | Msg::JobFailed { .. } => {}
+                        Msg::Goodbye => slot.dead = true,
+                        // anything else is a protocol violation from a
+                        // worker; ignoring it is the byzantine-safe move
+                        // (validation + audits judge results, not chatter)
+                        _ => {}
+                    }
+                }
+            }
+            Err(e) => {
+                slot.dead = true;
+                Self::fail_if_expecting(slot, format!("worker {w} ({peer}): {e}"));
+                return;
+            }
+        }
+        if slot.worker.conn.is_eof() {
+            slot.dead = true;
+        }
+        if slot.dead {
+            Self::fail_if_expecting(
+                slot,
+                format!("worker {w} ({peer}): disconnected mid-lease"),
+            );
+        } else if slot.expect.is_some() && slot.last_seen.elapsed() > DEAD_AFTER {
+            slot.dead = true;
+            Self::fail_if_expecting(
+                slot,
+                format!(
+                    "worker {w} ({peer}): no heartbeat for {DEAD_AFTER:?} — presumed dead"
+                ),
+            );
+        }
+    }
+
+    fn fail_if_expecting(slot: &mut TcpSlot, msg: String) {
+        if slot.expect.take().is_some() {
+            slot.state = SlotState::Failed(msg);
+        }
+    }
+}
+
+impl WorkerTransport for TcpTransport {
+    fn n_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn start(&mut self, worker: WorkerId, job: &WorkerJob) -> Result<()> {
+        self.pump(worker);
+        let slot = &mut self.slots[worker];
+        if slot.dead {
+            return Err(Error::msg(format!(
+                "worker {worker} ({}) is disconnected",
+                slot.worker.conn.peer()
+            )));
+        }
+        if slot.expect.is_some() {
+            return Err(Error::msg(format!("worker {worker} is already running a job")));
+        }
+        let id = slot.next_job;
+        slot.next_job += 1;
+        let lease = Msg::Lease {
+            job: id,
+            spec: LeaseSpec {
+                config: job.config.clone(),
+                lo: job.lo,
+                hi: job.hi,
+                threads: job.threads,
+                stats_only: job.stats_only,
+                delay_ms: job.delay_ms,
+            },
+        };
+        if let Err(e) = slot.worker.conn.send(&lease) {
+            slot.dead = true;
+            return Err(Error::msg(format!(
+                "worker {worker} ({}): lease send failed: {e}",
+                slot.worker.conn.peer()
+            )));
+        }
+        slot.expect = Some(id);
+        slot.state = SlotState::Running;
+        slot.last_seen = Instant::now();
+        Ok(())
+    }
+
+    fn poll(&mut self, worker: WorkerId) -> WorkerPoll {
+        self.pump(worker);
+        let slot = &mut self.slots[worker];
+        match &slot.state {
+            SlotState::Idle => WorkerPoll::Idle,
+            SlotState::Running => WorkerPoll::Running,
+            SlotState::Done(_) => WorkerPoll::Done,
+            SlotState::Failed(_) => {
+                // one-shot, like a reaped subprocess: report the failure
+                // and the slot is idle again
+                let SlotState::Failed(msg) = std::mem::replace(&mut slot.state, SlotState::Idle)
+                else {
+                    unreachable!()
+                };
+                WorkerPoll::Failed(msg)
+            }
+        }
+    }
+
+    fn kill(&mut self, worker: WorkerId) {
+        let slot = &mut self.slots[worker];
+        if let Some(id) = slot.expect.take() {
+            if !slot.dead && slot.worker.conn.send(&Msg::Kill { job: id }).is_err() {
+                slot.dead = true;
+            }
+        }
+        slot.state = SlotState::Idle;
+    }
+
+    fn collect(&mut self, worker: WorkerId) -> Result<ShardResult> {
+        let slot = &mut self.slots[worker];
+        match std::mem::replace(&mut slot.state, SlotState::Idle) {
+            SlotState::Done(res) => Ok(*res),
+            other => {
+                slot.state = other;
+                Err(Error::msg(format!("worker {worker} has no finished result to collect")))
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side: gcod worker
+// ---------------------------------------------------------------------
+
+/// `gcod worker` configuration.
+pub struct WorkerOpts {
+    /// coordinator address, `host:port`
+    pub coordinator: String,
+    /// capability class to register with
+    pub class: String,
+    /// engine threads offered per lease (0 = all cores)
+    pub threads: usize,
+    /// the `gcod` binary to spawn for `sweep-shard` leases
+    pub gcod_bin: PathBuf,
+    /// connect attempts before giving up (the server may still be
+    /// starting)
+    pub connect_retries: usize,
+    pub retry_delay: Duration,
+}
+
+impl WorkerOpts {
+    pub fn new(coordinator: impl Into<String>, gcod_bin: impl Into<PathBuf>) -> Self {
+        Self {
+            coordinator: coordinator.into(),
+            class: String::new(),
+            threads: 1,
+            gcod_bin: gcod_bin.into(),
+            connect_retries: 50,
+            retry_delay: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Distinguishes scratch dirs when several worker loops share a process
+/// (tests run them on threads).
+static WORKER_SCRATCH_SEQ: AtomicU64 = AtomicU64::new(0);
+
+struct RunningLease {
+    id: u64,
+    child: Child,
+    out_path: PathBuf,
+    err_path: PathBuf,
+}
+
+impl RunningLease {
+    fn abandon(mut self) {
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        let _ = std::fs::remove_file(&self.out_path);
+        let _ = std::fs::remove_file(&self.err_path);
+    }
+}
+
+/// Serve leases from a coordinator until it says goodbye. Each lease
+/// runs as a `gcod sweep-shard --range lo..hi` subprocess — the same
+/// arguments and process boundary as local dispatch — and its manifest
+/// text is returned over the socket verbatim.
+///
+/// Returns `Ok(jobs_completed)` on an orderly goodbye; a vanished
+/// coordinator (EOF mid-session) is an error. Either way the scratch
+/// dir and any running subprocess are torn down.
+pub fn worker_loop(opts: &WorkerOpts) -> Result<u64> {
+    let stream = connect_with_retry(opts)?;
+    let mut conn = Conn::new(stream)?;
+    conn.send(&Msg::Register { class: opts.class.clone(), threads: opts.threads })?;
+    let scratch = std::env::temp_dir().join(format!(
+        "gcod_worker_{}_{}",
+        std::process::id(),
+        WORKER_SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    std::fs::create_dir_all(&scratch)
+        .map_err(|e| Error::msg(format!("create scratch {}: {e}", scratch.display())))?;
+    let mut running: Option<RunningLease> = None;
+    let result = serve_leases(opts, &mut conn, &scratch, &mut running);
+    if let Some(lease) = running.take() {
+        lease.abandon();
+    }
+    let _ = std::fs::remove_dir_all(&scratch);
+    result
+}
+
+fn connect_with_retry(opts: &WorkerOpts) -> Result<TcpStream> {
+    let mut last_err = String::new();
+    for _ in 0..opts.connect_retries.max(1) {
+        match TcpStream::connect(&opts.coordinator) {
+            Ok(s) => return Ok(s),
+            Err(e) => last_err = e.to_string(),
+        }
+        std::thread::sleep(opts.retry_delay);
+    }
+    Err(Error::msg(format!(
+        "could not reach coordinator {} after {} attempts: {last_err}",
+        opts.coordinator,
+        opts.connect_retries.max(1)
+    )))
+}
+
+fn serve_leases(
+    opts: &WorkerOpts,
+    conn: &mut Conn,
+    scratch: &std::path::Path,
+    running: &mut Option<RunningLease>,
+) -> Result<u64> {
+    let mut completed = 0u64;
+    let mut last_beat = Instant::now();
+    loop {
+        for msg in conn.poll_msgs()? {
+            match msg {
+                Msg::Lease { job, spec } => {
+                    if let Some(old) = running.take() {
+                        // a lease while busy means the coordinator gave
+                        // up on the old job (kill frame raced or lost)
+                        old.abandon();
+                    }
+                    match spawn_lease(opts, scratch, job, &spec) {
+                        Ok(lease) => *running = Some(lease),
+                        Err(e) => conn.send(&Msg::JobFailed { job, error: e.to_string() })?,
+                    }
+                }
+                Msg::Kill { job } => {
+                    if running.as_ref().is_some_and(|r| r.id == job) {
+                        running.take().expect("matched above").abandon();
+                    }
+                }
+                Msg::Goodbye => return Ok(completed),
+                // coordinators don't send anything else to workers
+                _ => {}
+            }
+        }
+        if conn.is_eof() {
+            return Err(Error::msg("coordinator closed the connection without goodbye"));
+        }
+        if let Some(lease) = running.take() {
+            match reap_lease(lease) {
+                LeaseTick::StillRunning(lease) => *running = Some(lease),
+                LeaseTick::Finished(job, outcome) => {
+                    let msg = match outcome {
+                        Ok(text) => {
+                            completed += 1;
+                            Msg::Manifest { job, text }
+                        }
+                        Err(e) => Msg::JobFailed { job, error: e.to_string() },
+                    };
+                    conn.send(&msg)?;
+                }
+            }
+        }
+        if last_beat.elapsed() >= HEARTBEAT_INTERVAL {
+            conn.send(&Msg::Heartbeat)?;
+            last_beat = Instant::now();
+        }
+        std::thread::sleep(TICK);
+    }
+}
+
+fn spawn_lease(
+    opts: &WorkerOpts,
+    scratch: &std::path::Path,
+    job: u64,
+    spec: &LeaseSpec,
+) -> Result<RunningLease> {
+    let out_path = scratch.join(format!("lease_{job}_{}_{}.json", spec.lo, spec.hi));
+    let err_path = out_path.with_extension("stderr.log");
+    let wjob = WorkerJob {
+        config: spec.config.clone(),
+        lo: spec.lo,
+        hi: spec.hi,
+        threads: spec.threads,
+        stats_only: spec.stats_only,
+        out_path: out_path.clone(),
+        delay_ms: spec.delay_ms,
+    };
+    let err_file = std::fs::File::create(&err_path)
+        .map_err(|e| Error::msg(format!("create {}: {e}", err_path.display())))?;
+    let mut cmd = Command::new(&opts.gcod_bin);
+    cmd.args(shard_args(&wjob)).stdout(Stdio::null()).stderr(Stdio::from(err_file));
+    if wjob.delay_ms > 0 {
+        cmd.env(DELAY_ENV, wjob.delay_ms.to_string());
+    }
+    let child = cmd
+        .spawn()
+        .map_err(|e| Error::msg(format!("spawn {}: {e}", opts.gcod_bin.display())))?;
+    Ok(RunningLease { id: job, child, out_path, err_path })
+}
+
+enum LeaseTick {
+    StillRunning(RunningLease),
+    Finished(u64, Result<String>),
+}
+
+fn reap_lease(mut lease: RunningLease) -> LeaseTick {
+    match lease.child.try_wait() {
+        Ok(None) => LeaseTick::StillRunning(lease),
+        Ok(Some(status)) => {
+            let stderr = read_tail(&lease.err_path, 4096);
+            let _ = std::fs::remove_file(&lease.err_path);
+            let outcome = if status.success() && lease.out_path.is_file() {
+                std::fs::read_to_string(&lease.out_path)
+                    .map_err(|e| Error::msg(format!("read {}: {e}", lease.out_path.display())))
+            } else {
+                Err(Error::msg(format!(
+                    "shard process exited ({status}) without a manifest{}{}",
+                    if stderr.is_empty() { "" } else { ": " },
+                    stderr
+                )))
+            };
+            let _ = std::fs::remove_file(&lease.out_path);
+            LeaseTick::Finished(lease.id, outcome)
+        }
+        Err(e) => {
+            let _ = lease.child.kill();
+            let _ = lease.child.wait();
+            LeaseTick::Finished(lease.id, Err(Error::msg(format!("wait failed: {e}"))))
+        }
+    }
+}

@@ -120,42 +120,47 @@ impl LocalProcess {
         Self { gcod_bin, slots }
     }
 
-    fn args_for(job: &WorkerJob) -> Vec<String> {
-        let c = &job.config;
-        let mut args = vec![
-            "sweep-shard".into(),
-            "--sweep".into(),
-            c.sweep.as_str().into(),
-            "--scheme".into(),
-            c.scheme.clone(),
-            "--decoder".into(),
-            c.decoder.clone(),
-            // shortest round-trip Display: the worker re-parses the
-            // exact same f64 bits
-            "--p".into(),
-            format!("{}", c.p),
-            "--trials".into(),
-            c.trials.to_string(),
-            "--seed".into(),
-            c.seed.to_string(),
-            "--chunk".into(),
-            c.chunk.to_string(),
-            "--threads".into(),
-            job.threads.to_string(),
-            "--range".into(),
-            format!("{}..{}", job.lo, job.hi),
-            "--out".into(),
-            job.out_path.display().to_string(),
-        ];
-        if job.stats_only {
-            args.push("--stats-only".into());
-        }
-        for (k, v) in &c.params {
-            args.push("--set".into());
-            args.push(format!("{k}={v}"));
-        }
-        args
+}
+
+/// The `gcod sweep-shard` argument vector executing `job`. Shared by
+/// every transport that runs leases as subprocesses ([`LocalProcess`]
+/// here, the remote side of [`super::tcp::worker_loop`]), so local and
+/// remote leases are the same invocation by construction.
+pub fn shard_args(job: &WorkerJob) -> Vec<String> {
+    let c = &job.config;
+    let mut args = vec![
+        "sweep-shard".into(),
+        "--sweep".into(),
+        c.sweep.as_str().into(),
+        "--scheme".into(),
+        c.scheme.clone(),
+        "--decoder".into(),
+        c.decoder.clone(),
+        // shortest round-trip Display: the worker re-parses the
+        // exact same f64 bits
+        "--p".into(),
+        format!("{}", c.p),
+        "--trials".into(),
+        c.trials.to_string(),
+        "--seed".into(),
+        c.seed.to_string(),
+        "--chunk".into(),
+        c.chunk.to_string(),
+        "--threads".into(),
+        job.threads.to_string(),
+        "--range".into(),
+        format!("{}..{}", job.lo, job.hi),
+        "--out".into(),
+        job.out_path.display().to_string(),
+    ];
+    if job.stats_only {
+        args.push("--stats-only".into());
     }
+    for (k, v) in &c.params {
+        args.push("--set".into());
+        args.push(format!("{k}={v}"));
+    }
+    args
 }
 
 impl WorkerTransport for LocalProcess {
@@ -172,7 +177,7 @@ impl WorkerTransport for LocalProcess {
         let err_file = std::fs::File::create(&err_path)
             .map_err(|e| Error::msg(format!("create {}: {e}", err_path.display())))?;
         let mut cmd = Command::new(&self.gcod_bin);
-        cmd.args(Self::args_for(job)).stdout(Stdio::null()).stderr(Stdio::from(err_file));
+        cmd.args(shard_args(job)).stdout(Stdio::null()).stderr(Stdio::from(err_file));
         if job.delay_ms > 0 {
             cmd.env(DELAY_ENV, job.delay_ms.to_string());
         }
@@ -244,7 +249,7 @@ impl Drop for LocalProcess {
 /// Last `max` bytes of a worker's stderr sidecar file, lossy-decoded
 /// and trimmed — enough context for the failure log without ever
 /// holding a pipe the worker could block on.
-fn read_tail(path: &Path, max: usize) -> String {
+pub(crate) fn read_tail(path: &Path, max: usize) -> String {
     let Ok(bytes) = std::fs::read(path) else { return String::new() };
     let start = bytes.len().saturating_sub(max);
     String::from_utf8_lossy(&bytes[start..]).trim().to_string()

@@ -121,7 +121,13 @@ impl GramCache {
     /// for ~n·k², i.e. wins iff k < 2b. `k <= b` is the conservative
     /// cut actually used (it also leaves room to amortize the ~N·k²
     /// build across a run) — a pure function of the sweep config, so
-    /// the choice is identical in every shard and thread.
+    /// the choice is identical in every shard and thread. The cut is
+    /// provisional until `bench_gd_perf`'s regime-2 section produces
+    /// both sides of the measured curve — and note that moving it is
+    /// byte-affecting for `grad=auto` sweeps whose shape crosses the
+    /// cut (the two kernels agree only to rounding), so a re-tune
+    /// lands like any other byte-affecting change: schema bump +
+    /// golden re-bless.
     pub fn pays_off(n_points: usize, dim: usize, n_blocks: usize) -> bool {
         // b = rows per block; guard degenerate shapes
         n_blocks > 0 && dim <= n_points / n_blocks

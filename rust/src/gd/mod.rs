@@ -12,7 +12,7 @@ pub mod analysis;
 pub mod bounds;
 pub mod gram;
 pub mod grid;
-#[cfg(feature = "pjrt")]
+#[cfg(pjrt_runtime)]
 pub mod pjrt;
 
 pub use gram::GramCache;

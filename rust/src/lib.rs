@@ -68,6 +68,16 @@
 //!    full data pass when blocks are tall (`grad=auto` in the
 //!    `gd-final` sweep picks the winning kernel per config).
 
+// `--features pjrt` in a tree without the vendored deps: fail with the
+// vendoring instructions, not a wall of unresolved imports. build.rs
+// emits `pjrt_runtime` only when the deps are really declared.
+#[cfg(all(feature = "pjrt", not(pjrt_runtime)))]
+compile_error!(
+    "feature `pjrt` needs the vendored `xla` and `anyhow` dependencies: uncomment the \
+     [dependencies] lines in rust/Cargo.toml and switch the feature to \
+     pjrt = [\"dep:xla\", \"dep:anyhow\"] (see src/runtime/mod.rs)"
+);
+
 pub mod bench_util;
 pub mod cli;
 pub mod codes;
@@ -82,7 +92,7 @@ pub mod graphs;
 pub mod linalg;
 pub mod metrics;
 pub mod prng;
-#[cfg(feature = "pjrt")]
+#[cfg(pjrt_runtime)]
 pub mod runtime;
 pub mod sparse;
 pub mod straggler;

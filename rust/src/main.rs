@@ -7,8 +7,9 @@ use gcod::cli::{flag, switch, App, CommandSpec};
 use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
 use gcod::dispatch::{
-    ChaosProfile, ChaosTransport, DispatchConfig, Dispatcher, HealthConfig, LocalProcess,
-    StragglerSimCfg,
+    query_status, submit_job, submit_job_nowait, worker_loop, ChaosProfile, ChaosTransport,
+    DispatchConfig, Dispatcher, HealthConfig, JobSpec, LocalProcess, ServeConfig,
+    StragglerSimCfg, WorkerOpts,
 };
 use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
@@ -209,6 +210,119 @@ fn app() -> App {
                 ],
             },
             CommandSpec {
+                name: "serve",
+                help: "persistent TCP job coordinator: workers register, clients submit sweeps",
+                flags: vec![
+                    flag(
+                        "bind",
+                        "listen address host:port (port 0 = ephemeral)",
+                        Some("127.0.0.1:7070"),
+                    ),
+                    flag(
+                        "min-workers",
+                        "hold queued jobs until this many workers are registered",
+                        Some("1"),
+                    ),
+                    flag("poll-ms", "event-loop / dispatcher poll interval", Some("10")),
+                    switch("once", "exit after the first job finishes (CI smokes)"),
+                    flag(
+                        "journal-dir",
+                        "checkpoint each job to <dir>/job_<id>.journal (resume on resubmit)",
+                        None,
+                    ),
+                ],
+            },
+            CommandSpec {
+                name: "worker",
+                help: "serve sweep leases to a gcod serve coordinator over TCP",
+                flags: vec![
+                    flag("connect", "coordinator address host:port", Some("127.0.0.1:7070")),
+                    flag("class", "capability class to register with (empty = generic)", Some("")),
+                    flag("threads", "engine threads offered per lease", Some("1")),
+                    flag(
+                        "connect-retries",
+                        "connection attempts before giving up (the server may still be starting)",
+                        Some("50"),
+                    ),
+                    flag("retry-ms", "pause between connection attempts", Some("100")),
+                ],
+            },
+            CommandSpec {
+                name: "submit",
+                help: "enqueue a sweep on a gcod serve coordinator and stream the merged result",
+                flags: vec![
+                    flag("connect", "coordinator address host:port", Some("127.0.0.1:7070")),
+                    flag(
+                        "sweep",
+                        "sweep kernel: decode-error|gd-final|attack|adv-gd (open registry)",
+                        Some("decode-error"),
+                    ),
+                    flag("scheme", "scheme spec", Some("graph-rr:16,3")),
+                    flag("decoder", "optimal|optimal-lsqr|fixed|ignore", Some("optimal")),
+                    flag("p", "straggler probability", Some("0.2")),
+                    flag("trials", "total trials N", Some("1000")),
+                    flag("seed", "sweep seed", Some("0")),
+                    flag("chunk", "engine chunk size >= 1 (determinism contract)", Some("32")),
+                    flag("class", "run only on workers of this capability class", Some("")),
+                    flag(
+                        "grain",
+                        "initial lease size in trials (0 = auto, chunk-aligned)",
+                        Some("0"),
+                    ),
+                    switch(
+                        "adaptive-grain",
+                        "shrink lease sizes as the queue drains (tail latency; bit-neutral)",
+                    ),
+                    flag("min-grain", "adaptive carve floor in trials (0 = one chunk)", Some("0")),
+                    flag("threads", "engine threads per worker lease", Some("1")),
+                    flag("lease-timeout-ms", "presume a lease lost after this long", Some("30000")),
+                    flag(
+                        "lease-timeout-per-trial-ms",
+                        "per-trial addition to the lease deadline (scales with range length)",
+                        Some("5"),
+                    ),
+                    flag("max-retries", "re-enqueues per range before failing", Some("3")),
+                    switch("stats-only", "stats-only manifests (relaxed Chan-merge contract)"),
+                    flag(
+                        "audit-fraction",
+                        "fraction of leases re-executed on another worker and byte-compared",
+                        Some("0"),
+                    ),
+                    flag(
+                        "chaos-seed",
+                        "deterministic chaos harness seed (replays the same fault plan)",
+                        Some("0"),
+                    ),
+                    flag(
+                        "chaos-profile",
+                        "chaos preset none|kills|flaky|byzantine or k=v list \
+                         (kill=0.1,delay=0.2,byz-worker=1,...)",
+                        Some("none"),
+                    ),
+                    flag("kill-worker", "chaos preset: kill this worker slot mid-lease", None),
+                    flag(
+                        "kill-after-ms",
+                        "chaos preset: kill this long after job start",
+                        Some("50"),
+                    ),
+                    flag("out", "merged result path", Some("sweep_submitted.json")),
+                    flag(
+                        "timeout-s",
+                        "give up waiting for the result after this long",
+                        Some("600"),
+                    ),
+                    switch("no-wait", "print the accepted job id and exit without waiting"),
+                ],
+            },
+            CommandSpec {
+                name: "status",
+                help: "registry/queue/metrics snapshot from a gcod serve coordinator",
+                flags: vec![
+                    flag("connect", "coordinator address host:port", Some("127.0.0.1:7070")),
+                    flag("timeout-s", "reply deadline", Some("10")),
+                ],
+            },
+            CommandSpec {
                 name: "sweep-merge",
                 help: "validate + merge shard manifests into the canonical sweep result",
                 flags: vec![
@@ -238,6 +352,10 @@ fn main() {
         "adversarial" => cmd_adversarial(&inv),
         "sweep-shard" => cmd_sweep_shard(&inv),
         "sweep-launch" => cmd_sweep_launch(&inv),
+        "serve" => cmd_serve(&inv),
+        "worker" => cmd_worker(&inv),
+        "submit" => cmd_submit(&inv),
+        "status" => cmd_status(&inv),
         "sweep-merge" => cmd_sweep_merge(&inv),
         _ => unreachable!(),
     };
@@ -271,7 +389,7 @@ fn cmd_info(inv: &gcod::cli::Invocation) -> Result<()> {
                      d - l2, 2.0 * (d - 1.0).sqrt());
         }
     }
-    #[cfg(feature = "pjrt")]
+    #[cfg(pjrt_runtime)]
     match gcod::runtime::Runtime::open(inv.str_or("artifacts", "artifacts")) {
         Ok(rt) => {
             println!("artifacts : {} loaded from manifest", rt.artifact_names().len());
@@ -281,7 +399,7 @@ fn cmd_info(inv: &gcod::cli::Invocation) -> Result<()> {
         }
         Err(e) => println!("artifacts : unavailable ({e})"),
     }
-    #[cfg(not(feature = "pjrt"))]
+    #[cfg(not(pjrt_runtime))]
     println!("artifacts : pjrt feature not compiled in");
     Ok(())
 }
@@ -353,7 +471,7 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
     let k = inv.usize_or("dim", 2000);
     let data = gcod::data::LstsqData::generate(n_points, k, scheme.n_blocks(), 1.0, &mut rng);
     let backend = match inv.str_or("backend", "pjrt").as_str() {
-        #[cfg(feature = "pjrt")]
+        #[cfg(pjrt_runtime)]
         "pjrt" => {
             let art = format!("worker_grad_fig4_2x{}x{}", data.b, k);
             ComputeBackend::Pjrt {
@@ -617,6 +735,111 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
         sci(outcome.merged.stats.max())
     );
     println!("merged result written to {out}");
+    Ok(())
+}
+
+fn cmd_serve(inv: &gcod::cli::Invocation) -> Result<()> {
+    let mut cfg = ServeConfig::new(inv.str_or("bind", "127.0.0.1:7070"));
+    cfg.min_workers = inv.usize_or("min-workers", 1);
+    cfg.poll = Duration::from_millis(inv.u64_or("poll-ms", 10));
+    cfg.once = inv.switch("once");
+    if let Some(d) = inv.get("journal-dir") {
+        if !d.is_empty() {
+            std::fs::create_dir_all(d)
+                .map_err(|e| Error::msg(format!("create --journal-dir {d}: {e}")))?;
+            cfg.journal_dir = Some(d.into());
+        }
+    }
+    gcod::dispatch::serve(&cfg)
+}
+
+fn cmd_worker(inv: &gcod::cli::Invocation) -> Result<()> {
+    let mut opts =
+        WorkerOpts::new(inv.str_or("connect", "127.0.0.1:7070"), std::env::current_exe()?);
+    opts.class = inv.str_or("class", "");
+    opts.threads = inv.usize_or("threads", 1).max(1);
+    opts.connect_retries = inv.usize_or("connect-retries", 50);
+    opts.retry_delay = Duration::from_millis(inv.u64_or("retry-ms", 100));
+    println!(
+        "gcod worker: serving coordinator {} (class '{}', {} thread(s))...",
+        opts.coordinator, opts.class, opts.threads
+    );
+    let completed = worker_loop(&opts)?;
+    println!("gcod worker: coordinator said goodbye after {completed} completed lease(s)");
+    Ok(())
+}
+
+fn cmd_submit(inv: &gcod::cli::Invocation) -> Result<()> {
+    let cfg = sweep_config_from(inv)?;
+    let audit_fraction = inv
+        .str_or("audit-fraction", "0")
+        .parse::<f64>()
+        .map_err(|e| Error::msg(format!("bad --audit-fraction: {e}")))?;
+    if !(0.0..=1.0).contains(&audit_fraction) {
+        return Err(Error::msg(format!(
+            "bad --audit-fraction: {audit_fraction} is not in [0, 1]"
+        )));
+    }
+    let mut spec = JobSpec::new(cfg);
+    spec.class = inv.str_or("class", "");
+    spec.grain = inv.usize_or("grain", 0);
+    spec.adaptive_grain = inv.switch("adaptive-grain");
+    spec.min_grain = inv.usize_or("min-grain", 0);
+    spec.threads_per_worker = inv.usize_or("threads", 1);
+    spec.lease_timeout_ms = inv.u64_or("lease-timeout-ms", 30_000);
+    spec.lease_timeout_per_trial_ms = inv.u64_or("lease-timeout-per-trial-ms", 5);
+    spec.max_retries = inv.usize_or("max-retries", 3);
+    spec.stats_only = inv.switch("stats-only");
+    spec.audit_fraction = audit_fraction;
+    spec.chaos_seed = inv.u64_or("chaos-seed", 0);
+    spec.chaos_profile = inv.str_or("chaos-profile", "none");
+    // fail bad chaos specs client-side, before the job queues
+    ChaosProfile::parse(&spec.chaos_profile)?;
+    spec.kill_worker = match inv.get("kill-worker") {
+        None => None,
+        Some(w) => {
+            Some(w.parse::<usize>().map_err(|e| Error::msg(format!("bad --kill-worker: {e}")))?)
+        }
+    };
+    spec.kill_after_ms = inv.u64_or("kill-after-ms", 50);
+    let addr = inv.str_or("connect", "127.0.0.1:7070");
+    let timeout = Duration::from_secs(inv.u64_or("timeout-s", 600));
+    println!(
+        "submitting sweep '{}' ({} {} p={} seed={}, {} trials) to {addr}...",
+        spec.config.sweep.as_str(),
+        spec.config.scheme,
+        spec.config.decoder,
+        spec.config.p,
+        spec.config.seed,
+        spec.config.trials
+    );
+    if inv.switch("no-wait") {
+        let id = submit_job_nowait(&addr, spec, timeout)?;
+        println!("job {id} accepted by {addr}");
+        return Ok(());
+    }
+    let outcome = submit_job(&addr, spec, timeout)?;
+    // the manifest crossed a network: re-validate before trusting it
+    let merged = shard::MergedSweep::parse(&outcome.manifest)?;
+    let out = inv.str_or("out", "sweep_submitted.json");
+    std::fs::write(&out, &outcome.manifest)
+        .map_err(|e| Error::msg(format!("write {out}: {e}")))?;
+    println!("job {} done: {}", outcome.job, outcome.summary);
+    println!(
+        "result: mean={} std={} min={} max={}",
+        sci(merged.stats.mean()),
+        sci(merged.stats.std()),
+        sci(merged.stats.min()),
+        sci(merged.stats.max())
+    );
+    println!("merged result written to {out}");
+    Ok(())
+}
+
+fn cmd_status(inv: &gcod::cli::Invocation) -> Result<()> {
+    let addr = inv.str_or("connect", "127.0.0.1:7070");
+    let timeout = Duration::from_secs(inv.u64_or("timeout-s", 10));
+    print!("{}", query_status(&addr, timeout)?);
     Ok(())
 }
 

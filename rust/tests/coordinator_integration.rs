@@ -3,7 +3,7 @@
 //! Environment-bound behind the `pjrt` feature (needs the vendored
 //! xla/anyhow dependencies and `make artifacts`); the native-backend
 //! coordinator is covered by the unit tests in src/coordinator/.
-#![cfg(feature = "pjrt")]
+#![cfg(pjrt_runtime)]
 
 use gcod::codes::{GradientCode, GraphCode};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};

@@ -1,0 +1,169 @@
+//! Multi-host dispatch integration suite: the TCP transport and the
+//! `gcod serve` job coordinator, end to end over real sockets and real
+//! `gcod sweep-shard` subprocess boundaries.
+//!
+//! * `TcpTransport` behind the unchanged `Dispatcher`, with a chaos
+//!   kill tearing a remote worker's lease down mid-range: the retry
+//!   machinery absorbs it and the merged bytes are identical to the
+//!   single-process run — the acceptance invariant of the serve stack;
+//! * the full daemon path: `serve_on` + three registered `worker_loop`s
+//!   + `submit_job` with a server-side chaos kill, asserting the
+//!   streamed manifest is byte-identical to `shard::run_full`;
+//! * `query_status` returns the registry/metrics snapshot.
+//!
+//! (Wire-format round trips, framing splits and protocol-violation
+//! rejection are pinned by the unit tests in `src/dispatch/protocol.rs`.)
+
+use gcod::dispatch::{
+    query_status, serve_on, submit_job, worker_loop, ChaosProfile, ChaosTransport,
+    DispatchConfig, Dispatcher, JobSpec, ServeConfig, TcpTransport, WorkerOpts,
+};
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::thread;
+use std::time::Duration;
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn sweep_cfg(trials: usize) -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 11,
+        trials,
+        chunk: 8,
+        params: BTreeMap::new(),
+    }
+}
+
+fn spawn_worker(addr: &str, class: &str) -> thread::JoinHandle<gcod::error::Result<u64>> {
+    let mut opts = WorkerOpts::new(addr, gcod_bin());
+    opts.class = class.into();
+    thread::spawn(move || worker_loop(&opts))
+}
+
+/// The dispatcher over TCP workers, with a chaos kill mid-lease. The
+/// kill frame really tears down the remote shard subprocess, the range
+/// is retried elsewhere, and the merged result never moves a bit from
+/// the single-process run.
+#[test]
+fn tcp_transport_chaos_kill_stays_bit_exact() {
+    let c = sweep_cfg(96);
+    let single = shard::run_full(&c, 2).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let workers: Vec<_> = (0..3).map(|_| spawn_worker(&addr, "")).collect();
+    let tcp = TcpTransport::accept(&listener, 3, Duration::from_secs(20)).unwrap();
+    assert_eq!(tcp.alive(), 3);
+
+    let mut t = ChaosTransport::new(tcp, 0, ChaosProfile::parse("none").unwrap());
+    t.preset_kill(1, Duration::from_millis(30));
+    let out_dir =
+        std::env::temp_dir().join(format!("gcod_serve_test_tcp_{}", std::process::id()));
+    let d = DispatchConfig {
+        grain: 16,
+        max_retries: 10,
+        poll_interval: Duration::from_millis(2),
+        out_dir: out_dir.clone(),
+        ..DispatchConfig::default()
+    };
+    let out = Dispatcher::new(d).run(&c, &mut t).unwrap();
+    let _ = std::fs::remove_dir_all(&out_dir);
+
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+    assert!(out.report.retried >= 1, "chaos kill never forced a retry: {}", out.report.summary());
+    assert!(!t.plan.log.is_empty(), "kill preset left no fault-plan log");
+
+    // orderly shutdown: every worker (including the one whose lease was
+    // killed — only its subprocess died) gets a goodbye and exits Ok
+    t.inner().shutdown();
+    for w in workers {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+}
+
+/// The daemon path end to end: workers register with a capability
+/// class, a status probe answers, and a submitted job — with a chaos
+/// kill taking out one worker slot mid-lease — streams back a manifest
+/// byte-identical to the single-process run. `once` terminates the
+/// daemon after the job so the test (and the CI smoke) can join it.
+#[test]
+fn serve_submit_kill_mid_lease_matches_single_process() {
+    let c = sweep_cfg(96);
+    let single = shard::run_full(&c, 2).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 3;
+    scfg.once = true;
+    scfg.poll = Duration::from_millis(2);
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+    let workers: Vec<_> = (0..3).map(|_| spawn_worker(&addr, "cpu")).collect();
+
+    let status = query_status(&addr, Duration::from_secs(10)).unwrap();
+    assert!(status.contains("workers registered"), "not a status table: {status}");
+    assert!(status.contains("jobs done"), "not a status table: {status}");
+
+    let mut spec = JobSpec::new(c.clone());
+    spec.class = "cpu".into();
+    spec.grain = 16;
+    spec.max_retries = 10;
+    spec.kill_worker = Some(2);
+    spec.kill_after_ms = 30;
+    let out = submit_job(&addr, spec, Duration::from_secs(120)).unwrap();
+
+    assert_eq!(out.manifest, single.render(), "served manifest != single-process run");
+    let merged = shard::MergedSweep::parse(&out.manifest).unwrap();
+    assert_eq!(merged.values.len(), 96);
+
+    server.join().unwrap().expect("serve_on should exit cleanly in once mode");
+    for w in workers {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+}
+
+/// A worker of the wrong capability class never runs a lease: the job
+/// waits for an eligible worker, and classes are matched exactly.
+#[test]
+fn submit_requires_matching_capability_class() {
+    let c = sweep_cfg(16);
+    let single = shard::run_full(&c, 1).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 1;
+    scfg.once = true;
+    scfg.poll = Duration::from_millis(2);
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+
+    // a generic worker registers first, but the job demands class "gpu"
+    // — it must queue until the eligible worker shows up
+    let generic = spawn_worker(&addr, "");
+    let submitter = {
+        let addr = addr.clone();
+        let c = c.clone();
+        thread::spawn(move || {
+            let mut spec = JobSpec::new(c);
+            spec.class = "gpu".into();
+            submit_job(&addr, spec, Duration::from_secs(120))
+        })
+    };
+    thread::sleep(Duration::from_millis(300));
+    let gpu = spawn_worker(&addr, "gpu");
+
+    let out = submitter.join().unwrap().expect("job should run once a gpu worker joins");
+    assert_eq!(out.manifest, single.render());
+
+    server.join().unwrap().unwrap();
+    for w in [generic, gpu] {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+}

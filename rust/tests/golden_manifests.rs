@@ -32,7 +32,9 @@ use gcod::data::LstsqData;
 use gcod::error::Result;
 use gcod::gd::{GdScratch, GramCache, SimulatedGcod, StepSize};
 use gcod::prng::Rng;
-use gcod::straggler::{greedy_decode_attack_trace, BernoulliStragglers};
+use gcod::straggler::{
+    greedy_decode_attack, greedy_decode_attack_trace, BernoulliStragglers, FixedMaskStragglers,
+};
 use gcod::sweep::kernels::{register_kernel, SweepKernel, DATA_SALT};
 use gcod::sweep::shard::{
     self, ShardResult, ShardSpec, SweepConfig, SweepKind, SCHEME_SALT, SHARD_SCHEMA,
@@ -146,6 +148,85 @@ fn oracle_gd_final(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> V
     )
 }
 
+/// Independent inline replica of the `adv-gd` kernel, written against
+/// the public engine/zoo/gd/straggler APIs with no sweep-kernel (or
+/// `GdProblem`) involvement: commit one greedy adversarial mask — a
+/// pure function of (scheme, decoder, budget) — then run one full
+/// deterministic GD trajectory per trial with the mask replayed every
+/// iteration and only the block shuffle drawn from the substream.
+fn oracle_adv_gd(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Vec<f64> {
+    let (scheme, dspec, engine) = setup(cfg, threads);
+    let m = scheme.n_machines();
+    let dim = cfg.param_usize("dim", 32);
+    let n_points = cfg
+        .param_usize("n-points", 512)
+        .max(dim + 1)
+        .div_ceil(scheme.n_blocks())
+        * scheme.n_blocks();
+    let iters = cfg.param_usize("iters", 30);
+    let sigma = cfg.param_f64("sigma", 1.0);
+    let step_c = cfg.param_usize("step-c", 9) as u32;
+    let budget = cfg
+        .param_usize("budget", (cfg.p * m as f64).floor() as usize)
+        .min(m);
+    let data = LstsqData::generate(
+        n_points,
+        dim,
+        scheme.n_blocks(),
+        sigma,
+        &mut Rng::new(cfg.seed ^ DATA_SALT),
+    );
+    let atk_dec = make_decoder(&scheme, dspec, cfg.p);
+    let mask = greedy_decode_attack(atk_dec.as_ref(), &scheme.a, budget);
+    drop(atk_dec);
+    let use_gram = match cfg.params.get("grad").map(String::as_str) {
+        Some("gram") => true,
+        Some("streaming") => false,
+        _ => GramCache::pays_off(n_points, dim, scheme.n_blocks()),
+    };
+    // serial build; the kernel builds in parallel, so this doubles as a
+    // serial ≡ parallel cross-check (as in oracle_gd_final)
+    let cache = use_gram.then(|| GramCache::new(&data));
+    struct Ctx<'a> {
+        dec: Box<dyn gcod::decode::Decoder + 'a>,
+        scratch: GdScratch,
+        theta0: Vec<f64>,
+    }
+    engine.run_range_map(
+        lo,
+        hi,
+        |_chunk| Ctx {
+            dec: make_decoder(&scheme, dspec, cfg.p),
+            scratch: GdScratch::new(),
+            theta0: vec![0.0; dim],
+        },
+        |ctx, _t, rng| {
+            let Ctx { dec, scratch, theta0 } = ctx;
+            let mut strag = FixedMaskStragglers::new(&mask);
+            let rho = rng.permutation(scheme.n_blocks());
+            let mut gd = SimulatedGcod {
+                decoder: dec.as_ref(),
+                stragglers: &mut strag,
+                step: StepSize::simulated_grid(step_c),
+                rho: Some(rho),
+                m,
+                alpha_scale: 1.0,
+            };
+            match &cache {
+                Some(c) => {
+                    let mut src = c;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+                None => {
+                    let mut src = &data;
+                    gd.run_with(&mut src, theta0, iters, scratch)
+                }
+            }
+            .final_progress()
+        },
+    )
+}
+
 fn oracle_attack(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Vec<f64> {
     let (scheme, dspec, _engine) = setup(cfg, threads);
     let dec = make_decoder(&scheme, dspec, cfg.p);
@@ -204,6 +285,25 @@ fn gd_final_kernel_matches_legacy_oracle() {
     streaming.params.insert("grad".into(), "streaming".into());
     streaming.decoder = "optimal-lsqr".into();
     assert_oracle_matches(&streaming, oracle_gd_final, "gd-final/streaming+lsqr");
+}
+
+#[test]
+fn adv_gd_kernel_matches_inline_oracle() {
+    // default budget floor(p*m), graph decoder, gram-auto gradients
+    let mut adv = cfg(SweepKind::AdvGd, "graph-rr:8,3", "optimal", 12, 4);
+    adv.params.insert("n-points".into(), "64".into());
+    adv.params.insert("dim".into(), "8".into());
+    adv.params.insert("iters".into(), "8".into());
+    adv.params.insert("step-c".into(), "0".into());
+    assert_oracle_matches(&adv, oracle_adv_gd, "adv-gd/optimal");
+
+    // explicit budget, warm-started LSQR decoder (chunk-scoped state
+    // exercises the replay contract), streaming gradients
+    let mut lsqr = adv.clone();
+    lsqr.decoder = "optimal-lsqr".into();
+    lsqr.params.insert("budget".into(), "4".into());
+    lsqr.params.insert("grad".into(), "streaming".into());
+    assert_oracle_matches(&lsqr, oracle_adv_gd, "adv-gd/streaming+lsqr");
 }
 
 #[test]

@@ -2,7 +2,7 @@
 //! numerics against the pure-rust oracles. Requires `make artifacts`
 //! and the `pjrt` feature (environment-bound: needs the vendored
 //! xla/anyhow dependencies and the PJRT CPU client).
-#![cfg(feature = "pjrt")]
+#![cfg(pjrt_runtime)]
 
 use gcod::data::LstsqData;
 use gcod::prng::Rng;
