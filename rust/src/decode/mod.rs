@@ -74,6 +74,14 @@ pub trait Decoder {
         out
     }
 
+    /// Inner-solve iteration count of the most recent decode, for
+    /// decoders that are iterative under the hood (the generic LSQR
+    /// decoder). `None` for closed-form decoders. Observability only —
+    /// feeds the `lsqr_iterations_total` metric, never the decode.
+    fn lsqr_iterations(&self) -> Option<u64> {
+        None
+    }
+
     fn name(&self) -> String;
 }
 
@@ -83,6 +91,9 @@ impl<D: Decoder + ?Sized> Decoder for Box<D> {
     }
     fn decode(&self, straggler: &[bool]) -> Decoding {
         (**self).decode(straggler)
+    }
+    fn lsqr_iterations(&self) -> Option<u64> {
+        (**self).lsqr_iterations()
     }
     fn name(&self) -> String {
         (**self).name()
@@ -324,6 +335,10 @@ impl<'a> GenericOptimalDecoder<'a> {
 impl Decoder for GenericOptimalDecoder<'_> {
     fn name(&self) -> String {
         "optimal-lsqr".to_string()
+    }
+
+    fn lsqr_iterations(&self) -> Option<u64> {
+        Some(self.last_lsqr_iterations() as u64)
     }
 
     fn decode_into(&self, straggler: &[bool], out: &mut Decoding) {

@@ -28,6 +28,7 @@
 //! wrapper: [`ChaosTransport::preset_kill`] / [`ChaosTransport::preset_delay`].
 
 use crate::error::{Error, Result};
+use crate::obs::{Event, Obs};
 use crate::prng;
 use crate::sweep::shard::ShardResult;
 use std::collections::{BTreeMap, VecDeque};
@@ -320,12 +321,27 @@ pub struct ChaosTransport<T: WorkerTransport> {
     slots: Vec<Armed>,
     /// most recent honestly delivered manifest (StaleReplay source)
     last_delivered: Option<ShardResult>,
+    /// fault decisions stream out live as [`Event::ChaosFault`] (the
+    /// plan's log stays the replay-assertion source of truth)
+    obs: Obs,
 }
 
 impl<T: WorkerTransport> ChaosTransport<T> {
     pub fn new(inner: T, seed: u64, profile: ChaosProfile) -> Self {
         let slots = (0..inner.n_workers()).map(|_| Armed::Honest).collect();
-        Self { inner, plan: FaultPlan::new(seed, profile), slots, last_delivered: None }
+        Self {
+            inner,
+            plan: FaultPlan::new(seed, profile),
+            slots,
+            last_delivered: None,
+            obs: Obs::default(),
+        }
+    }
+
+    /// Attach an observability handle: every fault decision the plan
+    /// logs is also emitted as a structured event the moment it lands.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
     }
 
     /// Preset over the plan replacing `LocalProcess::inject_kill`: kill
@@ -362,7 +378,11 @@ impl<T: WorkerTransport> WorkerTransport for ChaosTransport<T> {
     }
 
     fn start(&mut self, worker: WorkerId, job: &WorkerJob) -> Result<()> {
+        let logged = self.plan.log.len();
         let fault = self.plan.decide(worker, job.lo, job.hi);
+        for line in &self.plan.log[logged..] {
+            self.obs.emit(Event::ChaosFault { detail: line.clone() });
+        }
         match fault {
             Fault::None => {
                 self.slots[worker] = Armed::Honest;

@@ -78,6 +78,7 @@ pub mod transport;
 
 use crate::error::{Error, Result};
 use crate::metrics::Stats;
+use crate::obs::{Event, Obs};
 use crate::prng;
 use crate::straggler::{BernoulliStragglers, DelaySampler};
 use crate::sweep::shard::{self, MergedSweep, ShardResult, SweepConfig};
@@ -166,6 +167,18 @@ pub struct DispatchConfig {
     /// remainder recomputes (fixed-grain carve; `adaptive_grain` does
     /// not apply to the resumed remainder)
     pub resume: bool,
+    /// observability handle: every scheduling decision (lease issue,
+    /// completion, reap, retry, audit verdict, quarantine, …) is
+    /// emitted as a structured [`crate::obs::Event`] through this
+    /// handle's sinks. The default disabled handle makes every emit a
+    /// no-op. Bit-neutral by contract: events never touch shard
+    /// results, manifests or the merge
+    pub obs: Obs,
+    /// half-open-peer reap window for TCP transports: a registered
+    /// worker silent for longer than this while holding a job is
+    /// presumed dead (see [`tcp::DEAD_AFTER`], the default). Local
+    /// process transports ignore it
+    pub peer_silence_timeout: Duration,
 }
 
 impl Default for DispatchConfig {
@@ -188,6 +201,8 @@ impl Default for DispatchConfig {
             health: HealthConfig::default(),
             journal: None,
             resume: false,
+            obs: Obs::default(),
+            peer_silence_timeout: tcp::DEAD_AFTER,
         }
     }
 }
@@ -372,6 +387,7 @@ impl Dispatcher {
             state.report.failure_log.append(&mut j.notes);
         }
         let started = Instant::now();
+        self.cfg.obs.emit(Event::DispatchStarted { trials: sweep.trials, workers: n, grain });
 
         loop {
             let now = Instant::now();
@@ -394,6 +410,7 @@ impl Dispatcher {
             if state.health.all_quarantined() {
                 // graceful degradation has run out of pool: explain
                 // per-worker instead of burning the retry budget
+                state.emit_post_mortem(false, started);
                 return Err(state.err_with_log(Error::msg(format!(
                     "dispatch halted: every worker is quarantined with work remaining\n\
                      per-worker post-mortem:\n{}",
@@ -407,12 +424,15 @@ impl Dispatcher {
             {
                 // unreachable by construction (fail() either requeues or
                 // errors), but never spin silently
+                state.emit_post_mortem(false, started);
                 return Err(state.err_with_log(Error::msg(
                     "dispatcher stalled: no pending work, no active leases, sweep incomplete",
                 )));
             }
+            crate::metrics::gauge("queue_done_trials").set(state.queue.done_trials() as f64);
             std::thread::sleep(self.cfg.poll_interval);
         }
+        state.emit_post_mortem(true, started);
 
         let RunState { mut report, banked, health, journal, .. } = state;
         let results: Vec<ShardResult> = banked.into_iter().map(|b| b.res).collect();
@@ -483,6 +503,21 @@ fn with_log(e: Error, log: &[String]) -> Error {
     })
 }
 
+/// One worker's final scorecard as a structured event.
+fn post_mortem_event(w: WorkerId, h: &WorkerHealth) -> Event {
+    Event::WorkerPostMortem {
+        worker: w,
+        state: h.quarantined.map_or("active", QuarantineReason::as_str).to_string(),
+        completions: h.completions,
+        failures: h.failures,
+        timeouts: h.timeouts,
+        audit_passes: h.audit_passes,
+        audit_failures: h.audit_failures,
+        mean_lease_secs: if h.completions == 0 { 0.0 } else { h.lease_secs.mean() },
+        last_error: h.last_error.clone().unwrap_or_default(),
+    }
+}
+
 /// Deterministic per-(range, occurrence) audit substream key — the same
 /// mixing idea as [`chaos`]'s fault keying, in the opposite role: this
 /// stream decides *checks*, not faults, and is worker/timing-independent
@@ -532,19 +567,56 @@ impl RunState<'_> {
 
     /// `queue.fail` plus retry bookkeeping.
     fn fail_lease(&mut self, id: LeaseId) -> Result<()> {
-        let (_, requeued) =
+        let (lease, requeued) =
             self.queue.fail(id).map_err(|e| with_log(e, &self.report.failure_log))?;
         self.report.retried += u64::from(requeued);
+        if requeued {
+            self.cfg.obs.emit(Event::LeaseRetried {
+                lo: lease.lo,
+                hi: lease.hi,
+                attempt: self.queue.retry_count(lease.lo, lease.hi),
+            });
+        }
         Ok(())
     }
 
     fn note_quarantine(&mut self, w: WorkerId, q: Option<QuarantineReason>) {
         if let Some(reason) = q {
             self.report.quarantined.push((w, reason.as_str().to_string()));
+            // the triggering failure was logged just before the health
+            // layer tripped, so the last log entry is the detail
+            self.cfg.obs.emit(Event::WorkerQuarantined {
+                worker: w,
+                reason: reason.as_str().to_string(),
+                detail: self.report.failure_log.last().cloned().unwrap_or_default(),
+            });
             self.report
                 .failure_log
                 .push(format!("worker {w} quarantined ({})", reason.as_str()));
         }
+    }
+
+    /// The per-worker post-mortem table as structured events (the
+    /// machine-readable twin of [`HealthTracker::post_mortem`] — with a
+    /// JSON sink configured, `--log-format json` turns the health table
+    /// into parseable records), followed by the dispatch-done marker.
+    /// Emitted on success and on both loud-failure paths, then flushed
+    /// so a JSONL trace is complete even when the process aborts next.
+    fn emit_post_mortem(&self, ok: bool, started: Instant) {
+        crate::metrics::gauge("queue_done_trials").set(self.queue.done_trials() as f64);
+        if !self.cfg.obs.enabled() {
+            return;
+        }
+        for w in 0..self.n {
+            self.cfg.obs.emit(post_mortem_event(w, self.health.worker(w)));
+        }
+        self.cfg.obs.emit(Event::DispatchDone {
+            completed: self.report.completed,
+            retried: self.report.retried,
+            elapsed_secs: started.elapsed().as_secs_f64(),
+            ok,
+        });
+        self.cfg.obs.flush();
     }
 
     /// Stage 1: poll every busy slot (lease and audit jobs alike).
@@ -578,6 +650,7 @@ impl RunState<'_> {
                     self.queue.cancel(id);
                     self.busy[w] = None;
                     self.report.cancelled += 1;
+                    self.cfg.obs.emit(Event::LeaseCancelled { lease: id, worker: w });
                 }
             }
             WorkerPoll::Done => {
@@ -591,6 +664,14 @@ impl RunState<'_> {
                         self.health.record_completion(w, lease.issued.elapsed());
                         self.report.completed += 1;
                         self.report.per_worker_completed[w] += 1;
+                        self.cfg.obs.emit(Event::LeaseCompleted {
+                            lease: id,
+                            worker: w,
+                            lo: lease.lo,
+                            hi: lease.hi,
+                            secs: lease.issued.elapsed().as_secs_f64(),
+                            duplicate: lease.speculative,
+                        });
                         self.bank(res, w);
                     }
                     Err(e) => {
@@ -599,6 +680,13 @@ impl RunState<'_> {
                             lease.lo, lease.hi
                         );
                         self.report.failure_log.push(msg.clone());
+                        self.cfg.obs.emit(Event::LeaseFailed {
+                            lease: id,
+                            worker: w,
+                            lo: lease.lo,
+                            hi: lease.hi,
+                            error: msg.clone(),
+                        });
                         let q = self.health.record_failure(w, Instant::now(), &msg);
                         self.note_quarantine(w, q);
                         self.fail_lease(id)?;
@@ -607,17 +695,33 @@ impl RunState<'_> {
             }
             WorkerPoll::Failed(msg) => {
                 self.busy[w] = None;
+                let (lo, hi) = self.queue.get(id).map(|l| (l.lo, l.hi)).unwrap_or((0, 0));
                 self.report.failure_log.push(msg.clone());
+                self.cfg.obs.emit(Event::LeaseFailed {
+                    lease: id,
+                    worker: w,
+                    lo,
+                    hi,
+                    error: msg.clone(),
+                });
                 let q = self.health.record_failure(w, Instant::now(), &msg);
                 self.note_quarantine(w, q);
                 self.fail_lease(id)?;
             }
             WorkerPoll::Idle => {
                 self.busy[w] = None;
+                let (lo, hi) = self.queue.get(id).map(|l| (l.lo, l.hi)).unwrap_or((0, 0));
                 let msg = format!(
                     "worker {w} lost its job for lease {id} (transport reported idle)"
                 );
                 self.report.failure_log.push(msg.clone());
+                self.cfg.obs.emit(Event::LeaseFailed {
+                    lease: id,
+                    worker: w,
+                    lo,
+                    hi,
+                    error: msg.clone(),
+                });
                 let q = self.health.record_failure(w, Instant::now(), &msg);
                 self.note_quarantine(w, q);
                 self.fail_lease(id)?;
@@ -737,7 +841,13 @@ impl RunState<'_> {
         task.attempts += 1;
         if task.attempts >= AUDIT_MAX_ATTEMPTS {
             let (lo, hi) = task.src_range;
+            let (s_lo, s_hi) = (task.lo, task.hi);
             self.audits.remove(&aid);
+            self.cfg.obs.emit(Event::AuditDropped {
+                lo: s_lo,
+                hi: s_hi,
+                reason: format!("abandoned after {AUDIT_MAX_ATTEMPTS} attempts: {why}"),
+            });
             self.report.failure_log.push(format!(
                 "audit of [{lo}, {hi}) abandoned after {AUDIT_MAX_ATTEMPTS} attempts ({why}) \
                  — giving the banked result the benefit of the doubt"
@@ -779,9 +889,22 @@ impl RunState<'_> {
                 if bytes == task.expected {
                     self.health.record_audit_pass(task.src_worker);
                     self.report.audits_passed += 1;
+                    self.cfg.obs.emit(Event::AuditPassed {
+                        auditor,
+                        lo: task.lo,
+                        hi: task.hi,
+                    });
                     return;
                 }
                 self.report.audit_mismatches += 1;
+                self.cfg.obs.emit(Event::AuditFailed {
+                    lo: task.lo,
+                    hi: task.hi,
+                    detail: format!(
+                        "worker {} (banked) vs worker {auditor} (probe re-run)",
+                        task.src_worker
+                    ),
+                });
                 self.report.failure_log.push(format!(
                     "audit mismatch on [{}, {}): worker {} (banked) vs worker {auditor} \
                      (probe re-run)",
@@ -814,6 +937,11 @@ impl RunState<'_> {
                     // forged its probe
                     self.health.record_audit_pass(task.src_worker);
                     self.report.audits_passed += 1;
+                    self.cfg.obs.emit(Event::AuditPassed {
+                        auditor,
+                        lo: task.lo,
+                        hi: task.hi,
+                    });
                     self.condemn(transport, challenger, "tiebreak contradicted its probe re-run");
                 } else if bytes == challenger_bytes {
                     self.condemn(
@@ -836,6 +964,9 @@ impl RunState<'_> {
         self.report
             .failure_log
             .push(format!("worker {w} condemned by result audit: {why}"));
+        self.cfg.obs.emit(Event::Note {
+            text: format!("worker {w} condemned by result audit: {why}"),
+        });
         let q = self.health.record_audit_failure(w, why);
         self.invalidate_banked(transport, w);
         if q.is_some() {
@@ -876,6 +1007,7 @@ impl RunState<'_> {
             }
             let (lo, hi) = (b.res.lo, b.res.hi);
             self.report.invalidated_ranges += 1;
+            self.cfg.obs.emit(Event::RangeInvalidated { worker: w, lo, hi });
             self.queue.reopen(lo, hi);
             if let Some(j) = &mut self.journal {
                 if let Err(e) = j.invalidate(lo, hi) {
@@ -914,6 +1046,14 @@ impl RunState<'_> {
             transport.kill(lease.worker);
             self.busy[lease.worker] = None;
             self.report.timeouts += 1;
+            self.cfg.obs.emit(Event::LeaseReaped {
+                lease: id,
+                worker: lease.worker,
+                lo: lease.lo,
+                hi: lease.hi,
+                secs: lease.issued.elapsed().as_secs_f64(),
+                cause: "deadline".to_string(),
+            });
             let msg = format!(
                 "worker {} lease [{}, {}): deadline exceeded, re-enqueueing",
                 lease.worker, lease.lo, lease.hi
@@ -940,6 +1080,9 @@ impl RunState<'_> {
             transport.kill(x);
             self.busy[x] = None;
             self.report.timeouts += 1;
+            self.cfg.obs.emit(Event::Note {
+                text: format!("worker {x} audit job {aid}: deadline exceeded"),
+            });
             let msg = format!("worker {x} audit job {aid}: deadline exceeded");
             self.report.failure_log.push(msg.clone());
             let q = self.health.record_timeout(x, now, &msg);
@@ -963,6 +1106,11 @@ impl RunState<'_> {
             .collect();
         for aid in doomed {
             let t = self.audits.remove(&aid).expect("listed audit exists");
+            self.cfg.obs.emit(Event::AuditDropped {
+                lo: t.lo,
+                hi: t.hi,
+                reason: "no eligible worker left to run it".to_string(),
+            });
             self.report.failure_log.push(format!(
                 "audit of [{}, {}) dropped: no eligible worker left to run it",
                 t.lo, t.hi
@@ -1000,6 +1148,12 @@ impl RunState<'_> {
             delay_ms: 0,
         };
         self.report.audits_issued += 1;
+        self.cfg.obs.emit(Event::AuditIssued {
+            auditor: w,
+            lo: task.lo,
+            hi: task.hi,
+            original: task.src_worker,
+        });
         match transport.start(w, &job) {
             Ok(()) => {
                 task.running_on = Some(w);
@@ -1061,6 +1215,13 @@ impl RunState<'_> {
             };
             self.report.leases_issued += 1;
             self.report.speculative_issued += u64::from(lease.speculative);
+            self.cfg.obs.emit(Event::LeaseIssued {
+                lease: lease.id,
+                worker: w,
+                lo: lease.lo,
+                hi: lease.hi,
+                speculative: lease.speculative,
+            });
             match transport.start(w, &job) {
                 Ok(()) => self.busy[w] = Some(SlotJob::Lease(lease.id)),
                 Err(e) => {
@@ -1069,6 +1230,13 @@ impl RunState<'_> {
                         lease.lo, lease.hi
                     );
                     self.report.failure_log.push(msg.clone());
+                    self.cfg.obs.emit(Event::LeaseFailed {
+                        lease: lease.id,
+                        worker: w,
+                        lo: lease.lo,
+                        hi: lease.hi,
+                        error: msg.clone(),
+                    });
                     let q = self.health.record_failure(w, now, &msg);
                     self.note_quarantine(w, q);
                     self.fail_lease(lease.id)?;

@@ -22,10 +22,12 @@
 use crate::bench_util::{f64_from_hex_bits, f64_to_hex_bits, json_escape, json_f64_display};
 use crate::config::json::Json;
 use crate::error::{Error, Result};
+use crate::metrics::{self, Counter};
 use crate::sweep::shard::{SweepConfig, SweepKind};
 use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::TcpStream;
+use std::sync::OnceLock;
 use std::time::{Duration, Instant};
 
 /// Bumped on any wire-incompatible change; registration carries it so
@@ -395,6 +397,14 @@ fn get_f64_bits(j: &Json, key: &str) -> Result<f64> {
 // Framing
 // ---------------------------------------------------------------------
 
+/// Total protocol bytes moved (both directions, length prefixes
+/// included). Cached handle: one registry lookup per process, then a
+/// plain relaxed atomic add per frame.
+fn bytes_framed() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| metrics::counter("bytes_framed_total"))
+}
+
 /// Write one frame: 4-byte big-endian length + UTF-8 JSON body.
 pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
     let body = msg.render();
@@ -408,7 +418,9 @@ pub fn write_frame(w: &mut impl Write, msg: &Msg) -> Result<()> {
     w.write_all(&(bytes.len() as u32).to_be_bytes())
         .and_then(|()| w.write_all(bytes))
         .and_then(|()| w.flush())
-        .map_err(|e| Error::msg(format!("send frame: {e}")))
+        .map_err(|e| Error::msg(format!("send frame: {e}")))?;
+    bytes_framed().add(4 + bytes.len() as u64);
+    Ok(())
 }
 
 /// Incremental frame reassembly over a byte stream that arrives in
@@ -422,6 +434,14 @@ pub struct FrameBuf {
 impl FrameBuf {
     pub fn feed(&mut self, bytes: &[u8]) {
         self.buf.extend_from_slice(bytes);
+    }
+
+    /// Raw buffered bytes, unparsed. The server peeks this to tell a
+    /// framed peer from a stray HTTP client: "GET " read as a big-endian
+    /// frame length is ~1.2 GB — past [`MAX_FRAME`] — so an HTTP request
+    /// surfaces as a poisoned stream unless sniffed first.
+    pub fn raw(&self) -> &[u8] {
+        &self.buf
     }
 
     /// The next complete frame, parsed, or `None` if more bytes are
@@ -491,9 +511,17 @@ impl Conn {
         let mut framed = Vec::with_capacity(4 + bytes.len());
         framed.extend_from_slice(&(bytes.len() as u32).to_be_bytes());
         framed.extend_from_slice(bytes);
+        self.send_raw(&framed)?;
+        bytes_framed().add(framed.len() as u64);
+        Ok(())
+    }
+
+    /// Write raw bytes, spinning on `WouldBlock` like [`Conn::send`].
+    /// Used for the non-frame HTTP response on the `/metrics` path.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
         let mut off = 0;
-        while off < framed.len() {
-            match self.stream.write(&framed[off..]) {
+        while off < bytes.len() {
+            match self.stream.write(&bytes[off..]) {
                 Ok(0) => return Err(Error::msg(format!("{}: connection closed", self.peer))),
                 Ok(n) => off += n,
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -506,6 +534,26 @@ impl Conn {
         Ok(())
     }
 
+    /// Does the buffered prefix look like an HTTP request rather than a
+    /// frame? Checked by the server before treating a poisoned stream as
+    /// hostile, so `curl http://coordinator/metrics` works on the same
+    /// listener the framed protocol uses.
+    pub fn looks_like_http(&self) -> bool {
+        let raw = self.frames.raw();
+        [b"GET " as &[u8], b"HEAD", b"POST"].iter().any(|m| raw.starts_with(m))
+    }
+
+    /// The HTTP request path, once the request line is fully buffered
+    /// (`None` until then). Only meaningful after `looks_like_http`.
+    pub fn http_request_path(&self) -> Option<String> {
+        let raw = self.frames.raw();
+        let line_end = raw.iter().position(|&b| b == b'\n')?;
+        let line = String::from_utf8_lossy(&raw[..line_end]);
+        let mut parts = line.split_whitespace();
+        let _method = parts.next()?;
+        parts.next().map(|p| p.to_string())
+    }
+
     /// Drain every byte the kernel has buffered and return the complete
     /// messages in arrival order. Never blocks. A closed peer sets
     /// [`Conn::is_eof`] rather than erroring — whether that is a fault
@@ -516,7 +564,10 @@ impl Conn {
         while !self.eof {
             match self.stream.read(&mut tmp) {
                 Ok(0) => self.eof = true,
-                Ok(n) => self.frames.feed(&tmp[..n]),
+                Ok(n) => {
+                    bytes_framed().add(n as u64);
+                    self.frames.feed(&tmp[..n]);
+                }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
                 Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
                 Err(e) => {
@@ -692,5 +743,31 @@ mod tests {
     fn unknown_message_is_a_clear_error() {
         let err = Msg::parse("{\"msg\": \"warp-core\"}").unwrap_err().to_string();
         assert!(err.contains("warp-core"), "{err}");
+    }
+
+    #[test]
+    fn http_prefix_is_sniffed_instead_of_framed() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        let mut conn = Conn::new(server).unwrap();
+        client.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        client.flush().unwrap();
+        // "GET " as a big-endian frame length (~1.2 GB) exceeds
+        // MAX_FRAME, so the framed path must error — and the sniffer
+        // must still see the intact HTTP prefix afterwards.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            match conn.poll_msgs() {
+                Err(_) => break,
+                Ok(msgs) => assert!(msgs.is_empty(), "HTTP bytes parsed as frames?"),
+            }
+            assert!(Instant::now() < deadline, "HTTP bytes never arrived");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(conn.looks_like_http());
+        assert_eq!(conn.http_request_path().as_deref(), Some("/metrics"));
+        conn.send_raw(b"HTTP/1.0 200 OK\r\n\r\nok").unwrap();
     }
 }

@@ -382,6 +382,18 @@ impl WorkQueue {
         self.done == [(0, self.trials)]
     }
 
+    /// Trials with a completed cover — the dispatcher's progress gauge
+    /// (`queue_done_trials` in the metrics registry).
+    pub fn done_trials(&self) -> usize {
+        self.done.iter().map(|&(a, b)| b - a).sum()
+    }
+
+    /// Retry attempts charged to range `[lo, hi)` so far (observability:
+    /// the `lease-retried` event reports the attempt number).
+    pub fn retry_count(&self, lo: usize, hi: usize) -> usize {
+        self.retries.get(&(lo, hi)).copied().unwrap_or(0)
+    }
+
     fn range_done(&self, lo: usize, hi: usize) -> bool {
         lo == hi || self.done.iter().any(|&(a, b)| a <= lo && hi <= b)
     }

@@ -25,10 +25,11 @@
 
 use super::chaos::{ChaosProfile, ChaosTransport};
 use super::protocol::{Conn, JobSpec, Msg};
-use super::tcp::{RegisteredWorker, TcpTransport, REGISTER_TIMEOUT};
+use super::tcp::{RegisteredWorker, TcpTransport, DEAD_AFTER, REGISTER_TIMEOUT};
 use super::{DispatchConfig, Dispatcher, HealthConfig, WorkerTransport};
 use crate::error::{Error, Result};
-use crate::metrics::{LatencyHistogram, Stopwatch, Table};
+use crate::metrics::{self, LatencyHistogram, Stopwatch, Table};
+use crate::obs::{Event, Obs};
 use std::collections::VecDeque;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -48,6 +49,15 @@ pub struct ServeConfig {
     /// checkpoint each job to `<dir>/job_<id>.journal`; a re-submitted
     /// job with the same id slot resumes from it
     pub journal_dir: Option<PathBuf>,
+    /// observability handle shared with every dispatched job: job
+    /// lifecycle, lease scheduling, chaos faults and peer reaps all
+    /// stream through its sinks, and the event→metrics bridge feeds the
+    /// `/metrics` endpoint (scrapeable on the serve port with plain
+    /// `GET /metrics`)
+    pub obs: Obs,
+    /// half-open-peer reap window handed to each job's [`TcpTransport`]
+    /// (`--peer-silence-timeout-ms`; default [`DEAD_AFTER`])
+    pub peer_silence: Duration,
 }
 
 impl ServeConfig {
@@ -58,6 +68,8 @@ impl ServeConfig {
             poll: Duration::from_millis(10),
             once: false,
             journal_dir: None,
+            obs: Obs::default(),
+            peer_silence: DEAD_AFTER,
         }
     }
 }
@@ -157,7 +169,21 @@ impl Server<'_> {
             let msgs = match conn.poll_msgs() {
                 Ok(m) => m,
                 Err(e) => {
-                    eprintln!("gcod serve: {}: handshake failed: {e}", conn.peer());
+                    // "GET " read as a frame length exceeds MAX_FRAME, so
+                    // a plain HTTP request lands here with its bytes
+                    // still buffered — answer it instead of dropping it.
+                    // The request line can straddle a segment boundary:
+                    // keep the conn in the handshake set until the line
+                    // is complete or its deadline lapses.
+                    if conn.looks_like_http() {
+                        if conn.http_request_path().is_some() {
+                            self.respond_http(&mut conn);
+                        } else if Instant::now() < deadline {
+                            still.push((conn, deadline));
+                        }
+                    } else {
+                        eprintln!("gcod serve: {}: handshake failed: {e}", conn.peer());
+                    }
                     continue;
                 }
             };
@@ -184,6 +210,16 @@ impl Server<'_> {
                         spec.config.sweep.as_str(),
                         spec.config.trials
                     );
+                    self.cfg.obs.emit(Event::ServeJob {
+                        job: id,
+                        state: "queued".to_string(),
+                        detail: format!(
+                            "sweep '{}' ({} trials) from {}",
+                            spec.config.sweep.as_str(),
+                            spec.config.trials,
+                            conn.peer()
+                        ),
+                    });
                     self.queue.push_back(PendingJob { id, spec, client: conn });
                 }
                 Some(Msg::Status) => {
@@ -213,6 +249,47 @@ impl Server<'_> {
             }
         }
         self.handshakes = still;
+    }
+
+    /// Answer a plain-HTTP peer on the frame port: `GET /metrics`
+    /// serves the Prometheus-style registry (refreshing the server
+    /// gauges first), anything else 404s. One response, then the
+    /// connection drops (HTTP/1.0 close semantics).
+    fn respond_http(&mut self, conn: &mut Conn) {
+        let path = conn.http_request_path().unwrap_or_default();
+        let (status, body) = if path == "/metrics" {
+            self.refresh_gauges();
+            ("200 OK", metrics::registry().render_prometheus())
+        } else {
+            ("404 Not Found", format!("no such endpoint '{path}' (try /metrics)\n"))
+        };
+        let resp = format!(
+            "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        if let Err(e) = conn.send_raw(resp.as_bytes()) {
+            eprintln!("gcod serve: {}: http reply failed: {e}", conn.peer());
+        }
+    }
+
+    /// Registry gauges that describe current server state are refreshed
+    /// at scrape time rather than maintained incrementally.
+    fn refresh_gauges(&self) {
+        // touch the families CI and dashboards assert zero on, so they
+        // exist from the very first scrape (creation registers at 0;
+        // values already bridged by events are left alone)
+        let _ = metrics::counter("leases_reaped_total");
+        let _ = metrics::gauge("workers_quarantined");
+        metrics::gauge("serve_uptime_seconds").set(self.up.elapsed_secs());
+        metrics::gauge("workers_registered").set(self.workers.len() as f64);
+        metrics::gauge("serve_jobs_queued").set(self.queue.len() as f64);
+        metrics::gauge("serve_jobs_done").set(self.jobs_done as f64);
+        metrics::gauge("serve_jobs_failed").set(self.jobs_failed as f64);
+        if self.job_latency.stats().count() > 0 {
+            metrics::gauge("serve_job_latency_p50_seconds").set(self.job_latency.quantile(0.5));
+            metrics::gauge("serve_job_latency_p95_seconds").set(self.job_latency.quantile(0.95));
+        }
     }
 
     /// Keep idle registry connections honest: consume heartbeats, drop
@@ -266,6 +343,11 @@ impl Server<'_> {
             lent.len(),
             class
         );
+        self.cfg.obs.emit(Event::ServeJob {
+            job: job.id,
+            state: "started".to_string(),
+            detail: format!("{} worker(s), class '{class}'", lent.len()),
+        });
         let watch = Stopwatch::new();
         let outcome = self.execute(job.id, &job.spec, lent);
         self.job_latency.record(watch.elapsed_secs());
@@ -273,14 +355,25 @@ impl Server<'_> {
             Ok((merged, summary)) => {
                 self.jobs_done += 1;
                 println!("gcod serve: job {} done ({summary})", job.id);
+                self.cfg.obs.emit(Event::ServeJob {
+                    job: job.id,
+                    state: "done".to_string(),
+                    detail: summary.clone(),
+                });
                 Msg::JobDone { job: job.id, summary, manifest: merged }
             }
             Err(e) => {
                 self.jobs_failed += 1;
                 println!("gcod serve: job {} failed: {e}", job.id);
+                self.cfg.obs.emit(Event::ServeJob {
+                    job: job.id,
+                    state: "failed".to_string(),
+                    detail: e.to_string(),
+                });
                 Msg::JobError { job: job.id, error: e.to_string() }
             }
         };
+        self.cfg.obs.flush();
         if let Err(e) = job.client.send(&reply) {
             eprintln!(
                 "gcod serve: job {}: client {} unreachable for the result: {e}",
@@ -332,9 +425,14 @@ impl Server<'_> {
             },
             journal,
             resume,
+            obs: self.cfg.obs.clone(),
+            peer_silence_timeout: self.cfg.peer_silence,
         };
         let profile = ChaosProfile::parse(&spec.chaos_profile)?;
-        let mut transport = ChaosTransport::new(TcpTransport::new(lent), spec.chaos_seed, profile);
+        let mut tcp = TcpTransport::new(lent).with_peer_silence(self.cfg.peer_silence);
+        tcp.set_obs(self.cfg.obs.clone());
+        let mut transport = ChaosTransport::new(tcp, spec.chaos_seed, profile);
+        transport.set_obs(self.cfg.obs.clone());
         if let Some(w) = spec.kill_worker {
             if w >= transport.n_workers() {
                 transport.inner().reclaim().into_iter().for_each(|w| self.workers.push(w));
@@ -347,8 +445,13 @@ impl Server<'_> {
         }
         let result = Dispatcher::new(dcfg).run(&spec.config, &mut transport);
         let _ = std::fs::remove_dir_all(&out_dir);
-        for line in &transport.plan.log {
-            println!("gcod serve: job {id} [chaos] {line}");
+        // with observability enabled the fault decisions streamed out
+        // live as chaos-fault events; the println fallback keeps fault
+        // drills legible for a bare default config
+        if !self.cfg.obs.enabled() {
+            for line in &transport.plan.log {
+                println!("gcod serve: job {id} [chaos] {line}");
+            }
         }
         let survivors = transport.inner().reclaim();
         println!(

@@ -27,6 +27,7 @@ use super::protocol::{Conn, LeaseSpec, Msg};
 use super::queue::WorkerId;
 use super::transport::{read_tail, shard_args, WorkerJob, WorkerPoll, WorkerTransport, DELAY_ENV};
 use crate::error::{Error, Result};
+use crate::obs::{Event, Obs};
 use crate::sweep::shard::ShardResult;
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
@@ -37,10 +38,13 @@ use std::time::{Duration, Instant};
 /// Worker → coordinator liveness cadence.
 pub const HEARTBEAT_INTERVAL: Duration = Duration::from_millis(500);
 
-/// A busy worker silent this long is presumed dead even if the kernel
-/// still thinks the connection is up (half-open TCP). Generous relative
-/// to [`HEARTBEAT_INTERVAL`]: the lease deadline, not this timer, is
-/// the scheduling backstop.
+/// Default half-open-peer reap window: a busy worker silent this long
+/// is presumed dead even if the kernel still thinks the connection is
+/// up (half-open TCP). Generous relative to [`HEARTBEAT_INTERVAL`]: the
+/// lease deadline, not this timer, is the scheduling backstop.
+/// Overridable per run via
+/// [`DispatchConfig::peer_silence_timeout`](super::DispatchConfig) /
+/// `--peer-silence-timeout-ms`.
 pub const DEAD_AFTER: Duration = Duration::from_secs(10);
 
 /// How long a freshly accepted connection gets to say `register`.
@@ -101,6 +105,9 @@ struct TcpSlot {
 /// [`WorkerTransport`] over registered TCP worker connections.
 pub struct TcpTransport {
     slots: Vec<TcpSlot>,
+    /// half-open-peer reap window (default [`DEAD_AFTER`])
+    peer_silence: Duration,
+    obs: Obs,
 }
 
 impl TcpTransport {
@@ -117,7 +124,24 @@ impl TcpTransport {
                 dead: false,
             })
             .collect();
-        Self { slots }
+        Self { slots, peer_silence: DEAD_AFTER, obs: Obs::default() }
+    }
+
+    /// Override the half-open-peer reap window (`--peer-silence-timeout-ms`).
+    pub fn with_peer_silence(mut self, window: Duration) -> Self {
+        self.peer_silence = window;
+        self
+    }
+
+    /// The active half-open-peer reap window.
+    pub fn peer_silence(&self) -> Duration {
+        self.peer_silence
+    }
+
+    /// Attach an observability handle: peer reaps emit
+    /// [`Event::PeerReaped`] through it.
+    pub fn set_obs(&mut self, obs: Obs) {
+        self.obs = obs;
     }
 
     /// Accept and register exactly `n` workers from `listener`, failing
@@ -231,13 +255,14 @@ impl TcpTransport {
                 slot,
                 format!("worker {w} ({peer}): disconnected mid-lease"),
             );
-        } else if slot.expect.is_some() && slot.last_seen.elapsed() > DEAD_AFTER {
+        } else if slot.expect.is_some() && slot.last_seen.elapsed() > self.peer_silence {
+            let window = self.peer_silence;
             slot.dead = true;
+            self.obs
+                .emit(Event::PeerReaped { worker: w, silence_ms: window.as_millis() as u64 });
             Self::fail_if_expecting(
                 slot,
-                format!(
-                    "worker {w} ({peer}): no heartbeat for {DEAD_AFTER:?} — presumed dead"
-                ),
+                format!("worker {w} ({peer}): no heartbeat for {window:?} — presumed dead"),
             );
         }
     }
@@ -553,5 +578,80 @@ fn reap_lease(mut lease: RunningLease) -> LeaseTick {
             let _ = lease.child.wait();
             LeaseTick::Finished(lease.id, Err(Error::msg(format!("wait failed: {e}"))))
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::shard::{SweepConfig, SweepKind};
+    use std::collections::BTreeMap;
+
+    fn tiny_cfg() -> SweepConfig {
+        SweepConfig {
+            sweep: SweepKind::DecodeError,
+            scheme: "graph-rr:16,3".into(),
+            decoder: "optimal".into(),
+            p: 0.2,
+            seed: 11,
+            trials: 8,
+            chunk: 8,
+            params: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn peer_silence_defaults_to_dead_after_and_overrides() {
+        let t = TcpTransport::new(Vec::new());
+        assert_eq!(t.peer_silence(), DEAD_AFTER);
+        let t = t.with_peer_silence(Duration::from_millis(1234));
+        assert_eq!(t.peer_silence(), Duration::from_millis(1234));
+    }
+
+    #[test]
+    fn silent_peer_is_reaped_after_the_configured_window() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        // the "worker": registers, then goes silent (no heartbeats) —
+        // kept in scope so the socket stays open (half-open simulation)
+        let mut client = TcpStream::connect(addr).unwrap();
+        super::super::protocol::write_frame(
+            &mut client,
+            &Msg::Register { class: String::new(), threads: 1 },
+        )
+        .unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let rw = accept_registration(stream, Duration::from_secs(5)).unwrap();
+        let mut t = TcpTransport::new(vec![rw]).with_peer_silence(Duration::from_millis(60));
+        let obs = Obs::new();
+        t.set_obs(obs.clone());
+        let job = WorkerJob {
+            config: tiny_cfg(),
+            lo: 0,
+            hi: 8,
+            threads: 1,
+            stats_only: false,
+            out_path: std::env::temp_dir().join("gcod_tcp_silence_test.json"),
+            delay_ms: 0,
+        };
+        t.start(0, &job).unwrap();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let failure = loop {
+            match t.poll(0) {
+                WorkerPoll::Failed(msg) => break msg,
+                _ => {
+                    assert!(Instant::now() < deadline, "silent peer was never reaped");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        };
+        assert!(failure.contains("no heartbeat"), "unexpected failure: {failure}");
+        let reaps: Vec<_> = obs
+            .flight_log()
+            .into_iter()
+            .filter(|(_, e)| matches!(e, Event::PeerReaped { worker: 0, .. }))
+            .collect();
+        assert_eq!(reaps.len(), 1, "exactly one structured peer-reap event");
+        drop(client);
     }
 }

@@ -28,6 +28,9 @@
 //! * [`gd`] — coded gradient descent engines & convergence bounds
 //! * [`coordinator`] — distributed leader/worker runtime (Algorithm 2)
 //! * [`runtime`] — PJRT artifact loading & execution (feature `pjrt`)
+//! * [`obs`] — structured events, sinks (flight recorder / JSONL trace /
+//!   stderr log) and the event→metrics bridge behind `gcod serve`'s
+//!   `/metrics` endpoint and `gcod report`; bit-neutral by contract
 //! * substrates: [`prng`], [`linalg`], [`sparse`], [`config`], [`cli`],
 //!   [`metrics`], [`bench_util`], [`testing`], [`data`], [`error`]
 //!
@@ -91,6 +94,7 @@ pub mod gd;
 pub mod graphs;
 pub mod linalg;
 pub mod metrics;
+pub mod obs;
 pub mod prng;
 #[cfg(pjrt_runtime)]
 pub mod runtime;

@@ -14,6 +14,7 @@ use gcod::dispatch::{
 use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
 use gcod::metrics::{sci, Table};
+use gcod::obs::{self, LogFormat, Obs};
 use gcod::prng::Rng;
 use gcod::straggler::BernoulliStragglers;
 use gcod::sweep::{self, shard};
@@ -207,6 +208,16 @@ fn app() -> App {
                     flag("hang-ms", "chaos preset: stall duration (ms)", Some("120000")),
                     flag("sim-stragglers", "simulate Bernoulli(p) straggling workers", None),
                     flag("sim-delay-ms", "simulated straggler delay (ms)", Some("200")),
+                    flag(
+                        "log-format",
+                        "stream structured scheduling events to stderr: text|json",
+                        None,
+                    ),
+                    flag(
+                        "trace-out",
+                        "write a JSONL event trace here (input for `gcod report`)",
+                        None,
+                    ),
                 ],
             },
             CommandSpec {
@@ -228,6 +239,21 @@ fn app() -> App {
                     flag(
                         "journal-dir",
                         "checkpoint each job to <dir>/job_<id>.journal (resume on resubmit)",
+                        None,
+                    ),
+                    flag(
+                        "peer-silence-timeout-ms",
+                        "presume a registered worker dead after this much mid-job silence",
+                        Some("10000"),
+                    ),
+                    flag(
+                        "log-format",
+                        "stream structured scheduling events to stderr: text|json",
+                        None,
+                    ),
+                    flag(
+                        "trace-out",
+                        "write a JSONL event trace here (input for `gcod report`)",
                         None,
                     ),
                 ],
@@ -331,6 +357,15 @@ fn app() -> App {
                     flag("out", "merged result path", Some("sweep_merged.json")),
                 ],
             },
+            CommandSpec {
+                name: "report",
+                help: "render a per-job lease timeline + worker health from a JSONL trace",
+                flags: vec![flag(
+                    "trace",
+                    "JSONL event trace path (written by --trace-out)",
+                    Some("trace.jsonl"),
+                )],
+            },
         ],
     }
 }
@@ -357,6 +392,7 @@ fn main() {
         "submit" => cmd_submit(&inv),
         "status" => cmd_status(&inv),
         "sweep-merge" => cmd_sweep_merge(&inv),
+        "report" => cmd_report(&inv),
         _ => unreachable!(),
     };
     if let Err(e) = result {
@@ -615,6 +651,7 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
             "bad --audit-fraction: {audit_fraction} is not in [0, 1]"
         )));
     }
+    let obs = build_obs(inv)?;
     let mut dcfg = DispatchConfig {
         grain: inv.usize_or("grain", 0),
         adaptive_grain: inv.switch("adaptive-grain"),
@@ -642,6 +679,8 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
         },
         journal: None,
         resume: false,
+        obs: obs.clone(),
+        peer_silence_timeout: gcod::dispatch::tcp::DEAD_AFTER,
     };
     // --resume PATH replays (and keeps checkpointing to) an existing
     // journal; --journal PATH checkpoints a fresh launch
@@ -682,6 +721,7 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
     let exe = std::env::current_exe()?;
     let mut transport =
         ChaosTransport::new(LocalProcess::new(exe, workers), chaos_seed, chaos_profile);
+    transport.set_obs(obs.clone());
     if let Some(w) = worker_id("hang-worker")? {
         transport.preset_delay(w, inv.u64_or("hang-ms", 120_000));
     }
@@ -713,19 +753,24 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
             );
         }
     }
-    if transport.is_active() {
+    if transport.is_active() && !obs.enabled() {
         // the replayable fault sequence: re-running with the same
-        // --chaos-seed and --chaos-profile reproduces it exactly
+        // --chaos-seed and --chaos-profile reproduces it exactly (with
+        // observability on, the same lines stream live as chaos-fault
+        // events instead)
         for line in &transport.plan.log {
             println!("  [chaos] {line}");
         }
     }
+    obs.flush();
     let outcome = result?;
     let out = inv.str_or("out", "sweep_launched.json");
     outcome.merged.write(Path::new(&out))?;
     println!("{}", outcome.report.summary());
-    for line in &outcome.report.failure_log {
-        println!("  [fault] {line}");
+    if !obs.enabled() {
+        for line in &outcome.report.failure_log {
+            println!("  [fault] {line}");
+        }
     }
     println!(
         "result: mean={} std={} min={} max={}",
@@ -750,7 +795,35 @@ fn cmd_serve(inv: &gcod::cli::Invocation) -> Result<()> {
             cfg.journal_dir = Some(d.into());
         }
     }
+    cfg.peer_silence = Duration::from_millis(inv.u64_or("peer-silence-timeout-ms", 10_000));
+    cfg.obs = build_obs(inv)?;
     gcod::dispatch::serve(&cfg)
+}
+
+/// Shared `--log-format`/`--trace-out` wiring: both flags absent means
+/// observability stays a no-op handle (zero event allocation on the
+/// dispatch path); either one turns the flight recorder on and attaches
+/// the requested sinks.
+fn build_obs(inv: &gcod::cli::Invocation) -> Result<Obs> {
+    let log_format = inv.get("log-format").filter(|s| !s.is_empty());
+    let trace_out = inv.get("trace-out").filter(|s| !s.is_empty());
+    if log_format.is_none() && trace_out.is_none() {
+        return Ok(Obs::default());
+    }
+    let mut obs = Obs::new();
+    if let Some(f) = log_format {
+        obs = obs.with_stderr(LogFormat::parse(f)?);
+    }
+    if let Some(p) = trace_out {
+        obs = obs.with_trace_file(Path::new(p))?;
+    }
+    Ok(obs)
+}
+
+fn cmd_report(inv: &gcod::cli::Invocation) -> Result<()> {
+    let trace = inv.str_or("trace", "trace.jsonl");
+    print!("{}", obs::report::render(Path::new(&trace))?);
+    Ok(())
 }
 
 fn cmd_worker(inv: &gcod::cli::Invocation) -> Result<()> {

@@ -1,6 +1,11 @@
 //! Metrics substrate: timers, running statistics, histograms, CSV sinks
-//! and paper-style table printing shared by the coordinator and benches.
+//! and paper-style table printing shared by the coordinator and benches —
+//! plus the process-global counters/gauges registry behind the
+//! `gcod serve` `/metrics` endpoint (see [`registry`]).
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 /// Wall-clock stopwatch.
@@ -308,6 +313,144 @@ impl Table {
     }
 }
 
+// ---------------------------------------------------------------------
+// Counters / gauges registry (Prometheus text exposition)
+// ---------------------------------------------------------------------
+
+/// Monotonic counter handle. Cloning shares the underlying atomic, so a
+/// hot path can look the counter up once (paying the one-time map
+/// insert) and bump a plain `Arc<AtomicU64>` thereafter — no allocation,
+/// no lock.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Float-valued gauge handle (f64 bits in an `AtomicU64`). `add` is a
+/// CAS loop so concurrent phase timers accumulate without a lock.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn add(&self, dv: f64) {
+        let mut cur = self.0.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + dv).to_bits();
+            match self.0.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Process-global registry of named counters and gauges.
+///
+/// Names follow Prometheus conventions and may carry inline labels
+/// (`worker_trials_total{worker="3"}`); the exposition groups label
+/// variants under one `# TYPE` line per family. Counters render as
+/// integers with type `counter`, gauges as floats with type `gauge`.
+/// Metrics never feed back into sweep values or manifests — the
+/// registry is observability-only, so the bit-exactness contract is
+/// unaffected by anything recorded here.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+}
+
+impl MetricsRegistry {
+    /// Counter handle for `name`, creating it at zero on first touch.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.counters.lock().unwrap();
+        Counter(Arc::clone(m.entry(name.to_string()).or_default()))
+    }
+
+    /// Gauge handle for `name`, creating it at 0.0 on first touch
+    /// (0u64 and 0.0f64 share a bit pattern).
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.gauges.lock().unwrap();
+        Gauge(Arc::clone(m.entry(name.to_string()).or_default()))
+    }
+
+    /// Zero every registered metric (tests; the handles stay valid).
+    pub fn reset(&self) {
+        for v in self.counters.lock().unwrap().values() {
+            v.store(0, Ordering::Relaxed);
+        }
+        for v in self.gauges.lock().unwrap().values() {
+            v.store(0, Ordering::Relaxed);
+        }
+    }
+
+    /// Prometheus text exposition (version 0.0.4 format).
+    pub fn render_prometheus(&self) -> String {
+        fn family(name: &str) -> &str {
+            name.split('{').next().unwrap_or(name)
+        }
+        let mut out = String::new();
+        let mut last_family = String::new();
+        let counters = self.counters.lock().unwrap();
+        for (name, v) in counters.iter() {
+            let fam = family(name);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {fam} counter\n"));
+                last_family = fam.to_string();
+            }
+            out.push_str(&format!("{name} {}\n", v.load(Ordering::Relaxed)));
+        }
+        drop(counters);
+        last_family.clear();
+        let gauges = self.gauges.lock().unwrap();
+        for (name, v) in gauges.iter() {
+            let fam = family(name);
+            if fam != last_family {
+                out.push_str(&format!("# TYPE {fam} gauge\n"));
+                last_family = fam.to_string();
+            }
+            out.push_str(&format!("{name} {}\n", f64::from_bits(v.load(Ordering::Relaxed))));
+        }
+        out
+    }
+}
+
+/// The process-global registry (one per process; workers have their
+/// own — the coordinator's `/metrics` reflects coordinator-side state).
+pub fn registry() -> &'static MetricsRegistry {
+    static REG: OnceLock<MetricsRegistry> = OnceLock::new();
+    REG.get_or_init(MetricsRegistry::default)
+}
+
+/// Shorthand for `registry().counter(name)`.
+pub fn counter(name: &str) -> Counter {
+    registry().counter(name)
+}
+
+/// Shorthand for `registry().gauge(name)`.
+pub fn gauge(name: &str) -> Gauge {
+    registry().gauge(name)
+}
+
 /// Format a float like the paper's tables (e.g. "3.4e-30", "2.5e-3").
 pub fn sci(x: f64) -> String {
     if x == 0.0 {
@@ -408,6 +551,42 @@ mod tests {
         assert_eq!(sci(0.0), "0");
         assert!(sci(3.4e-30).contains("e-30"));
         assert_eq!(sci(1.5), "1.5000");
+    }
+
+    #[test]
+    fn registry_counters_and_gauges_round_trip() {
+        let reg = MetricsRegistry::default();
+        let c = reg.counter("leases_reaped_total");
+        c.inc();
+        c.add(2);
+        assert_eq!(c.get(), 3);
+        // a second lookup shares the same atomic
+        reg.counter("leases_reaped_total").inc();
+        assert_eq!(c.get(), 4);
+        let g = reg.gauge("workers_quarantined");
+        assert_eq!(g.get(), 0.0);
+        g.add(1.5);
+        g.add(0.5);
+        assert_eq!(g.get(), 2.0);
+        g.set(0.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE leases_reaped_total counter"));
+        assert!(text.contains("leases_reaped_total 4"));
+        assert!(text.contains("# TYPE workers_quarantined gauge"));
+        assert!(text.contains("workers_quarantined 0"));
+    }
+
+    #[test]
+    fn registry_groups_label_variants_under_one_type_line() {
+        let reg = MetricsRegistry::default();
+        reg.counter("worker_trials_total{worker=\"0\"}").add(10);
+        reg.counter("worker_trials_total{worker=\"1\"}").add(20);
+        let text = reg.render_prometheus();
+        assert_eq!(text.matches("# TYPE worker_trials_total counter").count(), 1);
+        assert!(text.contains("worker_trials_total{worker=\"0\"} 10"));
+        assert!(text.contains("worker_trials_total{worker=\"1\"} 20"));
+        reg.reset();
+        assert!(reg.render_prometheus().contains("worker_trials_total{worker=\"0\"} 0"));
     }
 
     #[test]

@@ -1,0 +1,632 @@
+//! Structured observability for the dispatch stack: typed events, sinks
+//! (ring-buffer flight recorder, JSONL trace file, stderr text/JSON log)
+//! and the event→metrics bridge feeding the process-global
+//! [`crate::metrics::registry`] behind `gcod serve`'s `/metrics`.
+//!
+//! Design contract — **bit-neutrality**: nothing in this module may feed
+//! back into sweep values, shard manifests or merge output. Events carry
+//! wall-clock timestamps and are therefore nondeterministic by nature;
+//! they flow only into sinks and counters, never into results. The
+//! `obs_neutrality` integration suite enforces this by diffing manifests
+//! produced with tracing on against tracing off, byte for byte.
+//!
+//! The [`Obs`] handle is the unit of plumbing: `Obs::default()` is
+//! disabled (every emit is a no-op, no allocation), `Obs::new()` is
+//! enabled. Cloning shares the sink set, so one handle built in `main`
+//! threads through `DispatchConfig`, the transports and the server.
+
+pub mod report;
+
+use std::fmt;
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::bench_util::json_escape;
+use crate::error::{Error, Result};
+use crate::metrics;
+
+/// Default flight-recorder capacity (events). Bounded at construction:
+/// once full the ring overwrites its oldest entry, so a long dispatch
+/// holds memory proportional to this constant, not to its event count.
+pub const DEFAULT_RECORDER_CAP: usize = 1024;
+
+/// Everything the dispatch stack reports about *how* a run unfolded.
+/// One variant per observable transition; fields are the minimum needed
+/// to reconstruct a timeline (`gcod report`) from a trace file.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Dispatcher entered its main loop.
+    DispatchStarted { trials: usize, workers: usize, grain: usize },
+    /// A lease (or speculative duplicate) was handed to a worker.
+    LeaseIssued { lease: u64, worker: usize, lo: usize, hi: usize, speculative: bool },
+    /// A worker returned a validated manifest for its lease.
+    LeaseCompleted { lease: u64, worker: usize, lo: usize, hi: usize, secs: f64, duplicate: bool },
+    /// The worker reported failure (crash, validation reject, chaos).
+    LeaseFailed { lease: u64, worker: usize, lo: usize, hi: usize, error: String },
+    /// The dispatcher reclaimed the lease without a result (deadline
+    /// expiry, or the job died with the lease in flight).
+    LeaseReaped { lease: u64, worker: usize, lo: usize, hi: usize, secs: f64, cause: String },
+    /// A reclaimed range went back on the queue for another attempt.
+    LeaseRetried { lo: usize, hi: usize, attempt: usize },
+    /// A losing speculative duplicate was cancelled.
+    LeaseCancelled { lease: u64, worker: usize },
+    /// A banked range was re-executed on a second worker for audit.
+    AuditIssued { auditor: usize, lo: usize, hi: usize, original: usize },
+    /// Audit re-execution matched the banked bytes.
+    AuditPassed { auditor: usize, lo: usize, hi: usize },
+    /// Audit mismatch (with the tiebreak verdict once known).
+    AuditFailed { lo: usize, hi: usize, detail: String },
+    /// An audit was abandoned (no eligible worker, attempts exhausted).
+    AuditDropped { lo: usize, hi: usize, reason: String },
+    /// Health layer pulled a worker from rotation.
+    WorkerQuarantined { worker: usize, reason: String, detail: String },
+    /// A condemned worker's banked contributions were re-queued.
+    RangeInvalidated { worker: usize, lo: usize, hi: usize },
+    /// The seeded chaos layer injected a fault.
+    ChaosFault { detail: String },
+    /// TCP transport declared a silent peer dead (satellite: the reap
+    /// window is `DispatchConfig::peer_silence_timeout`).
+    PeerReaped { worker: usize, silence_ms: u64 },
+    /// Per-worker scorecard, emitted with the final report and on the
+    /// all-quarantined post-mortem path.
+    WorkerPostMortem {
+        worker: usize,
+        state: String,
+        completions: u64,
+        failures: u64,
+        timeouts: u64,
+        audit_passes: u64,
+        audit_failures: u64,
+        mean_lease_secs: f64,
+        last_error: String,
+    },
+    /// Dispatcher finished (successfully or not).
+    DispatchDone { completed: u64, retried: u64, elapsed_secs: f64, ok: bool },
+    /// `gcod serve` job lifecycle (queued / started / done / failed).
+    ServeJob { job: u64, state: String, detail: String },
+    /// Free-form annotation.
+    Note { text: String },
+}
+
+/// A field value for generic rendering.
+pub enum Field<'a> {
+    U(u64),
+    F(f64),
+    B(bool),
+    S(&'a str),
+}
+
+impl Event {
+    /// Stable kebab-case tag, used as the `ev` key in JSONL traces.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::DispatchStarted { .. } => "dispatch-started",
+            Event::LeaseIssued { .. } => "lease-issued",
+            Event::LeaseCompleted { .. } => "lease-completed",
+            Event::LeaseFailed { .. } => "lease-failed",
+            Event::LeaseReaped { .. } => "lease-reaped",
+            Event::LeaseRetried { .. } => "lease-retried",
+            Event::LeaseCancelled { .. } => "lease-cancelled",
+            Event::AuditIssued { .. } => "audit-issued",
+            Event::AuditPassed { .. } => "audit-passed",
+            Event::AuditFailed { .. } => "audit-failed",
+            Event::AuditDropped { .. } => "audit-dropped",
+            Event::WorkerQuarantined { .. } => "worker-quarantined",
+            Event::RangeInvalidated { .. } => "range-invalidated",
+            Event::ChaosFault { .. } => "chaos-fault",
+            Event::PeerReaped { .. } => "peer-reaped",
+            Event::WorkerPostMortem { .. } => "worker-post-mortem",
+            Event::DispatchDone { .. } => "dispatch-done",
+            Event::ServeJob { .. } => "serve-job",
+            Event::Note { .. } => "note",
+        }
+    }
+
+    /// Field list in declaration order, for uniform JSON/text rendering.
+    pub fn fields(&self) -> Vec<(&'static str, Field<'_>)> {
+        use Field::*;
+        match self {
+            Event::DispatchStarted { trials, workers, grain } => vec![
+                ("trials", U(*trials as u64)),
+                ("workers", U(*workers as u64)),
+                ("grain", U(*grain as u64)),
+            ],
+            Event::LeaseIssued { lease, worker, lo, hi, speculative } => vec![
+                ("lease", U(*lease)),
+                ("worker", U(*worker as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+                ("speculative", B(*speculative)),
+            ],
+            Event::LeaseCompleted { lease, worker, lo, hi, secs, duplicate } => vec![
+                ("lease", U(*lease)),
+                ("worker", U(*worker as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+                ("secs", F(*secs)),
+                ("duplicate", B(*duplicate)),
+            ],
+            Event::LeaseFailed { lease, worker, lo, hi, error } => vec![
+                ("lease", U(*lease)),
+                ("worker", U(*worker as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+                ("error", S(error)),
+            ],
+            Event::LeaseReaped { lease, worker, lo, hi, secs, cause } => vec![
+                ("lease", U(*lease)),
+                ("worker", U(*worker as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+                ("secs", F(*secs)),
+                ("cause", S(cause)),
+            ],
+            Event::LeaseRetried { lo, hi, attempt } => {
+                vec![("lo", U(*lo as u64)), ("hi", U(*hi as u64)), ("attempt", U(*attempt as u64))]
+            }
+            Event::LeaseCancelled { lease, worker } => {
+                vec![("lease", U(*lease)), ("worker", U(*worker as u64))]
+            }
+            Event::AuditIssued { auditor, lo, hi, original } => vec![
+                ("auditor", U(*auditor as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+                ("original", U(*original as u64)),
+            ],
+            Event::AuditPassed { auditor, lo, hi } => vec![
+                ("auditor", U(*auditor as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+            ],
+            Event::AuditFailed { lo, hi, detail } => {
+                vec![("lo", U(*lo as u64)), ("hi", U(*hi as u64)), ("detail", S(detail))]
+            }
+            Event::AuditDropped { lo, hi, reason } => {
+                vec![("lo", U(*lo as u64)), ("hi", U(*hi as u64)), ("reason", S(reason))]
+            }
+            Event::WorkerQuarantined { worker, reason, detail } => vec![
+                ("worker", U(*worker as u64)),
+                ("reason", S(reason)),
+                ("detail", S(detail)),
+            ],
+            Event::RangeInvalidated { worker, lo, hi } => vec![
+                ("worker", U(*worker as u64)),
+                ("lo", U(*lo as u64)),
+                ("hi", U(*hi as u64)),
+            ],
+            Event::ChaosFault { detail } => vec![("detail", S(detail))],
+            Event::PeerReaped { worker, silence_ms } => {
+                vec![("worker", U(*worker as u64)), ("silence_ms", U(*silence_ms))]
+            }
+            Event::WorkerPostMortem {
+                worker,
+                state,
+                completions,
+                failures,
+                timeouts,
+                audit_passes,
+                audit_failures,
+                mean_lease_secs,
+                last_error,
+            } => vec![
+                ("worker", U(*worker as u64)),
+                ("state", S(state)),
+                ("completions", U(*completions)),
+                ("failures", U(*failures)),
+                ("timeouts", U(*timeouts)),
+                ("audit_passes", U(*audit_passes)),
+                ("audit_failures", U(*audit_failures)),
+                ("mean_lease_secs", F(*mean_lease_secs)),
+                ("last_error", S(last_error)),
+            ],
+            Event::DispatchDone { completed, retried, elapsed_secs, ok } => vec![
+                ("completed", U(*completed)),
+                ("retried", U(*retried)),
+                ("elapsed_secs", F(*elapsed_secs)),
+                ("ok", B(*ok)),
+            ],
+            Event::ServeJob { job, state, detail } => {
+                vec![("job", U(*job)), ("state", S(state)), ("detail", S(detail))]
+            }
+            Event::Note { text } => vec![("text", S(text))],
+        }
+    }
+}
+
+/// One JSONL trace line: `{"t_ms": 12, "ev": "lease-issued", ...}`.
+pub fn render_json(t_ms: u64, ev: &Event) -> String {
+    let mut s = format!("{{\"t_ms\": {t_ms}, \"ev\": \"{}\"", ev.kind());
+    for (k, v) in ev.fields() {
+        match v {
+            Field::U(n) => s.push_str(&format!(", \"{k}\": {n}")),
+            Field::F(x) => s.push_str(&format!(", \"{k}\": {x:?}")),
+            Field::B(b) => s.push_str(&format!(", \"{k}\": {b}")),
+            Field::S(t) => s.push_str(&format!(", \"{k}\": \"{}\"", json_escape(t))),
+        }
+    }
+    s.push('}');
+    s
+}
+
+/// One human log line: `[obs +0.012s] lease-issued lease=3 worker=0 ...`.
+pub fn render_text(t_ms: u64, ev: &Event) -> String {
+    let mut s = format!("[obs +{:.3}s] {}", t_ms as f64 / 1e3, ev.kind());
+    for (k, v) in ev.fields() {
+        match v {
+            Field::U(n) => s.push_str(&format!(" {k}={n}")),
+            Field::F(x) => s.push_str(&format!(" {k}={x:.3}")),
+            Field::B(b) => s.push_str(&format!(" {k}={b}")),
+            Field::S(t) => s.push_str(&format!(" {k}=\"{}\"", json_escape(t))),
+        }
+    }
+    s
+}
+
+/// Where structured events go. Sinks must never fail the run: IO errors
+/// are swallowed (observability is best-effort by contract).
+pub trait EventSink: Send {
+    fn record(&mut self, t_ms: u64, ev: &Event);
+    fn flush(&mut self) {}
+}
+
+/// stderr log format, selected by `--log-format`.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum LogFormat {
+    Text,
+    Json,
+}
+
+impl LogFormat {
+    pub fn parse(s: &str) -> Result<LogFormat> {
+        match s {
+            "text" => Ok(LogFormat::Text),
+            "json" => Ok(LogFormat::Json),
+            other => {
+                Err(Error::msg(format!("--log-format must be 'text' or 'json', got '{other}'")))
+            }
+        }
+    }
+}
+
+/// stderr sink: human text lines or machine JSONL, per [`LogFormat`].
+pub struct StderrSink {
+    pub format: LogFormat,
+}
+
+impl EventSink for StderrSink {
+    fn record(&mut self, t_ms: u64, ev: &Event) {
+        match self.format {
+            LogFormat::Text => eprintln!("{}", render_text(t_ms, ev)),
+            LogFormat::Json => eprintln!("{}", render_json(t_ms, ev)),
+        }
+    }
+}
+
+/// JSONL trace-file sink (`--trace-out`): one event object per line,
+/// flushed on drop so a crash loses at most the buffered tail. Readers
+/// ([`report`]) tolerate a torn final line by construction.
+pub struct JsonlSink {
+    w: BufWriter<File>,
+}
+
+impl JsonlSink {
+    pub fn create(path: &Path) -> Result<JsonlSink> {
+        let f = File::create(path)
+            .map_err(|e| Error::msg(format!("--trace-out {}: {e}", path.display())))?;
+        Ok(JsonlSink { w: BufWriter::new(f) })
+    }
+}
+
+impl EventSink for JsonlSink {
+    fn record(&mut self, t_ms: u64, ev: &Event) {
+        let _ = writeln!(self.w, "{}", render_json(t_ms, ev));
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// Bounded in-memory ring of the most recent events. Capacity is fixed
+/// at construction; once full, each push overwrites the oldest entry —
+/// the recorder's footprint is O(capacity) regardless of run length.
+#[derive(Clone, Debug, Default)]
+pub struct FlightRecorder {
+    cap: usize,
+    buf: Vec<(u64, Event)>,
+    next: usize,
+    total: u64,
+}
+
+impl FlightRecorder {
+    pub fn new(cap: usize) -> FlightRecorder {
+        assert!(cap > 0, "flight recorder capacity must be positive");
+        FlightRecorder { cap, buf: Vec::with_capacity(cap), next: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, t_ms: u64, ev: Event) {
+        self.total += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push((t_ms, ev));
+        } else {
+            self.buf[self.next] = (t_ms, ev);
+            self.next = (self.next + 1) % self.cap;
+        }
+    }
+
+    /// Events ever pushed (including ones the ring has since dropped).
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Retained events, oldest first.
+    pub fn snapshot(&self) -> Vec<(u64, Event)> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() < self.cap {
+            out.extend(self.buf.iter().cloned());
+        } else {
+            out.extend(self.buf[self.next..].iter().cloned());
+            out.extend(self.buf[..self.next].iter().cloned());
+        }
+        out
+    }
+}
+
+struct ObsInner {
+    epoch: Instant,
+    recorder: Mutex<FlightRecorder>,
+    sinks: Mutex<Vec<Box<dyn EventSink>>>,
+}
+
+/// Cheap cloneable observability handle. `Obs::default()` is disabled —
+/// `emit` returns immediately and allocates nothing — so every struct
+/// that carries one pays nothing until a CLI flag turns tracing on.
+#[derive(Clone, Default)]
+pub struct Obs {
+    inner: Option<Arc<ObsInner>>,
+}
+
+impl fmt::Debug for Obs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.inner {
+            None => write!(f, "Obs(disabled)"),
+            Some(i) => write!(f, "Obs(sinks={})", i.sinks.lock().unwrap().len()),
+        }
+    }
+}
+
+impl Obs {
+    /// Enabled handle: flight recorder armed, counters bridged, no
+    /// external sinks yet (add them with the `with_*` builders).
+    pub fn new() -> Obs {
+        Obs {
+            inner: Some(Arc::new(ObsInner {
+                epoch: Instant::now(),
+                recorder: Mutex::new(FlightRecorder::new(DEFAULT_RECORDER_CAP)),
+                sinks: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// Explicitly-disabled handle (same as `Obs::default()`).
+    pub fn disabled() -> Obs {
+        Obs::default()
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Attach an arbitrary sink (builder style; call before cloning the
+    /// handle out to transports so every clone shares the sink set).
+    pub fn with_sink(self, sink: Box<dyn EventSink>) -> Obs {
+        if let Some(inner) = &self.inner {
+            inner.sinks.lock().unwrap().push(sink);
+        }
+        self
+    }
+
+    /// Attach the stderr log sink in the given format.
+    pub fn with_stderr(self, format: LogFormat) -> Obs {
+        self.with_sink(Box::new(StderrSink { format }))
+    }
+
+    /// Attach a JSONL trace-file sink (`--trace-out`).
+    pub fn with_trace_file(self, path: &Path) -> Result<Obs> {
+        let sink = JsonlSink::create(path)?;
+        Ok(self.with_sink(Box::new(sink)))
+    }
+
+    /// Record one event: bridge to the metrics registry, append to the
+    /// flight recorder, fan out to every sink. No-op when disabled.
+    pub fn emit(&self, ev: Event) {
+        let Some(inner) = &self.inner else { return };
+        bridge_metrics(&ev);
+        let t_ms = inner.epoch.elapsed().as_millis() as u64;
+        for sink in inner.sinks.lock().unwrap().iter_mut() {
+            sink.record(t_ms, &ev);
+        }
+        inner.recorder.lock().unwrap().push(t_ms, ev);
+    }
+
+    /// Flush every sink (trace files buffer; call at run boundaries).
+    pub fn flush(&self) {
+        if let Some(inner) = &self.inner {
+            for sink in inner.sinks.lock().unwrap().iter_mut() {
+                sink.flush();
+            }
+        }
+    }
+
+    /// Flight-recorder snapshot, oldest first (empty when disabled).
+    pub fn flight_log(&self) -> Vec<(u64, Event)> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => inner.recorder.lock().unwrap().snapshot(),
+        }
+    }
+}
+
+/// Event → counters/gauges bridge. Every emit updates the registry so
+/// `/metrics` stays truthful even with no sinks attached. Names are
+/// deliberately un-prefixed — CI asserts on them literally.
+fn bridge_metrics(ev: &Event) {
+    match ev {
+        Event::LeaseIssued { speculative, .. } => {
+            metrics::counter("leases_issued_total").inc();
+            if *speculative {
+                metrics::counter("speculative_leases_total").inc();
+            }
+        }
+        Event::LeaseCompleted { worker, lo, hi, secs, .. } => {
+            metrics::counter("leases_completed_total").inc();
+            metrics::counter(&format!("worker_trials_total{{worker=\"{worker}\"}}"))
+                .add((hi - lo) as u64);
+            metrics::gauge(&format!("worker_busy_seconds{{worker=\"{worker}\"}}")).add(*secs);
+        }
+        Event::LeaseFailed { .. } => {
+            metrics::counter("leases_failed_total").inc();
+            metrics::counter("leases_reaped_total").inc();
+        }
+        Event::LeaseReaped { .. } => {
+            metrics::counter("leases_reaped_total").inc();
+        }
+        Event::LeaseRetried { .. } => {
+            metrics::counter("leases_retried_total").inc();
+        }
+        Event::LeaseCancelled { .. } => {
+            metrics::counter("leases_cancelled_total").inc();
+        }
+        Event::AuditIssued { .. } => {
+            metrics::counter("audits_issued_total").inc();
+        }
+        Event::AuditPassed { .. } => {
+            metrics::counter("audits_passed_total").inc();
+        }
+        Event::AuditFailed { .. } => {
+            metrics::counter("audits_failed_total").inc();
+        }
+        Event::AuditDropped { .. } => {
+            metrics::counter("audits_dropped_total").inc();
+        }
+        Event::WorkerQuarantined { .. } => {
+            metrics::counter("quarantines_total").inc();
+            metrics::gauge("workers_quarantined").add(1.0);
+        }
+        Event::RangeInvalidated { .. } => {
+            metrics::counter("ranges_invalidated_total").inc();
+        }
+        Event::ChaosFault { .. } => {
+            metrics::counter("chaos_faults_total").inc();
+        }
+        Event::PeerReaped { .. } => {
+            metrics::counter("peers_reaped_total").inc();
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_handle_is_a_no_op() {
+        let obs = Obs::default();
+        assert!(!obs.enabled());
+        obs.emit(Event::Note { text: "dropped".into() });
+        obs.flush();
+        assert!(obs.flight_log().is_empty());
+    }
+
+    #[test]
+    fn flight_recorder_wraps_keeping_newest() {
+        let mut r = FlightRecorder::new(4);
+        for i in 0..10u64 {
+            r.push(i, Event::Note { text: format!("e{i}") });
+        }
+        assert_eq!(r.total(), 10);
+        assert_eq!(r.len(), 4);
+        let snap = r.snapshot();
+        let times: Vec<u64> = snap.iter().map(|(t, _)| *t).collect();
+        assert_eq!(times, vec![6, 7, 8, 9], "oldest-first, newest retained");
+    }
+
+    #[test]
+    fn clones_share_the_recorder() {
+        let obs = Obs::new();
+        let clone = obs.clone();
+        clone.emit(Event::Note { text: "via clone".into() });
+        let log = obs.flight_log();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].1, Event::Note { text: "via clone".into() });
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_tags() {
+        let line = render_json(
+            7,
+            &Event::LeaseFailed {
+                lease: 3,
+                worker: 1,
+                lo: 0,
+                hi: 32,
+                error: "he said \"boom\"\n".into(),
+            },
+        );
+        let doc = crate::config::json::Json::parse(&line).expect("valid json");
+        assert_eq!(doc.get("ev").and_then(|j| j.as_str()), Some("lease-failed"));
+        assert_eq!(doc.get("t_ms").and_then(|j| j.as_f64()), Some(7.0));
+        assert_eq!(doc.get("error").and_then(|j| j.as_str()), Some("he said \"boom\"\n"));
+    }
+
+    #[test]
+    fn emits_bridge_into_the_global_registry() {
+        let before = metrics::counter("peers_reaped_total").get();
+        let obs = Obs::new();
+        obs.emit(Event::PeerReaped { worker: 2, silence_ms: 10_000 });
+        assert_eq!(metrics::counter("peers_reaped_total").get(), before + 1);
+    }
+
+    #[test]
+    fn jsonl_sink_writes_one_line_per_event() {
+        let dir = std::env::temp_dir().join("gcod_obs_jsonl_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("trace.jsonl");
+        {
+            let obs = Obs::new().with_trace_file(&path).unwrap();
+            obs.emit(Event::Note { text: "a".into() });
+            obs.emit(Event::Note { text: "b".into() });
+            obs.flush();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        for line in text.lines() {
+            crate::config::json::Json::parse(line).expect("each line parses standalone");
+        }
+    }
+
+    #[test]
+    fn log_format_parses() {
+        assert_eq!(LogFormat::parse("text").unwrap(), LogFormat::Text);
+        assert_eq!(LogFormat::parse("json").unwrap(), LogFormat::Json);
+        assert!(LogFormat::parse("xml").is_err());
+    }
+}

@@ -1,0 +1,400 @@
+//! `gcod report`: render a human-readable post-mortem from a JSONL
+//! trace file written by `--trace-out` — per-job lease Gantt rows,
+//! worker health table and chronological fault/audit annotations.
+//!
+//! The reader is deliberately forgiving: a crashed writer may leave a
+//! torn final line (or interleaved garbage); unparseable lines are
+//! counted and skipped, never fatal.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use crate::metrics::Table;
+
+const GANTT_WIDTH: usize = 40;
+
+/// One parsed trace line.
+struct Rec {
+    t_ms: u64,
+    ev: String,
+    doc: Json,
+}
+
+impl Rec {
+    fn u(&self, key: &str) -> u64 {
+        self.doc.get(key).and_then(Json::as_f64).unwrap_or(0.0) as u64
+    }
+
+    fn s(&self, key: &str) -> String {
+        self.doc.get(key).and_then(Json::as_str).unwrap_or("").to_string()
+    }
+}
+
+#[derive(Default)]
+struct LeaseRow {
+    worker: u64,
+    lo: u64,
+    hi: u64,
+    start: u64,
+    end: Option<u64>,
+    outcome: String,
+}
+
+#[derive(Default)]
+struct WorkerRow {
+    issued: u64,
+    completed: u64,
+    failed: u64,
+    reaped: u64,
+    trials: u64,
+    quarantined: String,
+}
+
+/// Render the report for a trace file on disk.
+pub fn render(path: &Path) -> Result<String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("trace file {}: {e}", path.display())))?;
+    let (body, skipped) = render_from_str(&text);
+    let mut out = format!("gcod report — trace: {}\n", path.display());
+    if skipped > 0 {
+        out.push_str(&format!("warning: {skipped} unparseable line(s) skipped (torn write?)\n"));
+    }
+    out.push_str(&body);
+    Ok(out)
+}
+
+/// Render from trace text; returns `(report, skipped_line_count)`.
+/// Exposed for tests (torn-line tolerance is asserted on this).
+pub fn render_from_str(text: &str) -> (String, usize) {
+    let mut recs = Vec::new();
+    let mut skipped = 0usize;
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        match Json::parse(line) {
+            Ok(doc) => {
+                let t_ms = doc.get("t_ms").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let ev = doc.get("ev").and_then(Json::as_str).unwrap_or("?").to_string();
+                recs.push(Rec { t_ms, ev, doc });
+            }
+            Err(_) => skipped += 1,
+        }
+    }
+    if recs.is_empty() {
+        return ("(no parseable events)\n".to_string(), skipped);
+    }
+
+    // Segment into jobs on dispatch-started boundaries: a serve trace
+    // interleaves serve-job markers with one dispatcher run per job.
+    let mut segments: Vec<Vec<&Rec>> = vec![Vec::new()];
+    for r in &recs {
+        if r.ev == "dispatch-started" && !segments.last().unwrap().is_empty() {
+            segments.push(Vec::new());
+        }
+        segments.last_mut().unwrap().push(r);
+    }
+
+    let span_ms = recs.iter().map(|r| r.t_ms).max().unwrap_or(0).max(1);
+    let mut out = format!(
+        "events: {} parsed, span {:.3}s, jobs: {}\n",
+        recs.len(),
+        span_ms as f64 / 1e3,
+        segments.len()
+    );
+    for (i, seg) in segments.iter().enumerate() {
+        if segments.len() > 1 {
+            out.push_str(&format!("\n===== job segment {} =====\n", i + 1));
+        }
+        out.push_str(&render_segment(seg));
+    }
+    (out, skipped)
+}
+
+fn render_segment(recs: &[&Rec]) -> String {
+    let mut leases: BTreeMap<u64, LeaseRow> = BTreeMap::new();
+    let mut workers: BTreeMap<u64, WorkerRow> = BTreeMap::new();
+    let mut notes: Vec<String> = Vec::new();
+    let t0 = recs.iter().map(|r| r.t_ms).min().unwrap_or(0);
+    let t1 = recs.iter().map(|r| r.t_ms).max().unwrap_or(0).max(t0 + 1);
+
+    for r in recs {
+        let rel = r.t_ms - t0;
+        match r.ev.as_str() {
+            "lease-issued" => {
+                let w = r.u("worker");
+                let spec = r.doc.get("speculative").and_then(Json::as_bool).unwrap_or(false);
+                leases.insert(
+                    r.u("lease"),
+                    LeaseRow {
+                        worker: w,
+                        lo: r.u("lo"),
+                        hi: r.u("hi"),
+                        start: rel,
+                        end: None,
+                        outcome: if spec { "spec".into() } else { "…".into() },
+                    },
+                );
+                workers.entry(w).or_default().issued += 1;
+            }
+            "lease-completed" | "lease-failed" | "lease-reaped" | "lease-cancelled" => {
+                let w = r.u("worker");
+                if let Some(l) = leases.get_mut(&r.u("lease")) {
+                    l.end = Some(rel);
+                    l.outcome = match r.ev.as_str() {
+                        "lease-completed" => {
+                            if r.doc.get("duplicate").and_then(Json::as_bool).unwrap_or(false) {
+                                "dup".into()
+                            } else {
+                                "done".into()
+                            }
+                        }
+                        "lease-failed" => "FAIL".into(),
+                        "lease-reaped" => format!("reaped:{}", r.s("cause")),
+                        _ => "cancel".into(),
+                    };
+                }
+                let wr = workers.entry(w).or_default();
+                match r.ev.as_str() {
+                    "lease-completed" => {
+                        wr.completed += 1;
+                        wr.trials += r.u("hi").saturating_sub(r.u("lo"));
+                    }
+                    "lease-failed" => wr.failed += 1,
+                    "lease-reaped" => wr.reaped += 1,
+                    _ => {}
+                }
+            }
+            "worker-quarantined" => {
+                workers.entry(r.u("worker")).or_default().quarantined = r.s("reason");
+                notes.push(format!(
+                    "[+{:.3}s] QUARANTINE worker {} ({}): {}",
+                    rel as f64 / 1e3,
+                    r.u("worker"),
+                    r.s("reason"),
+                    r.s("detail")
+                ));
+            }
+            "chaos-fault" => {
+                notes.push(format!("[+{:.3}s] chaos: {}", rel as f64 / 1e3, r.s("detail")));
+            }
+            "peer-reaped" => {
+                notes.push(format!(
+                    "[+{:.3}s] peer {} reaped after {}ms of silence",
+                    rel as f64 / 1e3,
+                    r.u("worker"),
+                    r.u("silence_ms")
+                ));
+            }
+            "audit-issued" | "audit-passed" | "audit-failed" | "audit-dropped" => {
+                let tail = match r.ev.as_str() {
+                    "audit-issued" => {
+                        format!("worker {} re-runs [{}..{})", r.u("auditor"), r.u("lo"), r.u("hi"))
+                    }
+                    "audit-passed" => format!(
+                        "[{}..{}) matched on worker {}",
+                        r.u("lo"),
+                        r.u("hi"),
+                        r.u("auditor")
+                    ),
+                    "audit-failed" => {
+                        format!("[{}..{}) MISMATCH: {}", r.u("lo"), r.u("hi"), r.s("detail"))
+                    }
+                    _ => format!("[{}..{}) dropped: {}", r.u("lo"), r.u("hi"), r.s("reason")),
+                };
+                notes.push(format!("[+{:.3}s] {}: {}", rel as f64 / 1e3, r.ev, tail));
+            }
+            "range-invalidated" => {
+                notes.push(format!(
+                    "[+{:.3}s] invalidated [{}..{}) banked by condemned worker {}",
+                    rel as f64 / 1e3,
+                    r.u("lo"),
+                    r.u("hi"),
+                    r.u("worker")
+                ));
+            }
+            "worker-post-mortem" | "serve-job" | "dispatch-started" | "dispatch-done" | "note" => {
+                notes.push(format!("[+{:.3}s] {}", rel as f64 / 1e3, summarize(r)));
+            }
+            _ => {}
+        }
+    }
+
+    let mut out = String::new();
+    if !leases.is_empty() {
+        out.push_str("\nLease timeline\n");
+        let span = (t1 - t0).max(1);
+        for (id, l) in &leases {
+            let end = l.end.unwrap_or(span);
+            let a = (l.start as usize * GANTT_WIDTH / span as usize).min(GANTT_WIDTH - 1);
+            let b = (end as usize * GANTT_WIDTH / span as usize).clamp(a + 1, GANTT_WIDTH);
+            let bar: String = (0..GANTT_WIDTH)
+                .map(|i| if i >= a && i < b { '#' } else { '·' })
+                .collect();
+            out.push_str(&format!(
+                "  lease {id:>4}  w{:<3} [{:>6}..{:<6}) |{bar}| {:>8.3}s→{:<8.3}s {}\n",
+                l.worker,
+                l.lo,
+                l.hi,
+                l.start as f64 / 1e3,
+                end as f64 / 1e3,
+                l.outcome
+            ));
+        }
+    }
+    if !workers.is_empty() {
+        out.push_str("\nWorker health\n");
+        let mut t =
+            Table::new(&["worker", "issued", "done", "failed", "reaped", "trials", "state"]);
+        for (w, row) in &workers {
+            t.row(vec![
+                w.to_string(),
+                row.issued.to_string(),
+                row.completed.to_string(),
+                row.failed.to_string(),
+                row.reaped.to_string(),
+                row.trials.to_string(),
+                if row.quarantined.is_empty() { "active".into() } else { row.quarantined.clone() },
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    if !notes.is_empty() {
+        out.push_str("\nAnnotations\n");
+        for n in &notes {
+            out.push_str("  ");
+            out.push_str(n);
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// One-line digest of a lifecycle/marker event for the annotations list.
+fn summarize(r: &Rec) -> String {
+    let mut s = r.ev.clone();
+    for key in [
+        "job", "state", "detail", "trials", "workers", "grain", "completed", "retried", "ok",
+        "worker", "completions", "failures", "timeouts", "last_error", "text",
+    ] {
+        if let Some(v) = r.doc.get(key) {
+            match v {
+                Json::Str(t) if t.is_empty() => {}
+                Json::Str(t) => s.push_str(&format!(" {key}={t}")),
+                Json::Num(x) => s.push_str(&format!(" {key}={x}")),
+                Json::Bool(b) => s.push_str(&format!(" {key}={b}")),
+                _ => {}
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{render_json, Event};
+
+    fn line(t: u64, ev: Event) -> String {
+        render_json(t, &ev)
+    }
+
+    #[test]
+    fn renders_timeline_health_and_annotations() {
+        let trace = [
+            line(0, Event::DispatchStarted { trials: 96, workers: 2, grain: 32 }),
+            line(1, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 32, speculative: false }),
+            line(2, Event::LeaseIssued { lease: 2, worker: 1, lo: 32, hi: 64, speculative: false }),
+            line(
+                50,
+                Event::LeaseCompleted {
+                    lease: 1,
+                    worker: 0,
+                    lo: 0,
+                    hi: 32,
+                    secs: 0.049,
+                    duplicate: false,
+                },
+            ),
+            line(60, Event::ChaosFault { detail: "kill worker 1".into() }),
+            line(
+                70,
+                Event::LeaseReaped {
+                    lease: 2,
+                    worker: 1,
+                    lo: 32,
+                    hi: 64,
+                    secs: 0.068,
+                    cause: "worker-failure".into(),
+                },
+            ),
+            line(
+                80,
+                Event::WorkerQuarantined {
+                    worker: 1,
+                    reason: "byzantine".into(),
+                    detail: "audit mismatch".into(),
+                },
+            ),
+            line(99, Event::DispatchDone { completed: 3, retried: 1, elapsed_secs: 0.1, ok: true }),
+        ]
+        .join("\n");
+        let (report, skipped) = render_from_str(&trace);
+        assert_eq!(skipped, 0);
+        assert!(report.contains("Lease timeline"));
+        assert!(report.contains("lease    1"));
+        assert!(report.contains("done"));
+        assert!(report.contains("reaped:worker-failure"));
+        assert!(report.contains("Worker health"));
+        assert!(report.contains("byzantine"));
+        assert!(report.contains("chaos: kill worker 1"));
+        assert!(report.contains("dispatch-done"));
+    }
+
+    #[test]
+    fn tolerates_torn_final_line() {
+        let mut trace = [
+            line(0, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 8, speculative: false }),
+            line(
+                9,
+                Event::LeaseCompleted {
+                    lease: 1,
+                    worker: 0,
+                    lo: 0,
+                    hi: 8,
+                    secs: 0.009,
+                    duplicate: false,
+                },
+            ),
+        ]
+        .join("\n");
+        trace.push('\n');
+        trace.push_str("{\"t_ms\": 12, \"ev\": \"lease-iss"); // torn mid-write
+        let (report, skipped) = render_from_str(&trace);
+        assert_eq!(skipped, 1, "the torn tail is skipped, not fatal");
+        assert!(report.contains("Lease timeline"));
+    }
+
+    #[test]
+    fn segments_multiple_jobs() {
+        let trace = [
+            line(0, Event::DispatchStarted { trials: 8, workers: 1, grain: 8 }),
+            line(1, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 8, speculative: false }),
+            line(9, Event::DispatchStarted { trials: 8, workers: 1, grain: 8 }),
+            line(10, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 8, speculative: false }),
+        ]
+        .join("\n");
+        let (report, _) = render_from_str(&trace);
+        assert!(report.contains("jobs: 2"));
+        assert!(report.contains("job segment 2"));
+    }
+
+    #[test]
+    fn empty_trace_reports_no_events() {
+        let (report, skipped) = render_from_str("");
+        assert_eq!(skipped, 0);
+        assert!(report.contains("no parseable events"));
+    }
+}

@@ -89,7 +89,10 @@ impl SweepKernel for AdvGdKernel {
         let atk_dec = make_decoder_opts(scheme, dspec, cfg.p, precond);
         let mask = greedy_decode_attack(atk_dec.as_ref(), &scheme.a, budget.min(m));
         drop(atk_dec);
+        let built = std::time::Instant::now();
         let cache = prob.gram_cache(grad_param(cfg)?, engine);
+        crate::metrics::gauge("phase_seconds{phase=\"gram-build\"}")
+            .add(built.elapsed().as_secs_f64());
         Ok(engine.run_range_map(
             lo,
             hi,

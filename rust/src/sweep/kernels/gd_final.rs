@@ -159,9 +159,12 @@ impl SweepKernel for GdFinalKernel {
         lo: usize,
         hi: usize,
     ) -> Result<Vec<f64>> {
+        let built = std::time::Instant::now();
         let prob = GdProblem::build(cfg, scheme);
         let precond = precond_param(cfg)?;
         let cache = prob.gram_cache(grad_param(cfg)?, engine);
+        crate::metrics::gauge("phase_seconds{phase=\"gram-build\"}")
+            .add(built.elapsed().as_secs_f64());
         Ok(engine.run_range_map(
             lo,
             hi,

@@ -251,9 +251,22 @@ where
         |ctx, t, rng| {
             fill_mask(t, rng, &mut ctx.mask);
             ctx.decoder.decode_into(&ctx.mask, &mut ctx.out);
+            // one relaxed atomic add per trial for iterative decoders;
+            // closed-form decoders return None and skip it entirely
+            if let Some(n) = ctx.decoder.lsqr_iterations() {
+                lsqr_iterations_total().add(n);
+            }
             ctx.out.error_sq()
         },
     )
+}
+
+/// Cached handle for the `lsqr_iterations_total` counter, so the
+/// per-trial hot path pays one relaxed atomic add, not a registry
+/// lookup.
+fn lsqr_iterations_total() -> &'static crate::metrics::Counter {
+    static C: std::sync::OnceLock<crate::metrics::Counter> = std::sync::OnceLock::new();
+    C.get_or_init(|| crate::metrics::counter("lsqr_iterations_total"))
 }
 
 /// Parallel counterpart of [`crate::gd::analysis::decoding_stats`]: the

@@ -624,7 +624,12 @@ pub fn run_range(cfg: &SweepConfig, threads: usize, lo: usize, hi: usize) -> Res
     // every shard rebuilds the identical scheme from the salted seed
     let scheme = build(&spec, &mut Rng::new(cfg.seed ^ SCHEME_SALT));
     let engine = TrialEngine::new(threads, cfg.seed).with_chunk(cfg.chunk);
+    let started = std::time::Instant::now();
     let values = kernel.run_range(cfg, &scheme, dspec, &engine, lo, hi)?;
+    // per-kernel phase timer (accumulates across ranges) + trial count
+    crate::metrics::gauge(&format!("phase_seconds{{phase=\"{}\"}}", kernel.name()))
+        .add(started.elapsed().as_secs_f64());
+    crate::metrics::counter("sweep_trials_total").add((hi - lo) as u64);
     if values.len() != hi - lo {
         return Err(Error::msg(format!(
             "sweep kernel '{}' returned {} values for trial range [{lo}, {hi})",

@@ -1,0 +1,144 @@
+//! Observability bit-neutrality suite: the flight recorder, trace
+//! sinks and metrics bridge may *watch* a dispatch, never *touch* it.
+//!
+//! * every runnable kernel (`decode-error`, `gd-final`, `attack`,
+//!   `adv-gd`) dispatches twice over real subprocess boundaries — obs
+//!   fully on (flight recorder + JSONL trace file + counters) vs the
+//!   disabled no-op handle — and the merged manifests must be
+//!   byte-identical to each other *and* to the single-process run;
+//! * a chaos-seeded dispatch with a trace file attached stays bit-exact
+//!   too, and the trace carries the seeded fault decisions as
+//!   `chaos-fault` events (what the CI chaos soak asserts on instead of
+//!   grepping stderr);
+//! * `fig4-cluster` is excluded by construction: it is an external
+//!   producer (`SweepKind::external_producer`) the dispatcher refuses,
+//!   so there is nothing to trace.
+//!
+//! (Ring-buffer wraparound and torn-JSONL-line tolerance are pinned by
+//! the unit tests in `src/obs/mod.rs` / `src/obs/report.rs`.)
+
+use gcod::dispatch::{ChaosProfile, ChaosTransport, DispatchConfig, Dispatcher, LocalProcess};
+use gcod::obs::Obs;
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Duration;
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("gcod_obsneu_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Small-but-real config per kernel: enough trials to need several
+/// leases at grain 8, GD problems shrunk so four kernels stay fast.
+fn sweep_cfg(kind: SweepKind, trials: usize) -> SweepConfig {
+    let mut params = BTreeMap::new();
+    if kind == SweepKind::GdFinal || kind == SweepKind::AdvGd {
+        params.insert("n-points".into(), "64".into());
+        params.insert("dim".into(), "8".into());
+        params.insert("iters".into(), "5".into());
+    }
+    SweepConfig {
+        sweep: kind,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 11,
+        trials,
+        chunk: 8,
+        params,
+    }
+}
+
+fn dcfg(tag: &str, obs: Obs) -> DispatchConfig {
+    DispatchConfig {
+        grain: 8,
+        poll_interval: Duration::from_millis(2),
+        out_dir: tmp_dir(tag),
+        obs,
+        ..DispatchConfig::default()
+    }
+}
+
+/// Dispatch `cfg` on two local subprocess workers under the given obs
+/// handle and return the merged manifest bytes.
+fn dispatch_bytes(cfg: &SweepConfig, tag: &str, obs: Obs) -> String {
+    let mut t = LocalProcess::new(gcod_bin(), 2);
+    let out = Dispatcher::new(dcfg(tag, obs)).run(cfg, &mut t).unwrap();
+    out.merged.render()
+}
+
+/// The tentpole invariant: tracing on is byte-neutral, for every
+/// runnable kernel.
+#[test]
+fn tracing_is_bit_neutral_for_every_runnable_kernel() {
+    let kinds = [
+        (SweepKind::DecodeError, 48),
+        (SweepKind::GdFinal, 12),
+        (SweepKind::Attack, 12),
+        (SweepKind::AdvGd, 8),
+    ];
+    for (kind, trials) in kinds {
+        let cfg = sweep_cfg(kind, trials);
+        let single = shard::run_full(&cfg, 1).unwrap().render();
+        let dark = dispatch_bytes(&cfg, &format!("{kind}_off"), Obs::default());
+
+        let dir = tmp_dir(&format!("{kind}_on"));
+        let trace = dir.join("trace.jsonl");
+        let obs = Obs::new().with_trace_file(&trace).unwrap();
+        let lit = dispatch_bytes(&cfg, &format!("{kind}_on"), obs.clone());
+
+        assert_eq!(dark, single, "{kind}: obs-off dispatch vs single-process");
+        assert_eq!(lit, dark, "{kind}: tracing moved the merged bytes");
+
+        // the observation itself happened: recorder + trace both saw
+        // the run, bracketed by the dispatch lifecycle events
+        let log = obs.flight_log();
+        assert!(!log.is_empty(), "{kind}: empty flight recorder");
+        assert_eq!(log.first().unwrap().1.kind(), "dispatch-started", "{kind}");
+        assert_eq!(log.last().unwrap().1.kind(), "dispatch-done", "{kind}");
+        obs.flush();
+        let text = std::fs::read_to_string(&trace).unwrap();
+        assert!(text.contains("\"ev\": \"lease-issued\""), "{kind}: no leases in trace");
+        assert!(text.contains("\"ev\": \"lease-completed\""), "{kind}: no completions");
+        assert!(text.contains("\"ev\": \"dispatch-done\""), "{kind}: no terminal event");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Chaos-seeded dispatch with a trace attached: bytes still exact, and
+/// the fault plan's decisions land in the trace as `chaos-fault` events
+/// (the CI soak's assertion surface).
+#[test]
+fn chaos_faults_land_in_the_trace_and_stay_bit_neutral() {
+    let cfg = sweep_cfg(SweepKind::DecodeError, 96);
+    let single = shard::run_full(&cfg, 2).unwrap();
+
+    let dir = tmp_dir("chaos_trace");
+    let trace = dir.join("trace.jsonl");
+    let obs = Obs::new().with_trace_file(&trace).unwrap();
+    let profile = ChaosProfile::parse("kill=0.25,delay=0.45").unwrap();
+    let mut t = ChaosTransport::new(LocalProcess::new(gcod_bin(), 3), 1234, profile);
+    t.set_obs(obs.clone());
+    let mut d = dcfg("chaos_trace", obs.clone());
+    d.max_retries = 10;
+    let out = Dispatcher::new(d).run(&cfg, &mut t).unwrap();
+
+    assert_eq!(out.merged.render(), single.render(), "{}", out.report.summary());
+    assert!(!t.plan.log.is_empty(), "seeded profile never drew a fault");
+    obs.flush();
+    let text = std::fs::read_to_string(&trace).unwrap();
+    assert!(
+        text.contains("\"ev\": \"chaos-fault\""),
+        "fault plan drew {} fault(s) but none reached the trace",
+        t.plan.log.len()
+    );
+    // every live fault event mirrors a fault-plan log line verbatim
+    assert!(text.contains(&gcod::bench_util::json_escape(&t.plan.log[0])), "{text}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
