@@ -73,6 +73,8 @@ pub mod journal;
 pub mod protocol;
 pub mod queue;
 pub mod server;
+pub mod store;
+pub mod sys;
 pub mod tcp;
 pub mod transport;
 
@@ -84,6 +86,8 @@ use crate::straggler::{BernoulliStragglers, DelaySampler};
 use crate::sweep::shard::{self, MergedSweep, ShardResult, SweepConfig};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 pub use chaos::{ChaosProfile, ChaosTransport, Fault, FaultPlan};
@@ -92,8 +96,10 @@ pub use journal::Journal;
 pub use protocol::{JobSpec, LeaseSpec, Msg};
 pub use queue::{Lease, LeaseId, WorkQueue, WorkerId};
 pub use server::{
-    query_status, serve, serve_on, submit_job, submit_job_nowait, ServeConfig, SubmitOutcome,
+    fetch_job, query_status, serve, serve_on, submit_job, submit_job_nowait, ServeConfig,
+    SubmitOutcome,
 };
+pub use store::{JobState, StateStore};
 pub use tcp::{worker_loop, RegisteredWorker, TcpTransport, WorkerOpts};
 pub use transport::{LocalProcess, WorkerJob, WorkerPoll, WorkerTransport};
 
@@ -179,6 +185,12 @@ pub struct DispatchConfig {
     /// presumed dead (see [`tcp::DEAD_AFTER`], the default). Local
     /// process transports ignore it
     pub peer_silence_timeout: Duration,
+    /// cooperative drain flag: when it flips true mid-run the
+    /// dispatcher stops issuing leases, lets in-flight leases land (or
+    /// be reaped), and unwinds with an error beginning
+    /// `dispatch drained` — leaving the journal behind so a resumed
+    /// run completes from the banked ranges. `None` = never drains
+    pub stop: Option<Arc<AtomicBool>>,
 }
 
 impl Default for DispatchConfig {
@@ -203,6 +215,7 @@ impl Default for DispatchConfig {
             resume: false,
             obs: Obs::default(),
             peer_silence_timeout: tcp::DEAD_AFTER,
+            stop: None,
         }
     }
 }
@@ -399,13 +412,31 @@ impl Dispatcher {
             // 3. audits nobody eligible can ever run must not deadlock
             // termination
             state.drop_unassignable_audits();
-            // 4. hand audits, then ranges, to idle available workers
-            state.assign(transport, &mut sim, now)?;
+            // 4. hand audits, then ranges, to idle available workers —
+            // unless a drain was requested, in which case stop leasing
+            // and let the in-flight work land
+            let draining =
+                self.cfg.stop.as_ref().is_some_and(|s| s.load(Ordering::Relaxed));
+            if !draining {
+                state.assign(transport, &mut sim, now)?;
+            }
 
             // 5. termination
             let all_idle = state.busy.iter().all(Option::is_none);
             if state.queue.is_complete() && all_idle && state.audits.is_empty() {
                 break;
+            }
+            if draining && all_idle {
+                // every in-flight lease has landed in the bank (and the
+                // journal, when one is open) or been reaped; unwind with
+                // the journal left behind so a resumed run completes
+                // from the checkpoint instead of restarting
+                state.emit_post_mortem(false, started);
+                return Err(state.err_with_log(Error::msg(format!(
+                    "dispatch drained: {}/{} trials banked, journal retained for resume",
+                    state.queue.done_trials(),
+                    sweep.trials
+                ))));
             }
             if state.health.all_quarantined() {
                 // graceful degradation has run out of pool: explain

@@ -81,6 +81,9 @@ pub struct JobSpec {
     /// chaos preset: kill this worker slot mid-lease (fault-drill jobs)
     pub kill_worker: Option<usize>,
     pub kill_after_ms: u64,
+    /// client-chosen dedup token ("" = none): a resubmission carrying
+    /// the same key returns the original job id instead of re-running
+    pub idempotency_key: String,
 }
 
 impl JobSpec {
@@ -102,6 +105,7 @@ impl JobSpec {
             chaos_profile: "none".into(),
             kill_worker: None,
             kill_after_ms: 50,
+            idempotency_key: String::new(),
         }
     }
 }
@@ -139,6 +143,9 @@ pub enum Msg {
     Status,
     /// coordinator → client: rendered status tables
     StatusReport { text: String },
+    /// client → coordinator: (re)attach to job `job` — a finished job
+    /// streams its banked manifest, a live one replies when it lands
+    Fetch { job: u64 },
 }
 
 impl Msg {
@@ -188,6 +195,7 @@ impl Msg {
             Msg::StatusReport { text } => {
                 format!("{{\"msg\": \"status-report\", \"text\": \"{}\"}}", json_escape(text))
             }
+            Msg::Fetch { job } => format!("{{\"msg\": \"fetch\", \"job\": {job}}}"),
         }
     }
 
@@ -245,6 +253,7 @@ impl Msg {
             }
             "status" => Ok(Msg::Status),
             "status-report" => Ok(Msg::StatusReport { text: get_str(&doc, "text")? }),
+            "fetch" => Ok(Msg::Fetch { job: get_u64(&doc, "job")? }),
             other => Err(Error::msg(format!("unknown protocol message '{other}'"))),
         }
     }
@@ -302,13 +311,16 @@ fn parse_config(j: &Json) -> Result<SweepConfig> {
     })
 }
 
-fn render_job_spec(s: &JobSpec) -> String {
+/// Single-line JSON encoding of a [`JobSpec`] — shared by the `submit`
+/// frame and the coordinator's durable state journal, so a replayed
+/// spec is bitwise what the client sent (floats ride hex bit patterns).
+pub(crate) fn render_job_spec(s: &JobSpec) -> String {
     format!(
         "{{\"adaptive_grain\": {}, \"audit_fraction_bits\": \"{}\", \"chaos_profile\": \"{}\", \
          \"chaos_seed\": \"{}\", \"class\": \"{}\", \"config\": {}, \"grain\": {}, \
-         \"kill_after_ms\": {}, \"kill_worker\": {}, \"lease_timeout_ms\": {}, \
-         \"lease_timeout_per_trial_ms\": {}, \"max_retries\": {}, \"min_grain\": {}, \
-         \"stats_only\": {}, \"threads_per_worker\": {}}}",
+         \"idempotency_key\": \"{}\", \"kill_after_ms\": {}, \"kill_worker\": {}, \
+         \"lease_timeout_ms\": {}, \"lease_timeout_per_trial_ms\": {}, \"max_retries\": {}, \
+         \"min_grain\": {}, \"stats_only\": {}, \"threads_per_worker\": {}}}",
         s.adaptive_grain,
         f64_to_hex_bits(s.audit_fraction),
         json_escape(&s.chaos_profile),
@@ -316,6 +328,7 @@ fn render_job_spec(s: &JobSpec) -> String {
         json_escape(&s.class),
         render_config(&s.config),
         s.grain,
+        json_escape(&s.idempotency_key),
         s.kill_after_ms,
         s.kill_worker.map_or("null".to_string(), |w| w.to_string()),
         s.lease_timeout_ms,
@@ -327,7 +340,7 @@ fn render_job_spec(s: &JobSpec) -> String {
     )
 }
 
-fn parse_job_spec(j: &Json) -> Result<JobSpec> {
+pub(crate) fn parse_job_spec(j: &Json) -> Result<JobSpec> {
     Ok(JobSpec {
         config: parse_config(
             j.get("config").ok_or_else(|| Error::msg("job spec: missing 'config'"))?,
@@ -351,6 +364,12 @@ fn parse_job_spec(j: &Json) -> Result<JobSpec> {
             ),
         },
         kill_after_ms: get_u64(j, "kill_after_ms")?,
+        // absent on pre-durability senders: treat as "no key"
+        idempotency_key: j
+            .get("idempotency_key")
+            .and_then(Json::as_str)
+            .unwrap_or("")
+            .to_string(),
     })
 }
 
@@ -667,12 +686,25 @@ mod tests {
         spec.audit_fraction = 0.1; // not exactly representable: bits must survive
         spec.chaos_seed = 0xDEAD_BEEF_DEAD_BEEF;
         spec.kill_worker = Some(1);
+        spec.idempotency_key = "client-42/retry \"x\"".into();
         roundtrip(Msg::Submit { spec: Box::new(spec) });
         roundtrip(Msg::Submitted { job: 9 });
         roundtrip(Msg::JobDone { job: 9, summary: "ok".into(), manifest: "{}".into() });
         roundtrip(Msg::JobError { job: 9, error: "every worker quarantined".into() });
         roundtrip(Msg::Status);
         roundtrip(Msg::StatusReport { text: "jobs: 0".into() });
+        roundtrip(Msg::Fetch { job: 17 });
+    }
+
+    #[test]
+    fn job_spec_without_idempotency_key_parses_as_no_key() {
+        // a pre-durability sender omits the field entirely
+        let spec = JobSpec::new(cfg());
+        let rendered = render_job_spec(&spec);
+        let stripped = rendered.replace("\"idempotency_key\": \"\", ", "");
+        assert_ne!(rendered, stripped, "field not found to strip");
+        let parsed = parse_job_spec(&Json::parse(&stripped).unwrap()).unwrap();
+        assert_eq!(parsed, spec);
     }
 
     #[test]

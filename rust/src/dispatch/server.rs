@@ -12,27 +12,43 @@
 //!   fault drills — and stream back the merged manifest, which is
 //!   byte-identical to a single-process run of the same sweep.
 //! * **Status clients** (`gcod status`) get a registry/queue/metrics
-//!   snapshot and disconnect.
+//!   snapshot and disconnect; `gcod fetch` clients (re)attach to a job
+//!   by id and receive its result when (or as soon as) it exists.
 //!
 //! Jobs run one at a time through the existing [`Dispatcher`] — leases,
 //! deadlines, retries, speculation, journals, audits, health tracking
 //! and quarantine all apply to TCP workers exactly as to local
 //! subprocesses, because the server composes the same pieces:
-//! `Dispatcher` → [`ChaosTransport`] → [`TcpTransport`]. With
-//! `journal_dir` set, every job checkpoints to
-//! `job_<id>.journal` and a resubmitted identical job resumes from
-//! whatever its crashed predecessor completed.
+//! `Dispatcher` → [`ChaosTransport`] → [`TcpTransport`].
+//!
+//! With `--state-dir` the coordinator itself stops being a single point
+//! of total loss: every admitted job is fsynced into the
+//! [`StateStore`](super::store::StateStore) journal *before* the
+//! `submitted` ack leaves the socket, every state transition and banked
+//! manifest follows it, and a restarted coordinator replays the journal
+//! — re-queueing unfinished jobs (which resume mid-sweep through their
+//! per-job dispatch journals, keyed by id **and** sweep fingerprint so
+//! an id collision can never resume someone else's checkpoint) and
+//! answering `fetch`/idempotent re-submits for finished ones from the
+//! manifest bank. `kill -9` at any point costs at most the leases in
+//! flight; the merged manifest stays byte-identical to a single-process
+//! run. A drain request (SIGTERM under `gcod serve`, or a test's drain
+//! handle) stops leasing, lets in-flight leases land in the journal,
+//! says goodbye to the fleet, and returns cleanly.
 
 use super::chaos::{ChaosProfile, ChaosTransport};
 use super::protocol::{Conn, JobSpec, Msg};
+use super::store::{self, JobState, Recovery, StateStore};
 use super::tcp::{RegisteredWorker, TcpTransport, DEAD_AFTER, REGISTER_TIMEOUT};
 use super::{DispatchConfig, Dispatcher, HealthConfig, WorkerTransport};
 use crate::error::{Error, Result};
 use crate::metrics::{self, LatencyHistogram, Stopwatch, Table};
 use crate::obs::{Event, Obs};
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Coordinator daemon configuration.
@@ -46,9 +62,21 @@ pub struct ServeConfig {
     /// exit after the first job finishes (CI smokes and tests; a real
     /// deployment serves forever)
     pub once: bool,
-    /// checkpoint each job to `<dir>/job_<id>.journal`; a re-submitted
-    /// job with the same id slot resumes from it
+    /// checkpoint each job to `<dir>/job_<id>_<fp>.journal`; a
+    /// re-submitted identical job resumes from it (superseded by
+    /// `state_dir`, which journals into `<state-dir>/jobs/`)
     pub journal_dir: Option<PathBuf>,
+    /// durable coordinator state: admitted specs, job states, the id
+    /// counter and finished manifests survive a coordinator crash and
+    /// replay on the next start with the same dir
+    pub state_dir: Option<PathBuf>,
+    /// cooperative shutdown flag: when it flips true (SIGTERM handler,
+    /// test harness), the server drains — stops leasing, lets the
+    /// running job unwind into its journal, goodbyes the fleet, exits Ok
+    pub drain: Option<Arc<AtomicBool>>,
+    /// drain as soon as the queue is empty instead of serving forever
+    /// (`gcod serve --drain`: "work off the journaled backlog, exit 0")
+    pub drain_when_idle: bool,
     /// observability handle shared with every dispatched job: job
     /// lifecycle, lease scheduling, chaos faults and peer reaps all
     /// stream through its sinks, and the event→metrics bridge feeds the
@@ -68,6 +96,9 @@ impl ServeConfig {
             poll: Duration::from_millis(10),
             once: false,
             journal_dir: None,
+            state_dir: None,
+            drain: None,
+            drain_when_idle: false,
             obs: Obs::default(),
             peer_silence: DEAD_AFTER,
         }
@@ -75,7 +106,9 @@ impl ServeConfig {
 }
 
 /// Bind and serve. Blocks for the life of the daemon (forever, unless
-/// [`ServeConfig::once`]).
+/// [`ServeConfig::once`] or a drain). `TcpListener::bind` sets
+/// `SO_REUSEADDR` on unix, so a restarted coordinator rebinds its port
+/// immediately even with the crashed process's sockets in TIME_WAIT.
 pub fn serve(cfg: &ServeConfig) -> Result<()> {
     let listener = TcpListener::bind(&cfg.bind)
         .map_err(|e| Error::msg(format!("bind {}: {e}", cfg.bind)))?;
@@ -95,10 +128,14 @@ pub fn serve_on(listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
         .map_err(|e| Error::msg(format!("listener set_nonblocking: {e}")))?;
     let mut srv = Server {
         cfg,
+        store: None,
         workers: Vec::new(),
         handshakes: Vec::new(),
         queue: VecDeque::new(),
+        keys: BTreeMap::new(),
+        terminal: BTreeMap::new(),
         next_job: 0,
+        recovered: 0,
         jobs_done: 0,
         jobs_failed: 0,
         leases_issued: 0,
@@ -106,7 +143,15 @@ pub fn serve_on(listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
         job_latency: LatencyHistogram::new(0.05, 24),
         up: Stopwatch::new(),
     };
+    if let Some(dir) = &cfg.state_dir {
+        let (store, recovery) = StateStore::open(dir)?;
+        srv.store = Some(store);
+        srv.recover(recovery);
+    }
     loop {
+        if srv.drain_requested() {
+            return srv.drain_exit("drain flag raised");
+        }
         srv.accept_pending(&listener);
         srv.advance_handshakes();
         srv.pump_idle_workers();
@@ -116,24 +161,51 @@ pub fn serve_on(listener: TcpListener, cfg: &ServeConfig) -> Result<()> {
                 return Ok(());
             }
         }
+        if cfg.drain_when_idle && srv.queue.is_empty() {
+            return srv.drain_exit("queue empty with --drain");
+        }
         std::thread::sleep(cfg.poll);
     }
+}
+
+/// Where a finished job's manifest lives.
+enum Banked {
+    /// in memory (no state dir)
+    Text(String),
+    /// file name under `<state-dir>/manifests/`, fsynced before the
+    /// journal admitted the job was done
+    File(String),
+}
+
+/// A finished job, kept for `fetch` and idempotent re-submits.
+enum Terminal {
+    Done { summary: String, manifest: Banked },
+    Failed(String),
 }
 
 struct PendingJob {
     id: u64,
     spec: Box<JobSpec>,
-    client: Conn,
+    /// every connection waiting on this job's result: the original
+    /// submitter plus any `fetch`/duplicate-submit attachments
+    /// (a journal-recovered job starts with none)
+    clients: Vec<Conn>,
 }
 
 struct Server<'a> {
     cfg: &'a ServeConfig,
+    store: Option<StateStore>,
     workers: Vec<RegisteredWorker>,
     /// accepted connections whose first (role-declaring) frame hasn't
     /// arrived yet, with their handshake deadline
     handshakes: Vec<(Conn, Instant)>,
     queue: VecDeque<PendingJob>,
+    /// idempotency key → job id (replayed from the store on recovery)
+    keys: BTreeMap<String, u64>,
+    /// finished jobs by id, for fetch / dedup replies
+    terminal: BTreeMap<u64, Terminal>,
     next_job: u64,
+    recovered: u64,
     jobs_done: u64,
     jobs_failed: u64,
     leases_issued: u64,
@@ -143,6 +215,104 @@ struct Server<'a> {
 }
 
 impl Server<'_> {
+    /// Rebuild in-memory state from a replayed coordinator journal:
+    /// terminal jobs go to the bank, unfinished ones back on the queue
+    /// (their per-job sweep journals pick up mid-sweep), and the id
+    /// counter continues where it stopped.
+    fn recover(&mut self, rec: Recovery) {
+        for note in &rec.notes {
+            eprintln!("gcod serve: state journal: {note}");
+        }
+        self.next_job = rec.next_job;
+        let total = rec.jobs.len() as u64;
+        for job in rec.jobs {
+            if !job.key.is_empty() {
+                self.keys.insert(job.key.clone(), job.id);
+            }
+            match job.state {
+                JobState::Done { file, summary } => {
+                    self.terminal
+                        .insert(job.id, Terminal::Done { summary, manifest: Banked::File(file) });
+                }
+                JobState::Failed { error } => {
+                    self.terminal.insert(job.id, Terminal::Failed(error));
+                }
+                state @ (JobState::Queued | JobState::Running) => {
+                    let mid_sweep = self
+                        .store
+                        .as_ref()
+                        .is_some_and(|s| s.job_journal_path(job.id, &job.spec).is_file());
+                    let detail = format!(
+                        "was {}; {}",
+                        if state == JobState::Running { "running" } else { "queued" },
+                        if mid_sweep {
+                            "resuming from its sweep journal"
+                        } else {
+                            "restarting from scratch"
+                        }
+                    );
+                    println!("gcod serve: job {} re-queued after restart ({detail})", job.id);
+                    self.cfg.obs.emit(Event::JobResumed { job: job.id, detail });
+                    if state == JobState::Running {
+                        if let Some(store) = &mut self.store {
+                            if let Err(e) = store.record_state(job.id, &JobState::Queued) {
+                                eprintln!("gcod serve: job {}: state record failed: {e}", job.id);
+                            }
+                        }
+                    }
+                    self.recovered += 1;
+                    self.queue.push_back(PendingJob {
+                        id: job.id,
+                        spec: job.spec,
+                        clients: Vec::new(),
+                    });
+                }
+            }
+        }
+        if total > 0 {
+            println!(
+                "gcod serve: recovered {total} job(s) from the state journal \
+                 ({} re-queued, next id {})",
+                self.recovered, self.next_job
+            );
+            self.cfg.obs.emit(Event::CoordinatorRecovered {
+                jobs: total,
+                requeued: self.recovered,
+            });
+            self.cfg.obs.flush();
+        }
+    }
+
+    fn drain_requested(&self) -> bool {
+        self.cfg.drain.as_ref().is_some_and(|f| f.load(Ordering::Relaxed))
+    }
+
+    /// Orderly exit: nothing is lost — queued jobs are journaled (when
+    /// a store exists), workers and waiting clients get goodbyes so
+    /// they fail over to reconnect/fetch, and the caller returns Ok.
+    fn drain_exit(&mut self, why: &str) -> Result<()> {
+        println!(
+            "gcod serve: draining ({why}) — {} queued job(s) retained, {} worker(s) released",
+            self.queue.len(),
+            self.workers.len()
+        );
+        self.cfg.obs.emit(Event::DrainStarted {
+            detail: format!(
+                "{why}; {} queued job(s) retained, {} worker(s) released",
+                self.queue.len(),
+                self.workers.len()
+            ),
+        });
+        self.goodbye_all();
+        for job in &mut self.queue {
+            for client in &mut job.clients {
+                let _ = client.send(&Msg::Goodbye);
+            }
+        }
+        self.cfg.obs.flush();
+        Ok(())
+    }
+
     fn accept_pending(&mut self, listener: &TcpListener) {
         loop {
             match listener.accept() {
@@ -197,31 +367,8 @@ impl Server<'_> {
                     );
                     self.workers.push(RegisteredWorker { conn, class, threads });
                 }
-                Some(Msg::Submit { spec }) => {
-                    let id = self.next_job;
-                    self.next_job += 1;
-                    if let Err(e) = conn.send(&Msg::Submitted { job: id }) {
-                        eprintln!("gcod serve: {}: submit ack failed: {e}", conn.peer());
-                        continue;
-                    }
-                    println!(
-                        "gcod serve: job {id} queued from {}: sweep '{}' ({} trials)",
-                        conn.peer(),
-                        spec.config.sweep.as_str(),
-                        spec.config.trials
-                    );
-                    self.cfg.obs.emit(Event::ServeJob {
-                        job: id,
-                        state: "queued".to_string(),
-                        detail: format!(
-                            "sweep '{}' ({} trials) from {}",
-                            spec.config.sweep.as_str(),
-                            spec.config.trials,
-                            conn.peer()
-                        ),
-                    });
-                    self.queue.push_back(PendingJob { id, spec, client: conn });
-                }
+                Some(Msg::Submit { spec }) => self.handle_submit(conn, spec),
+                Some(Msg::Fetch { job }) => self.attach_client(conn, job),
                 Some(Msg::Status) => {
                     let report = self.status_text();
                     if let Err(e) = conn.send(&Msg::StatusReport { text: report }) {
@@ -249,6 +396,113 @@ impl Server<'_> {
             }
         }
         self.handshakes = still;
+    }
+
+    /// Admit a submitted job: dedup by idempotency key, persist the
+    /// spec *before* acking (once the client hears `submitted`, the job
+    /// must survive any crash), then queue it.
+    fn handle_submit(&mut self, mut conn: Conn, spec: Box<JobSpec>) {
+        let key = spec.idempotency_key.clone();
+        if let Err(e) = store::validate_idempotency_key(&key) {
+            let _ = conn.send(&Msg::JobError { job: u64::MAX, error: e.to_string() });
+            return;
+        }
+        if let Some(&id) = self.keys.get(&key).filter(|_| !key.is_empty()) {
+            println!(
+                "gcod serve: duplicate submit (idempotency key '{key}') → existing job {id}"
+            );
+            self.cfg.obs.emit(Event::ServeJob {
+                job: id,
+                state: "deduplicated".to_string(),
+                detail: format!("idempotency key '{key}' from {}", conn.peer()),
+            });
+            if conn.send(&Msg::Submitted { job: id }).is_ok() {
+                self.attach_client(conn, id);
+            }
+            return;
+        }
+        let id = self.next_job;
+        if let Some(store) = &mut self.store {
+            if let Err(e) = store.record_job(id, &key, &spec) {
+                eprintln!("gcod serve: job {id}: persist failed: {e}");
+                let _ = conn.send(&Msg::JobError {
+                    job: u64::MAX,
+                    error: format!("coordinator could not persist the job: {e}"),
+                });
+                return;
+            }
+        }
+        self.next_job += 1;
+        if !key.is_empty() {
+            self.keys.insert(key, id);
+        }
+        if let Err(e) = conn.send(&Msg::Submitted { job: id }) {
+            // the job is admitted (and journaled) regardless; the
+            // client can still recover the result via fetch
+            eprintln!("gcod serve: {}: submit ack failed: {e}", conn.peer());
+        }
+        println!(
+            "gcod serve: job {id} queued from {}: sweep '{}' ({} trials)",
+            conn.peer(),
+            spec.config.sweep.as_str(),
+            spec.config.trials
+        );
+        self.cfg.obs.emit(Event::ServeJob {
+            job: id,
+            state: "queued".to_string(),
+            detail: format!(
+                "sweep '{}' ({} trials) from {}",
+                spec.config.sweep.as_str(),
+                spec.config.trials,
+                conn.peer()
+            ),
+        });
+        self.queue.push_back(PendingJob { id, spec, clients: vec![conn] });
+    }
+
+    /// Attach a connection to job `id`: a finished job answers
+    /// immediately from the bank, a pending one adds the connection to
+    /// its reply list, an unknown id gets a loud error.
+    fn attach_client(&mut self, mut conn: Conn, id: u64) {
+        let reply = match self.terminal.get(&id) {
+            Some(Terminal::Failed(error)) => {
+                Some(Msg::JobError { job: id, error: error.clone() })
+            }
+            Some(Terminal::Done { summary, manifest }) => {
+                let text = match manifest {
+                    Banked::Text(t) => Ok(t.clone()),
+                    Banked::File(f) => self
+                        .store
+                        .as_ref()
+                        .ok_or_else(|| Error::msg("manifest banked on disk but no store open"))
+                        .and_then(|s| s.load_manifest(f)),
+                };
+                Some(match text {
+                    Ok(manifest) => {
+                        Msg::JobDone { job: id, summary: summary.clone(), manifest }
+                    }
+                    Err(e) => Msg::JobError {
+                        job: id,
+                        error: format!("job {id} finished but its banked manifest failed: {e}"),
+                    },
+                })
+            }
+            None => None,
+        };
+        if let Some(reply) = reply {
+            if let Err(e) = conn.send(&reply) {
+                eprintln!("gcod serve: {}: banked reply failed: {e}", conn.peer());
+            }
+            return;
+        }
+        if let Some(job) = self.queue.iter_mut().find(|j| j.id == id) {
+            job.clients.push(conn);
+        } else {
+            let _ = conn.send(&Msg::JobError {
+                job: id,
+                error: format!("unknown job id {id} (never submitted, or state not durable)"),
+            });
+        }
     }
 
     /// Answer a plain-HTTP peer on the frame port: `GET /metrics`
@@ -286,6 +540,7 @@ impl Server<'_> {
         metrics::gauge("serve_jobs_queued").set(self.queue.len() as f64);
         metrics::gauge("serve_jobs_done").set(self.jobs_done as f64);
         metrics::gauge("serve_jobs_failed").set(self.jobs_failed as f64);
+        metrics::gauge("serve_jobs_recovered").set(self.recovered as f64);
         if self.job_latency.stats().count() > 0 {
             metrics::gauge("serve_job_latency_p50_seconds").set(self.job_latency.quantile(0.5));
             metrics::gauge("serve_job_latency_p95_seconds").set(self.job_latency.quantile(0.95));
@@ -348,9 +603,35 @@ impl Server<'_> {
             state: "started".to_string(),
             detail: format!("{} worker(s), class '{class}'", lent.len()),
         });
+        if let Some(store) = &mut self.store {
+            if let Err(e) = store.record_state(job.id, &JobState::Running) {
+                eprintln!("gcod serve: job {}: state record failed: {e}", job.id);
+            }
+        }
         let watch = Stopwatch::new();
         let outcome = self.execute(job.id, &job.spec, lent);
         self.job_latency.record(watch.elapsed_secs());
+        // a drain unwind is not a failure: the dispatcher stopped on
+        // purpose with its progress journaled — the job goes back on
+        // the queue (and in the store) for the next coordinator
+        if let Err(e) = &outcome {
+            if e.to_string().starts_with("dispatch drained") {
+                println!("gcod serve: job {} drained mid-run — re-queued", job.id);
+                self.cfg.obs.emit(Event::ServeJob {
+                    job: job.id,
+                    state: "drained".to_string(),
+                    detail: e.to_string(),
+                });
+                if let Some(store) = &mut self.store {
+                    if let Err(e) = store.record_state(job.id, &JobState::Queued) {
+                        eprintln!("gcod serve: job {}: state record failed: {e}", job.id);
+                    }
+                }
+                self.queue.push_front(job);
+                self.cfg.obs.flush();
+                return Ok(Some(false));
+            }
+        }
         let reply = match outcome {
             Ok((merged, summary)) => {
                 self.jobs_done += 1;
@@ -360,6 +641,18 @@ impl Server<'_> {
                     state: "done".to_string(),
                     detail: summary.clone(),
                 });
+                let banked = match &mut self.store {
+                    Some(store) => match store.record_done(job.id, &summary, &merged) {
+                        Ok(file) => Banked::File(file),
+                        Err(e) => {
+                            eprintln!("gcod serve: job {}: bank failed: {e}", job.id);
+                            Banked::Text(merged.clone())
+                        }
+                    },
+                    None => Banked::Text(merged.clone()),
+                };
+                self.terminal
+                    .insert(job.id, Terminal::Done { summary: summary.clone(), manifest: banked });
                 Msg::JobDone { job: job.id, summary, manifest: merged }
             }
             Err(e) => {
@@ -370,16 +663,25 @@ impl Server<'_> {
                     state: "failed".to_string(),
                     detail: e.to_string(),
                 });
+                if let Some(store) = &mut self.store {
+                    let failed = JobState::Failed { error: e.to_string() };
+                    if let Err(e) = store.record_state(job.id, &failed) {
+                        eprintln!("gcod serve: job {}: state record failed: {e}", job.id);
+                    }
+                }
+                self.terminal.insert(job.id, Terminal::Failed(e.to_string()));
                 Msg::JobError { job: job.id, error: e.to_string() }
             }
         };
         self.cfg.obs.flush();
-        if let Err(e) = job.client.send(&reply) {
-            eprintln!(
-                "gcod serve: job {}: client {} unreachable for the result: {e}",
-                job.id,
-                job.client.peer()
-            );
+        for mut client in job.clients {
+            if let Err(e) = client.send(&reply) {
+                eprintln!(
+                    "gcod serve: job {}: client {} unreachable for the result: {e}",
+                    job.id,
+                    client.peer()
+                );
+            }
         }
         Ok(Some(true))
     }
@@ -395,7 +697,14 @@ impl Server<'_> {
     ) -> Result<(String, String)> {
         let out_dir =
             std::env::temp_dir().join(format!("gcod_serve_{}_job_{id}", std::process::id()));
-        let journal = self.cfg.journal_dir.as_ref().map(|d| d.join(format!("job_{id}.journal")));
+        // per-job sweep journal, keyed by id + sweep fingerprint so no
+        // job can ever resume another's checkpoint (Journal::open
+        // re-verifies the full fingerprint line inside the file)
+        let journal = match (&self.store, &self.cfg.journal_dir) {
+            (Some(store), _) => Some(store.job_journal_path(id, spec)),
+            (None, Some(d)) => Some(d.join(store::job_journal_name(id, spec))),
+            (None, None) => None,
+        };
         let resume = journal.as_ref().is_some_and(|j| j.is_file());
         let dcfg = DispatchConfig {
             grain: spec.grain,
@@ -425,6 +734,7 @@ impl Server<'_> {
             },
             journal,
             resume,
+            stop: self.cfg.drain.clone(),
             obs: self.cfg.obs.clone(),
             peer_silence_timeout: self.cfg.peer_silence,
         };
@@ -475,9 +785,17 @@ impl Server<'_> {
         classes.dedup();
         let mut t = Table::new(&["metric", "value"]);
         t.row(vec!["uptime (s)".into(), format!("{:.1}", self.up.elapsed_secs())]);
+        t.row(vec![
+            "durable state".into(),
+            self.cfg
+                .state_dir
+                .as_ref()
+                .map_or("(memory only)".into(), |d| d.display().to_string()),
+        ]);
         t.row(vec!["workers registered".into(), self.workers.len().to_string()]);
         t.row(vec!["capability classes".into(), classes.join(",")]);
         t.row(vec!["jobs queued".into(), self.queue.len().to_string()]);
+        t.row(vec!["jobs recovered".into(), self.recovered.to_string()]);
         t.row(vec!["jobs done".into(), self.jobs_done.to_string()]);
         t.row(vec!["jobs failed".into(), self.jobs_failed.to_string()]);
         t.row(vec!["leases issued".into(), self.leases_issued.to_string()]);
@@ -516,11 +834,15 @@ pub struct SubmitOutcome {
 }
 
 /// Submit a job and block until the coordinator streams the merged
-/// result back (or `timeout` passes).
+/// result back (or `timeout` passes). Outlives a coordinator restart:
+/// once the job id is known, a dropped connection fails over to
+/// [`fetch_job`]; before the ack, a spec with an idempotency key is
+/// safely re-submitted (the key dedups server-side).
 pub fn submit_job(addr: &str, spec: JobSpec, timeout: Duration) -> Result<SubmitOutcome> {
-    let mut conn = connect(addr)?;
-    conn.send(&Msg::Submit { spec: Box::new(spec) })?;
     let deadline = Instant::now() + timeout;
+    let resubmittable = !spec.idempotency_key.is_empty();
+    let mut conn = connect(addr)?;
+    conn.send(&Msg::Submit { spec: Box::new(spec.clone()) })?;
     let mut id = None;
     loop {
         let left = deadline.saturating_duration_since(Instant::now());
@@ -530,15 +852,32 @@ pub fn submit_job(addr: &str, spec: JobSpec, timeout: Duration) -> Result<Submit
                 None => format!("no submit ack from {addr} within {timeout:?}"),
             }));
         }
-        match conn.recv_timeout(left)? {
-            Some(Msg::Submitted { job }) => id = Some(job),
-            Some(Msg::JobDone { job, summary, manifest }) => {
+        match conn.recv_timeout(left) {
+            Ok(Some(Msg::Submitted { job })) => id = Some(job),
+            Ok(Some(Msg::JobDone { job, summary, manifest })) => {
                 return Ok(SubmitOutcome { job, summary, manifest });
             }
-            Some(Msg::JobError { job, error }) => {
+            Ok(Some(Msg::JobError { job, error })) => {
                 return Err(Error::msg(format!("job {job} failed: {error}")));
             }
-            Some(_) | None => {}
+            Ok(Some(Msg::Goodbye)) | Err(_) => {
+                // coordinator went away (crash or drain): fail over
+                let left = deadline.saturating_duration_since(Instant::now());
+                if let Some(id) = id {
+                    return fetch_job(addr, id, left);
+                }
+                if !resubmittable {
+                    return Err(Error::msg(format!(
+                        "lost {addr} before the submit ack; re-submit with an \
+                         idempotency key to make this safe to retry"
+                    )));
+                }
+                conn = reconnect_with_backoff(addr, deadline)?;
+                // a failed re-send leaves the conn EOF; the next
+                // recv_timeout error loops back here
+                let _ = conn.send(&Msg::Submit { spec: Box::new(spec.clone()) });
+            }
+            Ok(Some(_)) | Ok(None) => {}
         }
     }
 }
@@ -552,6 +891,38 @@ pub fn submit_job_nowait(addr: &str, spec: JobSpec, timeout: Duration) -> Result
         Some(Msg::Submitted { job }) => Ok(job),
         Some(other) => Err(Error::msg(format!("expected submit ack, got {other:?}"))),
         None => Err(Error::msg(format!("no submit ack from {addr} within {timeout:?}"))),
+    }
+}
+
+/// Retrieve job `job`'s result by id, surviving coordinator restarts:
+/// connection loss (or an unreachable coordinator) retries with backoff
+/// until the result arrives or `timeout` passes. A finished job answers
+/// from the manifest bank; a queued one answers when it lands.
+pub fn fetch_job(addr: &str, job: u64, timeout: Duration) -> Result<SubmitOutcome> {
+    let deadline = Instant::now() + timeout;
+    loop {
+        let mut conn = reconnect_with_backoff(addr, deadline)
+            .map_err(|e| Error::msg(format!("fetch job {job}: {e}")))?;
+        if conn.send(&Msg::Fetch { job }).is_err() {
+            std::thread::sleep(Duration::from_millis(100));
+            continue;
+        }
+        loop {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::msg(format!("job {job}: no result within {timeout:?}")));
+            }
+            match conn.recv_timeout(left) {
+                Ok(Some(Msg::JobDone { job, summary, manifest })) => {
+                    return Ok(SubmitOutcome { job, summary, manifest });
+                }
+                Ok(Some(Msg::JobError { job, error })) => {
+                    return Err(Error::msg(format!("job {job} failed: {error}")));
+                }
+                Ok(Some(Msg::Goodbye)) | Err(_) => break, // reconnect and re-fetch
+                Ok(Some(_)) | Ok(None) => {}
+            }
+        }
     }
 }
 
@@ -570,4 +941,23 @@ fn connect(addr: &str) -> Result<Conn> {
     let stream = TcpStream::connect(addr)
         .map_err(|e| Error::msg(format!("connect {addr}: {e}")))?;
     Conn::new(stream)
+}
+
+/// Keep dialing `addr` (100 ms → 2 s exponential backoff) until a
+/// connection lands or `deadline` passes — the coordinator may be
+/// mid-restart.
+fn reconnect_with_backoff(addr: &str, deadline: Instant) -> Result<Conn> {
+    let mut delay = Duration::from_millis(100);
+    loop {
+        match connect(addr) {
+            Ok(conn) => return Ok(conn),
+            Err(e) => {
+                if Instant::now() + delay >= deadline {
+                    return Err(Error::msg(format!("{addr} unreachable before deadline: {e}")));
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
 }

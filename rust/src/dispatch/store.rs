@@ -1,0 +1,504 @@
+//! Durable coordinator state: the `gcod serve --state-dir` journal.
+//!
+//! The dispatch layer already makes *workers* expendable (leases are
+//! reaped and retried) and makes a single *job* resumable (the per-job
+//! sweep journal in [`super::journal`]). This module closes the last
+//! gap: the coordinator itself. Everything the serve loop would lose in
+//! a crash — submitted specs, the job-id counter, job states, finished
+//! manifests — is recorded in one append-only, fsynced journal and
+//! replayed on restart, so `kill -9` on the coordinator costs at most
+//! the leases in flight (which the per-job journal re-covers).
+//!
+//! Layout under `--state-dir`:
+//!
+//! ```text
+//! coordinator.journal      append-only record of jobs + transitions
+//! manifests/job_<id>.json  banked merged manifests (fsynced before
+//!                          the `done` record that points at them)
+//! jobs/                    per-job sweep journals + sidecars, keyed
+//!                          job_<id>_<fp>.journal (fp = fingerprint
+//!                          hash, so an id collision can never resume
+//!                          another sweep's journal)
+//! ```
+//!
+//! Journal grammar (line-oriented, like the sweep journal):
+//!
+//! ```text
+//! gcod-serve-state v1
+//! job <id> <key|-> <spec-json>      admission (spec bitwise, one line)
+//! counter <next>                    persisted job-id counter
+//! state <id> queued|running
+//! state <id> failed <escaped error>
+//! done <id> <file> <escaped summary>
+//! ```
+//!
+//! Write ordering is strict: the `job` line is fsynced **before** the
+//! `submitted` ack leaves the socket, and a manifest file is fsynced
+//! **before** the `done` line that references it — so every state the
+//! journal admits to is really on disk. A torn final line (torn by the
+//! very crash this exists for) is dropped with a note; a malformed line
+//! anywhere else is a hard error, because it means corruption rather
+//! than a crash.
+
+use super::journal;
+use super::protocol::{parse_job_spec, render_job_spec, JobSpec};
+use crate::config::json::Json;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::fs::{self, File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+/// First line of every coordinator journal; bumped on format change.
+pub const STATE_HEADER: &str = "gcod-serve-state v1";
+
+/// Longest accepted idempotency key (the key rides a journal line and
+/// a status table; unbounded client input stays out of both).
+pub const MAX_IDEMPOTENCY_KEY: usize = 128;
+
+/// Where a job stands after replay (or at runtime).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobState {
+    Queued,
+    /// was executing when the journal last heard of it; resumes through
+    /// its per-job sweep journal exactly like a queued job
+    Running,
+    Done {
+        /// manifest file name under `manifests/`
+        file: String,
+        summary: String,
+    },
+    Failed {
+        error: String,
+    },
+}
+
+impl JobState {
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, JobState::Done { .. } | JobState::Failed { .. })
+    }
+}
+
+/// One job as reconstructed from the journal.
+#[derive(Debug)]
+pub struct JobRecord {
+    pub id: u64,
+    /// idempotency key, "" if the client sent none
+    pub key: String,
+    pub spec: Box<JobSpec>,
+    pub state: JobState,
+}
+
+/// Everything `open` learned from an existing journal.
+#[derive(Debug, Default)]
+pub struct Recovery {
+    /// all recorded jobs, id-ascending
+    pub jobs: Vec<JobRecord>,
+    /// first unissued job id (max recorded + 1, or the persisted
+    /// counter if that is larger)
+    pub next_job: u64,
+    /// non-fatal oddities (torn tail), for the serve log
+    pub notes: Vec<String>,
+}
+
+/// Append handle on the coordinator journal plus the dir layout.
+pub struct StateStore {
+    dir: PathBuf,
+    file: File,
+}
+
+impl StateStore {
+    /// Open (or create) the state dir, replaying any existing journal.
+    pub fn open(dir: &Path) -> Result<(StateStore, Recovery)> {
+        fs::create_dir_all(dir.join("manifests"))
+            .and_then(|()| fs::create_dir_all(dir.join("jobs")))
+            .map_err(|e| Error::msg(format!("state dir {}: {e}", dir.display())))?;
+        let path = dir.join("coordinator.journal");
+        let existing = if path.is_file() {
+            fs::read_to_string(&path)
+                .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?
+        } else {
+            String::new()
+        };
+        // No complete line on disk means a crash interrupted journal
+        // creation before the (fsynced) header landed: start fresh.
+        // Anything with at least one full line must replay cleanly.
+        let recovery = if existing.contains('\n') {
+            replay(&path)?
+        } else {
+            let mut f = File::create(&path)
+                .map_err(|e| Error::msg(format!("create {}: {e}", path.display())))?;
+            f.write_all(format!("{STATE_HEADER}\n").as_bytes())
+                .and_then(|()| f.sync_all())
+                .map_err(|e| Error::msg(format!("write {}: {e}", path.display())))?;
+            let mut rec = Recovery::default();
+            if !existing.is_empty() {
+                rec.notes.push("journal header was torn by a crash; starting fresh".into());
+            }
+            rec
+        };
+        let file = OpenOptions::new()
+            .append(true)
+            .open(&path)
+            .map_err(|e| Error::msg(format!("append {}: {e}", path.display())))?;
+        Ok((StateStore { dir: dir.to_path_buf(), file }, recovery))
+    }
+
+    /// A job was admitted under `id`: persist the spec (bitwise) and
+    /// the advanced id counter. Fsynced before returning, so the
+    /// `submitted` ack may only be sent after this succeeds.
+    pub fn record_job(&mut self, id: u64, key: &str, spec: &JobSpec) -> Result<()> {
+        validate_idempotency_key(key)?;
+        let key_tok = if key.is_empty() { "-" } else { key };
+        self.append(&format!(
+            "job {id} {key_tok} {}\ncounter {}\nstate {id} queued",
+            render_job_spec(spec),
+            id + 1
+        ))
+    }
+
+    /// A queued job started executing (or drained back to queued).
+    pub fn record_state(&mut self, id: u64, state: &JobState) -> Result<()> {
+        match state {
+            JobState::Queued => self.append(&format!("state {id} queued")),
+            JobState::Running => self.append(&format!("state {id} running")),
+            JobState::Failed { error } => {
+                self.append(&format!("state {id} failed {}", escape(error)))
+            }
+            JobState::Done { .. } => Err(Error::msg(
+                "state store: use record_done for terminal success (manifest must land first)",
+            )),
+        }
+    }
+
+    /// A job finished: bank the manifest (fsynced), then commit the
+    /// `done` record pointing at it. Returns the banked file name.
+    pub fn record_done(&mut self, id: u64, summary: &str, manifest: &str) -> Result<String> {
+        let file = format!("job_{id}.json");
+        let path = self.dir.join("manifests").join(&file);
+        let mut f = File::create(&path)
+            .map_err(|e| Error::msg(format!("bank manifest {}: {e}", path.display())))?;
+        f.write_all(manifest.as_bytes())
+            .and_then(|()| f.sync_all())
+            .map_err(|e| Error::msg(format!("bank manifest {}: {e}", path.display())))?;
+        self.append(&format!("done {id} {file} {}", escape(summary)))?;
+        Ok(file)
+    }
+
+    /// Re-read a banked manifest, verbatim.
+    pub fn load_manifest(&self, file: &str) -> Result<String> {
+        let path = self.dir.join("manifests").join(file);
+        fs::read_to_string(&path)
+            .map_err(|e| Error::msg(format!("banked manifest {}: {e}", path.display())))
+    }
+
+    /// Per-job sweep journal path: keyed by id **and** the sweep's
+    /// identity fingerprint, so a journal can only ever be resumed by
+    /// the job it belongs to ([`journal::Journal::open`] additionally
+    /// verifies the full fingerprint line inside the file).
+    pub fn job_journal_path(&self, id: u64, spec: &JobSpec) -> PathBuf {
+        self.dir.join("jobs").join(job_journal_name(id, spec))
+    }
+
+    fn append(&mut self, lines: &str) -> Result<()> {
+        self.file
+            .write_all(format!("{lines}\n").as_bytes())
+            .and_then(|()| self.file.sync_data())
+            .map_err(|e| Error::msg(format!("coordinator journal append: {e}")))
+    }
+}
+
+/// `job_<id>_<fp>.journal` — `fp` is a 64-bit FNV-1a of the sweep
+/// identity fingerprint, hex. Distinct sweeps can never share a file
+/// name even if a counter ever regressed.
+pub fn job_journal_name(id: u64, spec: &JobSpec) -> String {
+    let fp = journal::fingerprint(&spec.config, spec.stats_only);
+    format!("job_{id}_{:016x}.journal", fnv1a(fp.as_bytes()))
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// An idempotency key must tokenize safely on a journal line and print
+/// safely in a status table: short, non-empty only if used, and drawn
+/// from `[A-Za-z0-9._-]` (in particular no whitespace, no `/`).
+pub fn validate_idempotency_key(key: &str) -> Result<()> {
+    if key.is_empty() {
+        return Ok(());
+    }
+    if key.len() > MAX_IDEMPOTENCY_KEY {
+        return Err(Error::msg(format!(
+            "idempotency key is {} bytes (cap {MAX_IDEMPOTENCY_KEY})",
+            key.len()
+        )));
+    }
+    if !key.bytes().all(|b| b.is_ascii_alphanumeric() || matches!(b, b'.' | b'_' | b'-')) {
+        return Err(Error::msg(format!(
+            "idempotency key '{key}' has characters outside [A-Za-z0-9._-]"
+        )));
+    }
+    Ok(())
+}
+
+fn escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+fn unescape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c == '\\' {
+            match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('\\') => out.push('\\'),
+                Some(other) => {
+                    out.push('\\');
+                    out.push(other);
+                }
+                None => out.push('\\'),
+            }
+        } else {
+            out.push(c);
+        }
+    }
+    out
+}
+
+fn replay(path: &Path) -> Result<Recovery> {
+    let text = fs::read_to_string(path)
+        .map_err(|e| Error::msg(format!("read {}: {e}", path.display())))?;
+    let complete = text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    if lines.first().copied() != Some(STATE_HEADER) {
+        return Err(Error::msg(format!(
+            "{}: not a coordinator journal (bad header)",
+            path.display()
+        )));
+    }
+    let mut jobs: BTreeMap<u64, JobRecord> = BTreeMap::new();
+    let mut counter: u64 = 0;
+    let mut notes = Vec::new();
+    for (i, line) in lines.iter().enumerate().skip(1) {
+        let torn_ok = !complete && i == lines.len() - 1;
+        match replay_line(line, &mut jobs, &mut counter) {
+            Ok(()) => {}
+            Err(e) if torn_ok => {
+                notes.push(format!(
+                    "dropped torn final journal line (crash mid-append): {e}"
+                ));
+            }
+            Err(e) => {
+                return Err(Error::msg(format!(
+                    "{} line {}: {e}",
+                    path.display(),
+                    i + 1
+                )));
+            }
+        }
+    }
+    let next_job = jobs.keys().next_back().map_or(0, |id| id + 1).max(counter);
+    Ok(Recovery { jobs: jobs.into_values().collect(), next_job, notes })
+}
+
+fn replay_line(
+    line: &str,
+    jobs: &mut BTreeMap<u64, JobRecord>,
+    counter: &mut u64,
+) -> Result<()> {
+    let (verb, rest) = line.split_once(' ').ok_or_else(|| Error::msg("missing verb"))?;
+    match verb {
+        "job" => {
+            let (id_tok, rest) =
+                rest.split_once(' ').ok_or_else(|| Error::msg("job: missing key"))?;
+            let (key_tok, spec_json) =
+                rest.split_once(' ').ok_or_else(|| Error::msg("job: missing spec"))?;
+            let id: u64 =
+                id_tok.parse().map_err(|e| Error::msg(format!("job: bad id: {e}")))?;
+            let doc = Json::parse(spec_json)
+                .map_err(|e| Error::msg(format!("job {id}: bad spec json: {e}")))?;
+            let spec = parse_job_spec(&doc)?;
+            let key = if key_tok == "-" { String::new() } else { key_tok.to_string() };
+            validate_idempotency_key(&key)?;
+            jobs.insert(id, JobRecord { id, key, spec: Box::new(spec), state: JobState::Queued });
+            Ok(())
+        }
+        "counter" => {
+            *counter =
+                rest.parse().map_err(|e| Error::msg(format!("counter: bad value: {e}")))?;
+            Ok(())
+        }
+        "state" => {
+            let (id_tok, rest) =
+                rest.split_once(' ').ok_or_else(|| Error::msg("state: missing state"))?;
+            let id: u64 =
+                id_tok.parse().map_err(|e| Error::msg(format!("state: bad id: {e}")))?;
+            let job = jobs
+                .get_mut(&id)
+                .ok_or_else(|| Error::msg(format!("state for unknown job {id}")))?;
+            job.state = match rest.split_once(' ') {
+                None if rest == "queued" => JobState::Queued,
+                None if rest == "running" => JobState::Running,
+                Some(("failed", err)) => JobState::Failed { error: unescape(err) },
+                _ => return Err(Error::msg(format!("job {id}: bad state '{rest}'"))),
+            };
+            Ok(())
+        }
+        "done" => {
+            let (id_tok, rest) =
+                rest.split_once(' ').ok_or_else(|| Error::msg("done: missing file"))?;
+            let id: u64 =
+                id_tok.parse().map_err(|e| Error::msg(format!("done: bad id: {e}")))?;
+            let (file, summary) = rest.split_once(' ').unwrap_or((rest, ""));
+            let job = jobs
+                .get_mut(&id)
+                .ok_or_else(|| Error::msg(format!("done for unknown job {id}")))?;
+            job.state =
+                JobState::Done { file: file.to_string(), summary: unescape(summary) };
+            Ok(())
+        }
+        other => Err(Error::msg(format!("unknown journal verb '{other}'"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::shard::{SweepConfig, SweepKind};
+
+    fn scratch(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("gcod_store_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spec(seed: u64) -> JobSpec {
+        JobSpec::new(SweepConfig {
+            sweep: SweepKind::DecodeError,
+            scheme: "graph-rr:16,3".into(),
+            decoder: "optimal".into(),
+            p: 0.1 + 0.2, // non-representable: must survive bitwise
+            seed,
+            trials: 100,
+            chunk: 8,
+            params: BTreeMap::new(),
+        })
+    }
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn journal_roundtrips_jobs_states_and_manifests() {
+        let dir = scratch("roundtrip");
+        {
+            let (mut store, rec) = StateStore::open(&dir).unwrap();
+            assert!(rec.jobs.is_empty());
+            assert_eq!(rec.next_job, 0);
+            store.record_job(0, "key-a", &spec(7)).unwrap();
+            store.record_job(1, "", &spec(u64::MAX - 3)).unwrap();
+            store.record_state(0, &JobState::Running).unwrap();
+            store.record_done(0, "summary line\nsecond", "{\"manifest\": true}").unwrap();
+            store
+                .record_state(1, &JobState::Failed { error: "boom \\ bust".into() })
+                .unwrap();
+        }
+        let (store, rec) = StateStore::open(&dir).unwrap();
+        assert_eq!(rec.next_job, 2);
+        assert_eq!(rec.jobs.len(), 2);
+        assert!(rec.notes.is_empty());
+        let j0 = &rec.jobs[0];
+        assert_eq!((j0.id, j0.key.as_str()), (0, "key-a"));
+        assert_eq!(j0.spec.config.p.to_bits(), (0.1f64 + 0.2).to_bits());
+        match &j0.state {
+            JobState::Done { file, summary } => {
+                assert_eq!(summary, "summary line\nsecond");
+                assert_eq!(store.load_manifest(file).unwrap(), "{\"manifest\": true}");
+            }
+            other => panic!("job 0 state: {other:?}"),
+        }
+        let j1 = &rec.jobs[1];
+        assert_eq!(j1.spec.config.seed, u64::MAX - 3);
+        assert_eq!(j1.state, JobState::Failed { error: "boom \\ bust".into() });
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn running_job_replays_as_resumable_and_counter_never_regresses() {
+        let dir = scratch("resume");
+        {
+            let (mut store, _) = StateStore::open(&dir).unwrap();
+            store.record_job(0, "bad key", &spec(1)).unwrap_err(); // rejected before write
+            store.record_job(0, "", &spec(1)).unwrap();
+            store.record_state(0, &JobState::Running).unwrap();
+        }
+        let (_store, rec) = StateStore::open(&dir).unwrap();
+        assert_eq!(rec.jobs.len(), 1);
+        assert_eq!(rec.jobs[0].state, JobState::Running);
+        assert_eq!(rec.next_job, 1, "counter must survive even with the job unfinished");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn torn_final_line_is_dropped_with_a_note() {
+        let dir = scratch("torn");
+        {
+            let (mut store, _) = StateStore::open(&dir).unwrap();
+            store.record_job(0, "k1", &spec(3)).unwrap();
+        }
+        // simulate a crash mid-append: partial line, no trailing newline
+        let path = dir.join("coordinator.journal");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"state 0 runn").unwrap();
+        f.sync_all().unwrap();
+        let (_store, rec) = StateStore::open(&dir).unwrap();
+        assert_eq!(rec.jobs.len(), 1);
+        assert_eq!(rec.jobs[0].state, JobState::Queued, "torn transition must not apply");
+        assert_eq!(rec.notes.len(), 1, "torn tail must be noted: {:?}", rec.notes);
+        // ...and the journal keeps accepting appends afterwards
+        let (mut store, _) = StateStore::open(&dir).unwrap();
+        store.record_state(0, &JobState::Running).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn malformed_middle_line_is_a_hard_error() {
+        let dir = scratch("corrupt");
+        {
+            let (mut store, _) = StateStore::open(&dir).unwrap();
+            store.record_job(0, "", &spec(3)).unwrap();
+        }
+        let path = dir.join("coordinator.journal");
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(b"gibberish line\nstate 0 running\n").unwrap();
+        f.sync_all().unwrap();
+        let err = StateStore::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("unknown journal verb"), "{err}");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn journal_names_differ_for_same_id_different_sweeps() {
+        let a = job_journal_name(3, &spec(7));
+        let b = job_journal_name(3, &spec(8)); // different seed = different sweep
+        assert_ne!(a, b);
+        assert!(a.starts_with("job_3_"), "{a}");
+        // and identical sweeps agree (the restart path depends on it)
+        assert_eq!(a, job_journal_name(3, &spec(7)));
+    }
+
+    #[test]
+    fn idempotency_keys_are_validated() {
+        validate_idempotency_key("").unwrap();
+        validate_idempotency_key("run-42_rev.7").unwrap();
+        validate_idempotency_key("has space").unwrap_err();
+        validate_idempotency_key("new\nline").unwrap_err();
+        validate_idempotency_key("sl/ash").unwrap_err();
+        validate_idempotency_key(&"x".repeat(MAX_IDEMPOTENCY_KEY + 1)).unwrap_err();
+    }
+}

@@ -1,0 +1,95 @@
+//! Minimal, dependency-free OS hooks for graceful shutdown.
+//!
+//! The crate deliberately carries no `libc`-style dependency, so the
+//! one platform facility the coordinator needs — noticing SIGTERM so
+//! `gcod serve` can drain instead of dying mid-lease — is declared here
+//! as a single `extern "C"` binding to the C `signal(2)` entry point.
+//! The handler does the only thing that is async-signal-safe and the
+//! only thing required: set one atomic flag. The serve loop polls the
+//! flag at its tick cadence via
+//! [`ServeConfig::drain`](super::server::ServeConfig::drain); nothing
+//! else happens in signal context.
+//!
+//! On non-unix targets the install function is a no-op returning
+//! `false`; tests never rely on real signals either way — they flip the
+//! same drain flag directly.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::sync::OnceLock;
+
+/// The drain flag the SIGTERM handler flips. Handed out as an `Arc` so
+/// the serve config and the handler observe the same bool.
+static DRAIN_FLAG: OnceLock<Arc<AtomicBool>> = OnceLock::new();
+
+/// `SIGTERM` on every unix this builds on.
+#[cfg(unix)]
+const SIGTERM: i32 = 15;
+
+#[cfg(unix)]
+extern "C" {
+    /// C `signal(2)`. Using the historical `signal` (not `sigaction`)
+    /// keeps the FFI surface to one symbol; its semantics (handler
+    /// stays installed, BSD restart behavior) are fine for a polled
+    /// flag. The return is the previous handler's address, pointer-
+    /// sized — declared `usize` since it is only compared to SIG_ERR.
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+}
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_signum: i32) {
+    // async-signal-safe: one relaxed atomic store, nothing else
+    if let Some(flag) = DRAIN_FLAG.get() {
+        flag.store(true, Ordering::Relaxed);
+    }
+}
+
+/// Install a SIGTERM → drain-flag handler and return the flag (wire it
+/// into [`ServeConfig::drain`](super::server::ServeConfig::drain)).
+/// Returns `None` on platforms without signals or if installation
+/// fails; the caller serves without signal-triggered drain then.
+pub fn install_sigterm_drain() -> Option<Arc<AtomicBool>> {
+    let flag = DRAIN_FLAG.get_or_init(|| Arc::new(AtomicBool::new(false))).clone();
+    install(&flag).then_some(flag)
+}
+
+#[cfg(unix)]
+fn install(_flag: &Arc<AtomicBool>) -> bool {
+    // SIG_ERR is -1 as a function address
+    const SIG_ERR: usize = usize::MAX;
+    // SAFETY: `on_sigterm` is an `extern "C" fn(i32)` matching the
+    // sighandler signature, and it only performs an atomic store.
+    unsafe { signal(SIGTERM, on_sigterm) != SIG_ERR }
+}
+
+#[cfg(not(unix))]
+fn install(_flag: &Arc<AtomicBool>) -> bool {
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    #[cfg(unix)]
+    fn sigterm_flips_the_drain_flag() {
+        let flag = install_sigterm_drain().expect("handler install");
+        assert!(!flag.load(Ordering::Relaxed));
+        // raise SIGTERM in-process: the handler must set the flag and
+        // the process must survive (default disposition would kill it)
+        extern "C" {
+            fn raise(signum: i32) -> i32;
+        }
+        // SAFETY: raising a signal whose handler we just installed.
+        unsafe {
+            assert_eq!(raise(SIGTERM), 0);
+        }
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while !flag.load(Ordering::Relaxed) {
+            assert!(std::time::Instant::now() < deadline, "flag never set");
+            std::thread::yield_now();
+        }
+        flag.store(false, Ordering::Relaxed); // leave no state for other tests
+    }
+}

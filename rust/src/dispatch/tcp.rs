@@ -379,9 +379,16 @@ pub struct WorkerOpts {
     /// the `gcod` binary to spawn for `sweep-shard` leases
     pub gcod_bin: PathBuf,
     /// connect attempts before giving up (the server may still be
-    /// starting)
+    /// starting); also bounds each reconnect round after a session is
+    /// lost mid-flight
     pub connect_retries: usize,
+    /// delay between initial connect attempts, and the starting delay
+    /// of the exponential reconnect backoff (doubles per attempt, caps
+    /// at [`RECONNECT_DELAY_CAP`])
     pub retry_delay: Duration,
+    /// observability handle: reconnects emit
+    /// [`Event::WorkerReconnected`] through it
+    pub obs: Obs,
 }
 
 impl WorkerOpts {
@@ -393,9 +400,13 @@ impl WorkerOpts {
             gcod_bin: gcod_bin.into(),
             connect_retries: 50,
             retry_delay: Duration::from_millis(100),
+            obs: Obs::default(),
         }
     }
 }
+
+/// Ceiling for the doubling reconnect delay after a lost session.
+pub const RECONNECT_DELAY_CAP: Duration = Duration::from_secs(5);
 
 /// Distinguishes scratch dirs when several worker loops share a process
 /// (tests run them on threads).
@@ -417,32 +428,89 @@ impl RunningLease {
     }
 }
 
+/// How one worker↔coordinator session ended.
+enum SessionEnd {
+    /// orderly `goodbye` frame — the worker's job is done
+    Goodbye,
+    /// the socket died mid-session (EOF, send/recv error); the worker
+    /// should abandon any running lease and reconnect
+    ConnectionLost(String),
+}
+
 /// Serve leases from a coordinator until it says goodbye. Each lease
 /// runs as a `gcod sweep-shard --range lo..hi` subprocess — the same
 /// arguments and process boundary as local dispatch — and its manifest
 /// text is returned over the socket verbatim.
 ///
-/// Returns `Ok(jobs_completed)` on an orderly goodbye; a vanished
-/// coordinator (EOF mid-session) is an error. Either way the scratch
-/// dir and any running subprocess are torn down.
+/// A vanished coordinator (EOF or socket error mid-session) is NOT
+/// fatal: the worker abandons its running lease (the restarted
+/// coordinator will re-lease that range from its journal) and re-enters
+/// the connect loop with exponential backoff starting at
+/// `opts.retry_delay` and capped at [`RECONNECT_DELAY_CAP`], bounded by
+/// `opts.connect_retries` attempts per round. Each successful reconnect
+/// emits [`Event::WorkerReconnected`] through `opts.obs`.
+///
+/// Returns `Ok(jobs_completed)` (summed across sessions) on an orderly
+/// goodbye; errors only when a reconnect round is exhausted. Either way
+/// the scratch dir and any running subprocess are torn down.
 pub fn worker_loop(opts: &WorkerOpts) -> Result<u64> {
-    let stream = connect_with_retry(opts)?;
-    let mut conn = Conn::new(stream)?;
-    conn.send(&Msg::Register { class: opts.class.clone(), threads: opts.threads })?;
     let scratch = std::env::temp_dir().join(format!(
         "gcod_worker_{}_{}",
         std::process::id(),
         WORKER_SCRATCH_SEQ.fetch_add(1, Ordering::Relaxed)
     ));
-    std::fs::create_dir_all(&scratch)
-        .map_err(|e| Error::msg(format!("create scratch {}: {e}", scratch.display())))?;
-    let mut running: Option<RunningLease> = None;
-    let result = serve_leases(opts, &mut conn, &scratch, &mut running);
-    if let Some(lease) = running.take() {
-        lease.abandon();
+    if let Err(e) = std::fs::create_dir_all(&scratch) {
+        return Err(Error::msg(format!("create scratch {}: {e}", scratch.display())));
     }
+    let mut completed = 0u64;
+    let mut next_stream = match connect_with_retry(opts) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            let _ = std::fs::remove_dir_all(&scratch);
+            return Err(e);
+        }
+    };
+    let result = loop {
+        let stream = next_stream.take().expect("stream is set before every session");
+        let mut running: Option<RunningLease> = None;
+        let end = run_session(opts, stream, &scratch, &mut running, &mut completed);
+        if let Some(lease) = running.take() {
+            // the coordinator that leased this range is gone (or said
+            // goodbye); its successor re-leases from the journal
+            lease.abandon();
+        }
+        match end {
+            Ok(SessionEnd::Goodbye) => break Ok(completed),
+            Ok(SessionEnd::ConnectionLost(why)) => match reconnect_with_backoff(opts) {
+                Ok((s, attempts)) => {
+                    opts.obs.emit(Event::WorkerReconnected { attempts, detail: why });
+                    next_stream = Some(s);
+                }
+                Err(e) => break Err(e),
+            },
+            Err(e) => break Err(e),
+        }
+    };
     let _ = std::fs::remove_dir_all(&scratch);
     result
+}
+
+/// One connected session: register, then serve leases until goodbye or
+/// socket loss. Socket trouble during registration counts as a lost
+/// session (the coordinator may be mid-restart), not a hard error.
+fn run_session(
+    opts: &WorkerOpts,
+    stream: TcpStream,
+    scratch: &std::path::Path,
+    running: &mut Option<RunningLease>,
+    completed: &mut u64,
+) -> Result<SessionEnd> {
+    let mut conn = Conn::new(stream)?;
+    let register = Msg::Register { class: opts.class.clone(), threads: opts.threads };
+    if let Err(e) = conn.send(&register) {
+        return Ok(SessionEnd::ConnectionLost(format!("register failed: {e}")));
+    }
+    serve_leases(opts, &mut conn, scratch, running, completed)
 }
 
 fn connect_with_retry(opts: &WorkerOpts) -> Result<TcpStream> {
@@ -461,16 +529,42 @@ fn connect_with_retry(opts: &WorkerOpts) -> Result<TcpStream> {
     )))
 }
 
+/// Like [`connect_with_retry`] but with a doubling delay (capped at
+/// [`RECONNECT_DELAY_CAP`]) — used after a session is lost, where the
+/// coordinator restart may take a while. Returns the stream and the
+/// number of attempts it took.
+fn reconnect_with_backoff(opts: &WorkerOpts) -> Result<(TcpStream, u64)> {
+    let mut delay = opts.retry_delay.max(Duration::from_millis(1));
+    let mut last_err = String::new();
+    let rounds = opts.connect_retries.max(1);
+    for attempt in 1..=rounds {
+        match TcpStream::connect(&opts.coordinator) {
+            Ok(s) => return Ok((s, attempt as u64)),
+            Err(e) => last_err = e.to_string(),
+        }
+        std::thread::sleep(delay);
+        delay = (delay * 2).min(RECONNECT_DELAY_CAP);
+    }
+    Err(Error::msg(format!(
+        "lost coordinator {} and could not reconnect after {rounds} attempts: {last_err}",
+        opts.coordinator
+    )))
+}
+
 fn serve_leases(
     opts: &WorkerOpts,
     conn: &mut Conn,
     scratch: &std::path::Path,
     running: &mut Option<RunningLease>,
-) -> Result<u64> {
-    let mut completed = 0u64;
+    completed: &mut u64,
+) -> Result<SessionEnd> {
     let mut last_beat = Instant::now();
     loop {
-        for msg in conn.poll_msgs()? {
+        let msgs = match conn.poll_msgs() {
+            Ok(msgs) => msgs,
+            Err(e) => return Ok(SessionEnd::ConnectionLost(format!("recv failed: {e}"))),
+        };
+        for msg in msgs {
             match msg {
                 Msg::Lease { job, spec } => {
                     if let Some(old) = running.take() {
@@ -480,7 +574,14 @@ fn serve_leases(
                     }
                     match spawn_lease(opts, scratch, job, &spec) {
                         Ok(lease) => *running = Some(lease),
-                        Err(e) => conn.send(&Msg::JobFailed { job, error: e.to_string() })?,
+                        Err(e) => {
+                            let fail = Msg::JobFailed { job, error: e.to_string() };
+                            if let Err(e) = conn.send(&fail) {
+                                return Ok(SessionEnd::ConnectionLost(format!(
+                                    "send failed: {e}"
+                                )));
+                            }
+                        }
                     }
                 }
                 Msg::Kill { job } => {
@@ -488,13 +589,15 @@ fn serve_leases(
                         running.take().expect("matched above").abandon();
                     }
                 }
-                Msg::Goodbye => return Ok(completed),
+                Msg::Goodbye => return Ok(SessionEnd::Goodbye),
                 // coordinators don't send anything else to workers
                 _ => {}
             }
         }
         if conn.is_eof() {
-            return Err(Error::msg("coordinator closed the connection without goodbye"));
+            return Ok(SessionEnd::ConnectionLost(
+                "coordinator closed the connection without goodbye".into(),
+            ));
         }
         if let Some(lease) = running.take() {
             match reap_lease(lease) {
@@ -502,17 +605,21 @@ fn serve_leases(
                 LeaseTick::Finished(job, outcome) => {
                     let msg = match outcome {
                         Ok(text) => {
-                            completed += 1;
+                            *completed += 1;
                             Msg::Manifest { job, text }
                         }
                         Err(e) => Msg::JobFailed { job, error: e.to_string() },
                     };
-                    conn.send(&msg)?;
+                    if let Err(e) = conn.send(&msg) {
+                        return Ok(SessionEnd::ConnectionLost(format!("send failed: {e}")));
+                    }
                 }
             }
         }
         if last_beat.elapsed() >= HEARTBEAT_INTERVAL {
-            conn.send(&Msg::Heartbeat)?;
+            if let Err(e) = conn.send(&Msg::Heartbeat) {
+                return Ok(SessionEnd::ConnectionLost(format!("heartbeat failed: {e}")));
+            }
             last_beat = Instant::now();
         }
         std::thread::sleep(TICK);
@@ -653,5 +760,34 @@ mod tests {
             .collect();
         assert_eq!(reaps.len(), 1, "exactly one structured peer-reap event");
         drop(client);
+    }
+
+    #[test]
+    fn worker_reconnects_after_coordinator_socket_loss() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let obs = Obs::new();
+        let mut opts = WorkerOpts::new(addr.to_string(), "/bin/true");
+        opts.retry_delay = Duration::from_millis(10);
+        opts.obs = obs.clone();
+        let handle = std::thread::spawn(move || worker_loop(&opts));
+        // session 1: accept the registration, then drop the socket
+        // without a goodbye — simulates a crashed coordinator
+        let (s1, _) = listener.accept().unwrap();
+        let rw1 = accept_registration(s1, Duration::from_secs(5)).unwrap();
+        drop(rw1);
+        // session 2: the worker must come back and re-register; an
+        // orderly goodbye then ends the loop cleanly
+        let (s2, _) = listener.accept().unwrap();
+        let mut rw2 = accept_registration(s2, Duration::from_secs(5)).unwrap();
+        rw2.conn.send(&Msg::Goodbye).unwrap();
+        let completed = handle.join().unwrap().unwrap();
+        assert_eq!(completed, 0, "no leases were served");
+        let reconnects: Vec<_> = obs
+            .flight_log()
+            .into_iter()
+            .filter(|(_, e)| matches!(e, Event::WorkerReconnected { .. }))
+            .collect();
+        assert_eq!(reconnects.len(), 1, "exactly one worker-reconnected event");
     }
 }

@@ -7,9 +7,9 @@ use gcod::cli::{flag, switch, App, CommandSpec};
 use gcod::codes::zoo::{self, DecoderSpec, SchemeSpec};
 use gcod::coordinator::{Cluster, ClusterConfig, ComputeBackend, StragglerInjection};
 use gcod::dispatch::{
-    query_status, submit_job, submit_job_nowait, worker_loop, ChaosProfile, ChaosTransport,
-    DispatchConfig, Dispatcher, HealthConfig, JobSpec, LocalProcess, ServeConfig,
-    StragglerSimCfg, WorkerOpts,
+    fetch_job, query_status, submit_job, submit_job_nowait, worker_loop, ChaosProfile,
+    ChaosTransport, DispatchConfig, Dispatcher, HealthConfig, JobSpec, LocalProcess,
+    ServeConfig, StragglerSimCfg, WorkerOpts,
 };
 use gcod::error::{Error, Result};
 use gcod::gd::{analysis, SimulatedGcod, StepSize};
@@ -238,8 +238,18 @@ fn app() -> App {
                     switch("once", "exit after the first job finishes (CI smokes)"),
                     flag(
                         "journal-dir",
-                        "checkpoint each job to <dir>/job_<id>.journal (resume on resubmit)",
+                        "checkpoint each job to <dir>/job_<id>_<fp>.journal (resume on resubmit)",
                         None,
+                    ),
+                    flag(
+                        "state-dir",
+                        "durable coordinator state: specs, job states, manifests and per-job \
+                         journals survive a crash/restart of the same dir",
+                        None,
+                    ),
+                    switch(
+                        "drain",
+                        "work off the recovered backlog, then exit 0 once the queue is empty",
                     ),
                     flag(
                         "peer-silence-timeout-ms",
@@ -267,10 +277,25 @@ fn app() -> App {
                     flag("threads", "engine threads offered per lease", Some("1")),
                     flag(
                         "connect-retries",
-                        "connection attempts before giving up (the server may still be starting)",
+                        "connection attempts before giving up (the server may still be \
+                         starting); also bounds each reconnect round after a lost session",
                         Some("50"),
                     ),
-                    flag("retry-ms", "pause between connection attempts", Some("100")),
+                    flag(
+                        "retry-ms",
+                        "pause between connection attempts (reconnects double it, capped at 5s)",
+                        Some("100"),
+                    ),
+                    flag(
+                        "log-format",
+                        "stream structured scheduling events to stderr: text|json",
+                        None,
+                    ),
+                    flag(
+                        "trace-out",
+                        "write a JSONL event trace here (input for `gcod report`)",
+                        None,
+                    ),
                 ],
             },
             CommandSpec {
@@ -338,6 +363,26 @@ fn app() -> App {
                         Some("600"),
                     ),
                     switch("no-wait", "print the accepted job id and exit without waiting"),
+                    flag(
+                        "idempotency-key",
+                        "client-chosen dedup token: resubmitting the same key returns the \
+                         original job instead of re-executing",
+                        None,
+                    ),
+                ],
+            },
+            CommandSpec {
+                name: "fetch",
+                help: "(re)attach to a submitted job and stream its merged result",
+                flags: vec![
+                    flag("connect", "coordinator address host:port", Some("127.0.0.1:7070")),
+                    flag("job", "job id (printed by submit / submit --no-wait)", None),
+                    flag("out", "merged result path", Some("sweep_fetched.json")),
+                    flag(
+                        "timeout-s",
+                        "give up waiting for the result after this long",
+                        Some("600"),
+                    ),
                 ],
             },
             CommandSpec {
@@ -390,6 +435,7 @@ fn main() {
         "serve" => cmd_serve(&inv),
         "worker" => cmd_worker(&inv),
         "submit" => cmd_submit(&inv),
+        "fetch" => cmd_fetch(&inv),
         "status" => cmd_status(&inv),
         "sweep-merge" => cmd_sweep_merge(&inv),
         "report" => cmd_report(&inv),
@@ -679,6 +725,7 @@ fn cmd_sweep_launch(inv: &gcod::cli::Invocation) -> Result<()> {
         },
         journal: None,
         resume: false,
+        stop: None,
         obs: obs.clone(),
         peer_silence_timeout: gcod::dispatch::tcp::DEAD_AFTER,
     };
@@ -795,6 +842,17 @@ fn cmd_serve(inv: &gcod::cli::Invocation) -> Result<()> {
             cfg.journal_dir = Some(d.into());
         }
     }
+    if let Some(d) = inv.get("state-dir") {
+        if !d.is_empty() {
+            std::fs::create_dir_all(d)
+                .map_err(|e| Error::msg(format!("create --state-dir {d}: {e}")))?;
+            cfg.state_dir = Some(d.into());
+        }
+    }
+    cfg.drain_when_idle = inv.switch("drain");
+    // SIGTERM means drain, not die: stop leasing, let in-flight leases
+    // land or journal, say goodbye, persist, exit 0
+    cfg.drain = gcod::dispatch::sys::install_sigterm_drain();
     cfg.peer_silence = Duration::from_millis(inv.u64_or("peer-silence-timeout-ms", 10_000));
     cfg.obs = build_obs(inv)?;
     gcod::dispatch::serve(&cfg)
@@ -833,11 +891,15 @@ fn cmd_worker(inv: &gcod::cli::Invocation) -> Result<()> {
     opts.threads = inv.usize_or("threads", 1).max(1);
     opts.connect_retries = inv.usize_or("connect-retries", 50);
     opts.retry_delay = Duration::from_millis(inv.u64_or("retry-ms", 100));
+    let obs = build_obs(inv)?;
+    opts.obs = obs.clone();
     println!(
         "gcod worker: serving coordinator {} (class '{}', {} thread(s))...",
         opts.coordinator, opts.class, opts.threads
     );
-    let completed = worker_loop(&opts)?;
+    let result = worker_loop(&opts);
+    obs.flush();
+    let completed = result?;
     println!("gcod worker: coordinator said goodbye after {completed} completed lease(s)");
     Ok(())
 }
@@ -875,6 +937,7 @@ fn cmd_submit(inv: &gcod::cli::Invocation) -> Result<()> {
         }
     };
     spec.kill_after_ms = inv.u64_or("kill-after-ms", 50);
+    spec.idempotency_key = inv.str_or("idempotency-key", "");
     let addr = inv.str_or("connect", "127.0.0.1:7070");
     let timeout = Duration::from_secs(inv.u64_or("timeout-s", 600));
     println!(
@@ -895,6 +958,34 @@ fn cmd_submit(inv: &gcod::cli::Invocation) -> Result<()> {
     // the manifest crossed a network: re-validate before trusting it
     let merged = shard::MergedSweep::parse(&outcome.manifest)?;
     let out = inv.str_or("out", "sweep_submitted.json");
+    std::fs::write(&out, &outcome.manifest)
+        .map_err(|e| Error::msg(format!("write {out}: {e}")))?;
+    println!("job {} done: {}", outcome.job, outcome.summary);
+    println!(
+        "result: mean={} std={} min={} max={}",
+        sci(merged.stats.mean()),
+        sci(merged.stats.std()),
+        sci(merged.stats.min()),
+        sci(merged.stats.max())
+    );
+    println!("merged result written to {out}");
+    Ok(())
+}
+
+fn cmd_fetch(inv: &gcod::cli::Invocation) -> Result<()> {
+    let addr = inv.str_or("connect", "127.0.0.1:7070");
+    let job = inv
+        .get("job")
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| Error::msg("fetch needs --job <id>"))?
+        .parse::<u64>()
+        .map_err(|e| Error::msg(format!("bad --job: {e}")))?;
+    let timeout = Duration::from_secs(inv.u64_or("timeout-s", 600));
+    println!("fetching job {job} from {addr}...");
+    let outcome = fetch_job(&addr, job, timeout)?;
+    // the manifest crossed a network: re-validate before trusting it
+    let merged = shard::MergedSweep::parse(&outcome.manifest)?;
+    let out = inv.str_or("out", "sweep_fetched.json");
     std::fs::write(&out, &outcome.manifest)
         .map_err(|e| Error::msg(format!("write {out}: {e}")))?;
     println!("job {} done: {}", outcome.job, outcome.summary);

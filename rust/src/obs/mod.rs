@@ -85,8 +85,19 @@ pub enum Event {
     },
     /// Dispatcher finished (successfully or not).
     DispatchDone { completed: u64, retried: u64, elapsed_secs: f64, ok: bool },
-    /// `gcod serve` job lifecycle (queued / started / done / failed).
+    /// `gcod serve` job lifecycle (queued / started / done / failed /
+    /// deduplicated / drained).
     ServeJob { job: u64, state: String, detail: String },
+    /// A restarted coordinator replayed its durable state journal.
+    CoordinatorRecovered { jobs: u64, requeued: u64 },
+    /// A recovered unfinished job went back on the queue (resuming
+    /// mid-sweep through its per-job journal when one exists).
+    JobResumed { job: u64, detail: String },
+    /// The coordinator began a graceful drain (SIGTERM or `--drain`).
+    DrainStarted { detail: String },
+    /// A worker lost its coordinator socket mid-session and
+    /// re-registered after backoff.
+    WorkerReconnected { attempts: u64, detail: String },
     /// Free-form annotation.
     Note { text: String },
 }
@@ -121,6 +132,10 @@ impl Event {
             Event::WorkerPostMortem { .. } => "worker-post-mortem",
             Event::DispatchDone { .. } => "dispatch-done",
             Event::ServeJob { .. } => "serve-job",
+            Event::CoordinatorRecovered { .. } => "coordinator-recovered",
+            Event::JobResumed { .. } => "job-resumed",
+            Event::DrainStarted { .. } => "drain-started",
+            Event::WorkerReconnected { .. } => "worker-reconnected",
             Event::Note { .. } => "note",
         }
     }
@@ -230,6 +245,16 @@ impl Event {
             ],
             Event::ServeJob { job, state, detail } => {
                 vec![("job", U(*job)), ("state", S(state)), ("detail", S(detail))]
+            }
+            Event::CoordinatorRecovered { jobs, requeued } => {
+                vec![("jobs", U(*jobs)), ("requeued", U(*requeued))]
+            }
+            Event::JobResumed { job, detail } => {
+                vec![("job", U(*job)), ("detail", S(detail))]
+            }
+            Event::DrainStarted { detail } => vec![("detail", S(detail))],
+            Event::WorkerReconnected { attempts, detail } => {
+                vec![("attempts", U(*attempts)), ("detail", S(detail))]
             }
             Event::Note { text } => vec![("text", S(text))],
         }
@@ -538,6 +563,19 @@ fn bridge_metrics(ev: &Event) {
         }
         Event::PeerReaped { .. } => {
             metrics::counter("peers_reaped_total").inc();
+        }
+        Event::CoordinatorRecovered { requeued, .. } => {
+            metrics::counter("coordinator_recoveries_total").inc();
+            metrics::counter("jobs_requeued_total").add(*requeued);
+        }
+        Event::JobResumed { .. } => {
+            metrics::counter("jobs_resumed_total").inc();
+        }
+        Event::DrainStarted { .. } => {
+            metrics::counter("drains_total").inc();
+        }
+        Event::WorkerReconnected { .. } => {
+            metrics::counter("worker_reconnects_total").inc();
         }
         _ => {}
     }

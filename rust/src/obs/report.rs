@@ -215,7 +215,9 @@ fn render_segment(recs: &[&Rec]) -> String {
                     r.u("worker")
                 ));
             }
-            "worker-post-mortem" | "serve-job" | "dispatch-started" | "dispatch-done" | "note" => {
+            "worker-post-mortem" | "serve-job" | "dispatch-started" | "dispatch-done" | "note"
+            | "coordinator-recovered" | "job-resumed" | "drain-started"
+            | "worker-reconnected" => {
                 notes.push(format!("[+{:.3}s] {}", rel as f64 / 1e3, summarize(r)));
             }
             _ => {}

@@ -1,0 +1,276 @@
+//! Crash-safety integration suite for the durable coordinator.
+//!
+//! The headline invariant of `--state-dir`: kill the coordinator with
+//! SIGKILL at any point, restart it on the same state dir, and the
+//! merged manifest a client eventually fetches is byte-identical to a
+//! single-process run of the same sweep. Exercised three ways:
+//!
+//! * a real `gcod serve` subprocess killed -9 mid-job and restarted,
+//!   with in-process `worker_loop`s riding out the outage through their
+//!   reconnect backoff, plus an idempotent duplicate submit and a
+//!   SIGTERM drain (exit 0) at the end;
+//! * an in-process `serve_on` drained mid-job via the cooperative drain
+//!   handle, restarted on the same state dir, resuming from the per-job
+//!   sweep journal;
+//! * idempotency-key dedup and unknown-id fetch rejection.
+
+use gcod::dispatch::{
+    fetch_job, query_status, serve_on, submit_job, submit_job_nowait, worker_loop, JobSpec,
+    ServeConfig, WorkerOpts,
+};
+use gcod::obs::{Event, Obs};
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::net::TcpListener;
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn sweep_cfg(trials: usize) -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 11,
+        trials,
+        chunk: 8,
+        params: BTreeMap::new(),
+    }
+}
+
+fn spawn_worker(addr: &str) -> thread::JoinHandle<gcod::error::Result<u64>> {
+    let mut opts = WorkerOpts::new(addr, gcod_bin());
+    opts.connect_retries = 200;
+    thread::spawn(move || worker_loop(&opts))
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("gcod_crash_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn wait_until_up(addr: &str) {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        if query_status(addr, Duration::from_secs(2)).is_ok() {
+            return;
+        }
+        assert!(Instant::now() < deadline, "coordinator at {addr} never came up");
+        thread::sleep(Duration::from_millis(50));
+    }
+}
+
+/// Kill -9 a real coordinator subprocess mid-job, restart it on the
+/// same state dir, and fetch the result: byte-identical to the
+/// single-process run. A duplicate submit with the same idempotency key
+/// returns the original job id from the bank, and SIGTERM drains the
+/// daemon to a clean exit 0.
+#[test]
+#[cfg(unix)]
+fn sigkill_restart_resumes_byte_identical_and_sigterm_drains() {
+    let c = sweep_cfg(400);
+    let single = shard::run_full(&c, 2).unwrap();
+    let state = temp_dir("sigkill");
+    // fixed port: the restarted coordinator must rebind the address the
+    // workers keep reconnecting to (SO_REUSEADDR makes this immediate)
+    let addr = "127.0.0.1:17917";
+    let spawn_serve = || -> Child {
+        Command::new(gcod_bin())
+            .args([
+                "serve",
+                "--bind",
+                addr,
+                "--state-dir",
+                state.to_str().unwrap(),
+                "--min-workers",
+                "2",
+                "--poll-ms",
+                "2",
+            ])
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawn gcod serve")
+    };
+    let mut server = spawn_serve();
+    wait_until_up(addr);
+    let workers = [spawn_worker(addr), spawn_worker(addr)];
+
+    let mut spec = JobSpec::new(c.clone());
+    spec.grain = 8;
+    spec.max_retries = 10;
+    spec.idempotency_key = "crash-suite/sigkill".into();
+    let id = submit_job_nowait(addr, spec.clone(), Duration::from_secs(20)).unwrap();
+
+    // let the job get some leases into flight, then murder the
+    // coordinator — no goodbye, no fsync beyond what already happened
+    thread::sleep(Duration::from_millis(150));
+    server.kill().unwrap();
+    server.wait().unwrap();
+
+    let mut server = spawn_serve();
+    wait_until_up(addr);
+    let out = fetch_job(addr, id, Duration::from_secs(180)).unwrap();
+    assert_eq!(out.job, id);
+    assert_eq!(out.manifest, single.render(), "post-crash manifest != single-process run");
+
+    // idempotent resubmission: same key → the original id and the
+    // banked manifest, no re-execution
+    let dup = submit_job(addr, spec, Duration::from_secs(30)).unwrap();
+    assert_eq!(dup.job, id, "duplicate submit minted a fresh job");
+    assert_eq!(dup.manifest, single.render());
+
+    // SIGTERM = drain, not death: exit code 0, workers get goodbyes
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    // SAFETY: signalling a child process this test spawned and owns.
+    unsafe {
+        assert_eq!(kill(server.id() as i32, 15), 0);
+    }
+    let status = server.wait().unwrap();
+    assert!(status.success(), "SIGTERM drain exited nonzero: {status}");
+    for w in workers {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+/// Cooperative drain mid-job: the dispatcher unwinds into the per-job
+/// sweep journal, `serve_on` returns Ok, and a restarted coordinator on
+/// the same state dir resumes the job to a byte-identical result.
+#[test]
+fn drain_mid_job_then_restart_resumes_byte_identical() {
+    let c = sweep_cfg(400);
+    let single = shard::run_full(&c, 2).unwrap();
+    let state = temp_dir("drain");
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let drain1 = Arc::new(AtomicBool::new(false));
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 2;
+    scfg.poll = Duration::from_millis(2);
+    scfg.state_dir = Some(state.clone());
+    scfg.drain = Some(drain1.clone());
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+    let wave1 = [spawn_worker(&addr), spawn_worker(&addr)];
+
+    let mut spec = JobSpec::new(c.clone());
+    spec.grain = 8;
+    spec.max_retries = 10;
+    let id = submit_job_nowait(&addr, spec, Duration::from_secs(20)).unwrap();
+
+    thread::sleep(Duration::from_millis(150));
+    drain1.store(true, Ordering::Relaxed);
+    server.join().unwrap().expect("drain must exit Ok");
+    // drain said goodbye to the fleet — wave 1 exits cleanly
+    for w in wave1 {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+
+    // restart on the same state dir and address; the recovery replay is
+    // visible on the obs handle
+    let obs = Obs::new();
+    let drain2 = Arc::new(AtomicBool::new(false));
+    let listener = {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            match TcpListener::bind(&addr) {
+                Ok(l) => break l,
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "could not rebind {addr}: {e}");
+                    thread::sleep(Duration::from_millis(50));
+                }
+            }
+        }
+    };
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 2;
+    scfg.poll = Duration::from_millis(2);
+    scfg.state_dir = Some(state.clone());
+    scfg.drain = Some(drain2.clone());
+    scfg.obs = obs.clone();
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+    let wave2 = [spawn_worker(&addr), spawn_worker(&addr)];
+
+    let out = fetch_job(&addr, id, Duration::from_secs(180)).unwrap();
+    assert_eq!(out.job, id);
+    assert_eq!(out.manifest, single.render(), "post-drain manifest != single-process run");
+    // the job is in the state journal whether the drain caught it
+    // mid-run (re-queued + JobResumed) or already finished (banked), so
+    // the restart always announces a recovery
+    let recovered = obs
+        .flight_log()
+        .into_iter()
+        .filter(|(_, e)| matches!(e, Event::CoordinatorRecovered { .. }))
+        .count();
+    assert_eq!(recovered, 1, "restart never replayed the state journal");
+
+    drain2.store(true, Ordering::Relaxed);
+    server.join().unwrap().expect("second drain must exit Ok");
+    for w in wave2 {
+        w.join().unwrap().expect("worker loop should end on goodbye");
+    }
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+/// Idempotency keys dedup entirely in memory too (no state dir): the
+/// second submit returns the original id and the banked manifest, with
+/// a structured `deduplicated` event and no second execution. Unknown
+/// job ids are rejected loudly.
+#[test]
+fn duplicate_key_returns_original_job_without_rerun() {
+    let c = sweep_cfg(32);
+    let single = shard::run_full(&c, 1).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let obs = Obs::new();
+    let drain = Arc::new(AtomicBool::new(false));
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 1;
+    scfg.poll = Duration::from_millis(2);
+    scfg.drain = Some(drain.clone());
+    scfg.obs = obs.clone();
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+    let worker = spawn_worker(&addr);
+
+    let mut spec = JobSpec::new(c);
+    spec.grain = 8;
+    spec.idempotency_key = "crash-suite/dup".into();
+    let first = submit_job(&addr, spec.clone(), Duration::from_secs(120)).unwrap();
+    assert_eq!(first.manifest, single.render());
+
+    let second = submit_job(&addr, spec, Duration::from_secs(30)).unwrap();
+    assert_eq!(second.job, first.job, "duplicate key minted a fresh job");
+    assert_eq!(second.manifest, first.manifest);
+    let deduped = obs
+        .flight_log()
+        .into_iter()
+        .filter(|(_, e)| matches!(e, Event::ServeJob { state, .. } if state == "deduplicated"))
+        .count();
+    assert_eq!(deduped, 1, "expected exactly one structured dedup event");
+    let ran = obs
+        .flight_log()
+        .into_iter()
+        .filter(|(_, e)| matches!(e, Event::ServeJob { state, .. } if state == "started"))
+        .count();
+    assert_eq!(ran, 1, "the sweep must execute exactly once");
+
+    let unknown = fetch_job(&addr, 999, Duration::from_secs(10)).unwrap_err();
+    assert!(unknown.to_string().contains("unknown job id"), "got: {unknown}");
+
+    drain.store(true, Ordering::Relaxed);
+    server.join().unwrap().expect("drain must exit Ok");
+    worker.join().unwrap().expect("worker loop should end on goodbye");
+}

@@ -1,0 +1,136 @@
+//! Protocol torture suite: hostile and broken peers against a live
+//! `serve_on` coordinator. None of these may panic the daemon, wedge
+//! its event loop, or poison later clients — each attack is followed by
+//! a status probe, and the suite ends with a real job running to a
+//! byte-identical result while a slow-loris connection is still
+//! half-open.
+//!
+//! Attack inventory: truncated frames, non-UTF8 garbage payloads,
+//! oversize length prefixes, mid-frame disconnects, a never-completing
+//! HTTP request line (slow loris), and an honest HTTP request for a
+//! bogus path (404, not a dropped connection).
+
+use gcod::dispatch::{
+    query_status, serve_on, submit_job, worker_loop, JobSpec, ServeConfig, WorkerOpts,
+};
+use gcod::sweep::shard::{self, SweepConfig, SweepKind};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+fn gcod_bin() -> &'static str {
+    env!("CARGO_BIN_EXE_gcod")
+}
+
+fn sweep_cfg(trials: usize) -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal".into(),
+        p: 0.2,
+        seed: 11,
+        trials,
+        chunk: 8,
+        params: BTreeMap::new(),
+    }
+}
+
+/// Open a raw socket, write `bytes`, drop the connection immediately.
+fn hit_and_run(addr: &str, bytes: &[u8]) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    let _ = s.write_all(bytes);
+    // dropped here: the peer sees a mid-frame EOF
+}
+
+fn frame_prefix(len: u32) -> [u8; 4] {
+    len.to_be_bytes()
+}
+
+#[test]
+fn hostile_peers_never_take_the_coordinator_down() {
+    let c = sweep_cfg(32);
+    let single = shard::run_full(&c, 1).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let drain = Arc::new(AtomicBool::new(false));
+    let mut scfg = ServeConfig::new(addr.clone());
+    scfg.min_workers = 1;
+    scfg.poll = Duration::from_millis(2);
+    scfg.drain = Some(drain.clone());
+    let server = thread::spawn(move || serve_on(listener, &scfg));
+    let probe = |attack: &str| {
+        let status = query_status(&addr, Duration::from_secs(10))
+            .unwrap_or_else(|e| panic!("status probe failed after {attack}: {e}"));
+        assert!(status.contains("workers registered"), "not a status table after {attack}");
+    };
+    probe("nothing (baseline)");
+
+    // 1. truncated frame: announce 100 bytes, deliver 10, vanish
+    let mut attack = frame_prefix(100).to_vec();
+    attack.extend_from_slice(b"{\"msg\": \"");
+    hit_and_run(&addr, &attack);
+    probe("a truncated frame");
+
+    // 2. non-UTF8 garbage payload in a well-formed frame
+    let mut attack = frame_prefix(4).to_vec();
+    attack.extend_from_slice(&[0xFF, 0xFE, 0xC0, 0xAA]);
+    hit_and_run(&addr, &attack);
+    probe("a non-UTF8 payload");
+
+    // 3. valid JSON that is not a protocol message
+    let body = b"{\"msg\": \"no-such-message\"}";
+    let mut attack = frame_prefix(body.len() as u32).to_vec();
+    attack.extend_from_slice(body);
+    hit_and_run(&addr, &attack);
+    probe("an unknown message type");
+
+    // 4. oversize length prefix, just past the frame cap — must be
+    // rejected without any attempt to allocate or read a gigabyte
+    hit_and_run(&addr, &frame_prefix((1 << 30) + 1));
+    probe("an oversize length prefix");
+
+    // 5. mid-frame disconnect with the length fully delivered
+    let mut attack = frame_prefix(64).to_vec();
+    attack.extend_from_slice(&[b'x'; 32]);
+    hit_and_run(&addr, &attack);
+    probe("a mid-frame disconnect");
+
+    // 6. slow loris: a partial HTTP request line that never completes,
+    // held open across everything below — it may consume one handshake
+    // slot until its deadline, never the event loop
+    let mut loris = TcpStream::connect(&addr).unwrap();
+    loris.write_all(b"GET /met").unwrap();
+    probe("a slow-loris half request");
+
+    // 7. an honest HTTP request for a bogus path is answered (404),
+    // not dropped
+    let mut http = TcpStream::connect(&addr).unwrap();
+    http.write_all(b"GET /nope HTTP/1.0\r\n\r\n").unwrap();
+    http.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    let mut response = String::new();
+    http.read_to_string(&mut response).unwrap();
+    assert!(response.contains("404"), "bogus path got: {response}");
+    probe("an HTTP 404 exchange");
+
+    // with the loris still latched on, a real job must run end to end
+    // and stay byte-identical
+    let worker = {
+        let mut opts = WorkerOpts::new(addr.clone(), gcod_bin());
+        opts.connect_retries = 200;
+        thread::spawn(move || worker_loop(&opts))
+    };
+    let mut spec = JobSpec::new(c);
+    spec.grain = 8;
+    let out = submit_job(&addr, spec, Duration::from_secs(120)).unwrap();
+    assert_eq!(out.manifest, single.render(), "tortured coordinator bent the result");
+
+    drain.store(true, Ordering::Relaxed);
+    server.join().unwrap().expect("drain must exit Ok despite the torture");
+    worker.join().unwrap().expect("worker loop should end on goodbye");
+    drop(loris);
+}
