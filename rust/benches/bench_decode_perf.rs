@@ -10,11 +10,22 @@
 //!   at n=32768 (target: engine >= 5x serial throughput);
 //! * LSQR warm-starting on the generic decoder.
 //!
+//! Every record carries per-iteration samples and a bootstrap CI
+//! (schema 2); the trial-loop arms are repeated several times so even
+//! one-shot sweeps get an interval. Exit status is the statistical
+//! gate: non-zero only when a record's CI separates above the tracked
+//! baseline's CI (plus slack) — see
+//! [`gcod::bench_util::compare_against_baseline`].
+//!
 //! Flags: --quick, --threads N (default: all cores), --trials N,
 //! --json PATH (default BENCH_decode.json; "none" disables),
-//! --baseline (write the tracked rust/benches/baselines/ file instead).
+//! --baseline (write the tracked rust/benches/baselines/ file instead;
+//! also skips the gate, since a refresh run defines the reference).
 
-use gcod::bench_util::{bench, black_box, fmt_dur, BenchArgs, JsonReport};
+use gcod::bench_util::{
+    bench, black_box, compare_against_baseline, fmt_dur, read_baseline, record_from_samples,
+    BenchArgs, JsonReport, BENCH_SLACK,
+};
 use gcod::codes::zoo::{self, SchemeSpec};
 use gcod::codes::{GradientCode, GraphCode};
 use gcod::decode::{Decoder, Decoding, GenericOptimalDecoder, OptimalGraphDecoder};
@@ -67,75 +78,86 @@ fn main() {
     let g = &code.graph;
     let m = code.n_machines();
 
+    // each arm is repeated so the one-shot sweep totals still yield a
+    // bootstrap interval; samples are per-trial seconds
+    let reps = if args.quick() { 3 } else { 5 };
+    let time_reps = |f: &mut dyn FnMut() -> f64| -> (Vec<f64>, f64) {
+        let mut samples = Vec::with_capacity(reps);
+        let mut metric = 0.0;
+        for _ in 0..reps {
+            let sw = Stopwatch::new();
+            metric = f();
+            black_box(metric);
+            samples.push(sw.elapsed_secs() / trials as f64);
+        }
+        (samples, metric)
+    };
+    let mean_s = |s: &[f64]| s.iter().sum::<f64>() / s.len().max(1) as f64;
+
     // serial baseline: one allocating decode() per trial (fresh mask +
     // w/alpha vectors every time — the pre-engine code path)
     let engine1 = TrialEngine::new(1, 42);
     let serial_dec = OptimalGraphDecoder::new(g);
-    let sw = Stopwatch::new();
-    let mut acc = 0.0f64;
-    for ti in 0..trials {
-        let mask = engine1.trial_rng(ti).bernoulli_mask(m, 0.2);
-        acc += serial_dec.decode(&mask).error_sq();
-    }
-    black_box(acc);
-    let serial_s = sw.elapsed_secs();
+    let (serial_t, _) = time_reps(&mut || {
+        let mut acc = 0.0f64;
+        for ti in 0..trials {
+            let mask = engine1.trial_rng(ti).bernoulli_mask(m, 0.2);
+            acc += serial_dec.decode(&mask).error_sq();
+        }
+        acc
+    });
 
     // batched: allocation-free decode_into on one engine thread
-    let sw = Stopwatch::new();
-    let s1 = decoding_error_sweep(
-        &engine1,
-        |_c| OptimalGraphDecoder::new(g),
-        bernoulli_masks(m, 0.2),
-        trials,
-    );
-    let batched_s = sw.elapsed_secs();
+    let (batched_t, s1_mean) = time_reps(&mut || {
+        let dec = |_c: usize| OptimalGraphDecoder::new(g);
+        decoding_error_sweep(&engine1, dec, bernoulli_masks(m, 0.2), trials).mean()
+    });
 
     // parallel: same trials fanned across the engine
     let engine_n = TrialEngine::new(threads, 42);
-    let sw = Stopwatch::new();
-    let sn = decoding_error_sweep(
-        &engine_n,
-        |_c| OptimalGraphDecoder::new(g),
-        bernoulli_masks(m, 0.2),
-        trials,
-    );
-    let parallel_s = sw.elapsed_secs();
+    let (parallel_t, sn_mean) = time_reps(&mut || {
+        let dec = |_c: usize| OptimalGraphDecoder::new(g);
+        decoding_error_sweep(&engine_n, dec, bernoulli_masks(m, 0.2), trials).mean()
+    });
 
-    // the three paths must agree on the accumulated metric (the engine
-    // determinism contract: 1 thread == N threads, bit for bit)
+    // the engine paths must agree on the accumulated metric (the
+    // engine determinism contract: 1 thread == N threads, bit for bit)
     assert_eq!(
-        s1.mean().to_bits(),
-        sn.mean().to_bits(),
+        s1_mean.to_bits(),
+        sn_mean.to_bits(),
         "engine determinism violated: 1-thread vs {threads}-thread means differ"
     );
 
+    let serial_s = mean_s(&serial_t) * trials as f64;
+    let parallel_s = mean_s(&parallel_t) * trials as f64;
     let tput = |secs: f64| trials as f64 / secs;
     let mut t2 = Table::new(&["path", "total", "trials/s", "speedup vs serial"]);
-    for (name, secs) in [
-        ("serial decode()", serial_s),
-        ("batched decode_into (1 thread)", batched_s),
-        (&format!("TrialEngine ({threads} threads)")[..], parallel_s),
+    for (name, samples) in [
+        ("serial decode()", &serial_t),
+        ("batched decode_into (1 thread)", &batched_t),
+        (&format!("TrialEngine ({threads} threads)")[..], &parallel_t),
     ] {
+        let secs = mean_s(samples) * trials as f64;
         t2.row(vec![
             name.to_string(),
             format!("{:.3}s", secs),
             format!("{:.1}", tput(secs)),
             format!("{:.2}x", serial_s / secs),
         ]);
-        report.push(gcod::bench_util::JsonRecord {
-            name: format!("trial-loop n={n_big} {name}"),
-            mean_ns: secs * 1e9 / trials as f64,
-            ns_per_edge: Some(secs * 1e9 / trials as f64 / m as f64),
-            threads: if name.starts_with("TrialEngine") { threads } else { 1 },
-            iters: trials as u64,
-        });
+        let arm_threads = if name.starts_with("TrialEngine") { threads } else { 1 };
+        report.push(record_from_samples(
+            &format!("trial-loop n={n_big} {name}"),
+            samples,
+            Some(m),
+            arm_threads,
+        ));
     }
     t2.print();
     let speedup = serial_s / parallel_s;
     println!(
         "engine speedup {speedup:.2}x over serial decode() (target >= 5x with >= 6 cores; \
          mean err/n = {:.3e})",
-        sn.mean() / n_big as f64
+        sn_mean / n_big as f64
     );
 
     // ---- graph decoder vs LSQR on the paper's two regimes ----
@@ -273,13 +295,16 @@ fn main() {
                 black_box(out.alpha[0]);
                 i += 1;
             });
-            report.push(gcod::bench_util::JsonRecord {
-                name: format!("{spec} lsqr precond={precond}"),
-                mean_ns: r.mean.as_nanos() as f64,
-                ns_per_edge: Some(r.mean.as_nanos() as f64 / a.cols as f64),
-                threads: 1,
-                iters: gk_iters as u64,
-            });
+            // iters carries the GK iteration total for this arm (the
+            // tuning signal), not the sample count
+            let mut rec = record_from_samples(
+                &format!("{spec} lsqr precond={precond}"),
+                &r.samples,
+                Some(a.cols),
+                1,
+            );
+            rec.iters = gk_iters as u64;
+            report.push(rec);
             t5.row(vec![
                 spec.into(),
                 if precond { "on" } else { "off" }.into(),
@@ -311,7 +336,35 @@ fn main() {
         }
     }
 
+    // statistical regression gate against the tracked baseline; a
+    // --baseline refresh run never gates against itself
+    let tracked = format!("{}/benches/baselines/BENCH_decode.json", env!("CARGO_MANIFEST_DIR"));
+    let mut failures = Vec::new();
+    if !args.has("--baseline") {
+        match read_baseline(std::path::Path::new(&tracked)) {
+            Some(base) if !base.is_empty() => {
+                failures = compare_against_baseline(report.records(), &base, BENCH_SLACK);
+                println!(
+                    "\nregression gate: {} record(s) vs tracked baseline, {} regression(s)",
+                    report.records().len(),
+                    failures.len()
+                );
+            }
+            _ => println!(
+                "\nregression gate: no usable baseline at {tracked} (missing or placeholder) — \
+                 skipped; run with --baseline on a quiet machine to pin one"
+            ),
+        }
+    }
+
     println!("\nclaim check: ns/edge flat across n (linear time), the component");
     println!("decoder orders faster than generic least squares, and the trial");
     println!("engine turns cores into throughput without changing the metrics.");
+    if !failures.is_empty() {
+        eprintln!("\nBENCH FAILURES:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
 }

@@ -9,20 +9,27 @@
 //! tall (b ≫ d) and loses in the paper's regime-2 shape (b = 3 ≪ d).
 //!
 //! Measures, and **fails loudly** (non-zero exit, for CI) unless:
-//! * the Gram path beats the allocation-free streaming path at the
-//!   tall-block configuration (≥ 5x in the full run, ≥ 1x under
-//!   --quick where sizes are smaller and timer noise larger);
 //! * the GD iteration loop performs zero heap allocations after setup
 //!   (verified with a counting global allocator: per-trial allocation
 //!   counts must not depend on the iteration count);
 //! * streaming `_into` is bit-identical to the allocating baseline and
-//!   the Gram path agrees with streaming to 1e-6 relative.
+//!   the Gram path agrees with streaming to 1e-6 relative;
+//! * no timing record regresses past the tracked baseline under the
+//!   statistical gate: per-trial samples feed a bootstrap CI, and a
+//!   record fails only when its interval separates above the
+//!   baseline's ([`gcod::bench_util::compare_against_baseline`]) —
+//!   fixed speedup thresholds were retired with schema 2 because a
+//!   noisy CI box can miss 5x on a good day.
 //!
 //! Flags: --quick, --iters N, --trials N, --json PATH (default
 //! BENCH_gd.json; "none" disables), --baseline (write the tracked
-//! rust/benches/baselines/ file instead).
+//! rust/benches/baselines/ file instead; also skips the gate, since a
+//! refresh run defines the new reference).
 
-use gcod::bench_util::{black_box, BenchArgs, JsonRecord, JsonReport};
+use gcod::bench_util::{
+    black_box, compare_against_baseline, read_baseline, record_from_samples, BenchArgs,
+    JsonReport, BENCH_SLACK,
+};
 use gcod::codes::{GradientCode, GraphCode};
 use gcod::data::LstsqData;
 use gcod::decode::{Decoder, OptimalGraphDecoder};
@@ -133,32 +140,37 @@ fn main() {
     println!("GramCache build: {:.3} ms (amortized across the run's trials)", build_s * 1e3);
 
     let mut scratch = GdScratch::new();
-    let time_arm = |label: &str, f: &mut dyn FnMut(u64) -> f64| -> (f64, f64) {
+    let mean_s = |s: &[f64]| s.iter().sum::<f64>() / s.len().max(1) as f64;
+    // per-trial samples (not one aggregate stopwatch) so every arm gets
+    // a bootstrap CI in the schema-2 report
+    let time_arm = |label: &str, f: &mut dyn FnMut(u64) -> f64| -> (Vec<f64>, f64) {
         let mut last = 0.0;
         // warmup: one trial to size scratch and decoder state
         black_box(f(0));
-        let sw = Stopwatch::new();
+        let mut samples = Vec::with_capacity(trials);
         for t in 0..trials {
+            let sw = Stopwatch::new();
             last = f(t as u64);
+            samples.push(sw.elapsed_secs());
             black_box(last);
         }
-        let secs = sw.elapsed_secs();
-        println!("  {label:<34} {:>9.3} ms/trial", secs * 1e3 / trials as f64);
-        (secs / trials as f64, last)
+        println!("  {label:<34} {:>9.3} ms/trial", mean_s(&samples) * 1e3);
+        (samples, last)
     };
 
-    let (alloc_s, alloc_v) = time_arm("alloc-streaming (PR3-era loop)", &mut |t| {
+    let (alloc_t, alloc_v) = time_arm("alloc-streaming (PR3-era loop)", &mut |t| {
         let mut src = AllocStreaming(&data);
         run_trial(&mut src, &gdec, m, &theta0, iters, 100 + t, &mut scratch)
     });
-    let (stream_s, stream_v) = time_arm("streaming block_grads_into", &mut |t| {
+    let (stream_t, stream_v) = time_arm("streaming block_grads_into", &mut |t| {
         let mut src = &data;
         run_trial(&mut src, &gdec, m, &theta0, iters, 100 + t, &mut scratch)
     });
-    let (gram_s, gram_v) = time_arm("gram-cached (G_i theta - c_i)", &mut |t| {
+    let (gram_t, gram_v) = time_arm("gram-cached (G_i theta - c_i)", &mut |t| {
         let mut src = &cache;
         run_trial(&mut src, &gdec, m, &theta0, iters, 100 + t, &mut scratch)
     });
+    let (alloc_s, stream_s, gram_s) = (mean_s(&alloc_t), mean_s(&stream_t), mean_s(&gram_t));
 
     // correctness cross-checks between the arms (same final trial)
     if stream_v.to_bits() != alloc_v.to_bits() {
@@ -174,37 +186,30 @@ fn main() {
     }
 
     let mut t = Table::new(&["path", "ms/trial", "speedup vs alloc-streaming"]);
-    for (name, secs) in [
-        ("alloc-streaming", alloc_s),
-        ("streaming _into", stream_s),
-        ("gram-cached", gram_s),
+    for (name, samples) in [
+        ("alloc-streaming", &alloc_t),
+        ("streaming _into", &stream_t),
+        ("gram-cached", &gram_t),
     ] {
-        t.row(vec![
-            name.into(),
-            format!("{:.3}", secs * 1e3),
-            format!("{:.2}x", alloc_s / secs),
-        ]);
-        report.push(JsonRecord {
-            name: format!("gd-trial N={n_points} d={dim} n={n_blocks} {name}"),
-            mean_ns: secs * 1e9,
-            ns_per_edge: Some(secs * 1e9 / (n_points * dim) as f64),
-            threads: 1,
-            iters: trials as u64,
-        });
-    }
-    t.print();
-    let speedup = stream_s / gram_s;
-    let target = if quick { 1.0 } else { 5.0 };
-    println!(
-        "gram speedup over streaming: {speedup:.2}x (target >= {target}x; flop ratio ~ 2b/d = \
-         {:.0}x)",
-        2.0 * b as f64 / dim as f64
-    );
-    if speedup < target {
-        failures.push(format!(
-            "gram path too slow: {speedup:.2}x over streaming, target >= {target}x"
+        let secs = mean_s(samples);
+        t.row(vec![name.into(), format!("{:.3}", secs * 1e3), format!("{:.2}x", alloc_s / secs)]);
+        report.push(record_from_samples(
+            &format!("gd-trial N={n_points} d={dim} n={n_blocks} {name}"),
+            samples,
+            Some(n_points * dim),
+            1,
         ));
     }
+    t.print();
+    // informational only — the pass/fail call on timing is the
+    // CI-separation gate against the tracked baseline, not a fixed
+    // multiplier that flakes with the machine's mood
+    let speedup = stream_s / gram_s;
+    println!(
+        "gram speedup over streaming: {speedup:.2}x (flop ratio ~ 2b/d = {:.0}x; timing is \
+         gated statistically against the tracked baseline)",
+        2.0 * b as f64 / dim as f64
+    );
 
     // ---- zero per-iteration allocation (counting allocator) ----
     // With warm scratch + decoder, a trial's allocation count must not
@@ -258,7 +263,7 @@ fn main() {
     let theta0_2 = vec![0.0; d2];
     let mut scratch2 = GdScratch::new();
     let trials2 = trials.min(8);
-    let time2 = |gram: bool, scratch2: &mut GdScratch| -> f64 {
+    let time2 = |gram: bool, scratch2: &mut GdScratch| -> Vec<f64> {
         let mut go = |t: u64| {
             if gram {
                 let mut src = &cache2;
@@ -269,14 +274,17 @@ fn main() {
             }
         };
         black_box(go(0));
-        let sw = Stopwatch::new();
+        let mut samples = Vec::with_capacity(trials2);
         for t in 0..trials2 {
+            let sw = Stopwatch::new();
             black_box(go(t as u64));
+            samples.push(sw.elapsed_secs());
         }
-        sw.elapsed_secs() / trials2 as f64
+        samples
     };
-    let s2 = time2(false, &mut scratch2);
-    let g2 = time2(true, &mut scratch2);
+    let s2t = time2(false, &mut scratch2);
+    let g2t = time2(true, &mut scratch2);
+    let (s2, g2) = (mean_s(&s2t), mean_s(&g2t));
     println!(
         "  streaming {:.3} ms/trial vs gram {:.3} ms/trial -> auto picks {}",
         s2 * 1e3,
@@ -288,14 +296,13 @@ fn main() {
             "pays_off misclassifies the regime-2 shape N={n2} d={d2} n={nb2} as Gram-friendly"
         ));
     }
-    for (name, secs) in [("streaming", s2), ("gram", g2)] {
-        report.push(JsonRecord {
-            name: format!("gd-trial N={n2} d={d2} n={nb2} {name} (regime-2)"),
-            mean_ns: secs * 1e9,
-            ns_per_edge: Some(secs * 1e9 / (n2 * d2) as f64),
-            threads: 1,
-            iters: trials2 as u64,
-        });
+    for (name, samples) in [("streaming", &s2t), ("gram", &g2t)] {
+        report.push(record_from_samples(
+            &format!("gd-trial N={n2} d={d2} n={nb2} {name} (regime-2)"),
+            samples,
+            Some(n2 * d2),
+            1,
+        ));
     }
 
     // --baseline writes the tracked baseline; explicit --json wins.
@@ -310,6 +317,28 @@ fn main() {
         match report.write(std::path::Path::new(&json)) {
             Ok(()) => println!("\nwrote {json}"),
             Err(e) => eprintln!("\ncould not write {json}: {e}"),
+        }
+    }
+
+    // statistical regression gate against the tracked baseline; a
+    // --baseline run is defining the new reference, so it never gates
+    // against itself
+    let tracked = format!("{}/benches/baselines/BENCH_gd.json", env!("CARGO_MANIFEST_DIR"));
+    if !args.has("--baseline") {
+        match read_baseline(std::path::Path::new(&tracked)) {
+            Some(base) if !base.is_empty() => {
+                let regressions = compare_against_baseline(report.records(), &base, BENCH_SLACK);
+                println!(
+                    "regression gate: {} record(s) vs tracked baseline, {} regression(s)",
+                    report.records().len(),
+                    regressions.len()
+                );
+                failures.extend(regressions);
+            }
+            _ => println!(
+                "regression gate: no usable baseline at {tracked} (missing or placeholder) — \
+                 skipped; run with --baseline on a quiet machine to pin one"
+            ),
         }
     }
 

@@ -1,0 +1,205 @@
+//! Raw-speed linalg tier — the exact (pinned 4-wide reference) kernels
+//! against the fast tier (8-wide, fixed reduction order) on the
+//! reductions that dominate sweep time: dot, the GramCache gemv serve
+//! path, the cache-blocked SYRK, and the full GramCache build behind
+//! gd-final.
+//!
+//! Compile with `--features simd` to point the fast tier at the AVX2
+//! kernels on x86-64; without the feature the portable 8-wide path is
+//! measured, so this bench runs (and gates) everywhere.
+//!
+//! Fails loudly (non-zero exit, for CI) when:
+//! * the fast tier disagrees with exact beyond `FAST_REL_TOL` on any
+//!   measured shape — the exact|fast contract checked at real sizes,
+//!   not just the unit-test toys;
+//! * a record's bootstrap CI separates above the tracked baseline's
+//!   interval (statistical gate, see
+//!   [`gcod::bench_util::compare_against_baseline`]).
+//!
+//! Flags: --quick, --json PATH (default BENCH_linalg.json; "none"
+//! disables), --baseline (write the tracked
+//! rust/benches/baselines/BENCH_linalg.json instead and skip the gate).
+
+use gcod::bench_util::{
+    bench, black_box, compare_against_baseline, read_baseline, BenchArgs, JsonReport, BENCH_SLACK,
+};
+use gcod::data::LstsqData;
+use gcod::gd::GramCache;
+use gcod::linalg::simd::FAST_REL_TOL;
+use gcod::linalg::{LinalgBackend, Mat};
+use gcod::prng::Rng;
+use std::time::Duration;
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+fn max_rel_err(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| rel_err(*x, *y)).fold(0.0, f64::max)
+}
+
+const BACKENDS: [LinalgBackend; 2] = [LinalgBackend::Exact, LinalgBackend::Fast];
+
+fn main() {
+    let args = BenchArgs::from_env();
+    let quick = args.quick();
+    let budget = Duration::from_millis(if quick { 200 } else { 1000 });
+    let mut report = JsonReport::new("bench_linalg");
+    let mut failures: Vec<String> = Vec::new();
+    let mut rng = Rng::new(42);
+
+    let fast_impl = if cfg!(feature = "simd") {
+        "simd feature: AVX2 where available"
+    } else {
+        "portable 8-wide"
+    };
+    println!("== linalg tiers: exact (pinned reference) vs fast ({fast_impl}) ==");
+
+    // ---- dot: the reduction under every residual and every norm ----
+    // odd lengths exercise the 8-wide main loop plus a 1..=7 tail
+    let dot_lens: &[usize] = if quick { &[1021, 8191] } else { &[1021, 65_531, 1_048_573] };
+    for &n in dot_lens {
+        let x = rng.gaussian_vec(n, 1.0);
+        let y = rng.gaussian_vec(n, 1.0);
+        let exact = LinalgBackend::Exact.dot(&x, &y);
+        let fast = LinalgBackend::Fast.dot(&x, &y);
+        let err = rel_err(exact, fast);
+        if err > FAST_REL_TOL {
+            failures.push(format!("dot n={n}: fast vs exact rel err {err:.2e} > {FAST_REL_TOL:e}"));
+        }
+        for be in BACKENDS {
+            let r = bench(&format!("dot n={n} {}", be.as_str()), 2, budget, 100_000, || {
+                black_box(be.dot(&x, &y));
+            });
+            report.push_result(&r, Some(n), 1);
+        }
+    }
+
+    // ---- gemv over a packed block: the GramCache serve path ----
+    let gemv_shapes: &[(usize, usize)] =
+        if quick { &[(256, 31)] } else { &[(256, 31), (1024, 96)] };
+    for &(rows, cols) in gemv_shapes {
+        let a = rng.gaussian_vec(rows * cols, 1.0);
+        let x = rng.gaussian_vec(cols, 1.0);
+        let mut y_exact = vec![0.0; rows];
+        let mut y_fast = vec![0.0; rows];
+        LinalgBackend::Exact.gemv_slice_into(1.0, &a, cols, &x, 0.0, &mut y_exact);
+        LinalgBackend::Fast.gemv_slice_into(1.0, &a, cols, &x, 0.0, &mut y_fast);
+        let err = max_rel_err(&y_exact, &y_fast);
+        if err > FAST_REL_TOL {
+            failures.push(format!(
+                "gemv {rows}x{cols}: fast vs exact rel err {err:.2e} > {FAST_REL_TOL:e}"
+            ));
+        }
+        let mut y = vec![0.0; rows];
+        for be in BACKENDS {
+            let r = bench(&format!("gemv {rows}x{cols} {}", be.as_str()), 2, budget, 100_000, || {
+                be.gemv_slice_into(1.0, &a, cols, &x, 0.0, &mut y);
+                black_box(y[0]);
+            });
+            report.push_result(&r, Some(rows * cols), 1);
+        }
+    }
+
+    // ---- SYRK G = AᵀA: the GramCache build kernel, cache-blocked on
+    // the fast tier ----
+    let syrk_shapes: &[(usize, usize)] =
+        if quick { &[(1024, 16)] } else { &[(1024, 16), (4096, 32)] };
+    for &(rows, cols) in syrk_shapes {
+        let a = rng.gaussian_vec(rows * cols, 1.0);
+        let mut g_exact = Mat::zeros(cols, cols);
+        let mut g_fast = Mat::zeros(cols, cols);
+        LinalgBackend::Exact.syrk_into(&a, cols, &mut g_exact);
+        LinalgBackend::Fast.syrk_into(&a, cols, &mut g_fast);
+        let err = max_rel_err(&g_exact.data, &g_fast.data);
+        if err > FAST_REL_TOL {
+            failures.push(format!(
+                "syrk {rows}x{cols}: fast vs exact rel err {err:.2e} > {FAST_REL_TOL:e}"
+            ));
+        }
+        let mut g = Mat::zeros(cols, cols);
+        for be in BACKENDS {
+            let r = bench(&format!("syrk {rows}x{cols} {}", be.as_str()), 1, budget, 20_000, || {
+                be.syrk_into(&a, cols, &mut g);
+                black_box(g.data[0]);
+            });
+            report.push_result(&r, Some(rows * cols), 1);
+        }
+    }
+
+    // ---- the full GramCache build (n blocks of SYRK + the shared
+    // elementwise gather, which is tier-independent by construction) ----
+    let (n_pts, dim, n_blocks) = if quick { (4096, 16, 16) } else { (32768, 32, 32) };
+    let data = LstsqData::generate(n_pts, dim, n_blocks, 1.0, &mut rng);
+    let exact_cache = GramCache::new_backend(&data, LinalgBackend::Exact);
+    let fast_cache = GramCache::new_backend(&data, LinalgBackend::Fast);
+    let mut worst = 0.0f64;
+    for i in 0..n_blocks {
+        worst = worst.max(max_rel_err(exact_cache.block_gram(i), fast_cache.block_gram(i)));
+        // the c_i gather has no reduction order: bit-equal across tiers
+        for (e, f) in exact_cache.block_c(i).iter().zip(fast_cache.block_c(i)) {
+            if e.to_bits() != f.to_bits() {
+                failures.push(format!("gram-build block {i}: c_i differs across tiers"));
+                break;
+            }
+        }
+    }
+    println!("gram blocks: worst fast-vs-exact rel err {worst:.2e} (tol {FAST_REL_TOL:e})");
+    if worst > FAST_REL_TOL {
+        failures.push(format!(
+            "gram-build N={n_pts} d={dim}: fast vs exact rel err {worst:.2e} > {FAST_REL_TOL:e}"
+        ));
+    }
+    for be in BACKENDS {
+        let name = format!("gram-build N={n_pts} d={dim} n={n_blocks} {}", be.as_str());
+        let r = bench(&name, 1, budget, 200, || {
+            black_box(GramCache::new_backend(&data, be).backend());
+        });
+        report.push_result(&r, Some(n_pts * dim), 1);
+    }
+
+    // ---- JSON + the statistical regression gate ----
+    let json = match args.get("--json") {
+        Some(path) => path.to_string(),
+        None if args.has("--baseline") => {
+            format!("{}/benches/baselines/BENCH_linalg.json", env!("CARGO_MANIFEST_DIR"))
+        }
+        None => "BENCH_linalg.json".to_string(),
+    };
+    if json != "none" {
+        match report.write(std::path::Path::new(&json)) {
+            Ok(()) => println!("\nwrote {json}"),
+            Err(e) => eprintln!("\ncould not write {json}: {e}"),
+        }
+    }
+    let tracked = format!("{}/benches/baselines/BENCH_linalg.json", env!("CARGO_MANIFEST_DIR"));
+    if !args.has("--baseline") {
+        match read_baseline(std::path::Path::new(&tracked)) {
+            Some(base) if !base.is_empty() => {
+                let regressions = compare_against_baseline(report.records(), &base, BENCH_SLACK);
+                println!(
+                    "regression gate: {} record(s) vs tracked baseline, {} regression(s)",
+                    report.records().len(),
+                    regressions.len()
+                );
+                failures.extend(regressions);
+            }
+            _ => println!(
+                "regression gate: no usable baseline at {tracked} (missing or placeholder) — \
+                 skipped; run with --baseline on a quiet machine to pin one"
+            ),
+        }
+    }
+
+    if failures.is_empty() {
+        println!("\nclaim check: the fast tier matches exact to FAST_REL_TOL on every measured");
+        println!("shape, the c_i gather is bit-identical across tiers, and no record regressed");
+        println!("past the tracked baseline. All checks passed.");
+    } else {
+        eprintln!("\nBENCH FAILURES:");
+        for f in &failures {
+            eprintln!("  - {f}");
+        }
+        std::process::exit(1);
+    }
+}

@@ -3,7 +3,16 @@
 //! Each `rust/benches/bench_*.rs` target uses `harness = false` and
 //! drives this runner: warmup, timed iterations, mean/std/min reporting,
 //! plus the experiment-table helpers the paper-figure benches share.
+//!
+//! Since schema 2 every record carries its per-iteration samples and a
+//! deterministic percentile-bootstrap confidence interval for the mean
+//! ([`bootstrap_ci_mean`]), and regression gating is statistical:
+//! [`compare_against_baseline`] fails a record only when its interval
+//! and the tracked baseline's interval are disjoint with the new mean
+//! on the slow side — a single noisy run can widen an interval, but it
+//! cannot fake a separation.
 
+use crate::config::json::Json;
 use crate::metrics::{Stats, Stopwatch};
 use std::time::Duration;
 
@@ -15,16 +24,23 @@ pub struct BenchResult {
     pub mean: Duration,
     pub std: Duration,
     pub min: Duration,
+    /// Per-iteration wall times, seconds, in measurement order.
+    pub samples: Vec<f64>,
+    /// Bootstrap CI bounds for the mean (see [`bootstrap_ci_mean`]).
+    pub ci_lo: Duration,
+    pub ci_hi: Duration,
 }
 
 impl BenchResult {
     pub fn report(&self) {
         println!(
-            "bench {:<48} {:>12}/iter (±{}, min {}, n={})",
+            "bench {:<48} {:>12}/iter (±{}, min {}, ci [{}, {}], n={})",
             self.name,
             fmt_dur(self.mean),
             fmt_dur(self.std),
             fmt_dur(self.min),
+            fmt_dur(self.ci_lo),
+            fmt_dur(self.ci_hi),
             self.iters
         );
     }
@@ -56,23 +72,90 @@ pub fn bench<F: FnMut()>(
         f();
     }
     let mut stats = Stats::new();
+    let mut samples = Vec::new();
     let total = Stopwatch::new();
     let mut iters = 0u64;
     while iters < 3 || (total.elapsed() < budget && iters < max_iters) {
         let sw = Stopwatch::new();
         f();
-        stats.push(sw.elapsed_secs());
+        let s = sw.elapsed_secs();
+        stats.push(s);
+        samples.push(s);
         iters += 1;
     }
+    let (ci_lo, ci_hi) = bootstrap_ci_mean(&samples, BOOT_RESAMPLES, BOOT_ALPHA, BOOT_SEED);
     let res = BenchResult {
         name: name.to_string(),
         iters,
         mean: Duration::from_secs_f64(stats.mean()),
         std: Duration::from_secs_f64(stats.std()),
         min: Duration::from_secs_f64(stats.min()),
+        samples,
+        ci_lo: Duration::from_secs_f64(ci_lo.max(0.0)),
+        ci_hi: Duration::from_secs_f64(ci_hi.max(0.0)),
     };
     res.report();
     res
+}
+
+// ---------------------------------------------------------------------
+// Bootstrap confidence intervals (deterministic, crate-local PRNG)
+// ---------------------------------------------------------------------
+
+/// Resampling policy shared by every bench target, so the gate always
+/// compares like with like: 400 resamples is enough for stable 2.5/97.5
+/// percentiles of the mean, and the fixed seed makes re-rendering the
+/// same samples give the same interval bit for bit.
+pub const BOOT_RESAMPLES: usize = 400;
+/// Two-sided miscoverage: 0.05 -> a 95% interval.
+pub const BOOT_ALPHA: f64 = 0.05;
+/// Fixed bootstrap seed (the interval is a pure function of samples).
+pub const BOOT_SEED: u64 = 0x9c0d_bea7;
+/// Bootstrap cost is `resamples * n`; longer runs are strided down to
+/// this many samples first. A subsample's interval is still a valid
+/// interval for the mean, just slightly wider.
+pub const MAX_CI_SAMPLES: usize = 2048;
+
+/// Percentile-bootstrap confidence interval for the mean of `samples`.
+///
+/// Deterministic: resampling indices come from the crate's own seeded
+/// generator, never the OS, so identical samples always produce
+/// identical bounds. Degenerate inputs collapse gracefully: an empty
+/// slice gives a NaN interval (rendered `null`, ignored by the gate)
+/// and a single sample gives a point interval.
+pub fn bootstrap_ci_mean(samples: &[f64], resamples: usize, alpha: f64, seed: u64) -> (f64, f64) {
+    match samples.len() {
+        0 => return (f64::NAN, f64::NAN),
+        1 => return (samples[0], samples[0]),
+        _ => {}
+    }
+    let s = stride_cap(samples, MAX_CI_SAMPLES);
+    let n = s.len();
+    let mut rng = crate::prng::Rng::new(seed);
+    let mut means = Vec::with_capacity(resamples.max(2));
+    for _ in 0..resamples.max(2) {
+        let mut acc = 0.0;
+        for _ in 0..n {
+            acc += s[rng.below(n)];
+        }
+        means.push(acc / n as f64);
+    }
+    means.sort_by(f64::total_cmp);
+    let pick = |q: f64| {
+        let i = (q * (means.len() - 1) as f64).round() as usize;
+        means[i.min(means.len() - 1)]
+    };
+    (pick(alpha / 2.0), pick(1.0 - alpha / 2.0))
+}
+
+/// Even-stride subsample capping `samples` at `cap` elements
+/// (deterministic; always keeps the first element).
+fn stride_cap(samples: &[f64], cap: usize) -> Vec<f64> {
+    if samples.len() <= cap {
+        return samples.to_vec();
+    }
+    let step = samples.len().div_ceil(cap);
+    samples.iter().step_by(step).copied().collect()
 }
 
 /// Convenience: quick bench with defaults (3 warmup, 2s budget).
@@ -178,6 +261,44 @@ pub struct JsonRecord {
     /// worker threads used (1 = serial)
     pub threads: usize,
     pub iters: u64,
+    /// Bootstrap CI bounds for `mean_ns` ([`bootstrap_ci_mean`]); NaN
+    /// (rendered `null`) when the record has no samples.
+    pub ci_lo_ns: f64,
+    pub ci_hi_ns: f64,
+    /// Strided subset of the per-iteration samples (ns), capped at
+    /// [`MAX_JSON_SAMPLES`] so tracked reports stay reviewable.
+    pub samples_ns: Vec<f64>,
+}
+
+/// Samples kept per record in the JSON file. The CI is computed from
+/// the full run (up to [`MAX_CI_SAMPLES`]); this only bounds file size.
+pub const MAX_JSON_SAMPLES: usize = 64;
+
+/// Build a schema-2 record from per-iteration wall times in seconds.
+/// This is the one place the bootstrap policy is applied, so every
+/// bench target gates on the same kind of interval.
+pub fn record_from_samples(
+    name: &str,
+    samples_secs: &[f64],
+    edges: Option<usize>,
+    threads: usize,
+) -> JsonRecord {
+    let mean_s = if samples_secs.is_empty() {
+        f64::NAN
+    } else {
+        samples_secs.iter().sum::<f64>() / samples_secs.len() as f64
+    };
+    let (lo, hi) = bootstrap_ci_mean(samples_secs, BOOT_RESAMPLES, BOOT_ALPHA, BOOT_SEED);
+    JsonRecord {
+        name: name.to_string(),
+        mean_ns: mean_s * 1e9,
+        ns_per_edge: edges.map(|e| mean_s * 1e9 / e.max(1) as f64),
+        threads,
+        iters: samples_secs.len() as u64,
+        ci_lo_ns: lo * 1e9,
+        ci_hi_ns: hi * 1e9,
+        samples_ns: stride_cap(samples_secs, MAX_JSON_SAMPLES).iter().map(|s| s * 1e9).collect(),
+    }
 }
 
 /// Collects [`JsonRecord`]s and writes a `BENCH_*.json` file so bench
@@ -189,8 +310,11 @@ pub struct JsonReport {
     records: Vec<JsonRecord>,
 }
 
-/// Schema version stamped into `BENCH_*.json` reports.
-pub const BENCH_SCHEMA: u64 = 1;
+/// Schema version stamped into `BENCH_*.json` reports. Schema 2 added
+/// per-record `ci_lo_ns`/`ci_hi_ns` bootstrap bounds and a `samples_ns`
+/// array; schema-1 files still parse as baselines (their records just
+/// carry no interval, so the statistical gate skips them).
+pub const BENCH_SCHEMA: u64 = 2;
 
 /// Escape a string for embedding in the hand-rolled JSON writers (this
 /// report and the sweep shard manifests — no serde in the offline
@@ -254,16 +378,15 @@ impl JsonReport {
         self.records.push(rec);
     }
 
-    /// Convenience: record a [`BenchResult`] directly.
+    /// Convenience: record a [`BenchResult`] directly (its samples
+    /// drive the bootstrap interval).
     pub fn push_result(&mut self, r: &BenchResult, edges: Option<usize>, threads: usize) {
-        let mean_ns = r.mean.as_nanos() as f64;
-        self.push(JsonRecord {
-            name: r.name.clone(),
-            mean_ns,
-            ns_per_edge: edges.map(|e| mean_ns / e.max(1) as f64),
-            threads,
-            iters: r.iters,
-        });
+        self.push(record_from_samples(&r.name, &r.samples, edges, threads));
+    }
+
+    /// The records collected so far (the gate's input).
+    pub fn records(&self) -> &[JsonRecord] {
+        &self.records
     }
 
     pub fn render(&self) -> String {
@@ -277,14 +400,19 @@ impl JsonReport {
                 Some(v) => json_f64(v),
                 None => "null".to_string(),
             };
+            let samples = r.samples_ns.iter().map(|s| json_f64(*s)).collect::<Vec<_>>().join(", ");
             out.push_str(&format!(
                 "    {{\"name\": \"{}\", \"mean_ns\": {}, \"ns_per_edge\": {}, \
-                 \"threads\": {}, \"iters\": {}}}{}\n",
+                 \"threads\": {}, \"iters\": {}, \"ci_lo_ns\": {}, \"ci_hi_ns\": {}, \
+                 \"samples_ns\": [{}]}}{}\n",
                 json_escape(&r.name),
                 json_f64(r.mean_ns),
                 per_edge,
                 r.threads,
                 r.iters,
+                json_f64(r.ci_lo_ns),
+                json_f64(r.ci_hi_ns),
+                samples,
                 if i + 1 < self.records.len() { "," } else { "" }
             ));
         }
@@ -296,6 +424,88 @@ impl JsonReport {
     pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
         std::fs::write(path, self.render())
     }
+}
+
+// ---------------------------------------------------------------------
+// Statistical regression gate against tracked baselines
+// ---------------------------------------------------------------------
+
+/// One record parsed back from a tracked `BENCH_*.json`. Schema-1
+/// files and placeholder baselines carry no CI bounds, so those fields
+/// are `None` and the gate treats the record as ungateable.
+#[derive(Clone, Debug)]
+pub struct BaselineRecord {
+    pub name: String,
+    pub mean_ns: f64,
+    pub ci_lo_ns: Option<f64>,
+    pub ci_hi_ns: Option<f64>,
+}
+
+/// Parse a `BENCH_*.json` report into baseline records. Tolerant by
+/// design: records missing a name are skipped, missing numeric fields
+/// become NaN/None, and an empty `results` array (the tracked
+/// placeholders) parses to an empty vector. Returns `None` only when
+/// the document is not JSON or has no `results` array.
+pub fn parse_baseline(text: &str) -> Option<Vec<BaselineRecord>> {
+    let doc = Json::parse(text).ok()?;
+    let results = doc.get("results")?.as_arr()?;
+    let mut out = Vec::new();
+    for r in results {
+        let Some(name) = r.get("name").and_then(Json::as_str) else { continue };
+        out.push(BaselineRecord {
+            name: name.to_string(),
+            mean_ns: r.get("mean_ns").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            ci_lo_ns: r.get("ci_lo_ns").and_then(Json::as_f64),
+            ci_hi_ns: r.get("ci_hi_ns").and_then(Json::as_f64),
+        });
+    }
+    Some(out)
+}
+
+/// Read a tracked baseline file; `None` when it is missing or not a
+/// bench report (the gate then has nothing to compare against).
+pub fn read_baseline(path: &std::path::Path) -> Option<Vec<BaselineRecord>> {
+    parse_baseline(&std::fs::read_to_string(path).ok()?)
+}
+
+/// Default multiplicative slack on top of CI separation: machines
+/// differ, so the gate fires only when the new interval sits wholly
+/// above the baseline interval *times* this margin.
+pub const BENCH_SLACK: f64 = 0.10;
+
+/// The statistical regression gate. A record fails only when both
+/// sides carry finite intervals and they separate on the slow side:
+/// `new.ci_lo > base.ci_hi * (1 + slack)`. Everything else — records
+/// missing from the baseline, placeholder baselines, schema-1
+/// baselines without bounds, sample-less records — passes, so fresh
+/// benches and baseline upgrades never wedge CI. Returns one message
+/// per failing record; empty means the gate passes.
+pub fn compare_against_baseline(
+    current: &[JsonRecord],
+    baseline: &[BaselineRecord],
+    slack: f64,
+) -> Vec<String> {
+    let mut failures = Vec::new();
+    for rec in current {
+        let Some(base) = baseline.iter().find(|b| b.name == rec.name) else { continue };
+        let (Some(b_lo), Some(b_hi)) = (base.ci_lo_ns, base.ci_hi_ns) else { continue };
+        if !(rec.ci_lo_ns.is_finite() && rec.ci_hi_ns.is_finite() && b_hi.is_finite()) {
+            continue;
+        }
+        if rec.ci_lo_ns > b_hi * (1.0 + slack) {
+            failures.push(format!(
+                "{}: regression — new mean CI [{:.0}, {:.0}] ns is disjoint above baseline CI \
+                 [{:.0}, {:.0}] ns even with {:.0}% slack",
+                rec.name,
+                rec.ci_lo_ns,
+                rec.ci_hi_ns,
+                b_lo,
+                b_hi,
+                slack * 100.0
+            ));
+        }
+    }
+    failures
 }
 
 #[cfg(test)]
@@ -371,6 +581,9 @@ mod tests {
             ns_per_edge: Some(0.0125),
             threads: 8,
             iters: 100,
+            ci_lo_ns: 1200.0,
+            ci_hi_ns: 1260.25,
+            samples_ns: vec![1190.0, 1234.0, 1280.0],
         });
         rep.push(JsonRecord {
             name: "lsqr".into(),
@@ -378,12 +591,20 @@ mod tests {
             ns_per_edge: None,
             threads: 1,
             iters: 3,
+            ci_lo_ns: f64::NAN,
+            ci_hi_ns: f64::NAN,
+            samples_ns: Vec::new(),
         });
         let s = rep.render();
         assert!(s.contains("\"bench\": \"bench_decode_perf\""));
         assert!(s.contains("\\\"n=32768\\\"")); // quotes escaped
         assert!(s.contains("\"threads\": 8"));
         assert!(s.contains("\"ns_per_edge\": null"));
+        assert!(s.contains("\"schema\": 2"));
+        assert!(s.contains("\"ci_lo_ns\": 1200.000"));
+        assert!(s.contains("\"ci_hi_ns\": null")); // NaN interval -> null
+        assert!(s.contains("\"samples_ns\": [1190.000, 1234.000, 1280.000]"));
+        assert!(s.contains("\"samples_ns\": []"));
         // exactly one comma between the two records
         assert_eq!(s.matches("},\n").count(), 1);
         // writes to disk
@@ -392,5 +613,107 @@ mod tests {
         let path = dir.join("BENCH_test.json");
         rep.write(&path).unwrap();
         assert_eq!(std::fs::read_to_string(&path).unwrap(), s);
+        // and parses back as a baseline, CI bounds intact
+        let parsed = parse_baseline(&s).unwrap();
+        assert_eq!(parsed.len(), 2);
+        assert_eq!(parsed[0].ci_hi_ns, Some(1260.25));
+        assert_eq!(parsed[1].ci_lo_ns, None); // null round-trips to None
+    }
+
+    #[test]
+    fn bootstrap_ci_is_deterministic_and_brackets_the_mean() {
+        let samples: Vec<f64> =
+            (0..200).map(|i| 1.0 + 0.01 * ((i * 37 % 100) as f64 / 100.0)).collect();
+        let a = bootstrap_ci_mean(&samples, BOOT_RESAMPLES, BOOT_ALPHA, BOOT_SEED);
+        let b = bootstrap_ci_mean(&samples, BOOT_RESAMPLES, BOOT_ALPHA, BOOT_SEED);
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1.to_bits(), b.1.to_bits());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        assert!(a.0 <= mean && mean <= a.1, "CI {a:?} does not bracket mean {mean}");
+        assert!(a.0 < a.1);
+        // degenerate inputs collapse instead of panicking
+        assert!(bootstrap_ci_mean(&[], 100, 0.05, 7).0.is_nan());
+        assert_eq!(bootstrap_ci_mean(&[2.5], 100, 0.05, 7), (2.5, 2.5));
+        let c = bootstrap_ci_mean(&[3.0; 50], 100, 0.05, 7);
+        assert_eq!(c, (3.0, 3.0)); // constant samples -> point interval
+    }
+
+    #[test]
+    fn stride_cap_keeps_order_and_bounds() {
+        let xs: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(stride_cap(&xs, 20), xs); // under the cap: unchanged
+        let capped = stride_cap(&xs, 4);
+        assert!(capped.len() <= 4);
+        assert_eq!(capped[0], 0.0); // keeps the first element
+        assert!(capped.windows(2).all(|w| w[0] < w[1])); // order preserved
+    }
+
+    #[test]
+    fn baseline_gate_fails_only_on_separated_intervals() {
+        let rec = |name: &str, lo: f64, hi: f64| JsonRecord {
+            name: name.into(),
+            mean_ns: (lo + hi) / 2.0,
+            ns_per_edge: None,
+            threads: 1,
+            iters: 10,
+            ci_lo_ns: lo,
+            ci_hi_ns: hi,
+            samples_ns: Vec::new(),
+        };
+        let base = |name: &str, lo: f64, hi: f64| BaselineRecord {
+            name: name.into(),
+            mean_ns: (lo + hi) / 2.0,
+            ci_lo_ns: Some(lo),
+            ci_hi_ns: Some(hi),
+        };
+        let baseline = vec![base("arm-slow", 100.0, 120.0), base("arm-ok", 100.0, 120.0)];
+        // clear separation fails; overlap passes; missing-from-baseline passes
+        let current = vec![
+            rec("arm-slow", 200.0, 220.0),
+            rec("arm-ok", 110.0, 180.0),
+            rec("arm-new", 9999.0, 9999.5),
+        ];
+        let fails = compare_against_baseline(&current, &baseline, BENCH_SLACK);
+        assert_eq!(fails.len(), 1, "{fails:?}");
+        assert!(fails[0].contains("arm-slow"), "{}", fails[0]);
+        // slack: lo=131 vs hi=120 * 1.10 = 132 is NOT a failure...
+        let near = vec![rec("arm-slow", 131.0, 140.0)];
+        assert!(compare_against_baseline(&near, &baseline, BENCH_SLACK).is_empty());
+        // ...and a NaN interval (sample-less record) never gates
+        let nan = vec![rec("arm-slow", f64::NAN, f64::NAN)];
+        assert!(compare_against_baseline(&nan, &baseline, BENCH_SLACK).is_empty());
+        // placeholder / schema-1 baselines (no CI bounds) never gate
+        let plain = vec![BaselineRecord {
+            name: "arm-slow".into(),
+            mean_ns: 1.0,
+            ci_lo_ns: None,
+            ci_hi_ns: None,
+        }];
+        assert!(compare_against_baseline(&current, &plain, BENCH_SLACK).is_empty());
+        assert!(compare_against_baseline(&current, &[], BENCH_SLACK).is_empty());
+    }
+
+    #[test]
+    fn baseline_parser_tolerates_legacy_and_placeholder_files() {
+        let mut rep = JsonReport::new("bench_x");
+        rep.push(record_from_samples("k1", &[1.0e-6, 1.1e-6, 0.9e-6, 1.05e-6], Some(100), 2));
+        let text = rep.render();
+        let parsed = parse_baseline(&text).unwrap();
+        assert_eq!(parsed.len(), 1);
+        assert_eq!(parsed[0].name, "k1");
+        let (lo, hi) = (parsed[0].ci_lo_ns.unwrap(), parsed[0].ci_hi_ns.unwrap());
+        assert!(lo <= parsed[0].mean_ns + 1e-6 && parsed[0].mean_ns <= hi + 1e-6);
+        // schema-1 records parse without CI bounds
+        let legacy = r#"{"bench": "x", "schema": 1, "results": [
+            {"name": "old", "mean_ns": 5.0, "ns_per_edge": null, "threads": 1, "iters": 3}]}"#;
+        let old = parse_baseline(legacy).unwrap();
+        assert_eq!(old.len(), 1);
+        assert_eq!(old[0].ci_lo_ns, None);
+        // placeholder baselines parse to an empty (never-failing) set
+        let placeholder = r#"{"bench": "x", "schema": 2, "note": "regen me", "results": []}"#;
+        assert!(parse_baseline(placeholder).unwrap().is_empty());
+        // non-reports are rejected, not misread
+        assert!(parse_baseline("not json").is_none());
+        assert!(parse_baseline("{\"schema\": 2}").is_none());
     }
 }

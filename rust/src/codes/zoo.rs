@@ -13,6 +13,7 @@ use crate::decode::{
     OptimalGraphDecoder,
 };
 use crate::graphs::Graph;
+use crate::linalg::LinalgBackend;
 use crate::prng::Rng;
 use crate::sparse::Csc;
 
@@ -211,11 +212,27 @@ pub fn make_decoder<'a>(
 /// degree-diagonal LSQR preconditioner on the generic optimal decoder
 /// (see [`GenericOptimalDecoder::with_precond`]); it is ignored by the
 /// closed-form decoders, whose solutions involve no iteration.
+/// Equivalent to [`make_decoder_cfg`] on the exact linalg tier.
 pub fn make_decoder_opts<'a>(
     scheme: &'a BuiltScheme,
     spec: DecoderSpec,
     p: f64,
     precond: bool,
+) -> Box<dyn Decoder + 'a> {
+    make_decoder_cfg(scheme, spec, p, precond, LinalgBackend::Exact)
+}
+
+/// [`make_decoder_opts`] with an explicit [`LinalgBackend`] tier for
+/// the generic LSQR decoder's dense norms (see
+/// [`GenericOptimalDecoder::with_backend`]). The closed-form decoders
+/// (graph, FRC, fixed, ignore) involve no dense iteration and ignore
+/// it — their output is tier-independent by construction.
+pub fn make_decoder_cfg<'a>(
+    scheme: &'a BuiltScheme,
+    spec: DecoderSpec,
+    p: f64,
+    precond: bool,
+    backend: LinalgBackend,
 ) -> Box<dyn Decoder + 'a> {
     match spec {
         DecoderSpec::Optimal => {
@@ -224,12 +241,16 @@ pub fn make_decoder_opts<'a>(
             } else if let Some(frc) = &scheme.frc {
                 Box::new(FrcOptimalDecoder::new(frc))
             } else {
-                Box::new(GenericOptimalDecoder::new(&scheme.a).with_precond(precond))
+                Box::new(
+                    GenericOptimalDecoder::new(&scheme.a)
+                        .with_precond(precond)
+                        .with_backend(backend),
+                )
             }
         }
-        DecoderSpec::OptimalLsqr => {
-            Box::new(GenericOptimalDecoder::new(&scheme.a).with_precond(precond))
-        }
+        DecoderSpec::OptimalLsqr => Box::new(
+            GenericOptimalDecoder::new(&scheme.a).with_precond(precond).with_backend(backend),
+        ),
         DecoderSpec::Fixed => Box::new(FixedDecoder::new(&scheme.a, p)),
         DecoderSpec::Ignore => Box::new(IgnoreStragglersDecoder { a: &scheme.a, weight: 1.0 }),
     }

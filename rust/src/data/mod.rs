@@ -86,12 +86,25 @@ impl LstsqData {
     /// warm scratch never reallocates). Accumulation order is identical
     /// to the historical allocating path — results are bit-identical.
     pub fn block_grads_into(&self, theta: &[f64], g: &mut Mat) {
+        self.block_grads_into_backend(theta, g, crate::linalg::LinalgBackend::Exact);
+    }
+
+    /// [`LstsqData::block_grads_into`] on an explicit linalg tier: the
+    /// per-row residual dot dispatches through `backend` (`Exact` is
+    /// bit-identical to the historical path); the rank-1 `axpy` update
+    /// is element-wise — no reduction order — and stays shared.
+    pub fn block_grads_into_backend(
+        &self,
+        theta: &[f64],
+        g: &mut Mat,
+        backend: crate::linalg::LinalgBackend,
+    ) {
         g.reset(self.n_blocks, self.k);
         for blk in 0..self.n_blocks {
             let row0 = blk * self.b;
             for r in 0..self.b {
                 let xr = self.x.row(row0 + r);
-                let resid = crate::linalg::dot(xr, theta) - self.y[row0 + r];
+                let resid = backend.dot(xr, theta) - self.y[row0 + r];
                 crate::linalg::axpy(resid, xr, g.row_mut(blk));
             }
         }

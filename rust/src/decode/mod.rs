@@ -29,7 +29,8 @@
 
 use crate::codes::{FrcCode, GradientCode};
 use crate::graphs::Graph;
-use crate::sparse::{lsqr_into, Csc, Csr, DiagScaledMaskedOp, LsqrScratch, MaskedColumnsOp};
+use crate::linalg::LinalgBackend;
+use crate::sparse::{lsqr_into_backend, Csc, Csr, DiagScaledMaskedOp, LsqrScratch, MaskedColumnsOp};
 
 /// A decoded coefficient pair: per-machine weights w (zero on
 /// stragglers) and the induced per-block alpha = A w.
@@ -276,6 +277,12 @@ pub struct GenericOptimalDecoder<'a> {
     /// iteration-count win on heterogeneous-degree codes. Turn on
     /// per-sweep via the `precond` param meanwhile.
     pub precond: bool,
+    /// Which [`LinalgBackend`] tier the LSQR dense norms run on.
+    /// `Exact` (the default) is byte-identical to the pre-backend
+    /// decoder; `Fast` changes solution bits within the fast tier's
+    /// documented tolerance but stays deterministic per input. Set
+    /// per-sweep via the `linalg` param.
+    pub backend: LinalgBackend,
     scratch: std::cell::RefCell<GenericScratch>,
 }
 
@@ -305,6 +312,7 @@ impl<'a> GenericOptimalDecoder<'a> {
             max_iter: 4 * (a.rows + a.cols),
             restart_fraction: DEFAULT_RESTART_FRACTION,
             precond: false,
+            backend: LinalgBackend::Exact,
             scratch: std::cell::RefCell::new(GenericScratch::default()),
         }
     }
@@ -320,6 +328,13 @@ impl<'a> GenericOptimalDecoder<'a> {
     /// the `precond` field).
     pub fn with_precond(mut self, on: bool) -> Self {
         self.precond = on;
+        self
+    }
+
+    /// Builder-style selection of the linalg tier (see the `backend`
+    /// field). `Exact` keeps the historical bits.
+    pub fn with_backend(mut self, backend: LinalgBackend) -> Self {
+        self.backend = backend;
         self
     }
 
@@ -406,9 +421,9 @@ impl Decoder for GenericOptimalDecoder<'_> {
         };
         let summary = if self.precond {
             let op = DiagScaledMaskedOp { inner: masked, scale: col_scale };
-            lsqr_into(&op, rhs, self.atol, self.max_iter, &mut out.w, ls)
+            lsqr_into_backend(&op, rhs, self.atol, self.max_iter, &mut out.w, ls, self.backend)
         } else {
-            lsqr_into(&masked, rhs, self.atol, self.max_iter, &mut out.w, ls)
+            lsqr_into_backend(&masked, rhs, self.atol, self.max_iter, &mut out.w, ls, self.backend)
         };
         *last_iters = summary.iterations;
         if self.precond {

@@ -400,7 +400,12 @@ impl Dispatcher {
             state.report.failure_log.append(&mut j.notes);
         }
         let started = Instant::now();
-        self.cfg.obs.emit(Event::DispatchStarted { trials: sweep.trials, workers: n, grain });
+        self.cfg.obs.emit(Event::DispatchStarted {
+            trials: sweep.trials,
+            workers: n,
+            grain,
+            linalg: sweep.linalg_label().to_string(),
+        });
 
         loop {
             let now = Instant::now();

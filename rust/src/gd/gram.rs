@@ -22,7 +22,7 @@
 
 use crate::data::LstsqData;
 use crate::gd::GradSource;
-use crate::linalg::{dist2_sq, gemv_slice_into, syrk_into, Mat};
+use crate::linalg::{dist2_sq, LinalgBackend, Mat};
 
 /// Precomputed per-block `(G_i, c_i)` pairs for one [`LstsqData`].
 /// Immutable after construction; implements [`GradSource`] through a
@@ -38,19 +38,31 @@ pub struct GramCache {
     c: Mat,
     /// copied from the data so progress() needs no second borrow
     theta_star: Vec<f64>,
+    /// which linalg tier built the cache and serves its gemvs; part of
+    /// the cache's identity (exact and fast caches round differently)
+    backend: LinalgBackend,
 }
 
 impl GramCache {
     /// One pass over the data matrix: `G_i` via the SYRK kernel on the
     /// zero-copy block views, `c_i` as a fused transpose-gather.
+    /// Exact-tier build — byte-identical to every pre-backend cache.
     pub fn new(data: &LstsqData) -> Self {
+        Self::new_backend(data, LinalgBackend::Exact)
+    }
+
+    /// [`GramCache::new`] on an explicit linalg tier: the per-block
+    /// SYRK and every served gemv dispatch through `backend`. The `c_i`
+    /// gather stays on the shared `axpy` — element-wise updates carry
+    /// no reduction order, so they are bit-identical under any tier.
+    pub fn new_backend(data: &LstsqData, backend: LinalgBackend) -> Self {
         let (n, k) = (data.n_blocks, data.k);
         let mut gram = vec![0.0; n * k * k];
         let mut c = Mat::zeros(n, k);
         let mut gblk = Mat::zeros(k, k);
         for i in 0..n {
             let bx = data.block_x(i);
-            syrk_into(bx, k, &mut gblk);
+            backend.syrk_into(bx, k, &mut gblk);
             gram[i * k * k..(i + 1) * k * k].copy_from_slice(&gblk.data);
             let ci = c.row_mut(i);
             for (r, &yr) in data.block_y(i).iter().enumerate() {
@@ -59,7 +71,7 @@ impl GramCache {
                 }
             }
         }
-        Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone() }
+        Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone(), backend }
     }
 
     /// [`GramCache::new`] with the per-block SYRK builds fanned across
@@ -72,10 +84,18 @@ impl GramCache {
     /// computes it — scheduling can reorder nothing that reaches the
     /// output. `rust/tests/gd_gram.rs` pins the bit-equality.
     pub fn new_parallel(data: &LstsqData, threads: usize) -> Self {
+        Self::new_parallel_backend(data, threads, LinalgBackend::Exact)
+    }
+
+    /// [`GramCache::new_parallel`] on an explicit linalg tier. The
+    /// byte-identical-to-serial contract holds per tier: every block's
+    /// `(G_i, c_i)` is the same op sequence on `backend` whichever
+    /// worker computes it.
+    pub fn new_parallel_backend(data: &LstsqData, threads: usize, backend: LinalgBackend) -> Self {
         let (n, k) = (data.n_blocks, data.k);
         let threads = threads.clamp(1, n.max(1));
         if threads <= 1 || n < 2 {
-            return Self::new(data);
+            return Self::new_backend(data, backend);
         }
         let mut gram = vec![0.0; n * k * k];
         let mut c = Mat::zeros(n, k);
@@ -101,7 +121,7 @@ impl GramCache {
                     let mut gblk = Mat::zeros(k, k);
                     for i in 0..cnt {
                         let bx = data.block_x(blk0 + i);
-                        syrk_into(bx, k, &mut gblk);
+                        backend.syrk_into(bx, k, &mut gblk);
                         gchunk[i * k * k..(i + 1) * k * k].copy_from_slice(&gblk.data);
                         let ci = &mut cchunk[i * k..(i + 1) * k];
                         for (r, &yr) in data.block_y(blk0 + i).iter().enumerate() {
@@ -113,7 +133,7 @@ impl GramCache {
                 });
             }
         });
-        Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone() }
+        Self { n_blocks: n, k, gram, c, theta_star: data.theta_star.clone(), backend }
     }
 
     /// Whether the Gram path beats streaming for a (n_points, dim,
@@ -150,6 +170,11 @@ impl GramCache {
     pub fn block_c(&self, i: usize) -> &[f64] {
         self.c.row(i)
     }
+
+    /// The linalg tier this cache was built on (and serves gemvs with).
+    pub fn backend(&self) -> LinalgBackend {
+        self.backend
+    }
 }
 
 impl GradSource for &GramCache {
@@ -166,7 +191,7 @@ impl GradSource for &GramCache {
         for i in 0..self.n_blocks {
             let row = &mut out.data[i * self.k..(i + 1) * self.k];
             // row = G_i theta
-            gemv_slice_into(1.0, self.block_gram(i), self.k, theta, 0.0, row);
+            self.backend.gemv_slice_into(1.0, self.block_gram(i), self.k, theta, 0.0, row);
             // row -= c_i
             crate::linalg::axpy(-1.0, self.c.row(i), row);
         }
@@ -255,6 +280,34 @@ mod tests {
                         assert_eq!(a.to_bits(), b.to_bits(), "c block {i} threads={threads}");
                     }
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_backend_cache_agrees_with_exact_and_stays_deterministic() {
+        let mut rng = Rng::new(77);
+        let data = LstsqData::generate(96, 8, 4, 0.5, &mut rng);
+        let exact = GramCache::new(&data);
+        let fast = GramCache::new_backend(&data, LinalgBackend::Fast);
+        assert_eq!(exact.backend(), LinalgBackend::Exact);
+        assert_eq!(fast.backend(), LinalgBackend::Fast);
+        for i in 0..4 {
+            // the tiers agree to tolerance on the SYRK outputs
+            for (a, b) in exact.block_gram(i).iter().zip(fast.block_gram(i)) {
+                assert!(rel_close(*a, *b, 1e-9), "gram block {i}: exact {a} vs fast {b}");
+            }
+            // the c_i gather is the shared element-wise axpy: bit-equal
+            for (a, b) in exact.block_c(i).iter().zip(fast.block_c(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "c block {i}");
+            }
+        }
+        // the parallel fast build keeps the byte-identical-to-serial
+        // contract within its own tier
+        let par = GramCache::new_parallel_backend(&data, 3, LinalgBackend::Fast);
+        for i in 0..4 {
+            for (a, b) in par.block_gram(i).iter().zip(fast.block_gram(i)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "parallel fast gram block {i}");
             }
         }
     }

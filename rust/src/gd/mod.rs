@@ -58,6 +58,31 @@ impl GradSource for &crate::data::LstsqData {
     }
 }
 
+/// Streaming [`GradSource`] over an [`crate::data::LstsqData`] on an
+/// explicit linalg tier (the plain `&LstsqData` impl above *is* the
+/// exact tier; `Exact` here is bit-identical to it). The sweep kernels
+/// use this when `linalg=fast` selects the 8-wide dot for the per-row
+/// residuals.
+pub struct StreamingGrads<'a> {
+    pub data: &'a crate::data::LstsqData,
+    pub backend: crate::linalg::LinalgBackend,
+}
+
+impl GradSource for StreamingGrads<'_> {
+    fn n_blocks(&self) -> usize {
+        self.data.n_blocks
+    }
+    fn dim(&self) -> usize {
+        self.data.k
+    }
+    fn block_grads_into(&mut self, theta: &[f64], out: &mut Mat) {
+        self.data.block_grads_into_backend(theta, out, self.backend)
+    }
+    fn progress(&mut self, theta: &[f64]) -> f64 {
+        self.data.dist_to_opt(theta)
+    }
+}
+
 /// Step-size schedules used in the paper's experiments (Appendix G).
 #[derive(Clone, Copy, Debug)]
 pub enum StepSize {

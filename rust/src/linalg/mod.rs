@@ -23,12 +23,28 @@
 //! [`dot_unrolled`]); they are used by the Gram-cached gradient path
 //! ([`crate::gd::GramCache`]), whose outputs are compared against the
 //! streaming kernels by tolerance, not bits.
+//!
+//! ## The raw-speed tier ([`simd`])
+//!
+//! Everything in this module is the **exact** tier: the accumulation
+//! orders above are the bit-exactness reference every sweep manifest is
+//! pinned against. The [`simd`] submodule holds the declared-reordering
+//! **fast** tier — 8-wide fixed-order kernels ([`simd::dot_fast`],
+//! [`simd::gemv_slice_into_fast`], [`simd::syrk_into_fast`]) selected
+//! at runtime through [`LinalgBackend`]. Fast results agree with exact
+//! to a documented relative tolerance and are themselves fully
+//! deterministic (same bits on every machine, thread count and shard
+//! split), but they are *not* bit-identical to the exact tier — which
+//! is why the choice rides in the sweep config and merges refuse to mix
+//! tiers.
 
 pub mod chol;
 pub mod power;
+pub mod simd;
 
 pub use chol::{cholesky_solve, CholeskyError};
 pub use power::{power_iteration, CovOperator, SymmetricOp};
+pub use simd::LinalgBackend;
 
 /// Dense row-major matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -162,6 +178,38 @@ pub fn scale(alpha: f64, x: &mut [f64]) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Shared remainder (tail) handling for the unrolled kernels
+// ---------------------------------------------------------------------
+//
+// Every unrolled kernel — the 4-wide exact-tier kernels here
+// ([`dot_unrolled`], [`gemv_slice_into`] via it, [`syrk_into`]) and the
+// 8-wide fast tier in [`simd`] — ends with a scalar loop over the 0–3
+// (or 0–7) elements `chunks_exact` left behind. The two helpers below
+// are the single home of that remainder semantics: a reduction tail
+// (fold `a[i]*b[i]` onto a running sum, in index order) and an update
+// tail (`dst[i] += alpha * src[i]`, in index order). Both are plain
+// sequential loops, so routing an existing kernel's tail through them
+// is bit-neutral by construction.
+
+/// Reduction tail: fold the element products of `ra`/`rb` onto `s`
+/// in index order. `ra.len() == rb.len()` expected (zip truncates).
+#[inline(always)]
+pub(crate) fn tail_dot(mut s: f64, ra: &[f64], rb: &[f64]) -> f64 {
+    for (xa, xb) in ra.iter().zip(rb) {
+        s += xa * xb;
+    }
+    s
+}
+
+/// Update tail: `dst[i] += alpha * src[i]` in index order.
+#[inline(always)]
+pub(crate) fn tail_axpy(alpha: f64, src: &[f64], dst: &mut [f64]) {
+    for (d, x) in dst.iter_mut().zip(src) {
+        *d += alpha * x;
+    }
+}
+
 /// Dot product over four independent accumulators (`chunks_exact(4)`
 /// unrolling, so LLVM autovectorizes the reduction). NOTE: the
 /// accumulation order differs from [`dot`] — use this in the blocked
@@ -180,11 +228,7 @@ pub fn dot_unrolled(a: &[f64], b: &[f64]) -> f64 {
         acc[2] += xa[2] * xb[2];
         acc[3] += xa[3] * xb[3];
     }
-    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
-    for (xa, xb) in ra.iter().zip(rb) {
-        s += xa * xb;
-    }
-    s
+    tail_dot((acc[0] + acc[1]) + (acc[2] + acc[3]), ra, rb)
 }
 
 /// y = A x, allocation-free. Same accumulation order as
@@ -267,9 +311,7 @@ pub fn syrk_into(a: &[f64], cols: usize, g: &mut Mat) {
                     gd[2] += rj * sd[2];
                     gd[3] += rj * sd[3];
                 }
-                for (gd, sd) in grow[tail..].iter_mut().zip(&src[tail..]) {
-                    *gd += rj * sd;
-                }
+                tail_axpy(rj, &src[tail..], &mut grow[tail..]);
             }
         }
     }

@@ -1,0 +1,582 @@
+//! The raw-speed (**fast**) linalg tier: 8-wide fixed-order kernels
+//! with an explicit SIMD path, selected at runtime via [`LinalgBackend`].
+//!
+//! ## The exact|fast contract
+//!
+//! The parent module is the **exact** tier: its accumulation orders are
+//! the bit-exactness reference that every golden manifest, dispatch
+//! audit and merge cross-check is pinned against. This module is the
+//! **fast** tier. It buys throughput by *declaring* a different — but
+//! still completely fixed — accumulation order:
+//!
+//! * inner products run **8 independent lanes** over `chunks_exact(8)`
+//!   and reduce with the fixed tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` ([`reduce8`]);
+//! * remainders (`len % 8`) go through the shared scalar tail helpers
+//!   in the parent module, in index order;
+//! * no FMA contraction anywhere — every kernel is a sequence of plain
+//!   IEEE-754 `mul` then `add`, so the optimizer cannot legally fuse
+//!   and change bits.
+//!
+//! Because the order is fixed, fast results are **deterministic**: the
+//! same input produces the same bits on every machine, at every thread
+//! count and under every shard split. That is what lets the fast tier
+//! flow through the dispatch audit (byte-compares re-executed ranges)
+//! and `merge()` (assumes split invariance) unchanged. What fast
+//! results are *not* is bit-identical to the exact tier — they agree to
+//! roughly `~n * eps` relative error (see [`FAST_REL_TOL`] and the
+//! conformance suite) — which is why the backend choice rides in the
+//! sweep config and merges refuse to mix tiers.
+//!
+//! ## The SIMD path
+//!
+//! The portable 8-wide kernels are always compiled; with the `simd`
+//! cargo feature on `x86_64` an AVX2 path is compiled too and selected
+//! at runtime via `is_x86_feature_detected!`. The intrinsic kernels
+//! perform the **identical IEEE op sequence** as the portable ones
+//! (same lanes, same `mul`/`add` pairs, same [`reduce8`] tree, same
+//! scalar tails), so portable-fast and intrinsic-fast are bit-identical
+//! and runtime CPU detection can never leak into results — a machine
+//! without AVX2 produces the same fast-tier bytes as one with it.
+//!
+//! ## Cache blocking ([`syrk_into_fast`])
+//!
+//! The SYRK kernel is restructured from the exact tier's row-at-a-time
+//! rank-1 updates into a panel form: rows are processed in panels of
+//! [`SYRK_PANEL_ROWS`], and for each output strip `G[j][j..]` the
+//! 8-wide segments are accumulated in a register block (two 4-lane
+//! accumulators living in registers across the whole panel) and flushed
+//! to `G` once per panel. The panel bounds the working set (panel rows
+//! stream from L2, the current segment's accumulators stay in
+//! registers), and the fixed panel size keeps the accumulation order —
+//! and therefore the bits — independent of the total row count split.
+
+use crate::error::{Error, Result};
+
+use super::{tail_axpy, tail_dot, Mat};
+
+/// Relative agreement documented between the fast and exact tiers:
+/// `|fast - exact| <= FAST_REL_TOL * max(|exact|, 1)` for the shapes
+/// the repo's kernels actually hit (dims up to a few thousand). This
+/// is a *contract* checked by the conformance suite, not a bound used
+/// in any numeric decision.
+pub const FAST_REL_TOL: f64 = 1e-10;
+
+/// Row-panel height for the cache-blocked fast SYRK. Fixed (never
+/// derived from input size or thread count) so the accumulation order
+/// is a pure function of the input matrix.
+pub const SYRK_PANEL_ROWS: usize = 64;
+
+// ---------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------
+
+/// Which linalg tier a computation runs on. Rides through
+/// `SweepConfig` as the `linalg` param (`exact` | `fast`) and is
+/// recorded in every shard manifest; `merge()` refuses to combine
+/// shards produced by different backends.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum LinalgBackend {
+    /// The scalar reference tier in [`crate::linalg`]; byte-identical
+    /// to every manifest produced before the fast tier existed.
+    #[default]
+    Exact,
+    /// The 8-wide fixed-order tier in this module. Deterministic, but
+    /// not bit-identical to `Exact`.
+    Fast,
+}
+
+impl LinalgBackend {
+    /// Parse the `linalg` sweep-param value.
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "exact" => Ok(LinalgBackend::Exact),
+            "fast" => Ok(LinalgBackend::Fast),
+            _ => Err(Error::msg(format!("bad linalg backend '{s}' (want exact|fast)"))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LinalgBackend::Exact => "exact",
+            LinalgBackend::Fast => "fast",
+        }
+    }
+
+    pub fn is_fast(self) -> bool {
+        matches!(self, LinalgBackend::Fast)
+    }
+
+    /// Backend-dispatched dot product. `Exact` keeps the plain
+    /// sequential order of [`super::dot`] (the pinned-bits reference),
+    /// `Fast` uses [`dot_fast`].
+    #[inline]
+    pub fn dot(self, a: &[f64], b: &[f64]) -> f64 {
+        match self {
+            LinalgBackend::Exact => super::dot(a, b),
+            LinalgBackend::Fast => dot_fast(a, b),
+        }
+    }
+
+    /// Backend-dispatched `y = alpha * A x + beta * y` over a packed
+    /// row-major slice; see [`super::gemv_slice_into`].
+    #[inline]
+    pub fn gemv_slice_into(
+        self,
+        alpha: f64,
+        a: &[f64],
+        cols: usize,
+        x: &[f64],
+        beta: f64,
+        y: &mut [f64],
+    ) {
+        match self {
+            LinalgBackend::Exact => super::gemv_slice_into(alpha, a, cols, x, beta, y),
+            LinalgBackend::Fast => gemv_slice_into_fast(alpha, a, cols, x, beta, y),
+        }
+    }
+
+    /// Backend-dispatched `G = A^T A`; see [`super::syrk_into`].
+    #[inline]
+    pub fn syrk_into(self, a: &[f64], cols: usize, g: &mut Mat) {
+        match self {
+            LinalgBackend::Exact => super::syrk_into(a, cols, g),
+            LinalgBackend::Fast => syrk_into_fast(a, cols, g),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The fixed 8-lane reduction
+// ---------------------------------------------------------------------
+
+/// The fast tier's one and only horizontal reduction:
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. Every kernel — portable or
+/// intrinsic — funnels its lane accumulators through this tree, which
+/// is what makes the two implementations bit-identical.
+#[inline(always)]
+fn reduce8(acc: &[f64; 8]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+// ---------------------------------------------------------------------
+// Portable 8-wide kernels (always compiled; the semantic definition)
+// ---------------------------------------------------------------------
+
+#[inline]
+fn dot8_portable(a: &[f64], b: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 8];
+    let ca = a.chunks_exact(8);
+    let cb = b.chunks_exact(8);
+    let (ra, rb) = (ca.remainder(), cb.remainder());
+    for (xa, xb) in ca.zip(cb) {
+        acc[0] += xa[0] * xb[0];
+        acc[1] += xa[1] * xb[1];
+        acc[2] += xa[2] * xb[2];
+        acc[3] += xa[3] * xb[3];
+        acc[4] += xa[4] * xb[4];
+        acc[5] += xa[5] * xb[5];
+        acc[6] += xa[6] * xb[6];
+        acc[7] += xa[7] * xb[7];
+    }
+    tail_dot(reduce8(&acc), ra, rb)
+}
+
+/// One register-blocked SYRK micro-step: accumulate
+/// `sum_r panel[r][j] * panel[r][j+off .. j+off+8]` into an 8-lane
+/// block, skipping rows with `panel[r][j] == 0.0` (the exact tier's
+/// sparsity skip, kept so structured schemes pay for their density,
+/// not their dimension).
+#[inline]
+fn syrk_seg8_portable(panel: &[f64], cols: usize, j: usize, off: usize) -> [f64; 8] {
+    let mut acc = [0.0f64; 8];
+    for r in panel.chunks_exact(cols) {
+        let rj = r[j];
+        if rj != 0.0 {
+            let src = &r[j + off..j + off + 8];
+            acc[0] += rj * src[0];
+            acc[1] += rj * src[1];
+            acc[2] += rj * src[2];
+            acc[3] += rj * src[3];
+            acc[4] += rj * src[4];
+            acc[5] += rj * src[5];
+            acc[6] += rj * src[6];
+            acc[7] += rj * src[7];
+        }
+    }
+    acc
+}
+
+// ---------------------------------------------------------------------
+// AVX2 kernels (`--features simd`, x86_64 only, runtime-detected)
+// ---------------------------------------------------------------------
+//
+// Each intrinsic kernel mirrors its portable twin op for op: the same
+// lanes see the same `_mm256_mul_pd` / `_mm256_add_pd` pairs the
+// portable code expresses as `acc[l] += x[l] * y[l]`, remainders and
+// reductions are shared scalar code, and no FMA intrinsic is used.
+// `dispatch_path_is_bit_identical_to_portable_definition` below pins
+// the resulting bit-identity on AVX2 hardware.
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use super::{reduce8, tail_dot};
+
+    #[inline]
+    pub fn available() -> bool {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+
+    /// # Safety
+    /// Caller must have checked [`available`].
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot8(a: &[f64], b: &[f64]) -> f64 {
+        use std::arch::x86_64::*;
+        debug_assert_eq!(a.len(), b.len());
+        let n8 = (a.len() / 8) * 8;
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut i = 0;
+        while i < n8 {
+            let m0 = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i)), _mm256_loadu_pd(pb.add(i)));
+            let m1 = _mm256_mul_pd(_mm256_loadu_pd(pa.add(i + 4)), _mm256_loadu_pd(pb.add(i + 4)));
+            acc0 = _mm256_add_pd(acc0, m0);
+            acc1 = _mm256_add_pd(acc1, m1);
+            i += 8;
+        }
+        let mut lanes = [0.0f64; 8];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(lanes.as_mut_ptr().add(4), acc1);
+        tail_dot(reduce8(&lanes), &a[n8..], &b[n8..])
+    }
+
+    /// # Safety
+    /// Caller must have checked [`available`]; `j + off + 8 <= cols`.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn syrk_seg8(panel: &[f64], cols: usize, j: usize, off: usize) -> [f64; 8] {
+        use std::arch::x86_64::*;
+        let mut acc0 = _mm256_setzero_pd();
+        let mut acc1 = _mm256_setzero_pd();
+        for r in panel.chunks_exact(cols) {
+            let rj = r[j];
+            if rj != 0.0 {
+                let v = _mm256_set1_pd(rj);
+                let s = r.as_ptr().add(j + off);
+                acc0 = _mm256_add_pd(acc0, _mm256_mul_pd(v, _mm256_loadu_pd(s)));
+                acc1 = _mm256_add_pd(acc1, _mm256_mul_pd(v, _mm256_loadu_pd(s.add(4))));
+            }
+        }
+        let mut out = [0.0f64; 8];
+        _mm256_storeu_pd(out.as_mut_ptr(), acc0);
+        _mm256_storeu_pd(out.as_mut_ptr().add(4), acc1);
+        out
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+#[inline]
+fn use_avx2() -> bool {
+    avx2::available()
+}
+
+#[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+#[inline]
+fn use_avx2() -> bool {
+    false
+}
+
+// ---------------------------------------------------------------------
+// Public fast-tier kernels
+// ---------------------------------------------------------------------
+
+/// Fast-tier dot product: 8-lane fixed-order accumulation + the
+/// [`reduce8`] tree + the shared scalar tail. Deterministic; agrees
+/// with [`super::dot`] to [`FAST_REL_TOL`].
+#[inline]
+pub fn dot_fast(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if use_avx2() {
+        // SAFETY: AVX2 presence just checked.
+        return unsafe { avx2::dot8(a, b) };
+    }
+    dot8_portable(a, b)
+}
+
+/// Fast-tier `y = alpha * A x + beta * y` over a packed row-major
+/// slice. Same signature, asserts and `beta == 0.0` overwrite
+/// semantics as [`super::gemv_slice_into`]; only the per-row inner
+/// product differs ([`dot_fast`] instead of the 4-wide exact kernel).
+pub fn gemv_slice_into_fast(
+    alpha: f64,
+    a: &[f64],
+    cols: usize,
+    x: &[f64],
+    beta: f64,
+    y: &mut [f64],
+) {
+    assert_eq!(x.len(), cols, "x length must equal cols");
+    assert!(a.len() == y.len() * cols, "packed slice is not y.len() rows of cols");
+    if cols == 0 {
+        for yi in y.iter_mut() {
+            *yi = if beta == 0.0 { 0.0 } else { beta * *yi };
+        }
+        return;
+    }
+    for (row, yi) in a.chunks_exact(cols).zip(y.iter_mut()) {
+        let s = alpha * dot_fast(row, x);
+        *yi = if beta == 0.0 { s } else { s + beta * *yi };
+    }
+}
+
+/// Fast-tier `G = A^T A`: the cache-blocked, register-blocked SYRK
+/// described in the module docs. Same signature and reset semantics as
+/// [`super::syrk_into`]; the accumulation order is panel-major
+/// (panels of [`SYRK_PANEL_ROWS`] rows in order, rows within a panel
+/// in order, 8-lane register block per output segment) and therefore a
+/// pure function of the input — independent of thread count and shard
+/// split.
+pub fn syrk_into_fast(a: &[f64], cols: usize, g: &mut Mat) {
+    syrk_fast_impl(a, cols, g, use_avx2());
+}
+
+fn syrk_fast_impl(a: &[f64], cols: usize, g: &mut Mat, avx2: bool) {
+    assert!(cols == 0 || a.len() % cols == 0, "packed slice is not a whole number of rows");
+    g.reset(cols, cols);
+    if cols == 0 {
+        return;
+    }
+    // silence the unused warning on non-simd builds, where `avx2` is
+    // statically false
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    let _ = avx2;
+    let n8 = |width: usize| (width / 8) * 8;
+    for panel in a.chunks(SYRK_PANEL_ROWS * cols) {
+        for j in 0..cols {
+            let grow = &mut g.data[j * cols + j..(j + 1) * cols];
+            let width = cols - j;
+            let full = n8(width);
+            let mut off = 0;
+            while off < full {
+                // register-blocked micro-kernel: the 8 accumulators
+                // live across the whole panel, G is touched once
+                let acc = {
+                    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+                    {
+                        if avx2 {
+                            // SAFETY: AVX2 checked by the caller;
+                            // j + off + 8 <= j + width == cols.
+                            unsafe { avx2::syrk_seg8(panel, cols, j, off) }
+                        } else {
+                            syrk_seg8_portable(panel, cols, j, off)
+                        }
+                    }
+                    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+                    {
+                        syrk_seg8_portable(panel, cols, j, off)
+                    }
+                };
+                for (gd, al) in grow[off..off + 8].iter_mut().zip(&acc) {
+                    *gd += al;
+                }
+                off += 8;
+            }
+            if off < width {
+                // remainder segment (width % 8 lanes), same panel-local
+                // accumulation, shared scalar tail semantics
+                let mut acc = [0.0f64; 8];
+                let rem = width - off;
+                for r in panel.chunks_exact(cols) {
+                    let rj = r[j];
+                    if rj != 0.0 {
+                        tail_axpy(rj, &r[j + off..], &mut acc[..rem]);
+                    }
+                }
+                for (gd, al) in grow[off..].iter_mut().zip(&acc[..rem]) {
+                    *gd += al;
+                }
+            }
+        }
+    }
+    // mirror the strict upper triangle, exactly as the exact tier does
+    for i in 1..cols {
+        for j in 0..i {
+            g.data[i * cols + j] = g.data[j * cols + i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= FAST_REL_TOL * a.abs().max(b.abs()).max(1.0)
+    }
+
+    fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f64> {
+        (0..n).map(|_| rng.f64() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in [LinalgBackend::Exact, LinalgBackend::Fast] {
+            assert_eq!(LinalgBackend::parse(b.as_str()).unwrap(), b);
+        }
+        assert_eq!(LinalgBackend::default(), LinalgBackend::Exact);
+        assert!(LinalgBackend::Fast.is_fast());
+        assert!(!LinalgBackend::Exact.is_fast());
+        let err = LinalgBackend::parse("turbo").unwrap_err().to_string();
+        assert!(err.contains("exact|fast"), "unhelpful error: {err}");
+    }
+
+    #[test]
+    fn dot_fast_matches_exact_across_remainders() {
+        let mut rng = Rng::new(0x51AD_0001);
+        // every remainder class 0..8, plus sizes that cross panel and
+        // unroll boundaries
+        for n in [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17, 31, 64, 100, 257] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            let exact = super::super::dot(&a, &b);
+            let fast = dot_fast(&a, &b);
+            assert!(close(exact, fast), "n={n}: exact {exact} vs fast {fast}");
+            // backend dispatch agrees with the direct calls, bitwise
+            assert_eq!(LinalgBackend::Fast.dot(&a, &b).to_bits(), fast.to_bits());
+            assert_eq!(LinalgBackend::Exact.dot(&a, &b).to_bits(), exact.to_bits());
+        }
+    }
+
+    #[test]
+    fn gemv_fast_matches_exact_and_overwrites_on_beta_zero() {
+        let mut rng = Rng::new(0x51AD_0002);
+        for &(rows, cols) in &[(1usize, 1usize), (3, 5), (8, 8), (7, 13), (16, 33)] {
+            let a = rand_vec(&mut rng, rows * cols);
+            let x = rand_vec(&mut rng, cols);
+            let mut y_exact = vec![f64::NAN; rows];
+            let mut y_fast = vec![f64::NAN; rows];
+            // beta == 0.0 must overwrite even NaN-poisoned outputs
+            super::super::gemv_slice_into(2.5, &a, cols, &x, 0.0, &mut y_exact);
+            gemv_slice_into_fast(2.5, &a, cols, &x, 0.0, &mut y_fast);
+            for (e, f) in y_exact.iter().zip(&y_fast) {
+                assert!(close(*e, *f), "{rows}x{cols}: {e} vs {f}");
+            }
+            // accumulate form
+            let mut z_exact = rand_vec(&mut rng, rows);
+            let mut z_fast = z_exact.clone();
+            super::super::gemv_slice_into(1.0, &a, cols, &x, -0.5, &mut z_exact);
+            gemv_slice_into_fast(1.0, &a, cols, &x, -0.5, &mut z_fast);
+            for (e, f) in z_exact.iter().zip(&z_fast) {
+                assert!(close(*e, *f), "{rows}x{cols} beta: {e} vs {f}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemv_fast_cols_zero_matches_exact() {
+        let mut y_exact = vec![1.0, -2.0, 3.0];
+        let mut y_fast = y_exact.clone();
+        super::super::gemv_slice_into(1.0, &[], 0, &[], 0.5, &mut y_exact);
+        gemv_slice_into_fast(1.0, &[], 0, &[], 0.5, &mut y_fast);
+        assert_eq!(y_exact, y_fast);
+        super::super::gemv_slice_into(1.0, &[], 0, &[], 0.0, &mut y_exact);
+        gemv_slice_into_fast(1.0, &[], 0, &[], 0.0, &mut y_fast);
+        assert_eq!(y_exact, y_fast);
+        assert_eq!(y_fast, vec![0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn syrk_fast_matches_exact_across_shapes() {
+        let mut rng = Rng::new(0x51AD_0003);
+        // shapes spanning remainder widths, panel boundaries and the
+        // d/k ranges GramCache actually sees
+        for &(rows, cols) in &[
+            (1usize, 1usize),
+            (4, 3),
+            (8, 8),
+            (16, 9),
+            (63, 17),
+            (64, 32),
+            (65, 32),
+            (130, 48),
+        ] {
+            let a = rand_vec(&mut rng, rows * cols);
+            let mut g_exact = Mat::zeros(cols, cols);
+            let mut g_fast = Mat::zeros(cols, cols);
+            super::super::syrk_into(&a, cols, &mut g_exact);
+            syrk_into_fast(&a, cols, &mut g_fast);
+            for (e, f) in g_exact.data.iter().zip(&g_fast.data) {
+                assert!(close(*e, *f), "{rows}x{cols}: {e} vs {f}");
+            }
+            // symmetry survives the blocked path
+            for i in 0..cols {
+                for j in 0..cols {
+                    assert_eq!(
+                        g_fast.data[i * cols + j].to_bits(),
+                        g_fast.data[j * cols + i].to_bits()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn syrk_fast_respects_sparsity_skip_and_zero_cols() {
+        // rows with leading zeros exercise the rj == 0.0 skip
+        let a = vec![0.0, 1.0, 2.0, 0.0, 0.0, 3.0, 4.0, 0.0, 5.0];
+        let mut g_exact = Mat::zeros(3, 3);
+        let mut g_fast = Mat::zeros(3, 3);
+        super::super::syrk_into(&a, 3, &mut g_exact);
+        syrk_into_fast(&a, 3, &mut g_fast);
+        for (e, f) in g_exact.data.iter().zip(&g_fast.data) {
+            assert!(close(*e, *f), "{e} vs {f}");
+        }
+        let mut g = Mat::zeros(5, 5);
+        syrk_into_fast(&[], 0, &mut g);
+        assert_eq!(g.rows, 0);
+        assert_eq!(g.cols, 0);
+    }
+
+    #[test]
+    fn syrk_fast_is_panel_split_invariant() {
+        // crossing the SYRK_PANEL_ROWS boundary must not change the
+        // relationship to exact — and the fast result itself is a pure
+        // function of the input (same call, same bits)
+        let mut rng = Rng::new(0x51AD_0004);
+        let (rows, cols) = (SYRK_PANEL_ROWS * 2 + 7, 24);
+        let a = rand_vec(&mut rng, rows * cols);
+        let mut g1 = Mat::zeros(cols, cols);
+        let mut g2 = Mat::zeros(cols, cols);
+        syrk_into_fast(&a, cols, &mut g1);
+        syrk_into_fast(&a, cols, &mut g2);
+        for (x, y) in g1.data.iter().zip(&g2.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn dispatch_path_is_bit_identical_to_portable_definition() {
+        // Whatever dot_fast/syrk_into_fast select at runtime (AVX2 when
+        // the simd feature and hardware allow, portable otherwise) must
+        // produce the bits of the portable 8-wide definition — the
+        // documented guarantee that CPU detection cannot leak into
+        // results.
+        let mut rng = Rng::new(0x51AD_0005);
+        for n in [3usize, 8, 21, 64, 250] {
+            let a = rand_vec(&mut rng, n);
+            let b = rand_vec(&mut rng, n);
+            assert_eq!(dot_fast(&a, &b).to_bits(), dot8_portable(&a, &b).to_bits());
+        }
+        let (rows, cols) = (70usize, 19usize);
+        let a = rand_vec(&mut rng, rows * cols);
+        let mut g_dispatch = Mat::zeros(cols, cols);
+        let mut g_portable = Mat::zeros(cols, cols);
+        syrk_into_fast(&a, cols, &mut g_dispatch);
+        syrk_fast_impl(&a, cols, &mut g_portable, false);
+        for (x, y) in g_dispatch.data.iter().zip(&g_portable.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -606,6 +606,10 @@ fn cmd_train(inv: &gcod::cli::Invocation) -> Result<()> {
 /// Shared by `sweep-shard` and `sweep-launch`: the sweep identity from
 /// the common flag set (extra parameters travel as `--set key=value`).
 fn sweep_config_from(inv: &gcod::cli::Invocation) -> Result<shard::SweepConfig> {
+    let mut params = inv.override_map().map_err(|e| Error::msg(e.to_string()))?;
+    // `--set linalg=exact` is the default tier: strip it so the config
+    // identity (and every manifest byte) matches the key being absent
+    shard::canonicalize_linalg(&mut params);
     Ok(shard::SweepConfig {
         sweep: shard::SweepKind::parse(&inv.str_or("sweep", "decode-error"))?,
         scheme: inv.str_or("scheme", "graph-rr:16,3"),
@@ -614,7 +618,7 @@ fn sweep_config_from(inv: &gcod::cli::Invocation) -> Result<shard::SweepConfig> 
         seed: inv.u64_or("seed", 0),
         trials: inv.usize_or("trials", 1000),
         chunk: inv.usize_or("chunk", sweep::DEFAULT_CHUNK),
-        params: inv.override_map().map_err(|e| Error::msg(e.to_string()))?,
+        params,
     })
 }
 

@@ -38,8 +38,10 @@ pub const DEFAULT_RECORDER_CAP: usize = 1024;
 /// to reconstruct a timeline (`gcod report`) from a trace file.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Event {
-    /// Dispatcher entered its main loop.
-    DispatchStarted { trials: usize, workers: usize, grain: usize },
+    /// Dispatcher entered its main loop. `linalg` is the sweep's linalg
+    /// tier label (`exact` | `fast`), so traces, `/metrics` and
+    /// `gcod report` all show which tier a job ran on.
+    DispatchStarted { trials: usize, workers: usize, grain: usize, linalg: String },
     /// A lease (or speculative duplicate) was handed to a worker.
     LeaseIssued { lease: u64, worker: usize, lo: usize, hi: usize, speculative: bool },
     /// A worker returned a validated manifest for its lease.
@@ -144,10 +146,11 @@ impl Event {
     pub fn fields(&self) -> Vec<(&'static str, Field<'_>)> {
         use Field::*;
         match self {
-            Event::DispatchStarted { trials, workers, grain } => vec![
+            Event::DispatchStarted { trials, workers, grain, linalg } => vec![
                 ("trials", U(*trials as u64)),
                 ("workers", U(*workers as u64)),
                 ("grain", U(*grain as u64)),
+                ("linalg_backend", S(linalg)),
             ],
             Event::LeaseIssued { lease, worker, lo, hi, speculative } => vec![
                 ("lease", U(*lease)),
@@ -514,6 +517,11 @@ impl Obs {
 /// deliberately un-prefixed — CI asserts on them literally.
 fn bridge_metrics(ev: &Event) {
     match ev {
+        Event::DispatchStarted { linalg, .. } => {
+            // labeled flag gauge: the active tier's series reads 1, so
+            // `/metrics` shows e.g. `linalg_backend{backend="fast"} 1`
+            metrics::gauge(&format!("linalg_backend{{backend=\"{linalg}\"}}")).set(1.0);
+        }
         Event::LeaseIssued { speculative, .. } => {
             metrics::counter("leases_issued_total").inc();
             if *speculative {

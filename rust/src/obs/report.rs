@@ -278,8 +278,8 @@ fn render_segment(recs: &[&Rec]) -> String {
 fn summarize(r: &Rec) -> String {
     let mut s = r.ev.clone();
     for key in [
-        "job", "state", "detail", "trials", "workers", "grain", "completed", "retried", "ok",
-        "worker", "completions", "failures", "timeouts", "last_error", "text",
+        "job", "state", "detail", "trials", "workers", "grain", "linalg_backend", "completed",
+        "retried", "ok", "worker", "completions", "failures", "timeouts", "last_error", "text",
     ] {
         if let Some(v) = r.doc.get(key) {
             match v {
@@ -306,7 +306,15 @@ mod tests {
     #[test]
     fn renders_timeline_health_and_annotations() {
         let trace = [
-            line(0, Event::DispatchStarted { trials: 96, workers: 2, grain: 32 }),
+            line(
+                0,
+                Event::DispatchStarted {
+                    trials: 96,
+                    workers: 2,
+                    grain: 32,
+                    linalg: "exact".into(),
+                },
+            ),
             line(1, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 32, speculative: false }),
             line(2, Event::LeaseIssued { lease: 2, worker: 1, lo: 32, hi: 64, speculative: false }),
             line(
@@ -382,15 +390,24 @@ mod tests {
     #[test]
     fn segments_multiple_jobs() {
         let trace = [
-            line(0, Event::DispatchStarted { trials: 8, workers: 1, grain: 8 }),
+            line(
+                0,
+                Event::DispatchStarted { trials: 8, workers: 1, grain: 8, linalg: "exact".into() },
+            ),
             line(1, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 8, speculative: false }),
-            line(9, Event::DispatchStarted { trials: 8, workers: 1, grain: 8 }),
+            line(
+                9,
+                Event::DispatchStarted { trials: 8, workers: 1, grain: 8, linalg: "fast".into() },
+            ),
             line(10, Event::LeaseIssued { lease: 1, worker: 0, lo: 0, hi: 8, speculative: false }),
         ]
         .join("\n");
         let (report, _) = render_from_str(&trace);
         assert!(report.contains("jobs: 2"));
         assert!(report.contains("job segment 2"));
+        // the tier label surfaces in the per-job annotation line
+        assert!(report.contains("linalg_backend=exact"), "{report}");
+        assert!(report.contains("linalg_backend=fast"), "{report}");
     }
 
     #[test]

@@ -19,6 +19,17 @@
 //!   residual (in the underdetermined case the *minimum-norm* tie-break
 //!   is relative to x0; decoding only consumes alpha = A w, which is
 //!   unique, so this is correctness-preserving).
+//! * [`lsqr_into_backend`] — the same solve with the dense vector norms
+//!   dispatched through a [`LinalgBackend`] tier. With
+//!   `LinalgBackend::Exact` it is bit-identical to [`lsqr_into`] (the
+//!   exact `dot` folds in the same sequential order as the local norm
+//!   here always has); `Fast` runs the 8-wide fixed-order kernels, so
+//!   iterates differ from exact at roundoff but stay deterministic
+//!   across machines and splits. The sparse operator applications
+//!   (`MaskedColumnsOp` gathers) are shared by both tiers — they are
+//!   sparsity-bound, and the dense norms are where the flops are.
+
+use crate::linalg::LinalgBackend;
 
 /// An m x n linear operator with forward and transpose application.
 pub trait LinearOp {
@@ -82,12 +93,13 @@ impl LsqrScratch {
     }
 }
 
-fn norm(v: &[f64]) -> f64 {
-    let mut s = 0.0;
-    for &x in v {
-        s += x * x;
-    }
-    s.sqrt()
+/// Euclidean norm on the chosen tier. `Exact` reduces in the same
+/// sequential order the pre-backend local `norm` here always used (it
+/// delegates to `linalg::dot(v, v)`, the identical fold), so the
+/// exact-tier solve is bit-for-bit the historical one.
+#[inline]
+fn norm_on(backend: LinalgBackend, v: &[f64]) -> f64 {
+    backend.dot(v, v).sqrt()
 }
 
 fn scale_in(alpha: f64, v: &mut [f64]) {
@@ -124,6 +136,22 @@ pub fn lsqr_into<M: LinearOp>(
     x: &mut [f64],
     scratch: &mut LsqrScratch,
 ) -> LsqrSummary {
+    lsqr_into_backend(a, b, atol, max_iter, x, scratch, LinalgBackend::Exact)
+}
+
+/// [`lsqr_into`] with the dense norms dispatched through `backend`.
+/// `Exact` is bit-identical to [`lsqr_into`]; `Fast` changes iterate
+/// bits (within the tier's documented tolerance) but stays
+/// deterministic for a given input on every machine and split.
+pub fn lsqr_into_backend<M: LinearOp>(
+    a: &M,
+    b: &[f64],
+    atol: f64,
+    max_iter: usize,
+    x: &mut [f64],
+    scratch: &mut LsqrScratch,
+    backend: LinalgBackend,
+) -> LsqrSummary {
     let (m, n) = (a.rows(), a.cols());
     assert_eq!(b.len(), m);
     assert_eq!(x.len(), n);
@@ -140,7 +168,7 @@ pub fn lsqr_into<M: LinearOp>(
             u[i] = b[i] - u[i];
         }
     }
-    let mut beta = norm(u);
+    let mut beta = norm_on(backend, u);
     let rhs_norm = beta;
     if beta == 0.0 {
         // x0 already solves the system exactly
@@ -155,7 +183,7 @@ pub fn lsqr_into<M: LinearOp>(
 
     // v = A^T u; alpha = |v|
     a.apply_t(u, v);
-    let mut alpha = norm(v);
+    let mut alpha = norm_on(backend, v);
     if alpha == 0.0 {
         // residual orthogonal to range(A): x0 is optimal
         return LsqrSummary {
@@ -184,7 +212,7 @@ pub fn lsqr_into<M: LinearOp>(
         for i in 0..m {
             u[i] = tmp_m[i] - alpha * u[i];
         }
-        beta = norm(u);
+        beta = norm_on(backend, u);
         if beta > 0.0 {
             scale_in(1.0 / beta, u);
         }
@@ -194,7 +222,7 @@ pub fn lsqr_into<M: LinearOp>(
         for i in 0..n {
             v[i] = tmp_n[i] - beta * v[i];
         }
-        alpha = norm(v);
+        alpha = norm_on(backend, v);
         if alpha > 0.0 {
             scale_in(1.0 / alpha, v);
         }
@@ -230,9 +258,9 @@ pub fn lsqr_into<M: LinearOp>(
     for i in 0..m {
         tmp_m[i] -= b[i];
     }
-    let rnorm = norm(tmp_m);
+    let rnorm = norm_on(backend, tmp_m);
     a.apply_t(tmp_m, tmp_n);
-    let nrnorm = norm(tmp_n);
+    let nrnorm = norm_on(backend, tmp_n);
     LsqrSummary {
         iterations: iters,
         residual_norm: rnorm,
@@ -357,6 +385,26 @@ mod tests {
         assert_eq!(s.iterations, r.iterations);
         for i in 0..3 {
             assert_eq!(x[i].to_bits(), r.x[i].to_bits(), "component {i}");
+        }
+    }
+
+    #[test]
+    fn fast_backend_agrees_with_exact_within_tolerance() {
+        let a = Mat::from_rows(vec![
+            vec![1.0, 0.0],
+            vec![1.0, 1.0],
+            vec![1.0, 2.0],
+            vec![1.0, 3.0],
+        ]);
+        let b = vec![1.0, 2.9, 5.1, 7.0];
+        let mut xe = vec![0.0; 2];
+        let mut xf = vec![0.0; 2];
+        let mut scratch = LsqrScratch::new();
+        let se = lsqr_into_backend(&a, &b, 1e-12, 200, &mut xe, &mut scratch, LinalgBackend::Exact);
+        let sf = lsqr_into_backend(&a, &b, 1e-12, 200, &mut xf, &mut scratch, LinalgBackend::Fast);
+        assert!(se.converged && sf.converged);
+        for i in 0..2 {
+            assert!((xe[i] - xf[i]).abs() < 1e-7, "component {i}: {} vs {}", xe[i], xf[i]);
         }
     }
 

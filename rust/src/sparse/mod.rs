@@ -20,7 +20,7 @@
 
 pub mod lsqr;
 
-pub use lsqr::{lsqr, lsqr_into, LinearOp, LsqrResult, LsqrScratch, LsqrSummary};
+pub use lsqr::{lsqr, lsqr_into, lsqr_into_backend, LinearOp, LsqrResult, LsqrScratch, LsqrSummary};
 
 /// Compressed sparse column matrix (column = machine).
 #[derive(Clone, Debug)]

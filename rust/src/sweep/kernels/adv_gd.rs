@@ -37,8 +37,8 @@
 //! `precond`.
 
 use super::gd_final::GdProblem;
-use super::{grad_param, precond_param, SweepKernel};
-use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use super::{grad_param, linalg_param, precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_cfg, BuiltScheme, DecoderSpec};
 use crate::error::{Error, Result};
 use crate::straggler::{greedy_decode_attack, FixedMaskStragglers};
 use crate::sweep::shard::SweepConfig;
@@ -56,6 +56,7 @@ impl SweepKernel for AdvGdKernel {
     fn validate(&self, cfg: &SweepConfig) -> Result<()> {
         grad_param(cfg)?;
         precond_param(cfg)?;
+        linalg_param(cfg)?;
         if let Some(b) = cfg.params.get("budget") {
             b.parse::<usize>().map_err(|e| {
                 Error::msg(format!("bad budget '{b}' (want a machine count): {e}"))
@@ -81,12 +82,12 @@ impl SweepKernel for AdvGdKernel {
             })?,
             None => (cfg.p * m as f64).floor() as usize,
         };
-        let prob = GdProblem::build(cfg, scheme);
+        let prob = GdProblem::build(cfg, scheme, linalg_param(cfg)?);
         // the adversarial mask: deterministic, serial, shared by every
         // trial/chunk/shard (the greedy search threads one decoder
         // through all its candidate evaluations, so warm-start state
         // sees the identical sequence in every process)
-        let atk_dec = make_decoder_opts(scheme, dspec, cfg.p, precond);
+        let atk_dec = make_decoder_cfg(scheme, dspec, cfg.p, precond, prob.backend);
         let mask = greedy_decode_attack(atk_dec.as_ref(), &scheme.a, budget.min(m));
         drop(atk_dec);
         let built = std::time::Instant::now();

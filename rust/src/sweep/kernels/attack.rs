@@ -9,8 +9,8 @@
 //! prefix. The trace is a pure function of `(decoder, assignment)`,
 //! which is what makes the budget-axis slices bit-exact across shards.
 
-use super::{precond_param, SweepKernel};
-use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use super::{linalg_param, precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_cfg, BuiltScheme, DecoderSpec};
 use crate::error::Result;
 use crate::straggler::greedy_decode_attack_trace;
 use crate::sweep::shard::SweepConfig;
@@ -27,6 +27,7 @@ impl SweepKernel for AttackKernel {
 
     fn validate(&self, cfg: &SweepConfig) -> Result<()> {
         precond_param(cfg)?;
+        linalg_param(cfg)?;
         Ok(())
     }
 
@@ -40,7 +41,7 @@ impl SweepKernel for AttackKernel {
         hi: usize,
     ) -> Result<Vec<f64>> {
         let precond = precond_param(cfg)?;
-        let dec = make_decoder_opts(scheme, dspec, cfg.p, precond);
+        let dec = make_decoder_cfg(scheme, dspec, cfg.p, precond, linalg_param(cfg)?);
         let (_, trace) = greedy_decode_attack_trace(dec.as_ref(), &scheme.a, hi);
         let n = scheme.n_blocks() as f64;
         Ok(trace[lo..hi].iter().map(|e| e / n).collect())

@@ -8,8 +8,8 @@
 //! per-trial value function; both plug into
 //! [`decoding_error_values`]'s engine loop.
 
-use super::{precond_param, SweepKernel};
-use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use super::{linalg_param, precond_param, SweepKernel};
+use crate::codes::zoo::{make_decoder_cfg, BuiltScheme, DecoderSpec};
 use crate::error::Result;
 use crate::sweep::shard::SweepConfig;
 use crate::sweep::{bernoulli_masks, decoding_error_values, TrialEngine};
@@ -25,6 +25,7 @@ impl SweepKernel for DecodeErrorKernel {
 
     fn validate(&self, cfg: &SweepConfig) -> Result<()> {
         precond_param(cfg)?;
+        linalg_param(cfg)?;
         Ok(())
     }
 
@@ -39,12 +40,13 @@ impl SweepKernel for DecodeErrorKernel {
     ) -> Result<Vec<f64>> {
         let m = scheme.n_machines();
         let precond = precond_param(cfg)?;
+        let backend = linalg_param(cfg)?;
         // chunk-scoped decoder factory + Bernoulli(p) trial masks; the
         // engine's replay contract makes the warm-started LSQR decoder
         // split-invariant
         Ok(decoding_error_values(
             engine,
-            |_chunk| make_decoder_opts(scheme, dspec, cfg.p, precond),
+            |_chunk| make_decoder_cfg(scheme, dspec, cfg.p, precond, backend),
             bernoulli_masks(m, cfg.p),
             lo,
             hi,

@@ -8,11 +8,12 @@
 //! GD scratch are chunk-scoped, so `chunk` re-seats warm-start state
 //! exactly like the decode-error sweep.
 
-use super::{grad_param, precond_param, SweepKernel, DATA_SALT};
-use crate::codes::zoo::{make_decoder_opts, BuiltScheme, DecoderSpec};
+use super::{grad_param, linalg_param, precond_param, SweepKernel, DATA_SALT};
+use crate::codes::zoo::{make_decoder_cfg, BuiltScheme, DecoderSpec};
 use crate::data::LstsqData;
 use crate::error::Result;
-use crate::gd::{GdScratch, GramCache, SimulatedGcod, StepSize};
+use crate::gd::{GdScratch, GramCache, SimulatedGcod, StepSize, StreamingGrads};
+use crate::linalg::LinalgBackend;
 use crate::prng::Rng;
 use crate::straggler::{BernoulliStragglers, StragglerModel};
 use crate::sweep::shard::SweepConfig;
@@ -43,10 +44,13 @@ pub(crate) struct GdProblem {
     pub(crate) dim: usize,
     pub(crate) iters: usize,
     pub(crate) step_c: u32,
+    /// linalg tier (the validated `linalg` param): dispatched into the
+    /// decoder's LSQR, the Gram build/gemvs and the streaming dots
+    pub(crate) backend: LinalgBackend,
 }
 
 impl GdProblem {
-    pub(crate) fn build(cfg: &SweepConfig, scheme: &BuiltScheme) -> Self {
+    pub(crate) fn build(cfg: &SweepConfig, scheme: &BuiltScheme, backend: LinalgBackend) -> Self {
         let dim = cfg.param_usize("dim", 32);
         let n_points = cfg
             .param_usize("n-points", 512)
@@ -65,7 +69,7 @@ impl GdProblem {
             sigma,
             &mut Rng::new(cfg.seed ^ DATA_SALT),
         );
-        Self { data, dim, iters, step_c }
+        Self { data, dim, iters, step_c, backend }
     }
 
     /// Gradient source per the (already validated) `grad` param;
@@ -83,7 +87,8 @@ impl GdProblem {
         let use_gram = explicit.unwrap_or_else(|| {
             GramCache::pays_off(self.data.n_points(), self.dim, self.data.n_blocks)
         });
-        use_gram.then(|| GramCache::new_parallel(&self.data, engine.threads()))
+        use_gram
+            .then(|| GramCache::new_parallel_backend(&self.data, engine.threads(), self.backend))
     }
 
     /// The chunk-scoped state factory shared by `gd-final` and
@@ -97,7 +102,7 @@ impl GdProblem {
         precond: bool,
     ) -> GdChunkCtx<'a> {
         GdChunkCtx {
-            dec: make_decoder_opts(scheme, dspec, p, precond),
+            dec: make_decoder_cfg(scheme, dspec, p, precond, self.backend),
             scratch: GdScratch::new(),
             theta0: vec![0.0; self.dim],
         }
@@ -131,7 +136,7 @@ impl GdProblem {
                 gd.run_with(&mut src, theta0, self.iters, scratch)
             }
             None => {
-                let mut src = &self.data;
+                let mut src = StreamingGrads { data: &self.data, backend: self.backend };
                 gd.run_with(&mut src, theta0, self.iters, scratch)
             }
         }
@@ -147,6 +152,7 @@ impl SweepKernel for GdFinalKernel {
     fn validate(&self, cfg: &SweepConfig) -> Result<()> {
         grad_param(cfg)?;
         precond_param(cfg)?;
+        linalg_param(cfg)?;
         Ok(())
     }
 
@@ -160,7 +166,7 @@ impl SweepKernel for GdFinalKernel {
         hi: usize,
     ) -> Result<Vec<f64>> {
         let built = std::time::Instant::now();
-        let prob = GdProblem::build(cfg, scheme);
+        let prob = GdProblem::build(cfg, scheme, linalg_param(cfg)?);
         let precond = precond_param(cfg)?;
         let cache = prob.gram_cache(grad_param(cfg)?, engine);
         crate::metrics::gauge("phase_seconds{phase=\"gram-build\"}")

@@ -263,6 +263,19 @@ pub(crate) fn grad_param(cfg: &SweepConfig) -> Result<Option<bool>> {
     }
 }
 
+/// Parse the shared enum-valued `linalg` param (`exact` | `fast`,
+/// default exact): which [`crate::linalg::LinalgBackend`] tier the
+/// kernel's dense linear algebra runs on. Part of the sweep identity
+/// via `params` — and `exact` is canonicalized to *absent* by
+/// [`crate::sweep::shard::canonicalize_linalg`] so pre-existing
+/// manifests (param absent) stay byte-identical.
+pub(crate) fn linalg_param(cfg: &SweepConfig) -> Result<crate::linalg::LinalgBackend> {
+    match cfg.params.get("linalg").map(String::as_str) {
+        None => Ok(crate::linalg::LinalgBackend::Exact),
+        Some(s) => crate::linalg::LinalgBackend::parse(s),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -226,6 +226,34 @@ impl SweepConfig {
     pub fn param_f64(&self, key: &str, default: f64) -> f64 {
         self.params.get(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
+
+    /// The linalg-tier label this sweep's manifests record: the
+    /// [`LINALG_PARAM`] params entry, `"exact"` when absent (the
+    /// canonical spelling of the default tier — see
+    /// [`canonicalize_linalg`]).
+    pub fn linalg_label(&self) -> &str {
+        self.params.get(LINALG_PARAM).map(String::as_str).unwrap_or("exact")
+    }
+}
+
+/// The params key that selects the linalg tier
+/// ([`crate::linalg::LinalgBackend`]); the value flows into every
+/// kernel's dense kernels and — via `params` — into manifest identity,
+/// so [`merge`] refuses to fold exact and fast shards together.
+pub const LINALG_PARAM: &str = "linalg";
+
+/// Canonicalize the [`LINALG_PARAM`] entry: `exact` is the default
+/// tier, so an explicit `--set linalg=exact` is stripped down to the
+/// key being absent — the resulting manifests stay byte-identical to
+/// every manifest written before the fast tier existed. Other values
+/// (valid or not) pass through verbatim for the kernel's `validate` to
+/// accept or reject. Called at the CLI construction point
+/// (`sweep_config_from` in `main.rs`), before the config's identity is
+/// fixed.
+pub fn canonicalize_linalg(params: &mut BTreeMap<String, String>) {
+    if params.get(LINALG_PARAM).map(String::as_str) == Some("exact") {
+        params.remove(LINALG_PARAM);
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -425,6 +453,20 @@ pub fn merge(mut shards: Vec<ShardResult>) -> Result<MergedSweep> {
     let config = first.config.clone();
     let stats_only = first.stats_only;
     for s in &shards {
+        // targeted diagnosis before the generic identity check: mixing
+        // linalg tiers is the foreseeable operator error (the tiers
+        // round differently, so folding them would silently corrupt the
+        // merged moments)
+        if s.config.linalg_label() != config.linalg_label() {
+            return Err(Error::msg(format!(
+                "cannot merge shards from different linalg tiers: shard [{}, {}) ran \
+                 linalg={}, expected linalg={} — re-run the odd shards on one tier",
+                s.lo,
+                s.hi,
+                s.config.linalg_label(),
+                config.linalg_label()
+            )));
+        }
         if s.config != config {
             return Err(Error::msg(format!(
                 "shard config mismatch: [{}, {}) was run as {:?}, expected {config:?}",
@@ -1127,6 +1169,36 @@ mod tests {
         // count inconsistent with the range is rejected
         let bad = a.render().replace("\"count\": 3", "\"count\": 4");
         assert!(ShardResult::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn merge_rejects_mixed_linalg_tiers() {
+        let c = cfg(4);
+        let mut cf = cfg(4);
+        cf.params.insert("linalg".into(), "fast".into());
+        let a = ShardResult::from_values(c, 0, 2, vec![1.0, 2.0]);
+        let b = ShardResult::from_values(cf, 2, 4, vec![3.0, 4.0]);
+        let err = merge(vec![a, b]).unwrap_err();
+        assert!(format!("{err}").contains("linalg tiers"), "{err}");
+        assert!(format!("{err}").contains("linalg=fast"), "{err}");
+    }
+
+    #[test]
+    fn canonicalize_linalg_strips_exact_only() {
+        let mut p = BTreeMap::new();
+        p.insert("linalg".to_string(), "exact".to_string());
+        p.insert("dim".to_string(), "32".to_string());
+        canonicalize_linalg(&mut p);
+        assert!(!p.contains_key("linalg"), "explicit exact must canonicalize to absent");
+        assert_eq!(p.get("dim").map(String::as_str), Some("32"));
+        p.insert("linalg".to_string(), "fast".to_string());
+        canonicalize_linalg(&mut p);
+        assert_eq!(p.get("linalg").map(String::as_str), Some("fast"));
+        // the label helper spells the default tier
+        assert_eq!(cfg(1).linalg_label(), "exact");
+        let mut cf = cfg(1);
+        cf.params.insert("linalg".into(), "fast".into());
+        assert_eq!(cf.linalg_label(), "fast");
     }
 
     #[test]

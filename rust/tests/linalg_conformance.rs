@@ -1,0 +1,194 @@
+//! Conformance suite for the raw-speed linalg tier (`linalg::simd`).
+//!
+//! The exact|fast contract, pinned property-style:
+//!
+//! * the fast tier agrees with the exact (pinned-bits reference) tier
+//!   to `FAST_REL_TOL` on random shapes, including every 8-wide
+//!   remainder length 0..=7 (the tails that SIMD kernels classically
+//!   get wrong);
+//! * the fast tier is *deterministic*: same input, same bits, every
+//!   call — on any hardware, with or without `--features simd` (the
+//!   AVX2 kernels mirror the portable 8-wide kernels op for op);
+//! * `LinalgBackend::Exact` dispatch is bit-identical to the plain
+//!   scalar kernels, so `linalg=exact` sweeps cannot drift;
+//! * at the sweep layer: a `linalg=exact` run renders byte-identical
+//!   manifests to a run with no `linalg` param at all (the param is
+//!   canonicalized away), and a `linalg=fast` sweep is shard-split
+//!   invariant (1 shard == 4 shards, bit for bit) while recording its
+//!   tier in the manifest.
+
+use gcod::linalg::simd::{dot_fast, gemv_slice_into_fast, syrk_into_fast, FAST_REL_TOL};
+use gcod::linalg::{dot, gemv_slice_into, syrk_into, LinalgBackend, Mat};
+use gcod::prop_assert;
+use gcod::sweep::shard::{self, ShardSpec, SweepConfig, SweepKind};
+use gcod::testing::check;
+use std::collections::BTreeMap;
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / a.abs().max(b.abs()).max(1.0)
+}
+
+/// Random length hitting every `8q + r` tail class: the property
+/// harness picks the remainder explicitly so r = 0..=7 all occur.
+fn len_with_tail(g: &mut gcod::testing::Gen) -> usize {
+    let blocks = g.size(0, 24);
+    let rem = g.size(0, 7);
+    (8 * blocks + rem).max(1)
+}
+
+#[test]
+fn prop_fast_dot_matches_exact_and_is_deterministic() {
+    check("linalg-dot-conformance", 120, |g| {
+        let n = len_with_tail(g);
+        // mixed scales stress the reduction-order difference
+        let scale = *g.choice(&[1.0, 1e-6, 1e6]);
+        let x: Vec<f64> = (0..n).map(|_| g.rng.gaussian() * scale).collect();
+        let y: Vec<f64> = (0..n).map(|_| g.rng.gaussian()).collect();
+        let exact = dot(&x, &y);
+        let fast = dot_fast(&x, &y);
+        prop_assert!(
+            rel_err(exact, fast) <= FAST_REL_TOL,
+            "n={n}: fast {fast} vs exact {exact} (rel {:.2e})",
+            rel_err(exact, fast)
+        );
+        // determinism: bit-equal on every call
+        prop_assert!(fast.to_bits() == dot_fast(&x, &y).to_bits(), "fast dot not deterministic");
+        // dispatch: Exact is the scalar kernel, bit for bit
+        prop_assert!(
+            LinalgBackend::Exact.dot(&x, &y).to_bits() == exact.to_bits(),
+            "Exact dispatch drifted from the scalar reference"
+        );
+        prop_assert!(
+            LinalgBackend::Fast.dot(&x, &y).to_bits() == fast.to_bits(),
+            "Fast dispatch drifted from dot_fast"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fast_gemv_matches_exact() {
+    check("linalg-gemv-conformance", 80, |g| {
+        let rows = g.size(1, 40);
+        let cols = len_with_tail(g).min(96);
+        let a: Vec<f64> = (0..rows * cols).map(|_| g.rng.gaussian()).collect();
+        let x: Vec<f64> = (0..cols).map(|_| g.rng.gaussian()).collect();
+        let alpha = *g.choice(&[1.0, -0.5, 2.25]);
+        let beta = *g.choice(&[0.0, 1.0, -1.5]);
+        let y0: Vec<f64> = (0..rows).map(|_| g.rng.gaussian()).collect();
+        let mut y_exact = y0.clone();
+        let mut y_fast = y0.clone();
+        gemv_slice_into(alpha, &a, cols, &x, beta, &mut y_exact);
+        gemv_slice_into_fast(alpha, &a, cols, &x, beta, &mut y_fast);
+        for (i, (e, f)) in y_exact.iter().zip(&y_fast).enumerate() {
+            prop_assert!(
+                rel_err(*e, *f) <= FAST_REL_TOL,
+                "rows={rows} cols={cols} row {i}: fast {f} vs exact {e}"
+            );
+        }
+        // beta == 0.0 must overwrite, never read: poison survives iff
+        // the kernel wrongly consumed the old y
+        let mut y_poison = vec![f64::NAN; rows];
+        gemv_slice_into_fast(alpha, &a, cols, &x, 0.0, &mut y_poison);
+        prop_assert!(
+            y_poison.iter().all(|v| v.is_finite()),
+            "fast gemv with beta=0 read the poisoned y"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fast_syrk_matches_exact() {
+    check("linalg-syrk-conformance", 60, |g| {
+        // rows cross the SYRK_PANEL_ROWS = 64 panel boundary; cols
+        // cover sub-8 widths and 8-wide remainders
+        let rows = g.size(1, 150);
+        let cols = g.size(1, 20);
+        let density = g.f64_in(0.3, 1.0);
+        let a: Vec<f64> = (0..rows * cols)
+            .map(|_| if g.rng.bernoulli(density) { g.rng.gaussian() } else { 0.0 })
+            .collect();
+        let mut g_exact = Mat::zeros(cols, cols);
+        let mut g_fast = Mat::zeros(cols, cols);
+        syrk_into(&a, cols, &mut g_exact);
+        syrk_into_fast(&a, cols, &mut g_fast);
+        for i in 0..cols {
+            for j in 0..cols {
+                let (e, f) = (g_exact.data[i * cols + j], g_fast.data[i * cols + j]);
+                prop_assert!(
+                    rel_err(e, f) <= FAST_REL_TOL,
+                    "rows={rows} cols={cols} G[{i}][{j}]: fast {f} vs exact {e}"
+                );
+                // both tiers mirror the upper triangle: exact symmetry
+                let ft = g_fast.data[j * cols + i];
+                prop_assert!(f.to_bits() == ft.to_bits(), "fast G not bitwise symmetric");
+            }
+        }
+        // determinism: a second fast build reproduces the bits
+        let mut g_fast2 = Mat::zeros(cols, cols);
+        syrk_into_fast(&a, cols, &mut g_fast2);
+        prop_assert!(
+            g_fast.data.iter().zip(&g_fast2.data).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "fast syrk not deterministic"
+        );
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// Sweep-layer contract: exact is byte-identical, fast is recorded and
+// shard-invariant
+// ---------------------------------------------------------------------
+
+fn sweep_cfg(params: BTreeMap<String, String>) -> SweepConfig {
+    SweepConfig {
+        sweep: SweepKind::DecodeError,
+        scheme: "graph-rr:16,3".into(),
+        decoder: "optimal-lsqr".into(),
+        p: 0.25,
+        seed: 11,
+        trials: 48,
+        chunk: 8,
+        params,
+    }
+}
+
+#[test]
+fn exact_tier_manifest_bytes_match_param_free_run() {
+    // a user passing `--set linalg=exact` goes through canonicalization
+    let mut params = BTreeMap::new();
+    params.insert("linalg".to_string(), "exact".to_string());
+    shard::canonicalize_linalg(&mut params);
+    let explicit = shard::run_full(&sweep_cfg(params), 2).unwrap();
+    let absent = shard::run_full(&sweep_cfg(BTreeMap::new()), 2).unwrap();
+    assert_eq!(explicit.render(), absent.render(), "linalg=exact changed manifest bytes");
+}
+
+#[test]
+fn fast_tier_sweep_is_shard_invariant_and_recorded() {
+    let mut params = BTreeMap::new();
+    params.insert("linalg".to_string(), "fast".to_string());
+    let cfg = sweep_cfg(params);
+    let single = shard::run_full(&cfg, 2).unwrap();
+    let shards: Vec<_> = (0..4)
+        .map(|i| shard::run_shard(&cfg, 1 + (i % 3), ShardSpec::new(i, 4).unwrap()).unwrap())
+        .collect();
+    let merged = shard::merge(shards).unwrap();
+    for (i, (x, y)) in single.values.iter().zip(&merged.values).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "fast tier trial {i} not shard-invariant");
+    }
+    assert_eq!(single.render(), merged.render(), "fast tier merged JSON bytes differ");
+    // the tier rides in the manifest params
+    assert!(
+        single.render().contains("\"linalg\": \"fast\""),
+        "manifest does not record the fast tier:\n{}",
+        single.render()
+    );
+    // and the fast run really differs from exact somewhere (it is a
+    // different reduction order feeding LSQR), while staying close
+    let exact = shard::run_full(&sweep_cfg(BTreeMap::new()), 2).unwrap();
+    for (x, y) in exact.values.iter().zip(&single.values) {
+        assert!((x - y).abs() <= 1e-6 * (1.0 + x.abs()), "fast tier far from exact: {x} vs {y}");
+    }
+}
